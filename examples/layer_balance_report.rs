@@ -1,0 +1,70 @@
+//! Per-layer balance report (the Appendix A view): trains the tiny model
+//! briefly with each routing mode and prints AvgMaxVio for EVERY MoE
+//! layer plus an ASCII rendition of the per-layer MaxVio trajectories —
+//! the paper's claim is that BIP balances *every* layer, not just the
+//! aggregate.
+//!
+//!   cargo run --release --example layer_balance_report
+//!   BIP_MOE_CONFIG=moe16-bench BIP_MOE_STEPS=80 cargo run --release \
+//!       --example layer_balance_report
+
+use std::path::Path;
+
+use bip_moe::metrics::table::ascii_plot;
+use bip_moe::metrics::TablePrinter;
+use bip_moe::runtime::Engine;
+use bip_moe::train::TrainDriver;
+
+fn main() -> anyhow::Result<()> {
+    bip_moe::util::log::init_from_env();
+    let config = std::env::var("BIP_MOE_CONFIG")
+        .unwrap_or_else(|_| "tiny".to_string());
+    let steps: u64 = std::env::var("BIP_MOE_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+
+    let engine = Engine::new(Path::new("artifacts"))?;
+    let n_layers = engine.manifest().config(&config)?.n_layers;
+
+    let mut headers = vec!["mode".to_string()];
+    for l in 1..=n_layers {
+        headers.push(format!("L{l}"));
+    }
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = TablePrinter::new(
+        &format!("per-layer AvgMaxVio — {config}, {steps} steps"),
+        &headers_ref,
+    );
+
+    let mut bip_series: Option<Vec<Vec<f32>>> = None;
+    for (mode, t) in [("aux", 0usize), ("lossfree", 0), ("bip", 4)] {
+        let mut driver = TrainDriver::new(&config, mode, t, steps);
+        driver.eval_batches = 1;
+        let outcome = driver.run(&engine)?;
+        let mut row = vec![mode.to_string()];
+        for l in 0..n_layers {
+            row.push(format!("{:.3}",
+                             outcome.recorder.balance.layer_avg(l)));
+        }
+        table.row(row);
+        if mode == "bip" {
+            bip_series = Some(outcome.recorder.balance.series.clone());
+        }
+    }
+    table.print();
+
+    if let Some(series) = bip_series {
+        println!("BIP per-layer MaxVio over steps (all layers overlaid):");
+        let named: Vec<(String, &[f32])> = series
+            .iter()
+            .enumerate()
+            .map(|(l, s)| (format!("L{}", l + 1), s.as_slice()))
+            .collect();
+        let plot: Vec<(&str, &[f32])> =
+            named.iter().map(|(n, s)| (n.as_str(), *s)).collect();
+        print!("{}", ascii_plot(&plot, 72, 12));
+        println!("every layer's line should hug the bottom of the plot.");
+    }
+    Ok(())
+}

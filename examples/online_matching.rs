@@ -1,0 +1,75 @@
+//! §5 application demo: multi-slot online advertisement matching.
+//!
+//!   cargo run --release --example online_matching
+//!
+//! A stream of page views arrives; each page shows `slots` ads out of
+//! `ads` advertisers with known CTRs. We maximize total expected clicks
+//! while capping any single advertiser's share (problem (BIP) with
+//! advertisers as experts). Shows greedy vs Algorithm 3 (exact online)
+//! vs Algorithm 4 (constant-space approximation), against the hindsight
+//! optimum from the min-cost-flow solver.
+
+use bip_moe::matching::simulator::{run_policy, MatchPolicy, Workload};
+use bip_moe::metrics::TablePrinter;
+
+fn main() {
+    let (flows, ads, slots) = (8192usize, 32usize, 2usize);
+    let w = Workload::synthetic(flows, ads, slots, 42);
+    println!(
+        "workload: {flows} page views, {ads} advertisers, {slots} slots \
+         per page, per-advertiser cap {} impressions\n",
+        w.capacity()
+    );
+
+    let mut table = TablePrinter::new(
+        "online ad matching",
+        &["policy", "expected clicks", "vs hindsight opt", "MaxVio",
+          "state bytes", "note"],
+    );
+    let rows = [
+        (MatchPolicy::Greedy,
+         "ignores caps -> hot advertisers flooded"),
+        (MatchPolicy::Online { t_iters: 4 },
+         "Algorithm 3: per-advertiser heaps"),
+        (MatchPolicy::Approx { t_iters: 4, buckets: 128 },
+         "Algorithm 4: O(m*b) histograms"),
+    ];
+    for (policy, note) in rows {
+        let r = run_policy(&w, policy);
+        table.row(vec![
+            r.policy.clone(),
+            format!("{:.1}", r.objective),
+            format!("{:.3}", r.competitive_ratio),
+            format!("{:.3}", r.max_violation),
+            r.state_bytes.to_string(),
+            note.to_string(),
+        ]);
+    }
+    table.print();
+
+    // the steady-state picture: violation of the LAST quarter of the
+    // stream, after the online duals have warmed up
+    println!("steady-state check (last 25% of the stream):");
+    for t_iters in [1usize, 4, 8] {
+        let mut gate =
+            bip_moe::bip::online::OnlineGate::new(ads, slots,
+                                                  w.capacity(), t_iters);
+        let mut tail = vec![0u64; ads];
+        for i in 0..flows {
+            let chosen = gate.route_token(w.row(i));
+            if i >= 3 * flows / 4 {
+                for &e in &chosen {
+                    tail[e as usize] += 1;
+                }
+            }
+        }
+        let mean = (flows / 4 * slots) as f64 / ads as f64;
+        let vio = *tail.iter().max().unwrap() as f64 / mean - 1.0;
+        println!("  T={t_iters}: tail MaxVio {vio:.3}");
+    }
+    println!(
+        "\ntakeaway: Algorithm 4 matches Algorithm 3's quality with \
+         stream-length-independent memory — deployable at recommendation \
+         scale (§5.2)."
+    );
+}

@@ -1,0 +1,99 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): pre-train a real
+//! MoE transformer LM through the full three-layer stack — rust
+//! coordinator -> PJRT -> AOT'd JAX/Pallas train step — for a few hundred
+//! steps on the synthetic corpus, logging the loss curve, the per-step
+//! MaxVio, held-out perplexity, and the simulated cluster time.
+//!
+//!   cargo run --release --example train_moe            # moe16-bench
+//!   BIP_MOE_CONFIG=moe16 BIP_MOE_STEPS=300 \
+//!   cargo run --release --example train_moe            # ~35M params
+//!
+//! Trains BIP (T=4) and the Loss-Controlled baseline back to back so the
+//! balance/quality/time comparison is visible in one run.
+
+use std::path::Path;
+
+use bip_moe::metrics::table::ascii_plot;
+use bip_moe::metrics::TablePrinter;
+use bip_moe::runtime::Engine;
+use bip_moe::train::TrainDriver;
+
+fn main() -> anyhow::Result<()> {
+    bip_moe::util::log::init_from_env();
+    let config = std::env::var("BIP_MOE_CONFIG")
+        .unwrap_or_else(|_| "moe16-bench".to_string());
+    let steps: u64 = std::env::var("BIP_MOE_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+
+    let engine = Engine::new(Path::new("artifacts"))?;
+    let cfg = engine.manifest().config(&config)?.clone();
+    println!(
+        "e2e: config={config} ({} params, {} layers x {} experts, \
+         top-{k}, {n} tokens/batch), {steps} steps",
+        cfg.theta_size,
+        cfg.n_layers,
+        cfg.n_experts,
+        k = cfg.top_k,
+        n = cfg.n_tokens
+    );
+
+    let mut table = TablePrinter::new(
+        &format!("e2e pre-training: {config}, {steps} steps"),
+        &["mode", "first loss", "final loss", "test ppl", "AvgMaxVio",
+          "SupMaxVio", "sim h (full)", "wall s"],
+    );
+    let mut curves: Vec<(String, Vec<f32>)> = Vec::new();
+
+    for (label, mode, t) in
+        [("bip T=4", "bip", 4usize), ("loss-controlled", "aux", 0)]
+    {
+        let mut driver = TrainDriver::new(&config, mode, t, steps);
+        driver.eval_batches = 16;
+        let outcome = driver.run(&engine)?;
+        let out = outcome.dump(Path::new("reports"))?;
+        let losses = &outcome.recorder.loss_series;
+        table.row(vec![
+            label.to_string(),
+            format!("{:.4}", losses.first().unwrap()),
+            format!("{:.4}", losses.last().unwrap()),
+            format!("{:.4}", outcome.perplexity),
+            format!("{:.4}", outcome.recorder.balance.avg_max_vio()),
+            format!("{:.4}", outcome.recorder.balance.sup_max_vio()),
+            format!("{:.3}", outcome.sim.extrapolate_hours(
+                cfg.total_steps as u64)),
+            format!("{:.1}", outcome.recorder.total_wall()),
+        ]);
+        curves.push((
+            format!("{label} loss"),
+            losses.clone(),
+        ));
+        curves.push((
+            format!("{label} maxvio"),
+            outcome.recorder.balance.global_series.clone(),
+        ));
+        println!("reports: {}", out.display());
+        // persist the trained model
+        let ckpt = format!("reports/{}_e2e.ckpt",
+                           driver.run_label());
+        outcome.state.save(Path::new(&ckpt), &config, mode)?;
+        println!("checkpoint: {ckpt}");
+    }
+
+    println!("\nloss curves (both modes) + MaxVio:");
+    let plot: Vec<(&str, &[f32])> = curves
+        .iter()
+        .map(|(l, s)| (l.as_str(), s.as_slice()))
+        .collect();
+    print!("{}", ascii_plot(&plot, 76, 18));
+    table.print();
+
+    println!(
+        "\nvalidation: loss falls from ~ln(V)={:.2}; bip AvgMaxVio stays \
+         near 0 from step 1; aux baseline shows the unbalanced transient \
+         and a higher simulated cluster time.",
+        (cfg.vocab_size as f64).ln()
+    );
+    Ok(())
+}

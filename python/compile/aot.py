@@ -1,0 +1,245 @@
+"""AOT pipeline: lower every (config x routing-mode x entry-point) to HLO
+*text* plus a JSON manifest the rust coordinator parses.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos and NOT
+``.serialize()`` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the published xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as:  cd python && python -m compile.aot --out-dir ../artifacts \
+             [--configs tiny,moe16-bench,moe64-bench] [--force]
+
+The pipeline is content-addressed: each artifact records the sha256 of the
+generating sources + config in the manifest, and lowering is skipped when
+unchanged (so ``make artifacts`` is a no-op on a fresh tree).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig, with_bip_T
+
+# T grid from Tables 2/3; tiny keeps the test matrix small.
+BIP_T_GRID = {
+    "tiny": (2, 4),
+    "moe16-bench": (2, 4, 8, 14),
+    "moe64-bench": (2, 4, 8, 14),
+    "moe16": (2, 4, 8, 14),
+    "moe64": (2, 4, 8, 14),
+}
+DEFAULT_CONFIGS = ("tiny", "moe16-bench", "moe64-bench")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _abstract(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_io(cfg: ModelConfig, total: int):
+    L, m = cfg.n_layers, cfg.n_experts
+    ins = [
+        _spec("theta", (total,), "f32"),
+        _spec("adam_m", (total,), "f32"),
+        _spec("adam_v", (total,), "f32"),
+        _spec("step", (), "i32"),
+        _spec("route_state", (L, m), "f32"),
+        _spec("tokens", (cfg.batch_size, cfg.seq_len + 1), "i32"),
+    ]
+    outs = [
+        _spec("theta", (total,), "f32"),
+        _spec("adam_m", (total,), "f32"),
+        _spec("adam_v", (total,), "f32"),
+        _spec("step", (), "i32"),
+        _spec("route_state", (L, m), "f32"),
+        _spec("nll_sum", (), "f32"),
+        _spec("loads", (L, m), "f32"),
+        _spec("drops", (L,), "f32"),
+    ]
+    return ins, outs
+
+
+def eval_io(cfg: ModelConfig, total: int):
+    L, m = cfg.n_layers, cfg.n_experts
+    ins = [
+        _spec("theta", (total,), "f32"),
+        _spec("route_state", (L, m), "f32"),
+        _spec("tokens", (cfg.batch_size, cfg.seq_len + 1), "i32"),
+    ]
+    outs = [
+        _spec("nll_sum", (), "f32"),
+        _spec("loads", (L, m), "f32"),
+        _spec("drops", (L,), "f32"),
+    ]
+    return ins, outs
+
+
+def lower_train(cfg: ModelConfig, mode: str, total: int):
+    fn = functools.partial(model.train_step, mode=mode, cfg=cfg)
+    args = (
+        _abstract((total,)), _abstract((total,)), _abstract((total,)),
+        _abstract((), jnp.int32),
+        _abstract((cfg.n_layers, cfg.n_experts)),
+        _abstract((cfg.batch_size, cfg.seq_len + 1), jnp.int32),
+    )
+    return jax.jit(fn, donate_argnums=(0, 1, 2, 3, 4)).lower(*args)
+
+
+def lower_eval(cfg: ModelConfig, mode: str, total: int):
+    fn = functools.partial(model.eval_step, mode=mode, cfg=cfg)
+    args = (
+        _abstract((total,)),
+        _abstract((cfg.n_layers, cfg.n_experts)),
+        _abstract((cfg.batch_size, cfg.seq_len + 1), jnp.int32),
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def lower_init(cfg: ModelConfig):
+    fn = functools.partial(model.init_theta, cfg)
+    return jax.jit(fn).lower(_abstract((), jnp.int32))
+
+
+def lower_probe(cfg: ModelConfig, mode: str, total: int, layer: int):
+    fn = functools.partial(model.route_probe, layer=layer, mode=mode, cfg=cfg)
+    args = (
+        _abstract((total,)),
+        _abstract((cfg.n_layers, cfg.n_experts)),
+        _abstract((cfg.batch_size, cfg.seq_len + 1), jnp.int32),
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def source_fingerprint() -> str:
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    files = [os.path.join(base, f) for f in
+             ("model.py", "configs.py", "aot.py")]
+    files += [os.path.join(base, "kernels", f) for f in
+              sorted(os.listdir(os.path.join(base, "kernels")))
+              if f.endswith(".py")]
+    for f in files:
+        with open(f, "rb") as fh:
+            h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def build(out_dir: str, config_names, force: bool, probe: bool):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    old = {}
+    if os.path.exists(manifest_path) and not force:
+        with open(manifest_path) as f:
+            old = json.load(f)
+    fp = source_fingerprint()
+    fresh = old.get("fingerprint") == fp
+    manifest = {"fingerprint": fp, "configs": {}, "artifacts": []}
+    prev_files = {a["file"]: a for a in old.get("artifacts", [])}
+    prev_cfgs = set(old.get("configs", {}).keys()) if fresh else set()
+
+    def emit(name, lower_fn, entry):
+        path = os.path.join(out_dir, name)
+        if fresh and name in prev_files and os.path.exists(path):
+            manifest["artifacts"].append(prev_files[name])
+            print(f"  [cached] {name}")
+            return
+        text = to_hlo_text(lower_fn())
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = name
+        entry["bytes"] = len(text)
+        manifest["artifacts"].append(entry)
+        print(f"  [lowered] {name} ({len(text)//1024} KiB)")
+
+    for cname in config_names:
+        cfg = CONFIGS[cname]
+        specs, total = model.param_specs(cfg)
+        cdict = cfg.to_dict()
+        cdict["theta_size"] = total
+        cdict["params"] = [
+            {"name": sp.name, "shape": list(sp.shape), "offset": sp.offset,
+             "std": sp.std, "decay": sp.decay} for sp in specs
+        ]
+        manifest["configs"][cname] = cdict
+        print(f"config {cname}: theta={total}")
+
+        tio = train_io(cfg, total)
+        eio = eval_io(cfg, total)
+
+        emit(f"{cname}_init.hlo.txt", lambda cfg=cfg: lower_init(cfg), {
+            "config": cname, "mode": "-", "kind": "init",
+            "inputs": [_spec("seed", (), "i32")],
+            "outputs": [_spec("theta", (total,), "f32")],
+        })
+        for mode in ("aux", "lossfree"):
+            emit(f"{cname}_{mode}_train.hlo.txt",
+                 lambda cfg=cfg, mode=mode: lower_train(cfg, mode, total), {
+                     "config": cname, "mode": mode, "kind": "train",
+                     "inputs": tio[0], "outputs": tio[1],
+                 })
+        for T in BIP_T_GRID[cname]:
+            bcfg = with_bip_T(cfg, T)
+            emit(f"{cname}_bip_T{T}_train.hlo.txt",
+                 lambda bcfg=bcfg: lower_train(bcfg, "bip", total), {
+                     "config": cname, "mode": "bip", "bip_T": T,
+                     "kind": "train", "inputs": tio[0], "outputs": tio[1],
+                 })
+        for mode in ("aux", "lossfree", "bip"):
+            emit(f"{cname}_{mode}_eval.hlo.txt",
+                 lambda cfg=cfg, mode=mode: lower_eval(cfg, mode, total), {
+                     "config": cname, "mode": mode, "kind": "eval",
+                     "inputs": eio[0], "outputs": eio[1],
+                 })
+        if probe:
+            emit(f"{cname}_probe_l0.hlo.txt",
+                 lambda cfg=cfg: lower_probe(cfg, "bip", total, 0), {
+                     "config": cname, "mode": "bip", "kind": "probe",
+                     "layer": 0,
+                     "inputs": eio[0],
+                     "outputs": [_spec("scores",
+                                       (cfg.n_tokens, cfg.n_experts), "f32")],
+                 })
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(DEFAULT_CONFIGS))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    args = ap.parse_args()
+    names = [c for c in args.configs.split(",") if c]
+    for c in names:
+        if c not in CONFIGS:
+            sys.exit(f"unknown config {c!r}; have {sorted(CONFIGS)}")
+    build(args.out_dir, names, args.force, probe=not args.no_probe)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Model/run configurations shared by the AOT pipeline and (via the
+artifact manifest) the rust coordinator.
+
+The paper's Table 1 settings are kept exactly where they govern routing
+behaviour — expert count m, top-k k, 8 MoE layers, softmax router, vocab
+6400 — while d_model / d_ff / seq_len are scaled to the CPU testbed (see
+DESIGN.md §Substitutions).  ``n_tokens = batch_size * seq_len`` is the
+``n`` of Algorithm 1 and of MaxVio's mean load n*k/m.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int = 6400
+    d_model: int = 128
+    n_heads: int = 8
+    n_layers: int = 8          # every layer is a MoE layer (Minimind-MoE)
+    d_ff: int = 128            # per-expert SwiGLU hidden size
+    n_experts: int = 16        # m
+    top_k: int = 4             # k
+    seq_len: int = 256
+    batch_size: int = 4
+    capacity_factor: float = 2.0
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    init_std: float = 0.02
+    # optimizer (baked into the train-step HLO)
+    lr: float = 3e-4
+    warmup_steps: int = 32
+    total_steps: int = 4096    # cosine horizon; training may stop earlier
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # routing-mode hyperparameters (Table 2/3 settings)
+    aux_alpha: float = 0.1     # Loss-Controlled
+    lossfree_u: float = 1e-3   # Loss-Free
+    bip_T: int = 4             # BIP dual iterations (paper sweeps 2/4/8/14)
+
+    @property
+    def n_tokens(self) -> int:
+        return self.batch_size * self.seq_len
+
+    @property
+    def capacity(self) -> int:
+        """Per-expert buffer slots c = ceil(cf * n * k / m)."""
+        exact = self.n_tokens * self.top_k / self.n_experts
+        return int(-(-self.capacity_factor * exact // 1))
+
+    @property
+    def expert_cap(self) -> int:
+        """BIP constraint (2) RHS: n*k/m (integral in all paper configs)."""
+        return self.n_tokens * self.top_k // self.n_experts
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_dict(self):
+        d = asdict(self)
+        d["n_tokens"] = self.n_tokens
+        d["capacity"] = self.capacity
+        d["expert_cap"] = self.expert_cap
+        return d
+
+
+# Test-speed config: tiny everything, still a real 2-layer MoE LM.
+TINY = ModelConfig(
+    name="tiny", vocab_size=512, d_model=32, n_heads=4, n_layers=2,
+    d_ff=32, n_experts=8, top_k=2, seq_len=32, batch_size=2,
+    warmup_steps=4, total_steps=256,
+)
+
+# Bench configs: paper routing fabric (m, k, 8 layers, vocab 6400), compute
+# scaled so the 3-method x {T} grids of Tables 2-5 run in CPU bench budget.
+MOE16_BENCH = ModelConfig(
+    name="moe16-bench", d_model=64, n_heads=8, n_layers=8, d_ff=64,
+    n_experts=16, top_k=4, seq_len=128, batch_size=4, capacity_factor=1.5,
+)
+MOE64_BENCH = ModelConfig(
+    name="moe64-bench", d_model=64, n_heads=8, n_layers=8, d_ff=64,
+    n_experts=64, top_k=8, seq_len=128, batch_size=4, capacity_factor=1.5,
+)
+
+# E2E configs for examples/train_moe.rs: paper 8-layer routing fabric at the
+# largest parameter count the CPU testbed trains in a few hundred steps
+# (~35M / ~67M; the paper's 0.3B/1.1B don't fit the budget — DESIGN.md §4).
+MOE16 = ModelConfig(
+    name="moe16", d_model=256, n_heads=8, n_layers=8, d_ff=320,
+    n_experts=16, top_k=4, seq_len=256, batch_size=4,
+)
+MOE64 = ModelConfig(
+    name="moe64", d_model=256, n_heads=8, n_layers=8, d_ff=160,
+    n_experts=64, top_k=8, seq_len=256, batch_size=4,
+)
+
+CONFIGS = {c.name: c for c in [TINY, MOE16_BENCH, MOE64_BENCH, MOE16, MOE64]}
+
+ROUTING_MODES = ("aux", "lossfree", "bip")
+
+
+def with_bip_T(cfg: ModelConfig, T: int) -> ModelConfig:
+    return replace(cfg, bip_T=T)

@@ -1,0 +1,159 @@
+"""L1 Pallas kernel: grouped per-expert SwiGLU FFN — the MoE compute hot-spot.
+
+Input is the capacity-dispatched token buffer x (m, c, d): c slots per
+expert, zero-padded where an expert received fewer tokens. Each grid step
+processes one expert's buffer with three MXU matmuls:
+
+    h = silu(x_e @ w1_e) * (x_e @ w3_e);   y_e = h @ w2_e
+
+TPU mapping (the paper trains on GPUs; see DESIGN.md §Hardware-Adaptation):
+  * grid over experts — one (c, d) token tile + that expert's three weight
+    matrices resident in VMEM per step; weights stream HBM->VMEM once per
+    expert instead of the GPU's threadblock-per-expert shared-memory pass.
+  * c and d are padded by the caller to multiples of the 128x128 MXU tile
+    where it matters; the matmuls accumulate in f32
+    (``preferred_element_type``) as the MXU does for bf16 inputs.
+
+VMEM footprint per step: c*d + 2*d*f + c*f + f*d + c*d floats; e.g.
+c=512, d=256, f=512 -> ~2.5 MiB, comfortably under ~16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _expert_ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, y_ref):
+    x = x_ref[...]          # (c, d)   this expert's dispatched tokens
+    w1 = w1_ref[...]        # (d, f)
+    w3 = w3_ref[...]        # (d, f)
+    w2 = w2_ref[...]        # (f, d)
+    h1 = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    h3 = jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    h = jax.nn.silu(h1) * h3
+    y_ref[...] = jnp.dot(h, w2, preferred_element_type=jnp.float32).astype(
+        y_ref.dtype
+    )
+
+
+def swiglu_expert_ffn_pallas(x, w1, w3, w2):
+    """Pallas version of ``ref.swiglu_expert_ffn``.
+
+    x (m, c, d), w1/w3 (m, d, f), w2 (m, f, d) -> (m, c, d)."""
+    m, c, d = x.shape
+    f = w1.shape[2]
+    return pl.pallas_call(
+        _expert_ffn_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((None, c, d), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, d, f), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, d, f), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, f, d), lambda e: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, c, d), lambda e: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, c, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, w1, w3, w2)
+
+
+def _expert_ffn_bwd_kernel(x_ref, w1_ref, w3_ref, w2_ref, dy_ref,
+                           dx_ref, dw1_ref, dw3_ref, dw2_ref):
+    """Backward kernel (one expert per grid step), rematerializing the
+    activations instead of stashing them (VMEM over HBM traffic):
+
+        a = x@w1; b = x@w3; h = silu(a)*b; y = h@w2
+        dh  = dy @ w2^T          dw2 = h^T @ dy
+        da  = dh * b * silu'(a)  db  = dh * silu(a)
+        dx  = da @ w1^T + db @ w3^T
+        dw1 = x^T @ da           dw3 = x^T @ db
+    """
+    x = x_ref[...]
+    w1 = w1_ref[...]
+    w3 = w3_ref[...]
+    w2 = w2_ref[...]
+    dy = dy_ref[...]
+    a = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    b = jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    sig = jax.nn.sigmoid(a)
+    sa = a * sig                      # silu(a)
+    h = sa * b
+    dh = jnp.dot(dy, w2.T, preferred_element_type=jnp.float32)
+    dw2_ref[...] = jnp.dot(h.T, dy, preferred_element_type=jnp.float32)
+    dsilu = sig * (1.0 + a * (1.0 - sig))   # d silu / da
+    da = dh * b * dsilu
+    db = dh * sa
+    dx_ref[...] = (
+        jnp.dot(da, w1.T, preferred_element_type=jnp.float32)
+        + jnp.dot(db, w3.T, preferred_element_type=jnp.float32)
+    ).astype(dx_ref.dtype)
+    dw1_ref[...] = jnp.dot(x.T, da, preferred_element_type=jnp.float32)
+    dw3_ref[...] = jnp.dot(x.T, db, preferred_element_type=jnp.float32)
+
+
+def _ffn_bwd_pallas(x, w1, w3, w2, dy):
+    m, c, d = x.shape
+    f = w1.shape[2]
+    return pl.pallas_call(
+        _expert_ffn_bwd_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((None, c, d), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, d, f), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, d, f), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, f, d), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, c, d), lambda e: (e, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((None, c, d), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, d, f), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, d, f), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, f, d), lambda e: (e, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, c, d), x.dtype),
+            jax.ShapeDtypeStruct((m, d, f), w1.dtype),
+            jax.ShapeDtypeStruct((m, d, f), w3.dtype),
+            jax.ShapeDtypeStruct((m, f, d), w2.dtype),
+        ),
+        interpret=INTERPRET,
+    )(x, w1, w3, w2, dy)
+
+
+@jax.custom_vjp
+def expert_ffn(x, w1, w3, w2):
+    """Differentiable grouped expert FFN: Pallas forward + Pallas backward.
+
+    Pallas kernels have no automatic VJP, so the backward pass is its own
+    hand-derived kernel (tested against jax.grad of the jnp reference)."""
+    return swiglu_expert_ffn_pallas(x, w1, w3, w2)
+
+
+def _expert_ffn_fwd(x, w1, w3, w2):
+    return swiglu_expert_ffn_pallas(x, w1, w3, w2), (x, w1, w3, w2)
+
+
+def _expert_ffn_bwd(res, dy):
+    x, w1, w3, w2 = res
+    return _ffn_bwd_pallas(x, w1, w3, w2, dy)
+
+
+expert_ffn.defvjp(_expert_ffn_fwd, _expert_ffn_bwd)
+
+
+def mxu_utilization_estimate(c: int, d: int, f: int) -> float:
+    """Fraction of MXU-issue slots doing useful work for one expert tile,
+    from tile-quantization alone (128-lane MXU): used in EXPERIMENTS §Perf."""
+    def ceil_div(a, b):
+        return -(-a // b)
+
+    useful = 2 * c * d * f * 3  # three matmuls (w1, w3, w2) fwd
+    issued = (
+        2 * (ceil_div(c, 128) * 128) * (ceil_div(d, 128) * 128)
+        * (ceil_div(f, 128) * 128) * 3
+    )
+    return useful / issued

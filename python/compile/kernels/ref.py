@@ -1,0 +1,135 @@
+"""Pure-jnp reference oracle for every L1 kernel.
+
+These implementations are deliberately written as straight-line jnp with no
+Pallas, no tiling and no cleverness: they are the correctness ground truth
+that pytest (and hypothesis sweeps) compare the Pallas kernels against, and
+they double as readable documentation of the math in the paper:
+
+  * ``bip_dual_update``    — Algorithm 1 lines 7-12 (T dual-ascent iterations)
+  * ``biased_topk_gate``   — Algorithm 1 line 13 (g_ij = s_ij on Topk(s - q))
+  * ``expert_loads``       — per-expert token counts (MaxVio numerator)
+  * ``swiglu_expert_ffn``  — the per-expert SwiGLU FFN the MoE layer applies
+  * ``lossfree_bias_update`` — Wang et al. 2024 sign update (baseline)
+  * ``aux_loss``           — GShard/Switch auxiliary loss (baseline)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Order-statistic helpers.
+#
+# NOTE: deliberately sort-based, NOT ``jax.lax.top_k``.  jax >= 0.5 lowers
+# top_k to the dedicated ``topk`` HLO instruction, which the xla crate's
+# XLA 0.5.1 text parser does not know; ``sort`` round-trips fine and at the
+# routing sizes involved (m <= 64 per row, n <= a few thousand per column)
+# the cost difference is irrelevant.
+# ---------------------------------------------------------------------------
+
+def kth_largest(x, kth: int):
+    """k-th largest value along the last axis (kth is 1-based)."""
+    n = x.shape[-1]
+    return jnp.sort(x, axis=-1)[..., n - kth]
+
+
+def topk_desc(x, k: int):
+    """(values, indices) of the k largest along the last axis, descending,
+    ties broken by lower index (same convention as lax.top_k)."""
+    idx = jnp.argsort(-x, axis=-1, stable=True)[..., :k]
+    return jnp.take_along_axis(x, idx, axis=-1), idx
+
+
+def bip_dual_update(s, q0, k: int, cap: int, T: int):
+    """T iterations of the (D-LP) dual ascent from Algorithm 1 (lines 7-12).
+
+    Args:
+      s:   (n, m) routing score matrix for the current batch.
+      q0:  (m,) warm-start dual vector (carried across batches, Alg. 1 line 2).
+      k:   experts selected per token.
+      cap: per-expert capacity n*k/m (the RHS of BIP constraint (2)).
+      T:   number of dual iterations.
+
+    Returns (q_T, p_T): the expert duals (m,) and token duals (n,) after the
+    final iteration.  Routing then uses Topk(s_i - q, k) per token.
+    """
+    n, m = s.shape
+    kk = min(k + 1, m)
+    cc = min(cap + 1, n)
+
+    def body(q, _):
+        # p_i = max(0, (k+1)-th largest of row i of  P = s - 1 q)
+        P = s - q[None, :]
+        p = jnp.maximum(0.0, kth_largest(P, kk))
+        # q_j = max(0, (cap+1)-th largest of row j of  Q = s^T - 1 p)
+        Q = s - p[:, None]
+        q_new = jnp.maximum(0.0, kth_largest(Q.T, cc))
+        return q_new, p
+
+    q, p = jax.lax.scan(body, q0.astype(s.dtype), None, length=T)
+    return q, p[-1]
+
+
+def biased_topk_gate(s, q, k: int):
+    """Algorithm 1 line 13: route token i to Topk_j(s_ij - q_j, k).
+
+    Gate values are the ORIGINAL scores s_ij (the bias reorders, it never
+    rescales — same convention as Loss-Free).  Returns:
+      idx   (n, k) int32   selected expert ids per token
+      gate  (n, k) f32     gate weights (original s at the selected experts)
+    """
+    biased = s - q[None, :]
+    _, idx = topk_desc(biased, k)
+    gate = jnp.take_along_axis(s, idx, axis=1)
+    return idx.astype(jnp.int32), gate
+
+
+def expert_loads(idx, m: int):
+    """Per-expert token counts from a (n, k) assignment. Returns (m,) f32."""
+    one_hot = jax.nn.one_hot(idx.reshape(-1), m, dtype=jnp.float32)
+    return one_hot.sum(axis=0)
+
+
+def max_violation(loads, n: int, k: int, m: int):
+    """MaxVio_batch = max_j load_j / mean_load - 1 (Wang et al. 2024)."""
+    mean = n * k / m
+    return jnp.max(loads) / mean - 1.0
+
+
+def swiglu_expert_ffn(x, w1, w3, w2):
+    """Per-expert SwiGLU: (silu(x @ w1) * (x @ w3)) @ w2.
+
+    x:  (m, c, d) gathered token buffers (c = capacity slots per expert)
+    w1: (m, d, f)   w3: (m, d, f)   w2: (m, f, d)
+    Returns (m, c, d).
+    """
+    h1 = jnp.einsum("mcd,mdf->mcf", x, w1)
+    h3 = jnp.einsum("mcd,mdf->mcf", x, w3)
+    h = jax.nn.silu(h1) * h3
+    return jnp.einsum("mcf,mfd->mcd", h, w2)
+
+
+def lossfree_bias_update(b, loads, n: int, k: int, m: int, u: float):
+    """Loss-Free baseline (Wang et al. 2024): b_j += u * sign(mean - load_j)."""
+    mean = n * k / m
+    return b + u * jnp.sign(mean - loads)
+
+
+def aux_loss(s, idx, n: int, k: int, m: int, alpha: float):
+    """Loss-Controlled baseline (GShard/Switch): alpha * m/(k n) sum_j f_j P_j
+    with f_j the token fraction routed to j and P_j the mean score of j."""
+    f = expert_loads(idx, m) * (m / (k * n))
+    P = s.mean(axis=0)
+    return alpha * jnp.sum(f * P)
+
+
+def bip_route(s, q0, k: int, cap: int, T: int):
+    """Full reference routing for one gate: dual update + biased top-k.
+
+    Returns (q_new, idx, gate, loads)."""
+    q, _ = bip_dual_update(s, q0, k, cap, T)
+    idx, gate = biased_topk_gate(s, q, k)
+    loads = expert_loads(idx, s.shape[1])
+    return q, idx, gate, loads

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: biased top-k gate (Algorithm 1 line 13) + load counts.
+
+Given scores ``s`` (n, m) and an additive bias ``bias`` (m,) — which is
+``-q`` for BIP-Based Balancing, ``+b`` for the Loss-Free baseline, and
+zero for Loss-Controlled / greedy — select the top-k experts per token on
+the *biased* scores while emitting the *original* scores as gate weights,
+plus the per-expert load histogram the coordinator's MaxVio metrics need.
+
+TPU mapping: token-blocked grid; each program owns a (block_n, m) tile in
+VMEM, runs top-k on the VPU, and accumulates its partial load histogram
+into the output block (the grid is sequential on TPU, so the accumulation
+is race-free; in interpret mode it is a scan).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import topk_desc
+
+INTERPRET = True
+
+
+def _gate_kernel(s_ref, bias_ref, idx_ref, gate_ref, loads_ref, *, k: int):
+    i = pl.program_id(0)
+    s = s_ref[...]
+    bias = bias_ref[...]
+    m = s.shape[1]
+    biased = s + bias[None, :]
+    _, idx = topk_desc(biased, k)
+    gate = jnp.take_along_axis(s, idx, axis=1)
+    idx_ref[...] = idx.astype(jnp.int32)
+    gate_ref[...] = gate
+    one_hot = jax.nn.one_hot(idx.reshape(-1), m, dtype=s.dtype)
+    partial = one_hot.sum(axis=0)
+
+    @pl.when(i == 0)
+    def _init():
+        loads_ref[...] = jnp.zeros_like(loads_ref)
+
+    loads_ref[...] += partial
+
+
+def biased_topk_gate_pallas(s, bias, *, k: int, block_n: int = 256):
+    """Pallas version of ``ref.biased_topk_gate`` (+ loads).
+
+    Returns (idx (n,k) i32, gate (n,k) f32, loads (m,) f32). ``bias`` is
+    ADDED to the scores before top-k (callers pass -q for BIP).
+    """
+    n, m = s.shape
+    if n % block_n != 0:
+        block_n = n  # degenerate single block for odd test sizes
+    grid = (n // block_n,)
+    idx, gate, loads = pl.pallas_call(
+        functools.partial(_gate_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),  # shared accumulator
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, k), jnp.int32),
+            jax.ShapeDtypeStruct((n, k), s.dtype),
+            jax.ShapeDtypeStruct((m,), s.dtype),
+        ),
+        interpret=INTERPRET,
+    )(s, bias)
+    return idx, gate, loads

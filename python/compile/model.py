@@ -1,0 +1,392 @@
+"""L2: Minimind-style MoE transformer LM in JAX — forward, backward, AdamW.
+
+Everything the rust coordinator executes per training step is defined here
+and AOT-lowered once by ``aot.py``; python never runs on the request path.
+
+Design notes
+------------
+* **Flat parameter vector.** All trainable parameters live in one f32
+  vector ``theta``; ``ParamSpec`` (also exported to the artifact manifest)
+  records each tensor's (name, shape, offset, init-std).  This collapses
+  the rust<->PJRT interface to a handful of arrays and makes buffer
+  donation trivial.
+* **Layers are scanned.** Per-layer parameters are stored stacked with a
+  leading ``n_layers`` axis and the decoder runs as ``lax.scan`` over
+  layers, so the lowered HLO is O(1) in depth.
+* **Routing modes.** ``mode in {aux, lossfree, bip}`` is baked at trace
+  time.  A single ``route_state`` (n_layers, m) f32 array threads the
+  per-layer bias vector: q for BIP (Alg. 1, warm-started across batches),
+  b for Loss-Free, and an ignored zero vector for Loss-Controlled.
+* **L1 kernels.** The BIP dual update, the biased top-k gate, and the
+  grouped expert FFN (fwd + custom-VJP bwd) are the Pallas kernels from
+  ``kernels/``; the dual update and gate run on ``stop_gradient`` scores
+  (they produce integer routing decisions / non-differentiable state), and
+  gate *values* are re-gathered from the live scores so gradients flow
+  exactly as in the paper (g_ij = s_ij on the selected experts).
+* **Capacity dispatch.** Tokens are dispatched to per-expert buffers of
+  ``capacity`` slots (GShard-style); overflow tokens are dropped and the
+  drop fraction is reported per layer.  With BIP balancing, loads stay
+  <= n*k/m < capacity, so drops are structurally impossible — one of the
+  operational payoffs the paper claims.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels.bip_balance import bip_dual_pallas
+from .kernels.topk_gate import biased_topk_gate_pallas
+from .kernels.moe_ffn import expert_ffn
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    offset: int
+    std: float          # init: Normal(0, std); std==0 -> ones (norm gains)
+    decay: bool         # weight decay applies
+
+
+def param_specs(cfg: ModelConfig):
+    """Static flat-theta layout. Order is load-bearing: rust and aot share it
+    through the manifest."""
+    specs = []
+    off = 0
+
+    def add(name, shape, std, decay):
+        nonlocal off
+        size = int(np.prod(shape))
+        specs.append(ParamSpec(name, tuple(shape), off, std, decay))
+        off += size
+
+    L, d, m, f = cfg.n_layers, cfg.d_model, cfg.n_experts, cfg.d_ff
+    std = cfg.init_std
+    out_std = std / math.sqrt(2.0 * L)   # residual-branch output scaling
+    add("embed", (cfg.vocab_size, d), std, True)
+    add("attn_norm", (L, d), 0.0, False)
+    add("wq", (L, d, d), std, True)
+    add("wk", (L, d, d), std, True)
+    add("wv", (L, d, d), std, True)
+    add("wo", (L, d, d), out_std, True)
+    add("ffn_norm", (L, d), 0.0, False)
+    add("w_gate", (L, d, m), std, True)
+    add("w1", (L, m, d, f), std, True)
+    add("w3", (L, m, d, f), std, True)
+    add("w2", (L, m, f, d), out_std, True)
+    add("final_norm", (d,), 0.0, False)
+    return specs, off
+
+
+def unpack(theta, specs):
+    out = {}
+    for sp in specs:
+        size = int(np.prod(sp.shape))
+        out[sp.name] = jax.lax.dynamic_slice(
+            theta, (sp.offset,), (size,)
+        ).reshape(sp.shape)
+    return out
+
+
+def decay_mask(specs, total):
+    """Weight-decay mask over flat theta, built from broadcast segments so
+    it lowers to O(#tensors) HLO ops, not a theta-sized literal constant."""
+    parts = []
+    for sp in specs:
+        size = int(np.prod(sp.shape))
+        val = 1.0 if sp.decay else 0.0
+        parts.append(jnp.broadcast_to(jnp.float32(val), (size,)))
+    return jnp.concatenate(parts)
+
+
+def init_theta(cfg: ModelConfig, seed):
+    """theta from a scalar seed — AOT-lowered as its own artifact so rust
+    never needs to replicate jax's init RNG."""
+    specs, total = param_specs(cfg)
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for i, sp in enumerate(specs):
+        size = int(np.prod(sp.shape))
+        if sp.std == 0.0:
+            parts.append(jnp.ones((size,), jnp.float32))
+        else:
+            sub = jax.random.fold_in(key, i)
+            parts.append(jax.random.normal(sub, (size,), jnp.float32) * sp.std)
+    return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# Transformer pieces
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope_tables(cfg: ModelConfig):
+    hd = cfg.head_dim
+    pos = np.arange(cfg.seq_len, dtype=np.float32)
+    inv = cfg.rope_theta ** (-np.arange(0, hd, 2, dtype=np.float32) / hd)
+    ang = pos[:, None] * inv[None, :]                     # (S, hd/2)
+    return jnp.asarray(np.cos(ang)), jnp.asarray(np.sin(ang))
+
+
+def apply_rope(x, cos, sin):
+    # x: (B, S, H, hd)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c, s = cos[None, :, None, :], sin[None, :, None, :]
+    ro = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return ro.reshape(x.shape)
+
+
+def attention(x, p, cos, sin, cfg: ModelConfig):
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = apply_rope((x @ p["wq"]).reshape(B, S, H, hd), cos, sin)
+    k = apply_rope((x @ p["wk"]).reshape(B, S, H, hd), cos, sin)
+    v = (x @ p["wv"]).reshape(B, S, H, hd)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k) / math.sqrt(hd)
+    # causal mask via iota comparison (never a materialized S*S constant —
+    # keeps the HLO text small)
+    row = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    logits = jnp.where((row >= col)[None, None], logits, -1e30)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", attn, v).reshape(B, S, d)
+    return out @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# MoE layer: routing (3 modes) + capacity dispatch + grouped FFN
+# --------------------------------------------------------------------------
+
+def route_scores(h_flat, w_gate):
+    """Softmax router (Minimind / Table 1)."""
+    return jax.nn.softmax(h_flat @ w_gate, axis=-1)
+
+
+def _positions_in_expert(flat_e, m):
+    """For the flattened (n*k,) expert assignment, the arrival rank of each
+    entry within its expert (0-based), via a stable counting sort."""
+    nk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jax.ops.segment_sum(jnp.ones((nk,), jnp.int32), flat_e,
+                                 num_segments=m)
+    offsets = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(nk, dtype=jnp.int32) - offsets[sorted_e]
+    return jnp.zeros((nk,), jnp.int32).at[order].set(pos_sorted), counts
+
+
+def moe_dispatch_ffn(x_flat, idx, gate, lp, cfg: ModelConfig):
+    """Capacity dispatch -> grouped Pallas FFN -> weighted combine.
+
+    x_flat (n, d); idx/gate (n, k). Returns (y (n, d), drop_frac scalar)."""
+    n, d = x_flat.shape
+    m, k, c = cfg.n_experts, cfg.top_k, cfg.capacity
+    flat_e = idx.reshape(-1)
+    pos, _counts = _positions_in_expert(flat_e, m)
+    valid = pos < c
+    slot = jnp.where(valid, flat_e * c + pos, m * c)      # m*c = dump row
+    token_id = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    buf = jnp.zeros((m * c + 1, d), x_flat.dtype).at[slot].set(
+        x_flat[token_id]
+    )
+    y_buf = expert_ffn(
+        buf[: m * c].reshape(m, c, d), lp["w1"], lp["w3"], lp["w2"]
+    ).reshape(m * c, d)
+    y_buf = jnp.concatenate([y_buf, jnp.zeros((1, d), y_buf.dtype)])
+    contrib = (
+        y_buf[slot]
+        * gate.reshape(-1)[:, None]
+        * valid[:, None].astype(y_buf.dtype)
+    )
+    y = contrib.reshape(n, k, d).sum(axis=1)
+    drop_frac = 1.0 - jnp.mean(valid.astype(jnp.float32))
+    return y, drop_frac
+
+
+def moe_layer(h_flat, lp, q_in, mode: str, cfg: ModelConfig,
+              frozen_route: bool = False):
+    """One MoE FFN block. Returns (y, q_out, loads, aux, drop_frac).
+
+    q_in/q_out: the (m,) routing-state vector for this layer (meaning
+    depends on mode — see module docstring). ``frozen_route=True`` is the
+    deployment/eval semantics: use the carried state as-is (no dual
+    iterations, no bias update)."""
+    m, k = cfg.n_experts, cfg.top_k
+    n = h_flat.shape[0]
+    s = route_scores(h_flat, lp["w_gate"])
+    s_ng = jax.lax.stop_gradient(s)
+
+    if mode == "bip":
+        if frozen_route:
+            q_new = q_in
+        else:
+            q_new, _p = bip_dual_pallas(s_ng, q_in, k=k, cap=cfg.expert_cap,
+                                        T=cfg.bip_T)
+        bias = -q_new
+        q_out = q_new
+    elif mode == "lossfree":
+        bias = q_in                    # b is ADDED (Wang et al. 2024)
+        q_out = q_in                   # updated below, after loads
+    else:                              # "aux" (Loss-Controlled) / greedy
+        bias = jnp.zeros((m,), s.dtype)
+        q_out = q_in
+
+    idx, _gate_ng, loads = biased_topk_gate_pallas(s_ng, bias, k=k)
+    # gate weights re-gathered from the LIVE scores: grads flow through s.
+    gate = jnp.take_along_axis(s, idx, axis=1)
+
+    if mode == "lossfree" and not frozen_route:
+        mean = n * k / m
+        q_out = q_in + cfg.lossfree_u * jnp.sign(mean - loads)
+
+    if mode == "aux":
+        f_frac = loads * (m / (k * n))
+        P = s.mean(axis=0)
+        aux = cfg.aux_alpha * jnp.sum(f_frac * P)
+    else:
+        aux = jnp.zeros((), s.dtype)
+
+    y, drop_frac = moe_dispatch_ffn(h_flat, idx, gate, lp, cfg)
+    return y, q_out, loads, aux, drop_frac
+
+
+# --------------------------------------------------------------------------
+# Full forward
+# --------------------------------------------------------------------------
+
+LAYER_PARAMS = ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate",
+                "w1", "w3", "w2")
+
+
+def forward(theta, route_state, tokens, mode: str, cfg: ModelConfig,
+            specs=None, frozen_route: bool = False):
+    """tokens (B, S+1) int32 -> (nll_sum, aux_total, q_out (L,m),
+    loads (L,m), drops (L,)). nll_sum is the summed token NLL."""
+    if specs is None:
+        specs = param_specs(cfg)[0]
+    p = unpack(theta, specs)
+    B, S = cfg.batch_size, cfg.seq_len
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    x = p["embed"][inputs]                                # (B, S, d)
+    cos, sin = rope_tables(cfg)
+
+    def layer_step(x, xs):
+        lp, q_in = xs
+        h = x + attention(rmsnorm(x, lp["attn_norm"], cfg.norm_eps),
+                          lp, cos, sin, cfg)
+        hn = rmsnorm(h, lp["ffn_norm"], cfg.norm_eps)
+        y, q_out, loads, aux, drop = moe_layer(
+            hn.reshape(B * S, cfg.d_model), lp, q_in, mode, cfg,
+            frozen_route=frozen_route)
+        out = h + y.reshape(B, S, cfg.d_model)
+        return out, (q_out, loads, aux, drop)
+
+    layer_stack = {k: p[k] for k in LAYER_PARAMS}
+    x, (q_out, loads, aux, drops) = jax.lax.scan(
+        layer_step, x, (layer_stack, route_state))
+
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    logits = x @ p["embed"].T                              # weight-tied head
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1)[..., 0]
+    nll_sum = jnp.sum(logz - tgt_logit)
+    return nll_sum, jnp.sum(aux), q_out, loads, drops
+
+
+# --------------------------------------------------------------------------
+# Train / eval steps (the AOT-lowered entry points)
+# --------------------------------------------------------------------------
+
+def lr_at(step, cfg: ModelConfig):
+    warm = cfg.lr * (step + 1.0) / cfg.warmup_steps
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (0.1 + 0.45 * (1.0 + jnp.cos(math.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def train_step(theta, m_adam, v_adam, step, route_state, tokens,
+               mode: str, cfg: ModelConfig):
+    """One optimizer step. Returns
+    (theta', m', v', step+1, route_state', loss_sum, loads (L,m), drops (L,))."""
+    specs, total = param_specs(cfg)
+    n_tok = cfg.batch_size * cfg.seq_len
+    wd_mask = decay_mask(specs, total)
+
+    def loss_fn(th):
+        nll, aux, q_out, loads, drops = forward(
+            th, route_state, tokens, mode, cfg, specs)
+        return nll / n_tok + aux, (nll, q_out, loads, drops)
+
+    (loss, (nll, q_out, loads, drops)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(theta)
+
+    gnorm = jnp.sqrt(jnp.sum(jnp.square(grads)) + 1e-12)
+    scale = jnp.minimum(1.0, cfg.grad_clip / gnorm)
+    grads = grads * scale
+
+    stepf = step.astype(jnp.float32)
+    lr = lr_at(stepf, cfg)
+    m_new = cfg.beta1 * m_adam + (1 - cfg.beta1) * grads
+    v_new = cfg.beta2 * v_adam + (1 - cfg.beta2) * jnp.square(grads)
+    mhat = m_new / (1 - cfg.beta1 ** (stepf + 1))
+    vhat = v_new / (1 - cfg.beta2 ** (stepf + 1))
+    upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * wd_mask * theta
+    theta_new = theta - lr * upd
+    return (theta_new, m_new, v_new, step + 1, q_out,
+            nll, loads, drops)
+
+
+def eval_step(theta, route_state, tokens, mode: str, cfg: ModelConfig):
+    """Held-out evaluation: summed NLL + loads. Routing uses the carried
+    bias state frozen (deployment semantics — no dual iterations, no bias
+    updates on test data). Perplexity = exp(nll/ntokens), computed
+    rust-side over the full test set."""
+    nll, _aux, _q, loads, drops = forward(
+        theta, route_state, tokens, mode, cfg, frozen_route=True)
+    # aux mode never reads route_state; keep the argument alive so the
+    # lowered module's signature matches the manifest for every mode
+    nll = nll + 0.0 * jnp.sum(route_state)
+    return nll, loads, drops
+
+
+def route_probe(theta, route_state, tokens, layer: int, mode: str,
+                cfg: ModelConfig):
+    """Expose one layer's router scores for a batch — used by the rust
+    solver-equivalence tests and the online-matching demo feeds."""
+    specs = param_specs(cfg)[0]
+    p = unpack(theta, specs)
+    B, S = cfg.batch_size, cfg.seq_len
+    x = p["embed"][tokens[:, :-1]]
+    cos, sin = rope_tables(cfg)
+    lp_all = {k: p[k] for k in LAYER_PARAMS}
+    for l in range(layer + 1):
+        lp = {k: v[l] for k, v in lp_all.items()}
+        h = x + attention(rmsnorm(x, lp["attn_norm"], cfg.norm_eps),
+                          lp, cos, sin, cfg)
+        hn = rmsnorm(h, lp["ffn_norm"], cfg.norm_eps)
+        if l == layer:
+            s = route_scores(hn.reshape(B * S, cfg.d_model), lp["w_gate"])
+            # keep route_state alive as an input even when probing layer 0
+            # (jax would otherwise DCE the argument out of the lowered
+            # module and the manifest I/O spec would no longer match)
+            return s + 0.0 * jnp.sum(route_state)
+        y, _, _, _, _ = moe_layer(hn.reshape(B * S, cfg.d_model), lp,
+                                  route_state[l], mode, cfg)
+        x = h + y.reshape(B, S, cfg.d_model)
+    raise ValueError("unreachable")

@@ -1,0 +1,87 @@
+"""L1/L2 performance analysis (EXPERIMENTS.md §Perf inputs).
+
+Interpret-mode Pallas wallclock is CPU-numpy, NOT a TPU proxy, so L1 is
+assessed structurally: VMEM footprints and MXU tile-quantization from the
+BlockSpecs; L2 via XLA's compiled cost analysis (FLOPs / bytes per train
+step) and an operator census of the lowered HLO (fusion sanity: no
+redundant recomputation of the forward inside the backward beyond the
+planned rematerialization).
+
+Run:  cd python && python -m compile.perf_report [--configs tiny,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from . import aot, model
+from .configs import CONFIGS
+from .kernels.bip_balance import vmem_footprint_bytes
+from .kernels.moe_ffn import mxu_utilization_estimate
+
+
+def l1_report(cfg):
+    n, m = cfg.n_tokens, cfg.n_experts
+    print(f"  L1 bip_balance: resident VMEM "
+          f"{vmem_footprint_bytes(n, m) / 1024:.1f} KiB "
+          f"(n={n}, m={m}); blocked(256): "
+          f"{vmem_footprint_bytes(n, m, blocked=True) / 1024:.1f} KiB")
+    c, d, f = cfg.capacity, cfg.d_model, cfg.d_ff
+    util = mxu_utilization_estimate(c, d, f)
+    vmem = 4 * (c * d * 2 + 2 * d * f + f * d + c * f)
+    print(f"  L1 moe_ffn: per-expert tile (c={c}, d={d}, f={f}) "
+          f"VMEM {vmem / 1024:.1f} KiB, MXU tile-quantization "
+          f"utilization {util:.2%}")
+    flops = 2 * 3 * m * c * d * f
+    print(f"  L1 moe_ffn fwd FLOPs/layer: {flops / 1e6:.1f} MF "
+          f"({m} experts x 3 matmuls)")
+
+
+def l2_report(cfg, mode: str):
+    total = model.param_specs(cfg)[1]
+    lowered = aot.lower_train(cfg, mode, total)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = cost.get("flops", float("nan"))
+    bytes_acc = cost.get("bytes accessed", float("nan"))
+    print(f"  L2 {mode:>8} train step: {flops / 1e9:.3f} GFLOP, "
+          f"{bytes_acc / 1e6:.1f} MB accessed, "
+          f"arithmetic intensity {flops / max(bytes_acc, 1):.2f} F/B")
+    # operator census from the optimized HLO
+    hlo = compiled.as_text()
+    census = {}
+    for op in ("fusion", "dot", "sort", "scatter", "gather",
+               "all-reduce", "while", "custom-call"):
+        census[op] = hlo.count(f" {op}(") + hlo.count(f" {op}.")
+    print(f"      op census: {census}")
+    return flops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--configs", default="tiny,moe16-bench,moe64-bench")
+    ap.add_argument("--modes", default="aux,bip")
+    args = ap.parse_args()
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        print(f"== {name} (theta {model.param_specs(cfg)[1]:,}) ==")
+        l1_report(cfg)
+        flops = None
+        for mode in args.modes.split(","):
+            flops = l2_report(cfg, mode)
+        if flops:
+            # roofline context: CPU testbed vs the paper's devices
+            for dev, peak in [("cpu-testbed ~50 GF/s", 50e9),
+                              ("rtx4090 bf16 ~80 TF/s", 8.0e13)]:
+                print(f"      ideal step time on {dev}: "
+                      f"{flops / peak * 1e3:.1f} ms")
+        print()
+
+
+if __name__ == "__main__":
+    main()

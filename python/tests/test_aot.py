@@ -1,0 +1,114 @@
+"""AOT pipeline tests: manifest integrity, HLO text shape, cache no-op.
+
+These run against the checked-out ``artifacts/`` tree when present (built
+by ``make artifacts``); the tiny config is rebuilt into a tmpdir otherwise,
+so the suite is self-contained.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.configs import CONFIGS
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Path to a directory holding tiny artifacts + manifest."""
+    man = os.path.join(ARTIFACTS, "manifest.json")
+    if os.path.exists(man):
+        with open(man) as f:
+            if "tiny" in json.load(f).get("configs", {}):
+                return ARTIFACTS
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build(out, ["tiny"], force=True, probe=True)
+    return out
+
+
+def load_manifest(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_every_file(built):
+    man = load_manifest(built)
+    for art in man["artifacts"]:
+        assert os.path.exists(os.path.join(built, art["file"])), art["file"]
+
+
+def test_manifest_tiny_artifact_grid(built):
+    man = load_manifest(built)
+    tiny = [a for a in man["artifacts"] if a["config"] == "tiny"]
+    kinds = {(a["kind"], a["mode"], a.get("bip_T")) for a in tiny}
+    assert ("init", "-", None) in kinds
+    assert ("train", "aux", None) in kinds
+    assert ("train", "lossfree", None) in kinds
+    assert ("train", "bip", 2) in kinds and ("train", "bip", 4) in kinds
+    for mode in ("aux", "lossfree", "bip"):
+        assert ("eval", mode, None) in kinds
+
+
+def test_manifest_io_specs_match_model(built):
+    man = load_manifest(built)
+    cfg = CONFIGS["tiny"]
+    total = model.param_specs(cfg)[1]
+    assert man["configs"]["tiny"]["theta_size"] == total
+    train = next(a for a in man["artifacts"]
+                 if a["config"] == "tiny" and a["kind"] == "train")
+    names = [s["name"] for s in train["inputs"]]
+    assert names == ["theta", "adam_m", "adam_v", "step", "route_state",
+                     "tokens"]
+    assert train["inputs"][0]["shape"] == [total]
+    out_names = [s["name"] for s in train["outputs"]]
+    assert out_names[:5] == names[:5]        # state threads through
+    assert "loads" in out_names and "nll_sum" in out_names
+
+
+def test_param_table_covers_theta(built):
+    man = load_manifest(built)
+    cfg = man["configs"]["tiny"]
+    covered = 0
+    for p in cfg["params"]:
+        size = 1
+        for s in p["shape"]:
+            size *= s
+        assert p["offset"] == covered
+        covered += size
+    assert covered == cfg["theta_size"]
+
+
+def test_hlo_text_is_old_parser_compatible(built):
+    """The xla_extension 0.5.1 text parser rejects the ``topk`` instruction
+    (jax >= 0.5 lowers lax.top_k to it). Our kernels must therefore never
+    emit it — this is the regression test for that gotcha."""
+    man = load_manifest(built)
+    for art in man["artifacts"]:
+        if art["config"] != "tiny":
+            continue
+        with open(os.path.join(built, art["file"])) as f:
+            text = f.read()
+        assert "ENTRY" in text and "HloModule" in text
+        for op in (" topk(", " top-k(", " approx-topk("):
+            assert op not in text, f"{art['file']} contains {op.strip()}"
+
+
+def test_fingerprint_cache_no_op(tmp_path):
+    """Second build with unchanged sources must lower nothing."""
+    out = str(tmp_path)
+    aot.build(out, ["tiny"], force=True, probe=False)
+    first = {f: os.path.getmtime(os.path.join(out, f))
+             for f in os.listdir(out)}
+    aot.build(out, ["tiny"], force=False, probe=False)
+    second = {f: os.path.getmtime(os.path.join(out, f))
+              for f in os.listdir(out)}
+    for f, t in first.items():
+        if f.endswith(".hlo.txt"):
+            assert second[f] == t, f"{f} was re-lowered"
+
+
+def test_source_fingerprint_is_stable():
+    assert aot.source_fingerprint() == aot.source_fingerprint()

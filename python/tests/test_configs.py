@@ -1,0 +1,62 @@
+"""Config invariants: the routing fabric must match the paper's Table 1
+wherever it matters, and derived quantities must be consistent."""
+
+import pytest
+
+from compile.configs import (
+    CONFIGS, MOE16, MOE16_BENCH, MOE64, MOE64_BENCH, TINY, with_bip_T,
+)
+
+
+def test_registry_contains_all_presets():
+    assert set(CONFIGS) == {"tiny", "moe16-bench", "moe64-bench",
+                            "moe16", "moe64"}
+
+
+@pytest.mark.parametrize("cfg", [MOE16_BENCH, MOE16])
+def test_16_expert_models_match_table1_fabric(cfg):
+    assert cfg.vocab_size == 6400
+    assert cfg.n_layers == 8
+    assert cfg.n_experts == 16
+    assert cfg.top_k == 4
+    assert cfg.n_heads == 8
+
+
+@pytest.mark.parametrize("cfg", [MOE64_BENCH, MOE64])
+def test_64_expert_models_match_table1_fabric(cfg):
+    assert cfg.vocab_size == 6400
+    assert cfg.n_layers == 8
+    assert cfg.n_experts == 64
+    assert cfg.top_k == 8
+
+
+@pytest.mark.parametrize("cfg", list(CONFIGS.values()))
+def test_derived_quantities(cfg):
+    assert cfg.n_tokens == cfg.batch_size * cfg.seq_len
+    # BIP constraint (2) RHS must be integral (paper configs satisfy m | nk)
+    assert cfg.n_tokens * cfg.top_k % cfg.n_experts == 0
+    assert cfg.expert_cap == cfg.n_tokens * cfg.top_k // cfg.n_experts
+    # capacity must exceed the balanced load, else BIP itself would drop
+    assert cfg.capacity > cfg.expert_cap
+    assert cfg.d_model % cfg.n_heads == 0
+
+
+def test_with_bip_T_only_changes_T():
+    c = with_bip_T(TINY, 9)
+    assert c.bip_T == 9
+    assert c.name == TINY.name
+    assert c.n_experts == TINY.n_experts
+
+
+def test_to_dict_includes_derived():
+    d = MOE16_BENCH.to_dict()
+    for key in ("n_tokens", "capacity", "expert_cap", "aux_alpha",
+                "lossfree_u", "bip_T"):
+        assert key in d
+    assert d["aux_alpha"] == 0.1      # paper: Minimind default
+    assert d["lossfree_u"] == 1e-3    # paper: Wang et al. 2024
+
+
+def test_tiny_is_actually_tiny():
+    assert TINY.n_tokens <= 128
+    assert TINY.vocab_size <= 1024

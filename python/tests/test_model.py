@@ -1,0 +1,269 @@
+"""L2 model tests: parameter layout, forward/train/eval semantics, the
+three routing modes, dispatch correctness and drop accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS, TINY, ModelConfig, with_bip_T
+
+CFG = TINY
+
+
+@pytest.fixture(scope="module")
+def theta():
+    return model.init_theta(CFG, 0)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jax.random.randint(
+        jax.random.PRNGKey(7), (CFG.batch_size, CFG.seq_len + 1),
+        0, CFG.vocab_size)
+
+
+def zeros_state(cfg=CFG):
+    return jnp.zeros((cfg.n_layers, cfg.n_experts))
+
+
+# ---------------------------------------------------------------------------
+# parameter layout
+# ---------------------------------------------------------------------------
+
+def test_param_specs_contiguous_and_total():
+    specs, total = model.param_specs(CFG)
+    off = 0
+    for sp in specs:
+        assert sp.offset == off
+        off += int(np.prod(sp.shape))
+    assert off == total
+
+
+def test_unpack_round_trips(theta):
+    specs, total = model.param_specs(CFG)
+    p = model.unpack(theta, specs)
+    flat_again = jnp.concatenate([p[sp.name].reshape(-1) for sp in specs])
+    np.testing.assert_allclose(flat_again, theta)
+
+
+def test_init_norm_gains_are_ones(theta):
+    specs, _ = model.param_specs(CFG)
+    p = model.unpack(theta, specs)
+    np.testing.assert_allclose(p["attn_norm"], 1.0)
+    np.testing.assert_allclose(p["final_norm"], 1.0)
+
+
+def test_init_stds_roughly_respected(theta):
+    specs, _ = model.param_specs(CFG)
+    p = model.unpack(theta, specs)
+    emp = float(p["embed"].std())
+    assert 0.7 * CFG.init_std < emp < 1.3 * CFG.init_std
+
+
+def test_decay_mask_excludes_norms():
+    specs, total = model.param_specs(CFG)
+    mask = np.asarray(model.decay_mask(specs, total))
+    for sp in specs:
+        size = int(np.prod(sp.shape))
+        seg = mask[sp.offset:sp.offset + size]
+        assert (seg == (1.0 if sp.decay else 0.0)).all(), sp.name
+
+
+def test_param_count_magnitudes():
+    # the e2e configs must be materially larger than the bench configs
+    sizes = {n: model.param_specs(c)[1] for n, c in CONFIGS.items()}
+    assert sizes["tiny"] < sizes["moe16-bench"] < sizes["moe16"]
+    assert sizes["moe64"] > 60_000_000 * 0.9  # ~67M params
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["aux", "lossfree", "bip"])
+def test_forward_shapes_and_finiteness(theta, tokens, mode):
+    nll, aux, q, loads, drops = model.forward(
+        theta, zeros_state(), tokens, mode, CFG)
+    L, m = CFG.n_layers, CFG.n_experts
+    assert q.shape == (L, m) and loads.shape == (L, m)
+    assert drops.shape == (L,)
+    assert np.isfinite(float(nll))
+    n_tok = CFG.n_tokens
+    assert abs(float(nll) / n_tok - np.log(CFG.vocab_size)) < 0.5
+
+
+def test_loads_sum_to_nk_per_layer(theta, tokens):
+    _, _, _, loads, _ = model.forward(
+        theta, zeros_state(), tokens, "bip", CFG)
+    np.testing.assert_allclose(
+        loads.sum(axis=1), CFG.n_tokens * CFG.top_k)
+
+
+def test_bip_mode_balances_better_than_aux_at_init(theta, tokens):
+    _, _, _, loads_a, _ = model.forward(
+        theta, zeros_state(), tokens, "aux", CFG)
+    _, _, _, loads_b, _ = model.forward(
+        theta, zeros_state(), tokens, "bip", CFG)
+    mean = CFG.n_tokens * CFG.top_k / CFG.n_experts
+    vio_a = float((loads_a.max(axis=1) / mean - 1).mean())
+    vio_b = float((loads_b.max(axis=1) / mean - 1).mean())
+    assert vio_b <= vio_a + 1e-6
+
+
+def test_aux_loss_positive_and_scales_with_alpha(theta, tokens):
+    from dataclasses import replace
+    _, aux_a, _, _, _ = model.forward(
+        theta, zeros_state(), tokens, "aux", CFG)
+    assert 0.0 < float(aux_a) < 1.0
+    cfg2 = replace(CFG, aux_alpha=CFG.aux_alpha * 2)
+    _, aux_2, _, _, _ = model.forward(
+        theta, zeros_state(), tokens, "aux", cfg2)
+    np.testing.assert_allclose(float(aux_2), 2 * float(aux_a), rtol=1e-5)
+
+
+def test_bip_q_state_updates_and_lossfree_bias_moves(theta, tokens):
+    _, _, q_bip, _, _ = model.forward(
+        theta, zeros_state(), tokens, "bip", CFG)
+    assert float(jnp.abs(q_bip).max()) > 0.0
+    _, _, b_lf, loads, _ = model.forward(
+        theta, zeros_state(), tokens, "lossfree", CFG)
+    # sign update: |b| == u wherever load != mean
+    mean = CFG.n_tokens * CFG.top_k / CFG.n_experts
+    moved = np.asarray(jnp.abs(b_lf) > 0)
+    unbalanced = np.asarray(loads != mean)
+    assert (moved == unbalanced).all()
+
+
+def test_frozen_route_leaves_state(theta, tokens):
+    q0 = jnp.abs(jax.random.normal(jax.random.PRNGKey(3),
+                                   (CFG.n_layers, CFG.n_experts))) * 0.01
+    _, _, q_out, _, _ = model.forward(
+        theta, q0, tokens, "bip", CFG, frozen_route=True)
+    np.testing.assert_allclose(q_out, q0)
+
+
+# ---------------------------------------------------------------------------
+# dispatch internals
+# ---------------------------------------------------------------------------
+
+def test_positions_in_expert_are_dense_ranks():
+    flat_e = jnp.asarray([0, 1, 0, 2, 1, 0], jnp.int32)
+    pos, counts = model._positions_in_expert(flat_e, 4)
+    np.testing.assert_array_equal(pos, [0, 0, 1, 0, 1, 2])
+    np.testing.assert_array_equal(counts, [3, 2, 1, 0])
+
+
+def test_dispatch_matches_dense_compute():
+    """Capacity dispatch + grouped FFN == dense masked mixture, when no
+    token is dropped."""
+    cfg = TINY
+    n, d = 16, cfg.d_model
+    m, k = cfg.n_experts, cfg.top_k
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d))
+    lp = {
+        "w1": jax.random.normal(jax.random.PRNGKey(1), (m, d, cfg.d_ff)) * .2,
+        "w3": jax.random.normal(jax.random.PRNGKey(2), (m, d, cfg.d_ff)) * .2,
+        "w2": jax.random.normal(jax.random.PRNGKey(3), (m, cfg.d_ff, d)) * .2,
+    }
+    idx = jnp.stack([jnp.arange(n) % m, (jnp.arange(n) + 1) % m], axis=1)
+    idx = idx.astype(jnp.int32)
+    gate = jnp.full((n, k), 0.5)
+    y, drop = model.moe_dispatch_ffn(x, idx, gate, lp, cfg)
+    assert float(drop) == 0.0
+    # dense reference
+    from compile.kernels import ref as kref
+    y_dense = jnp.zeros_like(x)
+    for slot in range(k):
+        per_tok = []
+        for i in range(n):
+            e = int(idx[i, slot])
+            out = kref.swiglu_expert_ffn(
+                x[i][None, None, :], lp["w1"][e][None], lp["w3"][e][None],
+                lp["w2"][e][None])[0, 0]
+            per_tok.append(out * gate[i, slot])
+        y_dense = y_dense + jnp.stack(per_tok)
+    np.testing.assert_allclose(y, y_dense, atol=1e-4)
+
+
+def test_dispatch_drops_overflow_tokens():
+    cfg = TINY
+    n, d = 32, cfg.d_model
+    k = cfg.top_k
+    x = jnp.ones((n, d))
+    lp = {
+        "w1": jnp.ones((cfg.n_experts, d, cfg.d_ff)) * 0.1,
+        "w3": jnp.ones((cfg.n_experts, d, cfg.d_ff)) * 0.1,
+        "w2": jnp.ones((cfg.n_experts, cfg.d_ff, d)) * 0.1,
+    }
+    idx = jnp.zeros((n, k), jnp.int32)          # everyone -> expert 0
+    gate = jnp.full((n, k), 1.0 / k)
+    _, drop = model.moe_dispatch_ffn(x, idx, gate, lp, cfg)
+    expected = 1.0 - cfg.capacity / (n * k)
+    assert abs(float(drop) - max(expected, 0.0)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# train / eval steps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["aux", "lossfree", "bip"])
+def test_train_step_reduces_loss(theta, tokens, mode):
+    step_fn = jax.jit(
+        lambda th, m_, v, st, q, t: model.train_step(
+            th, m_, v, st, q, t, mode, CFG))
+    th, m_, v = theta, jnp.zeros_like(theta), jnp.zeros_like(theta)
+    st, q = jnp.zeros((), jnp.int32), zeros_state()
+    first = None
+    for _ in range(8):
+        th, m_, v, st, q, nll, loads, drops = step_fn(th, m_, v, st, q, tokens)
+        if first is None:
+            first = float(nll)
+    assert float(nll) < first  # same batch: loss must drop
+    assert int(st) == 8
+
+
+def test_train_step_updates_every_tensor(theta, tokens):
+    specs, _ = model.param_specs(CFG)
+    out = model.train_step(
+        theta, jnp.zeros_like(theta), jnp.zeros_like(theta),
+        jnp.zeros((), jnp.int32), zeros_state(), tokens, "bip", CFG)
+    th2 = out[0]
+    p0 = model.unpack(theta, specs)
+    p1 = model.unpack(th2, specs)
+    for sp in specs:
+        diff = float(jnp.abs(p1[sp.name] - p0[sp.name]).max())
+        assert diff > 0.0, f"{sp.name} did not train"
+
+
+def test_eval_step_deterministic(theta, tokens):
+    a = model.eval_step(theta, zeros_state(), tokens, "bip", CFG)
+    b = model.eval_step(theta, zeros_state(), tokens, "bip", CFG)
+    np.testing.assert_allclose(a[0], b[0])
+
+
+def test_lr_schedule_warmup_and_decay():
+    lrs = [float(model.lr_at(jnp.float32(s), CFG)) for s in
+           [0, CFG.warmup_steps // 2, CFG.warmup_steps,
+            CFG.total_steps // 2, CFG.total_steps]]
+    assert lrs[0] < lrs[1] < lrs[2]          # warmup rises
+    assert lrs[2] >= lrs[3] >= lrs[4]        # cosine decays
+    assert lrs[4] >= 0.09 * CFG.lr           # floor ~10%
+
+
+def test_bip_T_changes_routing(theta, tokens):
+    outs = {}
+    for T in (1, 8):
+        cfg = with_bip_T(CFG, T)
+        _, _, q, loads, _ = model.forward(
+            theta, zeros_state(cfg), tokens, "bip", cfg)
+        outs[T] = np.asarray(loads)
+    assert not np.array_equal(outs[1], outs[8])
+
+
+def test_route_probe_returns_softmax_rows(theta, tokens):
+    s = model.route_probe(theta, zeros_state(), tokens, 0, "bip", CFG)
+    assert s.shape == (CFG.n_tokens, CFG.n_experts)
+    np.testing.assert_allclose(s.sum(axis=1), 1.0, rtol=1e-5)

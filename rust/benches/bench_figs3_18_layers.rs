@@ -1,0 +1,114 @@
+//! Reproduces **Figures 3-10** (16-expert, layers 1-8) and
+//! **Figures 11-18** (64-expert, layers 1-8): per-layer MaxVio_batch vs
+//! training step for the three methods.
+//!
+//! Reuses the cached Table 2/3 runs; emits one combined CSV per figure
+//! under reports/figs3_18/ and ASCII-plots a sample layer per model.
+
+use std::path::Path;
+
+use bip_moe::bench::experiments::run_or_load;
+use bip_moe::bench::BenchConfig;
+use bip_moe::metrics::table::ascii_plot;
+use bip_moe::runtime::Engine;
+use bip_moe::train::TrainDriver;
+use bip_moe::util::csv::CsvWriter;
+
+fn main() {
+    bip_moe::util::log::init_from_env();
+    let bench = BenchConfig::from_env(80, 400);
+    for (config, bip_t, first_fig) in
+        [("moe16-bench", 4usize, 3usize), ("moe64-bench", 14, 11)]
+    {
+        if let Err(e) = run(&bench, config, bip_t, first_fig) {
+            eprintln!("bench_figs3_18: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(
+    bench: &BenchConfig,
+    config: &str,
+    bip_t: usize,
+    first_fig: usize,
+) -> anyhow::Result<()> {
+    let engine = Engine::new(Path::new("artifacts"))?;
+    let reports = Path::new("reports");
+    let n_layers = engine.manifest().config(config)?.n_layers;
+
+    let methods: [(&str, &str, usize); 3] = [
+        ("Loss-Controlled", "aux", 0),
+        ("Loss-Free", "lossfree", 0),
+        ("BIP", "bip", bip_t),
+    ];
+    let mut summaries = Vec::new();
+    for (label, mode, t) in methods {
+        let mut driver = TrainDriver::new(config, mode, t, bench.steps);
+        driver.eval_batches = bench.eval_batches;
+        summaries.push((label, run_or_load(&engine, &driver, reports)?));
+    }
+
+    let out_dir = reports.join("figs3_18");
+    for layer in 0..n_layers {
+        let fig_no = first_fig + layer;
+        let mut series = Vec::new();
+        for (label, summary) in &summaries {
+            series.push((
+                label.to_string(),
+                summary.series(&format!("layer{}", layer + 1))?,
+            ));
+        }
+        let path = out_dir.join(format!("fig{fig_no}_{config}_layer{}.csv",
+                                        layer + 1));
+        let headers: Vec<&str> = std::iter::once("step")
+            .chain(series.iter().map(|(l, _)| l.as_str()))
+            .collect();
+        let mut w = CsvWriter::create(&path, &headers)?;
+        let steps = series.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+        for i in 0..steps {
+            let mut row = vec![i.to_string()];
+            for (_, s) in &series {
+                row.push(s.get(i).map(|v| format!("{v:.6}"))
+                         .unwrap_or_default());
+            }
+            w.row(row)?;
+        }
+        w.finish()?;
+
+        if layer == 0 {
+            println!(
+                "\n=== Figure {fig_no}: {config} layer 1, MaxVio vs step ==="
+            );
+            let plot: Vec<(&str, &[f32])> = series
+                .iter()
+                .map(|(l, s)| (l.as_str(), s.as_slice()))
+                .collect();
+            print!("{}", ascii_plot(&plot, 72, 14));
+        }
+    }
+    println!(
+        "figures {}-{} written under {}",
+        first_fig,
+        first_fig + n_layers - 1,
+        out_dir.display()
+    );
+
+    // per-layer shape assertion: BIP below baselines on every layer's mean
+    for layer in 0..n_layers {
+        let mean = |s: &[f32]| {
+            s.iter().map(|&x| x as f64).sum::<f64>() / s.len().max(1) as f64
+        };
+        let aux = mean(&summaries[0].1.series(
+            &format!("layer{}", layer + 1))?);
+        let bip = mean(&summaries[2].1.series(
+            &format!("layer{}", layer + 1))?);
+        if bip > aux {
+            println!(
+                "WARNING layer {}: BIP mean {bip:.3} above aux {aux:.3}",
+                layer + 1
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Benchmarks for the §5 application: multi-slot online ad matching.
+//!
+//! Regenerates the discussion's comparisons: competitive ratio and load
+//! violation of Algorithm 3 (exact heaps) vs Algorithm 4 (constant-space
+//! histograms) vs greedy, and the state-size separation that motivates
+//! Algorithm 4 (O(nk) vs O(mb) as the flow count grows).
+
+use bip_moe::bench::Bencher;
+use bip_moe::matching::simulator::{run_policy, MatchPolicy, Workload};
+use bip_moe::metrics::TablePrinter;
+
+fn main() {
+    let quick = std::env::var("BIP_MOE_FULL").as_deref() != Ok("1");
+    let flow_counts: &[usize] = if quick {
+        &[1024, 4096]
+    } else {
+        &[1024, 4096, 16384, 65536]
+    };
+
+    let mut table = TablePrinter::new(
+        "online multi-slot matching (32 ads, 2 slots/page)",
+        &["flows", "policy", "CTR sum", "vs hindsight", "MaxVio",
+          "state bytes"],
+    );
+    for &flows in flow_counts {
+        let w = Workload::synthetic(flows, 32, 2, 42);
+        for policy in [
+            MatchPolicy::Greedy,
+            MatchPolicy::Online { t_iters: 4 },
+            MatchPolicy::Approx { t_iters: 4, buckets: 128 },
+        ] {
+            let r = run_policy(&w, policy);
+            table.row(vec![
+                flows.to_string(),
+                r.policy.clone(),
+                format!("{:.1}", r.objective),
+                format!("{:.3}", r.competitive_ratio),
+                format!("{:.3}", r.max_violation),
+                r.state_bytes.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "shape: Online/Approx MaxVio far below Greedy at every scale; \
+         Approx state stays CONSTANT in flows while Online grows until \
+         its heaps fill (the §5.2 motivation).\n"
+    );
+
+    // bucket sweep: accuracy/space tradeoff of Algorithm 4
+    let mut table = TablePrinter::new(
+        "Algorithm 4 bucket sweep (4096 flows, 32 ads)",
+        &["buckets", "vs hindsight", "MaxVio", "state bytes"],
+    );
+    let w = Workload::synthetic(4096, 32, 2, 43);
+    for buckets in [8usize, 32, 128, 512] {
+        let r = run_policy(&w, MatchPolicy::Approx { t_iters: 4, buckets });
+        table.row(vec![
+            buckets.to_string(),
+            format!("{:.3}", r.competitive_ratio),
+            format!("{:.3}", r.max_violation),
+            r.state_bytes.to_string(),
+        ]);
+    }
+    table.print();
+
+    // throughput
+    let mut b = Bencher::default();
+    let w = Workload::synthetic(8192, 32, 2, 44);
+    let mut online =
+        bip_moe::bip::online::OnlineGate::new(32, 2, 512, 4);
+    let mut i = 0usize;
+    b.bench("Alg3 per-flow (32 ads)", || {
+        online.route_token(w.row(i % w.n_flows));
+        i += 1;
+    });
+    let mut approx =
+        bip_moe::bip::approx::ApproxGate::new(32, 2, 512, 4, 128);
+    let mut j = 0usize;
+    b.bench("Alg4 per-flow (32 ads)", || {
+        approx.route_token(w.row(j % w.n_flows));
+        j += 1;
+    });
+}

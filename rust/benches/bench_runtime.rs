@@ -1,0 +1,106 @@
+//! Runtime-layer benchmarks: the L3 hot path around PJRT execution.
+//!
+//! Measures (a) HLO compile time per artifact, (b) train-step execution
+//! wall time per config, (c) host<->literal conversion overhead at theta
+//! size, and (d) data-loader throughput — the inputs to the §Perf
+//! analysis in EXPERIMENTS.md (which of these bounds step time).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use bip_moe::bench::Bencher;
+use bip_moe::data::{Corpus, CorpusSpec, Loader, Split};
+use bip_moe::runtime::{Engine, Tensor};
+use bip_moe::train::state::TrainState;
+
+fn main() {
+    let Ok(engine) = Engine::new(Path::new("artifacts")) else {
+        eprintln!("artifacts/ missing; run `make artifacts` first");
+        std::process::exit(0);
+    };
+    let mut b = Bencher::quick();
+
+    // data loader throughput (no PJRT involved)
+    let corpus = Arc::new(Corpus::build(CorpusSpec::default()));
+    let loader = Loader::new(corpus, 4, 128, Split::Train);
+    let mut idx = 0u64;
+    let m = b.bench("loader.batch (4x128, vocab 6400)", || {
+        std::hint::black_box(loader.batch(idx));
+        idx += 1;
+    });
+    println!(
+        "  -> {:.1} Mtok/s generation",
+        4.0 * 129.0 / m.secs_per_iter.mean / 1e6
+    );
+
+    for config in ["tiny", "moe16-bench", "moe64-bench"] {
+        let Ok(cfg) = engine.manifest().config(config) else { continue };
+        let cfg = cfg.clone();
+        let Ok(train_art) =
+            engine.manifest().train_artifact(config, "bip", 4)
+        else {
+            continue;
+        };
+        let train_art = train_art.clone();
+        let init_art = engine
+            .manifest()
+            .find(config, "init", "-", None)
+            .unwrap()
+            .clone();
+
+        // compile (cold) timing happens implicitly on first run; report it
+        let t0 = std::time::Instant::now();
+        let theta = engine
+            .run(&init_art, &[Tensor::scalar_i32(0)])
+            .unwrap()
+            .pop()
+            .unwrap();
+        println!(
+            "{config}: init artifact compile+run {:.2}s (theta {} elems)",
+            t0.elapsed().as_secs_f64(),
+            theta.len()
+        );
+
+        let mut state = TrainState::fresh(theta, &cfg);
+        let tokens: Vec<i32> = (0..cfg.batch_size * (cfg.seq_len + 1))
+            .map(|i| (i % cfg.vocab_size) as i32)
+            .collect();
+        let tokens =
+            Tensor::from_i32(&[cfg.batch_size, cfg.seq_len + 1], tokens);
+
+        // literal conversion alone (host -> xla)
+        b.bench(&format!("{config}: theta->literal ({})", state.theta.len()),
+                || {
+                    std::hint::black_box(
+                        state.theta.to_literal().unwrap());
+                });
+
+        // full train step (compile amortized after first call)
+        let t0 = std::time::Instant::now();
+        let outs = engine
+            .run(&train_art, &state.as_inputs(tokens.clone()))
+            .unwrap();
+        println!(
+            "{config}: train step first call (incl. compile) {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        state.absorb(outs);
+        b.bench(&format!("{config}: train step (warm)"), || {
+            let outs = engine
+                .run(&train_art, &state.as_inputs(tokens.clone()))
+                .unwrap();
+            state.absorb(outs);
+        });
+    }
+
+    let st = engine.stats();
+    println!(
+        "\nengine totals: {} compiles {:.1}s | {} execs {:.1}s \
+         ({:.1}ms mean)",
+        st.compiles,
+        st.compile_seconds,
+        st.executions,
+        st.execute_seconds,
+        1e3 * st.execute_seconds / st.executions.max(1) as f64
+    );
+}

@@ -1,0 +1,76 @@
+//! Reproduces **Table 3**: evaluation on the 64-expert model (m=64, k=8).
+//!
+//! Same grid as bench_table2 on the `moe64-bench` config. The paper's
+//! observation to verify: AvgMaxVio/SupMaxVio of the baselines roughly
+//! double going 16 -> 64 experts, while BIP's stay at the same low level.
+
+use std::path::Path;
+
+use bip_moe::bench::experiments::{method_grid, paper_table3, run_or_load};
+use bip_moe::bench::BenchConfig;
+use bip_moe::metrics::TablePrinter;
+use bip_moe::runtime::Engine;
+use bip_moe::train::TrainDriver;
+
+fn main() {
+    bip_moe::util::log::init_from_env();
+    let bench = BenchConfig::from_env(80, 400);
+    if let Err(e) = run(&bench) {
+        eprintln!("bench_table3: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(bench: &BenchConfig) -> anyhow::Result<()> {
+    let engine = Engine::new(Path::new("artifacts"))?;
+    let reports = Path::new("reports");
+    let paper = paper_table3();
+
+    let mut table = TablePrinter::new(
+        &format!(
+            "Table 3 (m=64, k=8) — {} steps/run (paper values in parens)",
+            bench.steps
+        ),
+        &["Algorithm", "AvgMaxVio", "SupMaxVio", "Perplexity",
+          "TrainTime/h (sim)", "Wall s"],
+    );
+
+    let mut avg_16_vs_64: Vec<(String, f64)> = Vec::new();
+    for ((label, mode, t), (plabel, pvals)) in
+        method_grid(&[2, 4, 8, 14]).into_iter().zip(&paper)
+    {
+        assert_eq!(&label, plabel);
+        let mut driver =
+            TrainDriver::new("moe64-bench", &mode, t, bench.steps);
+        driver.eval_batches = bench.eval_batches;
+        let summary = run_or_load(&engine, &driver, reports)?;
+        avg_16_vs_64.push((label.clone(), summary.avg_max_vio));
+        table.row(vec![
+            label,
+            format!("{:.4} ({:.4})", summary.avg_max_vio, pvals[0]),
+            format!("{:.4} ({:.4})", summary.sup_max_vio, pvals[1]),
+            format!("{:.4} ({:.4})", summary.perplexity, pvals[2]),
+            format!("{:.4} ({:.4})", summary.sim_hours_full, pvals[3]),
+            format!("{:.1}", summary.wall_seconds),
+        ]);
+    }
+    table.print();
+
+    // the 16->64 scaling observation, when table2's runs are cached
+    let t2_aux = reports.join("moe16-bench_aux").join("run.json");
+    if let Ok(t2) =
+        bip_moe::bench::experiments::RunSummary::from_run_json(&t2_aux)
+    {
+        let aux64 = avg_16_vs_64
+            .iter()
+            .find(|(l, _)| l == "Loss-Controlled")
+            .unwrap()
+            .1;
+        println!(
+            "scaling check (paper §4.2): Loss-Controlled AvgMaxVio went \
+             {:.4} (m=16) -> {:.4} (m=64); BIP stays low on both.",
+            t2.avg_max_vio, aux64
+        );
+    }
+    Ok(())
+}

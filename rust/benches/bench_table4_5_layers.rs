@@ -1,0 +1,87 @@
+//! Reproduces **Table 4** and **Table 5**: per-layer AvgMaxVio on the
+//! 16-expert (BIP T=4) and 64-expert (BIP T=14) models, for Auxiliary
+//! Loss, Loss-Free and BIP.
+//!
+//! Reuses the cached runs from bench_table2/3 (same reports/ cache) and
+//! prints the 8-layer rows with the paper's values in parens.
+
+use std::path::Path;
+
+use bip_moe::bench::experiments::{
+    paper_table4, paper_table5, run_or_load,
+};
+use bip_moe::bench::BenchConfig;
+use bip_moe::metrics::TablePrinter;
+use bip_moe::runtime::Engine;
+use bip_moe::train::TrainDriver;
+
+fn main() {
+    bip_moe::util::log::init_from_env();
+    let bench = BenchConfig::from_env(80, 400);
+    let t4 = paper_table4();
+    let t5 = paper_table5();
+    for (title, config, bip_t, paper) in [
+        ("Table 4: per-layer AvgMaxVio (m=16, k=4)", "moe16-bench", 4,
+         &t4),
+        ("Table 5: per-layer AvgMaxVio (m=64, k=8)", "moe64-bench", 14,
+         &t5),
+    ] {
+        if let Err(e) = run(&bench, title, config, bip_t, paper) {
+            eprintln!("bench_table4_5: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(
+    bench: &BenchConfig,
+    title: &str,
+    config: &str,
+    bip_t: usize,
+    paper: &[(&str, [f64; 8])],
+) -> anyhow::Result<()> {
+    let engine = Engine::new(Path::new("artifacts"))?;
+    let reports = Path::new("reports");
+    let n_layers = engine.manifest().config(config)?.n_layers;
+
+    let methods: [(&str, &str, usize); 3] = [
+        ("Auxiliary Loss", "aux", 0),
+        ("Loss Free", "lossfree", 0),
+        (if bip_t == 4 { "BIP, T=4" } else { "BIP, T=14" }, "bip", bip_t),
+    ];
+
+    let mut headers = vec!["Algorithm".to_string()];
+    for l in 1..=n_layers {
+        headers.push(format!("Layer {l}"));
+    }
+    let headers_ref: Vec<&str> =
+        headers.iter().map(|s| s.as_str()).collect();
+    let mut table = TablePrinter::new(
+        &format!("{title} — measured (paper)"),
+        &headers_ref,
+    );
+
+    for ((label, mode, t), (plabel, pvals)) in
+        methods.into_iter().zip(paper)
+    {
+        assert_eq!(&label, plabel);
+        let mut driver = TrainDriver::new(config, mode, t, bench.steps);
+        driver.eval_batches = bench.eval_batches;
+        let summary = run_or_load(&engine, &driver, reports)?;
+        let mut row = vec![label.to_string()];
+        for l in 0..n_layers {
+            row.push(format!(
+                "{:.3} ({:.3})",
+                summary.layer_avg.get(l).copied().unwrap_or(f64::NAN),
+                pvals[l]
+            ));
+        }
+        table.row(row);
+    }
+    table.print();
+    println!(
+        "shape: the BIP row should sit well below both baselines on EVERY \
+         layer (the paper's per-layer claim).\n"
+    );
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! Bench harness (criterion is unavailable offline): named timed sections,
+//! warmup + repeated measurement, and paper-table output via
+//! [`crate::metrics::table::TablePrinter`].
+//!
+//! Every `cargo bench` target (`rust/benches/*.rs`, harness = false) uses
+//! this module; results additionally land as CSV/JSON under `reports/`.
+
+pub mod experiments;
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One micro-benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub secs_per_iter: Summary,
+}
+
+impl Measurement {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12}  ± {:>10}   ({} iters)",
+            self.name,
+            crate::util::timer::human_duration(Duration::from_secs_f64(
+                self.secs_per_iter.mean
+            )),
+            crate::util::timer::human_duration(Duration::from_secs_f64(
+                self.secs_per_iter.std()
+            )),
+            self.iters
+        )
+    }
+}
+
+/// Micro-bench runner: warmup, then sample `samples` times, each sample
+/// running the closure enough times to fill `min_sample_time`.
+pub struct Bencher {
+    pub min_sample_time: Duration,
+    pub samples: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            min_sample_time: Duration::from_millis(30),
+            samples: 8,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            min_sample_time: Duration::from_millis(10),
+            samples: 3,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &Measurement {
+        f(); // warmup
+        let mut per_iter = Summary::new();
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            let mut iters = 0u64;
+            while t0.elapsed() < self.min_sample_time {
+                f();
+                iters += 1;
+            }
+            per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+            total_iters += iters;
+        }
+        self.results.push(Measurement {
+            name: name.to_string(),
+            iters: total_iters,
+            secs_per_iter: per_iter,
+        });
+        println!("{}", self.results.last().unwrap().report_line());
+        self.results.last().unwrap()
+    }
+}
+
+/// Shared env knobs for the table/figure benches.
+pub struct BenchConfig {
+    /// full-scale run (BIP_MOE_FULL=1) vs quick default
+    pub full: bool,
+    /// training steps per method
+    pub steps: u64,
+    /// held-out eval batches for perplexity
+    pub eval_batches: u64,
+}
+
+impl BenchConfig {
+    pub fn from_env(quick_steps: u64, full_steps: u64) -> Self {
+        let full = std::env::var("BIP_MOE_FULL").as_deref() == Ok("1");
+        let steps = std::env::var("BIP_MOE_STEPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(if full { full_steps } else { quick_steps });
+        BenchConfig {
+            full,
+            steps,
+            eval_batches: if full { 32 } else { 8 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_something() {
+        let mut b = Bencher::quick();
+        let m = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.secs_per_iter.mean > 0.0);
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn bench_config_defaults_quick() {
+        std::env::remove_var("BIP_MOE_FULL");
+        std::env::remove_var("BIP_MOE_STEPS");
+        let c = BenchConfig::from_env(60, 400);
+        assert!(!c.full);
+        assert_eq!(c.steps, 60);
+    }
+}

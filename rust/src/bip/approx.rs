@@ -1,0 +1,308 @@
+//! Algorithm 4: constant-space online BIP balancing.
+//!
+//! Replaces Algorithm 3's per-expert top-heaps (O(n·k) floats across the
+//! stream) with a per-expert histogram of b buckets over [0, 1): the
+//! (nk/m + 1)-th largest reduced score is located by scanning cumulative
+//! bucket counts from the top and linearly interpolating inside the
+//! bucket. Space is O(m·b), independent of stream length — the property
+//! §5.2 needs for recommendation-scale flows.
+
+use crate::util::stats::{kth_largest_in_place, topk_indices};
+
+/// Per-expert histogram over [0,1) with `b` equal buckets.
+///
+/// Maintains suffix sums (`above[l]` = count of values in buckets > l) so
+/// the rank query is a binary search instead of a top-down scan — pushes
+/// are 1/token while queries are m*T/token, so the query side carries the
+/// cost (EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u32>,
+    above: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(b: usize) -> Self {
+        assert!(b >= 1);
+        Histogram { counts: vec![0; b], above: vec![0; b], total: 0 }
+    }
+
+    pub fn b(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Record a value; negative values are skipped (Alg. 4 line 11 counts
+    /// only s_j - p >= 0), values >= 1 clamp into the last bucket.
+    pub fn push(&mut self, x: f32) {
+        if x < 0.0 {
+            return;
+        }
+        let b = self.counts.len();
+        let idx = ((x as f64 * b as f64) as usize).min(b - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        for l in 0..idx {
+            self.above[l] += 1;
+        }
+    }
+
+    /// Interpolated value of the `rank`-th largest recorded value
+    /// (1-based); None if fewer than `rank` values recorded.
+    /// Alg. 4 line 12: find bucket l containing the rank, interpolate
+    /// between l/b and (l+1)/b by the rank's position inside the bucket.
+    pub fn kth_largest(&self, rank: u64) -> Option<f32> {
+        self.kth_largest_with_extra(rank, usize::MAX)
+    }
+
+    /// `rank`-th largest of recorded ∪ {x} without mutating/cloning —
+    /// the transient query Algorithm 4's T-loop issues per expert per
+    /// iteration (perf: the naive clone-per-query was the Alg 4 hot spot,
+    /// see EXPERIMENTS.md §Perf).
+    pub fn kth_largest_with(&self, x: f32, rank: u64) -> Option<f32> {
+        let extra = if x >= 0.0 {
+            let b = self.counts.len();
+            ((x as f64 * b as f64) as usize).min(b - 1)
+        } else {
+            usize::MAX
+        };
+        self.kth_largest_with_extra(rank, extra)
+    }
+
+    fn kth_largest_with_extra(&self, rank: u64, extra: usize)
+        -> Option<f32>
+    {
+        let total =
+            self.total + if extra != usize::MAX { 1 } else { 0 };
+        if rank == 0 || total < rank {
+            return None;
+        }
+        // cumulative count at-or-above bucket l, including the candidate
+        let at_or_above = |l: usize| -> u64 {
+            self.above[l]
+                + self.counts[l] as u64
+                + if extra != usize::MAX && extra >= l { 1 } else { 0 }
+        };
+        // smallest l is rank-heaviest; find the LARGEST l whose
+        // at_or_above >= rank via binary search (at_or_above is
+        // non-increasing in l)
+        let (mut lo, mut hi) = (0usize, self.counts.len() - 1);
+        if at_or_above(lo) < rank {
+            return None;
+        }
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if at_or_above(mid) >= rank {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let l = lo;
+        let b = self.counts.len() as f64;
+        let above =
+            self.above[l] + u64::from(extra != usize::MAX && extra > l);
+        let cnt = self.counts[l] as u64 + u64::from(extra == l);
+        debug_assert!(above < rank && above + cnt >= rank);
+        // it is the (rank - above)-th largest within bucket l
+        let r = (rank - above) as f64;
+        let frac = r / cnt as f64; // 0 < frac <= 1
+        let hi_edge = (l as f64 + 1.0) / b;
+        Some((hi_edge - frac / b) as f32)
+    }
+}
+
+/// Algorithm 4 gate: like `OnlineGate` but with histogram state.
+pub struct ApproxGate {
+    pub m: usize,
+    pub k: usize,
+    pub cap: usize,
+    pub t_iters: usize,
+    pub q: Vec<f32>,
+    hists: Vec<Histogram>,
+    scratch: Vec<f32>,
+}
+
+impl ApproxGate {
+    pub fn new(m: usize, k: usize, cap: usize, t_iters: usize, b: usize) -> Self {
+        ApproxGate {
+            m,
+            k,
+            cap,
+            t_iters,
+            q: vec![0.0; m],
+            hists: (0..m).map(|_| Histogram::new(b)).collect(),
+            scratch: vec![0.0; m],
+        }
+    }
+
+    pub fn route_token(&mut self, scores: &[f32]) -> Vec<u32> {
+        assert_eq!(scores.len(), self.m);
+        for j in 0..self.m {
+            self.scratch[j] = scores[j] - self.q[j];
+        }
+        let chosen: Vec<u32> = topk_indices(&self.scratch, self.k)
+            .into_iter()
+            .map(|e| e as u32)
+            .collect();
+
+        let kk = (self.k + 1).min(self.m);
+        let rank = (self.cap + 1) as u64;
+        let mut p = 0.0f32;
+        for _ in 0..self.t_iters {
+            for j in 0..self.m {
+                self.scratch[j] = scores[j] - self.q[j];
+            }
+            p = kth_largest_in_place(&mut self.scratch, kk).max(0.0);
+            for j in 0..self.m {
+                // (cap+1)-th largest of hist ∪ {s_j - p}: clone-free query
+                self.q[j] = self.hists[j]
+                    .kth_largest_with(scores[j] - p, rank)
+                    .unwrap_or(0.0)
+                    .max(0.0);
+            }
+        }
+        for j in 0..self.m {
+            self.hists[j].push(scores[j] - p);
+        }
+        chosen
+    }
+
+    /// O(m·b) — independent of how many tokens have streamed through.
+    pub fn state_bytes(&self) -> usize {
+        self.hists
+            .iter()
+            .map(|h| h.counts.len() * 4 + h.above.len() * 8 + 8)
+            .sum::<usize>()
+            + self.q.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bip::online::OnlineGate;
+    use crate::bip::Instance;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn histogram_rank_query_brackets_truth() {
+        let mut rng = Pcg64::new(1);
+        let b = 64;
+        let mut hist = Histogram::new(b);
+        let mut vals: Vec<f32> = Vec::new();
+        for _ in 0..500 {
+            let x = rng.next_f32();
+            hist.push(x);
+            vals.push(x);
+        }
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for rank in [1u64, 10, 100, 400] {
+            let approx = hist.kth_largest(rank).unwrap();
+            let truth = sorted[rank as usize - 1];
+            assert!(
+                (approx - truth).abs() <= 1.5 / b as f32,
+                "rank {rank}: approx {approx} truth {truth}"
+            );
+        }
+        assert_eq!(hist.kth_largest(501), None);
+        assert_eq!(hist.kth_largest(0), None);
+    }
+
+    #[test]
+    fn kth_largest_with_equals_clone_and_insert() {
+        let mut rng = Pcg64::new(9);
+        let mut hist = Histogram::new(32);
+        for _ in 0..300 {
+            let x = rng.next_f32() * 1.2 - 0.1; // includes negatives
+            for rank in [1u64, 5, 50, 200] {
+                let fast = hist.kth_largest_with(x, rank);
+                let mut slow = hist.clone();
+                slow.push(x);
+                assert_eq!(fast, slow.kth_largest(rank));
+            }
+            hist.push(x);
+        }
+    }
+
+    #[test]
+    fn histogram_skips_negatives_clamps_high() {
+        let mut h = Histogram::new(4);
+        h.push(-0.5);
+        assert_eq!(h.total, 0);
+        h.push(1.5); // clamps into last bucket
+        assert_eq!(h.total, 1);
+        assert!(h.kth_largest(1).unwrap() > 0.74);
+    }
+
+    #[test]
+    fn approx_tracks_online_balance() {
+        let mut rng = Pcg64::new(2);
+        let (n, m, k) = (1024usize, 16usize, 4usize);
+        let inst = Instance::synthetic(n, m, k, 2.0, 3.0, &mut rng);
+        let cap = n * k / m;
+        let mut online = OnlineGate::new(m, k, cap, 4);
+        let mut approx = ApproxGate::new(m, k, cap, 4, 128);
+        let mut loads_o = vec![0u32; m];
+        let mut loads_a = vec![0u32; m];
+        for i in 0..n {
+            for &e in &online.route_token(inst.row(i)) {
+                loads_o[e as usize] += 1;
+            }
+            for &e in &approx.route_token(inst.row(i)) {
+                loads_a[e as usize] += 1;
+            }
+        }
+        let mean = (n * k / m) as f64;
+        let vio_o = *loads_o.iter().max().unwrap() as f64 / mean - 1.0;
+        let vio_a = *loads_a.iter().max().unwrap() as f64 / mean - 1.0;
+        // the approximation stays within ~2x of the exact online variant
+        assert!(vio_a <= (vio_o * 2.0).max(0.3),
+                "approx {vio_a} online {vio_o}");
+    }
+
+    #[test]
+    fn state_is_constant_in_stream_length() {
+        let mut rng = Pcg64::new(3);
+        let (m, k) = (8usize, 2usize);
+        let mut gate = ApproxGate::new(m, k, 64, 2, 32);
+        let mut first = None;
+        for i in 0..500 {
+            let inst = Instance::synthetic(1, m, k, 2.0, 1.0, &mut rng);
+            gate.route_token(inst.row(0));
+            if i == 10 {
+                first = Some(gate.state_bytes());
+            }
+        }
+        assert_eq!(gate.state_bytes(), first.unwrap());
+        // O(m*b): 8 experts * 32 buckets * (4B count + 8B suffix) + overhead
+        assert!(gate.state_bytes() <= 8 * 32 * 12 + 8 * 8 + m * 4);
+    }
+
+    #[test]
+    fn more_buckets_means_better_dual_estimates() {
+        let mut rng = Pcg64::new(4);
+        let (n, m, k) = (512usize, 8usize, 2usize);
+        let inst = Instance::synthetic(n, m, k, 2.0, 2.0, &mut rng);
+        let cap = n * k / m;
+        let mut err_by_b = Vec::new();
+        for b in [8usize, 256] {
+            let mut exact = OnlineGate::new(m, k, cap, 2);
+            let mut approx = ApproxGate::new(m, k, cap, 2, b);
+            for i in 0..n {
+                exact.route_token(inst.row(i));
+                approx.route_token(inst.row(i));
+            }
+            let err: f32 = exact
+                .q
+                .iter()
+                .zip(&approx.q)
+                .map(|(a, b)| (a - b).abs())
+                .sum();
+            err_by_b.push(err);
+        }
+        assert!(err_by_b[1] <= err_by_b[0] + 1e-4,
+                "b=256 err {} b=8 err {}", err_by_b[1], err_by_b[0]);
+    }
+}

@@ -1,0 +1,205 @@
+//! Algorithm 1 (lines 7-12): the T-iteration primal-dual / ADMM update —
+//! host-side mirror of the L1 Pallas kernel, same order statistics, same
+//! tie-breaking, so the two implementations are interchangeable (verified
+//! against the kernel through the artifact-equivalence integration test).
+//!
+//! Per iteration, with scratch buffers reused across calls:
+//!   p_i = max(0, (k+1)-th largest of  s_i· - q)        [token duals]
+//!   q_j = max(0, (cap+1)-th largest of s_·j - p)       [expert duals]
+//!
+//! Complexity: O(T · n · m) with quickselect (no sort), ~microseconds for
+//! the paper's gate sizes — the "very small time costs" claim the solver
+//! bench quantifies.
+
+use super::{Instance, Routing};
+use crate::util::stats::{
+    f32_order_key, kth_largest_keys, topk_indices,
+};
+
+/// Reusable solver state: the warm-started dual vector q (Alg. 1 line 2
+/// initializes it once per gate, NOT once per batch) plus scratch space.
+#[derive(Clone, Debug)]
+pub struct DualState {
+    pub q: Vec<f32>,
+    /// order-key scratch: quickselect partitions on u32 keys instead of
+    /// f32 partial_cmp — the solver's hot path (EXPERIMENTS.md §Perf)
+    scratch_row: Vec<u32>,
+    scratch_col: Vec<u32>,
+    /// column-major copy of the current batch's scores so the q-phase
+    /// reads expert columns sequentially
+    scores_t: Vec<f32>,
+    pub p: Vec<f32>,
+}
+
+impl DualState {
+    pub fn new(m: usize) -> Self {
+        DualState {
+            q: vec![0.0; m],
+            scratch_row: Vec::new(),
+            scratch_col: Vec::new(),
+            scores_t: Vec::new(),
+            p: Vec::new(),
+        }
+    }
+
+    /// Run T dual iterations against one batch's scores (Alg. 1 lines 7-12).
+    pub fn update(&mut self, inst: &Instance, t_iters: usize) {
+        let (n, m, k, cap) = (inst.n, inst.m, inst.k, inst.cap);
+        let kk = (k + 1).min(m);
+        let cc = (cap + 1).min(n);
+        self.p.resize(n, 0.0);
+        self.scratch_row.resize(m, 0);
+        self.scratch_col.resize(n, 0);
+        // transpose once per batch
+        self.scores_t.resize(n * m, 0.0);
+        for i in 0..n {
+            let row = inst.row(i);
+            for j in 0..m {
+                self.scores_t[j * n + i] = row[j];
+            }
+        }
+        for _ in 0..t_iters {
+            // p_i = max(0, (k+1)-th largest of s_i - q)
+            for i in 0..n {
+                let row = inst.row(i);
+                for j in 0..m {
+                    self.scratch_row[j] =
+                        f32_order_key(row[j] - self.q[j]);
+                }
+                self.p[i] =
+                    kth_largest_keys(&mut self.scratch_row, kk).max(0.0);
+            }
+            // q_j = max(0, (cap+1)-th largest of s_·j - p)
+            for j in 0..m {
+                let col = &self.scores_t[j * n..(j + 1) * n];
+                for i in 0..n {
+                    self.scratch_col[i] =
+                        f32_order_key(col[i] - self.p[i]);
+                }
+                self.q[j] =
+                    kth_largest_keys(&mut self.scratch_col, cc).max(0.0);
+            }
+        }
+    }
+
+    /// Route with the current duals: Topk(s_i - q, k) per token, gate
+    /// weight = original score (Alg. 1 line 13).
+    pub fn route(&self, inst: &Instance) -> Routing {
+        let mut biased = vec![0.0f32; inst.m];
+        let assignment = (0..inst.n)
+            .map(|i| {
+                let row = inst.row(i);
+                for j in 0..inst.m {
+                    biased[j] = row[j] - self.q[j];
+                }
+                topk_indices(&biased, inst.k)
+                    .into_iter()
+                    .map(|e| e as u32)
+                    .collect()
+            })
+            .collect();
+        Routing { assignment }
+    }
+}
+
+/// One-shot convenience: T iterations from cold start, then route.
+pub fn solve(inst: &Instance, t_iters: usize) -> (Routing, Vec<f32>) {
+    let mut state = DualState::new(inst.m);
+    state.update(inst, t_iters);
+    let routing = state.route(inst);
+    let q = state.q.clone();
+    (routing, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bip::flow::solve_exact;
+    use crate::bip::greedy_topk;
+    use crate::util::rng::Pcg64;
+
+    fn synth(seed: u64, n: usize, m: usize, k: usize, skew: f64) -> Instance {
+        let mut rng = Pcg64::new(seed);
+        Instance::synthetic(n, m, k, 2.0, skew, &mut rng)
+    }
+
+    #[test]
+    fn duals_are_nonnegative() {
+        let inst = synth(0, 128, 16, 4, 2.0);
+        let (_, q) = solve(&inst, 8);
+        assert!(q.iter().all(|&x| x >= 0.0));
+        assert!(q.iter().any(|&x| x > 0.0)); // skew forces binding duals
+    }
+
+    #[test]
+    fn balances_skewed_instances_in_one_shot() {
+        for seed in 0..5 {
+            let inst = synth(seed, 256, 16, 4, 3.0);
+            let (routing, _) = solve(&inst, 8);
+            let greedy = greedy_topk(&inst);
+            assert!(routing.max_violation(&inst) <= 0.30,
+                    "vio {}", routing.max_violation(&inst));
+            assert!(routing.max_violation(&inst)
+                    < greedy.max_violation(&inst));
+        }
+    }
+
+    #[test]
+    fn objective_close_to_exact_optimum() {
+        // the paper's primal-dual argument: the heuristic's objective sits
+        // within a few percent of the true (BIP) optimum
+        for seed in [1u64, 2, 3] {
+            let inst = synth(seed, 64, 8, 2, 2.0);
+            let (exact_routing, exact_obj) = solve_exact(&inst);
+            assert!(exact_routing.is_col_feasible(inst.m, inst.cap));
+            let (routing, _) = solve(&inst, 14);
+            let obj = routing.objective(&inst);
+            assert!(obj >= 0.85 * exact_obj,
+                    "obj {obj} exact {exact_obj}");
+        }
+    }
+
+    #[test]
+    fn loose_capacity_means_zero_duals_and_greedy_routing() {
+        let mut inst = synth(4, 64, 8, 2, 2.0);
+        inst.cap = inst.n; // constraint (2) can never bind
+        let (routing, q) = solve(&inst, 8);
+        assert!(q.iter().all(|&x| x == 0.0));
+        let greedy = greedy_topk(&inst);
+        assert_eq!(routing.assignment, greedy.assignment);
+    }
+
+    #[test]
+    fn warm_start_transfers_across_batches() {
+        // q learned on batches from a fixed skew distribution balances an
+        // unseen batch better than cold-start with tiny T
+        let mut state = DualState::new(16);
+        for seed in 0..6 {
+            let inst = synth(100 + seed, 256, 16, 4, 3.0);
+            state.update(&inst, 2);
+        }
+        let fresh = synth(999, 256, 16, 4, 3.0);
+        let warm_vio = state.route(&fresh).max_violation(&fresh);
+        let cold_vio = greedy_topk(&fresh).max_violation(&fresh);
+        assert!(warm_vio < cold_vio, "warm {warm_vio} cold {cold_vio}");
+    }
+
+    #[test]
+    fn more_iterations_weakly_improve_balance() {
+        let inst = synth(5, 256, 16, 4, 3.0);
+        let vio_t1 = solve(&inst, 1).0.max_violation(&inst);
+        let vio_t8 = solve(&inst, 8).0.max_violation(&inst);
+        assert!(vio_t8 <= vio_t1 + 0.05, "t1 {vio_t1} t8 {vio_t8}");
+    }
+
+    #[test]
+    fn row_feasibility_always_holds() {
+        let inst = synth(6, 100, 10, 3, 1.0);
+        let (routing, _) = solve(&inst, 4);
+        assert!(routing.is_row_feasible(inst.k));
+        assert_eq!(
+            routing.assignment.iter().map(|a| a.len()).sum::<usize>(),
+            inst.n * inst.k
+        );
+    }
+}

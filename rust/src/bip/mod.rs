@@ -1,0 +1,180 @@
+//! The optimization substrate for BIP-Based Balancing (paper §3 and §5).
+//!
+//! * [`flow`]    — exact min-cost max-flow; the routing BIP is a
+//!   transportation LP with integral vertices, so this is the *exact*
+//!   optimum the paper's primal-dual heuristic is measured against.
+//! * [`dual`]    — Algorithm 1 lines 7-12: the T-iteration dual ascent
+//!   (host-side mirror of the L1 Pallas kernel, bit-compatible).
+//! * [`online`]  — Algorithm 3: streaming per-token version with
+//!   per-expert bounded heaps (O(m log n) per token).
+//! * [`approx`]  — Algorithm 4: constant-space variant with b-bucket
+//!   histograms + interpolation (O(m·b) space, no dependence on n).
+//!
+//! All solvers share the [`Instance`]/[`Routing`] vocabulary below.
+
+pub mod approx;
+pub mod dual;
+pub mod flow;
+pub mod online;
+
+use crate::util::rng::Pcg64;
+
+/// One routing problem: n tokens, m experts, k choices per token, and the
+/// per-expert capacity `cap` = n*k/m of BIP constraint (2).
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub n: usize,
+    pub m: usize,
+    pub k: usize,
+    pub cap: usize,
+    /// Row-major (n, m) routing scores (softmax rows in the LLM setting).
+    pub scores: Vec<f32>,
+}
+
+impl Instance {
+    pub fn score(&self, i: usize, j: usize) -> f32 {
+        self.scores[i * self.m + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.scores[i * self.m..(i + 1) * self.m]
+    }
+
+    /// Softmax-score instance with optional expert-popularity skew — the
+    /// hard case where every token prefers the same experts.
+    pub fn synthetic(
+        n: usize,
+        m: usize,
+        k: usize,
+        temp: f64,
+        skew: f64,
+        rng: &mut Pcg64,
+    ) -> Instance {
+        let mut scores = Vec::with_capacity(n * m);
+        for _ in 0..n {
+            let mut logits: Vec<f64> = (0..m)
+                .map(|j| {
+                    rng.normal() * temp
+                        + skew * (m - 1 - j) as f64 / (m - 1).max(1) as f64
+                })
+                .collect();
+            let maxv = logits.iter().cloned().fold(f64::MIN, f64::max);
+            let mut total = 0.0;
+            for l in logits.iter_mut() {
+                *l = (*l - maxv).exp();
+                total += *l;
+            }
+            for l in &logits {
+                scores.push((l / total) as f32);
+            }
+        }
+        Instance { n, m, k, cap: n * k / m, scores }
+    }
+}
+
+/// A complete routing decision: for each token, its k chosen experts.
+#[derive(Clone, Debug)]
+pub struct Routing {
+    pub assignment: Vec<Vec<u32>>, // token -> expert ids (len k, or fewer)
+}
+
+impl Routing {
+    /// Per-expert load histogram.
+    pub fn loads(&self, m: usize) -> Vec<u32> {
+        let mut loads = vec![0u32; m];
+        for experts in &self.assignment {
+            for &e in experts {
+                loads[e as usize] += 1;
+            }
+        }
+        loads
+    }
+
+    /// Sum of selected scores — the BIP objective.
+    pub fn objective(&self, inst: &Instance) -> f64 {
+        self.assignment
+            .iter()
+            .enumerate()
+            .flat_map(|(i, es)| {
+                es.iter().map(move |&e| inst.score(i, e as usize) as f64)
+            })
+            .sum()
+    }
+
+    /// MaxVio = max_j load_j / (n k / m) - 1 (Wang et al. 2024).
+    pub fn max_violation(&self, inst: &Instance) -> f64 {
+        let loads = self.loads(inst.m);
+        let mean = inst.n as f64 * inst.k as f64 / inst.m as f64;
+        loads.iter().cloned().max().unwrap_or(0) as f64 / mean - 1.0
+    }
+
+    pub fn is_row_feasible(&self, k: usize) -> bool {
+        self.assignment.iter().all(|es| es.len() <= k)
+    }
+
+    pub fn is_col_feasible(&self, m: usize, cap: usize) -> bool {
+        self.loads(m).iter().all(|&l| l as usize <= cap)
+    }
+}
+
+/// Greedy top-k on raw scores (the unbalanced baseline every method is
+/// compared against).
+pub fn greedy_topk(inst: &Instance) -> Routing {
+    let assignment = (0..inst.n)
+        .map(|i| {
+            crate::util::stats::topk_indices(inst.row(i), inst.k)
+                .into_iter()
+                .map(|e| e as u32)
+                .collect()
+        })
+        .collect();
+    Routing { assignment }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_rows_are_softmax() {
+        let mut rng = Pcg64::new(0);
+        let inst = Instance::synthetic(32, 8, 2, 2.0, 1.0, &mut rng);
+        for i in 0..inst.n {
+            let sum: f32 = inst.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(inst.row(i).iter().all(|&s| s >= 0.0));
+        }
+    }
+
+    #[test]
+    fn greedy_is_row_feasible_and_maximal() {
+        let mut rng = Pcg64::new(1);
+        let inst = Instance::synthetic(64, 8, 3, 2.0, 0.0, &mut rng);
+        let routing = greedy_topk(&inst);
+        assert!(routing.is_row_feasible(inst.k));
+        assert_eq!(routing.loads(inst.m).iter().sum::<u32>(),
+                   (inst.n * inst.k) as u32);
+        // per-token: selected sum >= any other k-subset's sum
+        for i in 0..inst.n {
+            let sel: f64 = routing.assignment[i]
+                .iter()
+                .map(|&e| inst.score(i, e as usize) as f64)
+                .sum();
+            let mut row: Vec<f32> = inst.row(i).to_vec();
+            row.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let best: f64 = row[..inst.k].iter().map(|&x| x as f64).sum();
+            assert!((sel - best).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn skew_makes_greedy_unbalanced() {
+        let mut rng = Pcg64::new(2);
+        let skewed = Instance::synthetic(256, 16, 4, 1.0, 4.0, &mut rng);
+        let flat = Instance::synthetic(256, 16, 4, 1.0, 0.0, &mut rng);
+        let vs = greedy_topk(&skewed).max_violation(&skewed);
+        let vf = greedy_topk(&flat).max_violation(&flat);
+        assert!(vs > vf, "skewed {vs} flat {vf}");
+        assert!(vs > 1.0);
+    }
+}

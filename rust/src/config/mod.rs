@@ -1,0 +1,155 @@
+//! Run-configuration layer: typed experiment descriptions that can be
+//! loaded from JSON files (`configs/*.json`), merged with CLI overrides,
+//! and stamped into run reports — the front door a deployment would use
+//! instead of hand-assembled TrainDriver values.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::train::TrainDriver;
+use crate::util::json::Json;
+
+/// A named experiment: which model config, routing mode, and budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub name: String,
+    pub model: String,
+    pub mode: String,
+    pub bip_t: usize,
+    pub steps: u64,
+    pub seed: i32,
+    pub eval_batches: u64,
+    pub sim_devices: usize,
+    pub data_seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            name: "default".into(),
+            model: "moe16-bench".into(),
+            mode: "bip".into(),
+            bip_t: 4,
+            steps: 100,
+            seed: 0,
+            eval_batches: 8,
+            sim_devices: 4,
+            data_seed: 20240601,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let gs = |k: &str, dv: &str| {
+            j.get(k).and_then(Json::as_str).unwrap_or(dv).to_string()
+        };
+        let gu = |k: &str, dv: usize| {
+            j.get(k).and_then(Json::as_usize).unwrap_or(dv)
+        };
+        let mode = gs("mode", &d.mode);
+        if !["aux", "lossfree", "bip"].contains(&mode.as_str()) {
+            return Err(anyhow!("invalid mode {mode:?}"));
+        }
+        Ok(RunConfig {
+            name: gs("name", &d.name),
+            model: gs("model", &d.model),
+            mode,
+            bip_t: gu("bip_t", d.bip_t),
+            steps: gu("steps", d.steps as usize) as u64,
+            seed: gu("seed", d.seed as usize) as i32,
+            eval_batches: gu("eval_batches", d.eval_batches as usize) as u64,
+            sim_devices: gu("sim_devices", d.sim_devices),
+            data_seed: gu("data_seed", d.data_seed as usize) as u64,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("mode", Json::Str(self.mode.clone())),
+            ("bip_t", Json::Num(self.bip_t as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("eval_batches", Json::Num(self.eval_batches as f64)),
+            ("sim_devices", Json::Num(self.sim_devices as f64)),
+            ("data_seed", Json::Num(self.data_seed as f64)),
+        ])
+    }
+
+    pub fn driver(&self) -> TrainDriver {
+        let mut d =
+            TrainDriver::new(&self.model, &self.mode, self.bip_t, self.steps);
+        d.seed = self.seed;
+        d.eval_batches = self.eval_batches;
+        d.sim_devices = self.sim_devices;
+        d.data_seed = self.data_seed;
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip() {
+        let cfg = RunConfig {
+            name: "exp1".into(),
+            model: "moe64-bench".into(),
+            mode: "lossfree".into(),
+            bip_t: 8,
+            steps: 250,
+            seed: 3,
+            eval_batches: 12,
+            sim_devices: 8,
+            data_seed: 99,
+        };
+        let parsed = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let j = Json::parse(r#"{"model": "tiny", "steps": 7}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.model, "tiny");
+        assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.mode, "bip");
+        assert_eq!(cfg.sim_devices, 4);
+    }
+
+    #[test]
+    fn invalid_mode_rejected() {
+        let j = Json::parse(r#"{"mode": "nonsense"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn driver_conversion() {
+        let cfg = RunConfig { steps: 42, ..Default::default() };
+        let d = cfg.driver();
+        assert_eq!(d.steps, 42);
+        assert_eq!(d.config, "moe16-bench");
+    }
+
+    #[test]
+    fn load_from_file() {
+        let path = std::env::temp_dir().join(format!(
+            "bipmoe-cfg-{}.json", std::process::id()));
+        std::fs::write(&path,
+                       r#"{"name":"t","model":"tiny","mode":"aux"}"#)
+            .unwrap();
+        let cfg = RunConfig::load(&path).unwrap();
+        assert_eq!(cfg.mode, "aux");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,185 @@
+//! Batch loader: deterministic train/test split over the document space,
+//! fixed-shape (batch, seq+1) i32 batches, and an optional prefetch thread
+//! with bounded-channel backpressure so data generation overlaps PJRT
+//! execution without unbounded memory growth.
+
+use std::sync::Arc;
+
+use super::corpus::Corpus;
+use crate::util::pool::Bounded;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// One LM batch: `tokens` is row-major (batch_size, seq_len + 1) — inputs
+/// are [:, :-1], targets [:, 1:], exactly what the AOT train step expects.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    pub index: u64,
+}
+
+impl Batch {
+    pub fn n_tokens(&self) -> usize {
+        self.batch_size * self.seq_len
+    }
+}
+
+pub struct Loader {
+    corpus: Arc<Corpus>,
+    batch_size: usize,
+    seq_len: usize,
+    split: Split,
+    /// every `test_mod`-th document is held out for the test split
+    test_mod: u64,
+}
+
+impl Loader {
+    pub fn new(
+        corpus: Arc<Corpus>,
+        batch_size: usize,
+        seq_len: usize,
+        split: Split,
+    ) -> Loader {
+        Loader { corpus, batch_size, seq_len, split, test_mod: 10 }
+    }
+
+    fn doc_for(&self, logical: u64) -> u64 {
+        // interleave: docs with id % test_mod == 0 belong to Test
+        match self.split {
+            Split::Test => logical * self.test_mod,
+            Split::Train => {
+                let per_block = self.test_mod - 1;
+                let block = logical / per_block;
+                let off = logical % per_block;
+                block * self.test_mod + 1 + off
+            }
+        }
+    }
+
+    /// Deterministic batch by index (same index -> same tokens), each row
+    /// drawn from its own document sequence so rows are independent.
+    pub fn batch(&self, index: u64) -> Batch {
+        let row_len = self.seq_len + 1;
+        let mut tokens = Vec::with_capacity(self.batch_size * row_len);
+        for row in 0..self.batch_size as u64 {
+            let logical_doc =
+                index * self.batch_size as u64 + row;
+            let doc = self.doc_for(logical_doc);
+            let mut stream = self.corpus.stream(doc);
+            for _ in 0..row_len {
+                tokens.push(stream.next().unwrap() as i32);
+            }
+        }
+        Batch {
+            tokens,
+            batch_size: self.batch_size,
+            seq_len: self.seq_len,
+            index,
+        }
+    }
+
+    /// Spawn a prefetch thread producing batches [start, start+count);
+    /// the bounded channel (depth `depth`) provides backpressure.
+    pub fn prefetch(
+        self: Arc<Self>,
+        start: u64,
+        count: u64,
+        depth: usize,
+    ) -> Bounded<Batch> {
+        let ch = Bounded::new(depth);
+        let tx = ch.clone();
+        let loader = self;
+        std::thread::spawn(move || {
+            for i in start..start + count {
+                if tx.send(loader.batch(i)).is_err() {
+                    break; // consumer closed early
+                }
+            }
+            tx.close();
+        });
+        ch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusSpec;
+
+    fn corpus() -> Arc<Corpus> {
+        Arc::new(Corpus::build(CorpusSpec {
+            vocab_size: 256,
+            n_topics: 4,
+            doc_len: 64,
+            ..Default::default()
+        }))
+    }
+
+    #[test]
+    fn batch_shape_and_determinism() {
+        let loader = Loader::new(corpus(), 4, 32, Split::Train);
+        let b = loader.batch(3);
+        assert_eq!(b.tokens.len(), 4 * 33);
+        assert_eq!(b.n_tokens(), 128);
+        assert_eq!(loader.batch(3).tokens, b.tokens);
+        assert_ne!(loader.batch(4).tokens, b.tokens);
+    }
+
+    #[test]
+    fn train_and_test_documents_are_disjoint() {
+        let c = corpus();
+        let train = Loader::new(c.clone(), 1, 8, Split::Train);
+        let test = Loader::new(c, 1, 8, Split::Test);
+        let train_docs: Vec<u64> = (0..100).map(|i| train.doc_for(i)).collect();
+        let test_docs: Vec<u64> = (0..20).map(|i| test.doc_for(i)).collect();
+        for td in &test_docs {
+            assert!(!train_docs.contains(td), "doc {td} leaked");
+            assert_eq!(td % 10, 0);
+        }
+        for td in &train_docs {
+            assert_ne!(td % 10, 0);
+        }
+        // no duplicates within a split
+        let mut uniq = train_docs.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), train_docs.len());
+    }
+
+    #[test]
+    fn rows_use_distinct_documents() {
+        let loader = Loader::new(corpus(), 4, 32, Split::Train);
+        let b = loader.batch(0);
+        let row0 = &b.tokens[..33];
+        let row1 = &b.tokens[33..66];
+        assert_ne!(row0, row1);
+    }
+
+    #[test]
+    fn prefetch_delivers_in_order_with_backpressure() {
+        let loader = Arc::new(Loader::new(corpus(), 2, 16, Split::Train));
+        let ch = loader.clone().prefetch(5, 20, 2);
+        let mut idx = 5;
+        while let Some(b) = ch.recv() {
+            assert_eq!(b.index, idx);
+            assert_eq!(b.tokens, loader.batch(idx).tokens);
+            idx += 1;
+        }
+        assert_eq!(idx, 25);
+    }
+
+    #[test]
+    fn prefetch_consumer_can_abandon() {
+        let loader = Arc::new(Loader::new(corpus(), 2, 16, Split::Train));
+        let ch = loader.prefetch(0, 1000, 2);
+        let _ = ch.recv();
+        ch.close(); // producer unblocks and exits
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+}

@@ -1,0 +1,18 @@
+//! Data pipeline: synthetic pre-training corpus + batch loader.
+//!
+//! The paper trains on the Minimind corpus (Chinese web text, vocab 6400).
+//! That corpus is not available here, so [`corpus`] builds the closest
+//! synthetic equivalent that exercises the same code paths: a Zipf-mixture
+//! Markov token stream over the same 6400-token vocabulary (natural-language
+//! token frequencies are Zipfian, and router score skew — the thing load
+//! balancing reacts to — tracks that skew). See DESIGN.md §Substitutions.
+//!
+//! [`loader`] shards the stream into fixed-shape (batch, seq+1) i32 batches
+//! with a deterministic train/test split and a prefetch thread bounded by a
+//! backpressure channel.
+
+pub mod corpus;
+pub mod loader;
+
+pub use corpus::{Corpus, CorpusSpec};
+pub use loader::{Batch, Loader, Split};

@@ -1,0 +1,35 @@
+//! # bip-moe — BIP-Based Balancing for Mixture-of-Experts pre-training
+//!
+//! Production-grade reproduction of *"Binary-Integer-Programming Based
+//! Algorithm for Expert Load Balancing in Mixture-of-Experts Models"*
+//! (Yuan Sun, 2025) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the training coordinator: data pipeline,
+//!   PJRT runtime, training loop, metrics, expert-parallel cluster
+//!   simulator, BIP solver substrate (exact / dual / online / approx),
+//!   and the §5 online-matching application. Python never runs on the
+//!   training path.
+//! * **L2 (`python/compile/model.py`)** — Minimind-style MoE transformer
+//!   (fwd/bwd/AdamW) with the three routing modes (Loss-Controlled,
+//!   Loss-Free, BIP), AOT-lowered once to HLO text artifacts.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels: the BIP dual
+//!   update (Algorithm 1 lines 7-12), the biased top-k gate, and the
+//!   grouped expert FFN with a hand-derived custom VJP.
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment
+//! index (every table and figure of the paper mapped to a bench target).
+
+pub mod bench;
+pub mod bip;
+pub mod config;
+pub mod data;
+pub mod matching;
+pub mod metrics;
+pub mod parallel;
+pub mod routing;
+pub mod runtime;
+pub mod train;
+pub mod util;
+
+/// Crate version string (also stamped into run reports).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

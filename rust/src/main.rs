@@ -1,0 +1,317 @@
+//! bip-moe CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   train   train one (config, mode, T) run end-to-end via PJRT
+//!   eval    evaluate a checkpoint's held-out perplexity
+//!   solve   run the BIP solver family on a synthetic routing instance
+//!   match   run the §5 online ad-matching simulation (Alg 3/4)
+//!   info    list artifact manifest contents and engine stats
+//!
+//! Examples:
+//!   bip-moe train --config moe16-bench --mode bip --bip-t 4 --steps 100
+//!   bip-moe solve --n 1024 --m 64 --k 8 --skew 3.0 --t 8
+//!   bip-moe match --flows 4096 --ads 32 --slots 2
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use bip_moe::bip::{dual, flow, greedy_topk, Instance};
+use bip_moe::matching::simulator::{compare_policies, Workload};
+use bip_moe::metrics::TablePrinter;
+use bip_moe::runtime::Engine;
+use bip_moe::train::TrainDriver;
+use bip_moe::util::rng::Pcg64;
+use bip_moe::util::Args;
+
+fn main() {
+    bip_moe::util::log::init_from_env();
+    let args = Args::parse_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("run") => cmd_run(args),
+        Some("eval") => cmd_eval(args),
+        Some("solve") => cmd_solve(args),
+        Some("match") => cmd_match(args),
+        Some("info") => cmd_info(args),
+        Some(other) => bail!("unknown subcommand {other}; see --help"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "bip-moe {} — BIP-Based Balancing for MoE pre-training\n\n\
+         usage: bip-moe <train|eval|solve|match|info> [--options]\n\n\
+         train  --config <name> --mode <aux|lossfree|bip> [--bip-t N]\n\
+                [--steps N] [--seed N] [--eval-batches N]\n\
+                [--reports DIR] [--save CKPT] [--artifacts DIR]\n\
+         run    --config-file configs/<exp>.json [--artifacts DIR]\n\
+         eval   --checkpoint CKPT [--eval-batches N] [--artifacts DIR]\n\
+         solve  [--n N] [--m M] [--k K] [--skew S] [--t T] [--exact]\n\
+         match  [--flows N] [--ads M] [--slots K] [--t T] [--buckets B]\n\
+         info   [--artifacts DIR]",
+        bip_moe::VERSION
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "config", "mode", "bip-t", "steps", "seed", "eval-batches",
+        "reports", "save", "artifacts", "sim-devices", "data-seed",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    let engine = Engine::new(&artifacts_dir(args))?;
+    let mut driver = TrainDriver::new(
+        &args.str_or("config", "tiny"),
+        &args.str_or("mode", "bip"),
+        args.usize_or("bip-t", 4),
+        args.u64_or("steps", 50),
+    );
+    driver.seed = args.usize_or("seed", 0) as i32;
+    driver.eval_batches = args.u64_or("eval-batches", 8);
+    driver.sim_devices = args.usize_or("sim-devices", 4);
+    driver.data_seed = args.u64_or("data-seed", 20240601);
+
+    let outcome = driver.run(&engine)?;
+    let reports = PathBuf::from(args.str_or("reports", "reports"));
+    let out = outcome.dump(&reports)?;
+
+    let mut table = TablePrinter::new(
+        &format!("run {}", driver.run_label()),
+        &["Algorithm", "AvgMaxVio", "SupMaxVio", "Perplexity",
+          "SimHours(run)"],
+    );
+    table.row(outcome.table_row(&driver.run_label()));
+    table.print();
+    println!("reports: {}", out.display());
+    println!(
+        "engine: {} compiles {:.1}s, {} execs {:.1}s",
+        engine.stats().compiles,
+        engine.stats().compile_seconds,
+        engine.stats().executions,
+        engine.stats().execute_seconds
+    );
+
+    if let Some(ckpt) = args.get("save") {
+        outcome
+            .state
+            .save(Path::new(ckpt), &driver.config, &driver.mode)?;
+        println!("checkpoint: {ckpt}");
+    }
+    Ok(())
+}
+
+/// Run a named experiment from a JSON run-config file (configs/*.json).
+fn cmd_run(args: &Args) -> Result<()> {
+    args.check_known(&["config-file", "artifacts", "reports", "save"])
+        .map_err(anyhow::Error::msg)?;
+    let path = args
+        .get("config-file")
+        .ok_or_else(|| anyhow::anyhow!("--config-file required"))?;
+    let run_cfg = bip_moe::config::RunConfig::load(Path::new(path))?;
+    println!("experiment {}: {}", run_cfg.name, run_cfg.to_json());
+    let engine = Engine::new(&artifacts_dir(args))?;
+    let driver = run_cfg.driver();
+    let outcome = driver.run(&engine)?;
+    let out = outcome
+        .dump(Path::new(&args.str_or("reports", "reports")))?;
+    let mut table = TablePrinter::new(
+        &format!("experiment {}", run_cfg.name),
+        &["Algorithm", "AvgMaxVio", "SupMaxVio", "Perplexity",
+          "SimHours(run)"],
+    );
+    table.row(outcome.table_row(&driver.run_label()));
+    table.print();
+    println!("reports: {}", out.display());
+    if let Some(ckpt) = args.get("save") {
+        outcome
+            .state
+            .save(Path::new(ckpt), &driver.config, &driver.mode)?;
+        println!("checkpoint: {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    args.check_known(&["checkpoint", "eval-batches", "artifacts",
+                       "data-seed"])
+        .map_err(anyhow::Error::msg)?;
+    let ckpt = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow::anyhow!("--checkpoint required"))?;
+    let (state, config, mode) =
+        bip_moe::train::state::TrainState::load(Path::new(ckpt))?;
+    let engine = Engine::new(&artifacts_dir(args))?;
+    let cfg = engine.manifest().config(&config)?.clone();
+    let eval_art = engine.manifest().find(&config, "eval", &mode, None)?
+        .clone();
+
+    let corpus = std::sync::Arc::new(bip_moe::data::Corpus::build(
+        bip_moe::data::CorpusSpec {
+            vocab_size: cfg.vocab_size,
+            seed: args.u64_or("data-seed", 20240601),
+            ..Default::default()
+        },
+    ));
+    let loader = bip_moe::data::Loader::new(
+        corpus, cfg.batch_size, cfg.seq_len,
+        bip_moe::data::Split::Test);
+    let mut ppl = bip_moe::metrics::Perplexity::default();
+    for i in 0..args.u64_or("eval-batches", 16) {
+        let batch = loader.batch(i);
+        let tokens = bip_moe::runtime::Tensor::from_i32(
+            &[cfg.batch_size, cfg.seq_len + 1],
+            batch.tokens,
+        );
+        let outs = engine.run(&eval_art, &[
+            state.theta.clone(),
+            state.route_state.clone(),
+            tokens,
+        ])?;
+        ppl.push(outs[0].scalar_f32()? as f64, cfg.n_tokens as u64);
+    }
+    println!(
+        "checkpoint {ckpt}: config={config} mode={mode} step={} \
+         test-ppl={:.4}",
+        state.step_count(),
+        ppl.value()
+    );
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    args.check_known(&["n", "m", "k", "skew", "temp", "t", "seed", "exact"])
+        .map_err(anyhow::Error::msg)?;
+    let n = args.usize_or("n", 1024);
+    let m = args.usize_or("m", 16);
+    let k = args.usize_or("k", 4);
+    let t = args.usize_or("t", 4);
+    let mut rng = Pcg64::new(args.u64_or("seed", 0));
+    let inst = Instance::synthetic(
+        n, m, k,
+        args.f64_or("temp", 2.0),
+        args.f64_or("skew", 3.0),
+        &mut rng,
+    );
+
+    let mut table = TablePrinter::new(
+        &format!("BIP routing instance n={n} m={m} k={k} cap={}", inst.cap),
+        &["Solver", "Objective", "MaxVio", "Feasible", "Time"],
+    );
+
+    let t0 = std::time::Instant::now();
+    let greedy = greedy_topk(&inst);
+    table.row(vec![
+        "greedy top-k".into(),
+        format!("{:.4}", greedy.objective(&inst)),
+        format!("{:.4}", greedy.max_violation(&inst)),
+        format!("{}", greedy.is_col_feasible(m, inst.cap)),
+        format!("{:?}", t0.elapsed()),
+    ]);
+
+    let t0 = std::time::Instant::now();
+    let (routing, _q) = dual::solve(&inst, t);
+    table.row(vec![
+        format!("BIP dual (T={t})"),
+        format!("{:.4}", routing.objective(&inst)),
+        format!("{:.4}", routing.max_violation(&inst)),
+        format!("{}", routing.is_col_feasible(m, inst.cap)),
+        format!("{:?}", t0.elapsed()),
+    ]);
+
+    if args.flag("exact") {
+        let t0 = std::time::Instant::now();
+        let (exact, obj) = flow::solve_exact(&inst);
+        table.row(vec![
+            "exact (min-cost flow)".into(),
+            format!("{obj:.4}"),
+            format!("{:.4}", exact.max_violation(&inst)),
+            format!("{}", exact.is_col_feasible(m, inst.cap)),
+            format!("{:?}", t0.elapsed()),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_match(args: &Args) -> Result<()> {
+    args.check_known(&["flows", "ads", "slots", "t", "buckets", "seed"])
+        .map_err(anyhow::Error::msg)?;
+    let w = Workload::synthetic(
+        args.usize_or("flows", 4096),
+        args.usize_or("ads", 32),
+        args.usize_or("slots", 2),
+        args.u64_or("seed", 42),
+    );
+    let reports =
+        compare_policies(&w, args.usize_or("t", 4),
+                         args.usize_or("buckets", 128));
+    let mut table = TablePrinter::new(
+        &format!(
+            "online ad matching: {} flows x {} ads, {} slots, cap {}",
+            w.n_flows, w.n_ads, w.slots, w.capacity()
+        ),
+        &["Policy", "CTR sum", "vs hindsight", "MaxVio", "State bytes"],
+    );
+    for r in reports {
+        table.row(vec![
+            r.policy.clone(),
+            format!("{:.2}", r.objective),
+            format!("{:.3}", r.competitive_ratio),
+            format!("{:.3}", r.max_violation),
+            format!("{}", r.state_bytes),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts"]).map_err(anyhow::Error::msg)?;
+    let engine = Engine::new(&artifacts_dir(args))?;
+    println!("platform: {}", engine.platform());
+    println!("fingerprint: {}", engine.manifest().fingerprint);
+    let mut table = TablePrinter::new(
+        "configs",
+        &["name", "theta", "layers", "experts", "top-k", "seq", "batch"],
+    );
+    for (name, c) in &engine.manifest().configs {
+        table.row(vec![
+            name.clone(),
+            c.theta_size.to_string(),
+            c.n_layers.to_string(),
+            c.n_experts.to_string(),
+            c.top_k.to_string(),
+            c.seq_len.to_string(),
+            c.batch_size.to_string(),
+        ]);
+    }
+    table.print();
+    println!("{} artifacts:", engine.manifest().artifacts.len());
+    for a in &engine.manifest().artifacts {
+        println!(
+            "  {:<44} {:>6} {:>9} T={:?}",
+            a.file, a.kind, a.mode, a.bip_t
+        );
+    }
+    Ok(())
+}

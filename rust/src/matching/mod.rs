@@ -1,0 +1,13 @@
+//! Section 5 application: multi-slot online matching for recommendation.
+//!
+//! Scenario (paper §5.1): a webpage has k advertisement slots; flows
+//! (page views) arrive online; each (flow, advertiser) pair has a CTR;
+//! we maximize total expected CTR while capping the most popular
+//! advertiser's share — exactly problem (BIP) with advertisers as
+//! "experts". Algorithm 3 (exact heaps) and Algorithm 4 (constant-space
+//! histograms) are the online policies; hindsight min-cost-flow gives
+//! the offline optimum for the competitive-ratio column.
+
+pub mod simulator;
+
+pub use simulator::{MatchPolicy, MatchReport, Workload};

@@ -1,0 +1,204 @@
+//! Ad-slot matching simulator driving Algorithms 3/4 on a CTR workload.
+
+use crate::bip::approx::ApproxGate;
+use crate::bip::flow::solve_exact;
+use crate::bip::online::OnlineGate;
+use crate::bip::Instance;
+use crate::util::rng::{Pcg64, Zipf};
+
+/// A stream of flows with CTRs over `n_ads` advertisers.
+/// CTRs mix a per-advertiser popularity (Zipf — a few advertisers are
+/// broadly attractive, the congestion the capacity constraint fights)
+/// with per-flow idiosyncratic taste.
+pub struct Workload {
+    pub n_flows: usize,
+    pub n_ads: usize,
+    pub slots: usize,
+    pub ctrs: Vec<f32>, // row-major (n_flows, n_ads), in (0, 1)
+}
+
+impl Workload {
+    pub fn synthetic(
+        n_flows: usize,
+        n_ads: usize,
+        slots: usize,
+        seed: u64,
+    ) -> Workload {
+        let mut rng = Pcg64::new(seed);
+        let zipf = Zipf::new(n_ads, 1.1);
+        // popularity weights from Zipf rank frequencies
+        let mut pop = vec![0.0f64; n_ads];
+        for _ in 0..n_ads * 64 {
+            pop[zipf.sample(&mut rng)] += 1.0;
+        }
+        let max_pop = pop.iter().cloned().fold(0.0, f64::max);
+        let mut ctrs = Vec::with_capacity(n_flows * n_ads);
+        for _ in 0..n_flows {
+            for j in 0..n_ads {
+                let base = 0.02 + 0.1 * pop[j] / max_pop;
+                let noise = rng.next_f64() * 0.05;
+                ctrs.push((base + noise) as f32);
+            }
+        }
+        Workload { n_flows, n_ads, slots, ctrs }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.ctrs[i * self.n_ads..(i + 1) * self.n_ads]
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.n_flows * self.slots / self.n_ads
+    }
+
+    fn as_instance(&self) -> Instance {
+        Instance {
+            n: self.n_flows,
+            m: self.n_ads,
+            k: self.slots,
+            cap: self.capacity(),
+            scores: self.ctrs.clone(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatchPolicy {
+    /// Plain top-k CTR — ignores advertiser caps.
+    Greedy,
+    /// Algorithm 3 (exact per-advertiser heaps).
+    Online { t_iters: usize },
+    /// Algorithm 4 (b-bucket histograms).
+    Approx { t_iters: usize, buckets: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct MatchReport {
+    pub policy: String,
+    pub objective: f64,
+    pub hindsight_objective: f64,
+    pub competitive_ratio: f64,
+    pub max_violation: f64,
+    pub state_bytes: usize,
+}
+
+/// Run one policy over the workload; hindsight optimum via min-cost flow.
+pub fn run_policy(w: &Workload, policy: MatchPolicy) -> MatchReport {
+    let cap = w.capacity();
+    let mut loads = vec![0u64; w.n_ads];
+    let mut objective = 0.0f64;
+    let mut state_bytes = w.n_ads * 4;
+
+    match policy {
+        MatchPolicy::Greedy => {
+            for i in 0..w.n_flows {
+                for j in crate::util::stats::topk_indices(w.row(i), w.slots) {
+                    loads[j] += 1;
+                    objective += w.row(i)[j] as f64;
+                }
+            }
+        }
+        MatchPolicy::Online { t_iters } => {
+            let mut gate = OnlineGate::new(w.n_ads, w.slots, cap, t_iters);
+            for i in 0..w.n_flows {
+                for &j in &gate.route_token(w.row(i)) {
+                    loads[j as usize] += 1;
+                    objective += w.row(i)[j as usize] as f64;
+                }
+            }
+            state_bytes = gate.state_bytes();
+        }
+        MatchPolicy::Approx { t_iters, buckets } => {
+            let mut gate =
+                ApproxGate::new(w.n_ads, w.slots, cap, t_iters, buckets);
+            for i in 0..w.n_flows {
+                for &j in &gate.route_token(w.row(i)) {
+                    loads[j as usize] += 1;
+                    objective += w.row(i)[j as usize] as f64;
+                }
+            }
+            state_bytes = gate.state_bytes();
+        }
+    }
+
+    let inst = w.as_instance();
+    let (_, hindsight) = solve_exact(&inst);
+    let mean = (w.n_flows * w.slots) as f64 / w.n_ads as f64;
+    let max_violation =
+        *loads.iter().max().unwrap() as f64 / mean - 1.0;
+    MatchReport {
+        policy: format!("{policy:?}"),
+        objective,
+        hindsight_objective: hindsight,
+        competitive_ratio: objective / hindsight,
+        max_violation,
+        state_bytes,
+    }
+}
+
+/// Convenience: greedy vs Alg 3 vs Alg 4 on one workload.
+pub fn compare_policies(w: &Workload, t_iters: usize, buckets: usize)
+    -> Vec<MatchReport>
+{
+    vec![
+        run_policy(w, MatchPolicy::Greedy),
+        run_policy(w, MatchPolicy::Online { t_iters }),
+        run_policy(w, MatchPolicy::Approx { t_iters, buckets }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workload() -> Workload {
+        Workload::synthetic(256, 16, 2, 42)
+    }
+
+    #[test]
+    fn greedy_overloads_popular_advertisers() {
+        let r = run_policy(&workload(), MatchPolicy::Greedy);
+        assert!(r.max_violation > 0.5, "vio {}", r.max_violation);
+    }
+
+    #[test]
+    fn online_respects_balance_with_small_objective_loss() {
+        let w = workload();
+        let greedy = run_policy(&w, MatchPolicy::Greedy);
+        let online = run_policy(&w, MatchPolicy::Online { t_iters: 4 });
+        assert!(online.max_violation < greedy.max_violation * 0.6,
+                "online {} greedy {}", online.max_violation,
+                greedy.max_violation);
+        // CTR spreads are narrow (0.02..0.17), so enforcing the cap costs
+        // real objective; the LP argument still keeps it within ~30%
+        assert!(online.objective >= 0.70 * greedy.objective,
+                "online {} greedy {}", online.objective, greedy.objective);
+        assert!(online.competitive_ratio > 0.70,
+                "ratio {}", online.competitive_ratio);
+        // objective can never beat greedy (greedy is per-flow optimal)
+        assert!(online.objective <= greedy.objective + 1e-6);
+    }
+
+    #[test]
+    fn approx_tracks_online_with_constant_space() {
+        let w = Workload::synthetic(512, 16, 2, 7);
+        let online = run_policy(&w, MatchPolicy::Online { t_iters: 4 });
+        let approx = run_policy(
+            &w, MatchPolicy::Approx { t_iters: 4, buckets: 128 });
+        assert!((approx.competitive_ratio - online.competitive_ratio).abs()
+                < 0.10);
+        // Alg 4 state is O(m*b); Alg 3 grows toward O(m*cap)
+        assert!(approx.state_bytes <= 16 * 128 * 12 + 16 * 8 + 16 * 4 + 64);
+    }
+
+    #[test]
+    fn hindsight_dominates_every_feasible_policy() {
+        let w = workload();
+        for r in compare_policies(&w, 4, 64) {
+            if r.max_violation <= 0.0 {
+                assert!(r.objective <= r.hindsight_objective + 1e-6,
+                        "{}", r.policy);
+            }
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! MaxVio / AvgMaxVio / SupMaxVio (paper §4.1, after Wang et al. 2024).
+
+use crate::util::stats::Summary;
+
+/// MaxVio for one batch on one gate: max_j load_j / (n k / m) - 1.
+pub fn max_violation(loads: &[f32], n_tokens: usize, k: usize) -> f64 {
+    let m = loads.len();
+    let mean = n_tokens as f64 * k as f64 / m as f64;
+    let max = loads.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    max / mean - 1.0
+}
+
+/// Tracks MaxVio across the whole pre-training run: global (mean over
+/// layers of per-layer MaxVio? — NO: the paper's global MaxVio_batch uses
+/// the loads summed semantics per gate; we track the MEAN over layers as
+/// the batch scalar, plus every per-layer series) and per layer.
+///
+/// Concretely, per batch we receive the (L, m) load matrix and record:
+///   * per-layer MaxVio_l  (Tables 4/5, Figures 3-18)
+///   * batch MaxVio = mean_l MaxVio_l (Figures 1-2, Tables 2-3) — the
+///     model-level balance scalar.
+#[derive(Clone, Debug)]
+pub struct BalanceTracker {
+    pub n_layers: usize,
+    pub n_tokens: usize,
+    pub k: usize,
+    pub global: Summary,
+    pub per_layer: Vec<Summary>,
+    /// full series for figure dumps: series[layer][batch]
+    pub series: Vec<Vec<f32>>,
+    pub global_series: Vec<f32>,
+}
+
+impl BalanceTracker {
+    pub fn new(n_layers: usize, n_tokens: usize, k: usize) -> Self {
+        BalanceTracker {
+            n_layers,
+            n_tokens,
+            k,
+            global: Summary::new(),
+            per_layer: vec![Summary::new(); n_layers],
+            series: vec![Vec::new(); n_layers],
+            global_series: Vec::new(),
+        }
+    }
+
+    /// `loads` is row-major (n_layers, m).
+    pub fn push_batch(&mut self, loads: &[f32], m: usize) {
+        assert_eq!(loads.len(), self.n_layers * m);
+        let mut sum = 0.0;
+        for l in 0..self.n_layers {
+            let vio = max_violation(
+                &loads[l * m..(l + 1) * m],
+                self.n_tokens,
+                self.k,
+            );
+            self.per_layer[l].push(vio);
+            self.series[l].push(vio as f32);
+            sum += vio;
+        }
+        let batch_vio = sum / self.n_layers as f64;
+        self.global.push(batch_vio);
+        self.global_series.push(batch_vio as f32);
+    }
+
+    pub fn avg_max_vio(&self) -> f64 {
+        self.global.mean
+    }
+
+    pub fn sup_max_vio(&self) -> f64 {
+        self.global.max
+    }
+
+    pub fn layer_avg(&self, layer: usize) -> f64 {
+        self.per_layer[layer].mean
+    }
+
+    pub fn layer_sup(&self, layer: usize) -> f64 {
+        self.per_layer[layer].max
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.global.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_violation_matches_formula() {
+        // n=8 tokens, k=2, m=4 -> mean load 4
+        let loads = [4.0f32, 4.0, 4.0, 4.0];
+        assert!((max_violation(&loads, 8, 2) - 0.0).abs() < 1e-12);
+        let loads = [8.0f32, 4.0, 2.0, 2.0];
+        assert!((max_violation(&loads, 8, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracker_avg_and_sup() {
+        let mut t = BalanceTracker::new(2, 8, 2);
+        // layer vios: batch0 -> (0.0, 1.0) => batch 0.5
+        t.push_batch(&[4.0, 4.0, 4.0, 4.0, 8.0, 4.0, 2.0, 2.0], 4);
+        // batch1 -> (1.0, 1.0) => batch 1.0
+        t.push_batch(&[8.0, 4.0, 2.0, 2.0, 8.0, 4.0, 2.0, 2.0], 4);
+        assert!((t.avg_max_vio() - 0.75).abs() < 1e-12);
+        assert!((t.sup_max_vio() - 1.0).abs() < 1e-12);
+        assert!((t.layer_avg(0) - 0.5).abs() < 1e-12);
+        assert!((t.layer_avg(1) - 1.0).abs() < 1e-12);
+        assert_eq!(t.batches(), 2);
+        assert_eq!(t.series[0].len(), 2);
+        assert_eq!(t.global_series, vec![0.5, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut t = BalanceTracker::new(2, 8, 2);
+        t.push_batch(&[1.0; 7], 4);
+    }
+}

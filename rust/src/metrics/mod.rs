@@ -1,0 +1,61 @@
+//! Balance + quality metrics, time-series recording, and table rendering.
+//!
+//! Implements the paper's measurements exactly (§4.1):
+//!   MaxVio_batch = max_j Load_j / mean_load - 1
+//!   AvgMaxVio    = mean over batches
+//!   SupMaxVio    = max  over batches
+//! tracked globally AND per MoE layer (Tables 4/5, Figures 3-18), plus
+//! perplexity accounting and CSV/JSON dumps that regenerate every figure.
+
+pub mod maxvio;
+pub mod recorder;
+pub mod table;
+
+pub use maxvio::{max_violation, BalanceTracker};
+pub use recorder::RunRecorder;
+pub use table::TablePrinter;
+
+/// Perplexity accumulator: exp(sum nll / n_tokens) over a token stream.
+#[derive(Clone, Debug, Default)]
+pub struct Perplexity {
+    pub nll_sum: f64,
+    pub n_tokens: u64,
+}
+
+impl Perplexity {
+    pub fn push(&mut self, nll_sum: f64, n_tokens: u64) {
+        self.nll_sum += nll_sum;
+        self.n_tokens += n_tokens;
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.n_tokens == 0 {
+            f64::NAN
+        } else {
+            (self.nll_sum / self.n_tokens as f64).exp()
+        }
+    }
+
+    pub fn cross_entropy(&self) -> f64 {
+        self.nll_sum / self.n_tokens.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_accumulates() {
+        let mut p = Perplexity::default();
+        p.push(200.0, 100);
+        p.push(100.0, 100);
+        assert!((p.cross_entropy() - 1.5).abs() < 1e-12);
+        assert!((p.value() - 1.5f64.exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        assert!(Perplexity::default().value().is_nan());
+    }
+}

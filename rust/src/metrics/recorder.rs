@@ -1,0 +1,187 @@
+//! Run recorder: collects the full time series of one training run and
+//! dumps the CSV/JSON files every figure and table is rebuilt from.
+//!
+//! Output layout under `reports/<run-id>/`:
+//!   run.json                — summary (AvgMaxVio, SupMaxVio, ppl, times)
+//!   maxvio_global.csv       — step, maxvio           (Figures 1-2)
+//!   maxvio_layer<L>.csv     — step, maxvio per layer (Figures 3-18)
+//!   loss.csv                — step, train nll/token
+//!   layer_avg.csv           — layer, avgmaxvio, supmaxvio (Tables 4-5)
+
+use std::path::{Path, PathBuf};
+
+use super::maxvio::BalanceTracker;
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct RunRecorder {
+    pub run_id: String,
+    pub balance: BalanceTracker,
+    pub loss_series: Vec<f32>,
+    pub drop_series: Vec<f32>,
+    pub step_wall: Vec<f32>,
+    pub meta: Vec<(String, Json)>,
+}
+
+impl RunRecorder {
+    pub fn new(run_id: &str, n_layers: usize, n_tokens: usize, k: usize) -> Self {
+        RunRecorder {
+            run_id: run_id.to_string(),
+            balance: BalanceTracker::new(n_layers, n_tokens, k),
+            loss_series: Vec::new(),
+            drop_series: Vec::new(),
+            step_wall: Vec::new(),
+            meta: Vec::new(),
+        }
+    }
+
+    pub fn push_step(
+        &mut self,
+        loads: &[f32],
+        m: usize,
+        loss_per_token: f32,
+        mean_drop: f32,
+        wall_secs: f32,
+    ) {
+        self.balance.push_batch(loads, m);
+        self.loss_series.push(loss_per_token);
+        self.drop_series.push(mean_drop);
+        self.step_wall.push(wall_secs);
+    }
+
+    pub fn set_meta(&mut self, key: &str, value: Json) {
+        self.meta.push((key.to_string(), value));
+    }
+
+    pub fn total_wall(&self) -> f64 {
+        self.step_wall.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn summary_json(&self) -> Json {
+        let mut pairs = vec![
+            ("run_id", Json::Str(self.run_id.clone())),
+            ("steps", Json::Num(self.balance.batches() as f64)),
+            ("avg_max_vio", Json::Num(self.balance.avg_max_vio())),
+            ("sup_max_vio", Json::Num(self.balance.sup_max_vio())),
+            ("final_loss", Json::Num(
+                self.loss_series.last().copied().unwrap_or(f32::NAN) as f64)),
+            ("total_wall_s", Json::Num(self.total_wall())),
+            ("mean_drop_frac", Json::Num(
+                self.drop_series.iter().map(|&x| x as f64).sum::<f64>()
+                    / self.drop_series.len().max(1) as f64)),
+            ("layer_avg_max_vio", Json::Arr(
+                (0..self.balance.n_layers)
+                    .map(|l| Json::Num(self.balance.layer_avg(l)))
+                    .collect())),
+            ("layer_sup_max_vio", Json::Arr(
+                (0..self.balance.n_layers)
+                    .map(|l| Json::Num(self.balance.layer_sup(l)))
+                    .collect())),
+        ];
+        for (k, v) in &self.meta {
+            pairs.push((k.as_str(), v.clone()));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Write every series + the summary under `dir/<run_id>/`.
+    pub fn dump(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let out = dir.join(&self.run_id);
+        std::fs::create_dir_all(&out)?;
+
+        std::fs::write(out.join("run.json"),
+                       format!("{}\n", self.summary_json()))?;
+
+        let mut w = CsvWriter::create(out.join("maxvio_global.csv"),
+                                      &["step", "maxvio"])?;
+        for (i, v) in self.balance.global_series.iter().enumerate() {
+            w.row([i.to_string(), format!("{v:.6}")])?;
+        }
+        w.finish()?;
+
+        for l in 0..self.balance.n_layers {
+            let mut w = CsvWriter::create(
+                out.join(format!("maxvio_layer{}.csv", l + 1)),
+                &["step", "maxvio"])?;
+            for (i, v) in self.balance.series[l].iter().enumerate() {
+                w.row([i.to_string(), format!("{v:.6}")])?;
+            }
+            w.finish()?;
+        }
+
+        let mut w = CsvWriter::create(out.join("loss.csv"),
+                                      &["step", "nll_per_token", "drop_frac",
+                                        "wall_s"])?;
+        for i in 0..self.loss_series.len() {
+            w.row([
+                i.to_string(),
+                format!("{:.6}", self.loss_series[i]),
+                format!("{:.6}", self.drop_series[i]),
+                format!("{:.6}", self.step_wall[i]),
+            ])?;
+        }
+        w.finish()?;
+
+        let mut w = CsvWriter::create(out.join("layer_avg.csv"),
+                                      &["layer", "avg_max_vio",
+                                        "sup_max_vio"])?;
+        for l in 0..self.balance.n_layers {
+            w.row([
+                (l + 1).to_string(),
+                format!("{:.6}", self.balance.layer_avg(l)),
+                format!("{:.6}", self.balance.layer_sup(l)),
+            ])?;
+        }
+        w.finish()?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunRecorder {
+        let mut r = RunRecorder::new("test-run", 2, 8, 2);
+        r.set_meta("mode", Json::Str("bip".into()));
+        r.push_step(&[4.0, 4.0, 4.0, 4.0, 8.0, 4.0, 2.0, 2.0], 4, 5.5, 0.0,
+                    0.1);
+        r.push_step(&[8.0, 4.0, 2.0, 2.0, 8.0, 4.0, 2.0, 2.0], 4, 5.0, 0.01,
+                    0.1);
+        r
+    }
+
+    #[test]
+    fn summary_fields() {
+        let r = sample();
+        let j = r.summary_json();
+        assert_eq!(j.get("steps").unwrap().as_usize(), Some(2));
+        assert!((j.get("avg_max_vio").unwrap().as_f64().unwrap() - 0.75)
+            .abs() < 1e-9);
+        assert_eq!(j.get("mode").unwrap().as_str(), Some("bip"));
+        assert!((j.get("total_wall_s").unwrap().as_f64().unwrap() - 0.2)
+            .abs() < 1e-6);
+    }
+
+    #[test]
+    fn dump_writes_all_files() {
+        let dir = std::env::temp_dir().join(format!(
+            "bipmoe-rec-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = sample();
+        let out = r.dump(&dir).unwrap();
+        for f in ["run.json", "maxvio_global.csv", "maxvio_layer1.csv",
+                  "maxvio_layer2.csv", "loss.csv", "layer_avg.csv"] {
+            assert!(out.join(f).exists(), "{f}");
+        }
+        let text = std::fs::read_to_string(out.join("maxvio_global.csv"))
+            .unwrap();
+        assert!(text.starts_with("step,maxvio\n0,0.5"));
+        let run = Json::parse(
+            &std::fs::read_to_string(out.join("run.json")).unwrap())
+            .unwrap();
+        assert_eq!(run.get("run_id").unwrap().as_str(), Some("test-run"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

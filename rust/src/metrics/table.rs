@@ -1,0 +1,133 @@
+//! Paper-style table rendering (monospace, right-aligned numeric columns)
+//! — the bench harness prints the same rows Tables 2-5 report.
+
+pub struct TablePrinter {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        TablePrinter {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, fields: Vec<String>) {
+        assert_eq!(fields.len(), self.headers.len());
+        self.rows.push(fields);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, f) in row.iter().enumerate() {
+                widths[i] = widths[i].max(f.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |fields: &[String], widths: &[usize]| {
+            let mut line = String::from("| ");
+            for (i, f) in fields.iter().enumerate() {
+                if i == 0 {
+                    line.push_str(&format!("{:<w$} | ", f, w = widths[i]));
+                } else {
+                    line.push_str(&format!("{:>w$} | ", f, w = widths[i]));
+                }
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        out.push_str(&format!("{}\n", "-".repeat(total)));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// ASCII line plot for figure benches (quick visual check of the CSV
+/// series without leaving the terminal).
+pub fn ascii_plot(series: &[(&str, &[f32])], width: usize, height: usize)
+    -> String
+{
+    let max_y = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().cloned())
+        .fold(0.0f32, f32::max)
+        .max(1e-9);
+    let max_x = series.iter().map(|(_, s)| s.len()).max().unwrap_or(1);
+    let marks = ['*', 'o', '+', 'x', '#'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        for (i, &v) in s.iter().enumerate() {
+            let x = i * (width - 1) / max_x.max(1);
+            let y = ((v / max_y) * (height - 1) as f32).round() as usize;
+            let y = height - 1 - y.min(height - 1);
+            grid[y][x] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("ymax={max_y:.3}\n"));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}", marks[si % marks.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = TablePrinter::new(
+            "Table 2", &["Algorithm", "AvgMaxVio", "Perplexity"]);
+        t.row(vec!["Loss-Controlled".into(), "0.3852".into(),
+                   "12.4631".into()]);
+        t.row(vec!["BIP, T=4".into(), "0.0602".into(), "10.6856".into()]);
+        let s = t.render();
+        assert!(s.contains("== Table 2 =="));
+        assert!(s.contains("Loss-Controlled"));
+        let lines: Vec<&str> = s.lines().collect();
+        // all data lines same width
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = TablePrinter::new("x", &["a", "b"]);
+        t.row(vec!["only".into()]);
+    }
+
+    #[test]
+    fn ascii_plot_shape() {
+        let a = [1.0f32, 0.5, 0.2, 0.1];
+        let b = [0.1f32, 0.1, 0.1, 0.1];
+        let p = ascii_plot(&[("one", &a), ("two", &b)], 40, 10);
+        assert_eq!(p.lines().count(), 13); // ymax + 10 rows + axis + legend
+        assert!(p.contains("one") && p.contains("two"));
+    }
+}

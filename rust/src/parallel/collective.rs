@@ -1,0 +1,106 @@
+//! All-to-all communication cost for expert-parallel dispatch/combine.
+//!
+//! Token dispatch sends each routed token from its source device to the
+//! device hosting the chosen expert, then the combine sends activations
+//! back. With tokens uniformly sourced across devices (data parallel over
+//! the same batch), device d must RECEIVE all tokens routed to its local
+//! experts — so an overloaded expert congests its host's ingress link and
+//! the all-to-all completes only when the hottest link drains. That is
+//! the communication face of the straggler effect.
+
+use super::topology::Mesh;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LinkProfile {
+    /// per-device ingress/egress bandwidth, bytes/s (NVLink-ish default)
+    pub bandwidth: f64,
+    /// per-hop latency, seconds
+    pub latency: f64,
+}
+
+impl Default for LinkProfile {
+    fn default() -> Self {
+        LinkProfile { bandwidth: 150e9, latency: 5e-6 }
+    }
+}
+
+/// Seconds for one all-to-all over the given per-expert token loads.
+/// `bytes_per_token` = hidden dim * dtype bytes.
+pub fn all_to_all_time(
+    mesh: &Mesh,
+    expert_loads: &[f32],
+    bytes_per_token: f64,
+    link: &LinkProfile,
+) -> f64 {
+    let total_tokens: f64 =
+        expert_loads.iter().map(|&l| l as f64).sum();
+    let device_recv = mesh.device_loads(expert_loads);
+    // each device sources total/E tokens (egress is balanced), ingress is
+    // load-dependent; the collective finishes when the hottest direction
+    // of the hottest device drains.
+    let egress = total_tokens / mesh.n_devices as f64;
+    let hottest = device_recv
+        .iter()
+        .cloned()
+        .fold(0.0f64, f64::max)
+        .max(egress);
+    // tokens that stay local (1/E of a device's traffic on average) skip
+    // the wire
+    let cross_frac = 1.0 - 1.0 / mesh.n_devices as f64;
+    hottest * cross_frac * bytes_per_token / link.bandwidth
+        + link.latency * (mesh.n_devices as f64 - 1.0).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh() -> Mesh {
+        Mesh::new(4, 16)
+    }
+
+    #[test]
+    fn balanced_loads_give_baseline_time() {
+        let loads = [64.0f32; 16]; // 1024 routed tokens, 256/device
+        let t = all_to_all_time(&mesh(), &loads, 1024.0,
+                                &LinkProfile::default());
+        let link = LinkProfile::default();
+        let expect = 256.0 * 0.75 * 1024.0 / link.bandwidth
+            + link.latency * 3.0;
+        assert!((t - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn hot_expert_congests_its_host() {
+        // paper-scale payloads (64 KiB/token keeps the bandwidth term
+        // dominant over per-hop latency, as in a real a2a of activations)
+        let mut loads = [32.0f32; 16];
+        loads[0] = 512.0; // device 0 ingress explodes
+        let t_hot = all_to_all_time(&mesh(), &loads, 65536.0,
+                                    &LinkProfile::default());
+        let t_cold = all_to_all_time(&mesh(), &[64.0f32; 16], 65536.0,
+                                     &LinkProfile::default());
+        assert!(t_hot > 1.8 * t_cold, "hot {t_hot} cold {t_cold}");
+    }
+
+    #[test]
+    fn single_device_pays_only_latency_free_local_copy() {
+        let m = Mesh::new(1, 16);
+        let t = all_to_all_time(&m, &[64.0f32; 16], 1024.0,
+                                &LinkProfile::default());
+        assert_eq!(t, 0.0); // no cross traffic, no hops
+    }
+
+    #[test]
+    fn monotone_in_max_load() {
+        let link = LinkProfile::default();
+        let mut prev = 0.0;
+        for hot in [64.0f32, 128.0, 256.0, 512.0] {
+            let mut loads = [64.0f32; 16];
+            loads[5] = hot;
+            let t = all_to_all_time(&mesh(), &loads, 512.0, &link);
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+}

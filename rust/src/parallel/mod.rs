@@ -1,0 +1,22 @@
+//! Expert-parallel cluster simulator.
+//!
+//! The paper's training-time savings (Tables 2-3: BIP saves >= 13% vs
+//! Loss-Controlled) come from one mechanism: in expert-parallel execution
+//! every device must wait for the device hosting the most-loaded expert,
+//! so step time grows with max-load, i.e. with (1 + MaxVio). We cannot
+//! measure that on this single-CPU testbed, so we *simulate* the cluster:
+//! the simulator consumes the real per-batch per-layer load vectors
+//! produced by training and computes step times under a calibrated device
+//! profile (see [`cost_model`]). DESIGN.md §Substitutions documents the
+//! mapping; the tests pin the model's invariants (monotone in imbalance,
+//! exact for perfect balance, additive across layers).
+
+pub mod collective;
+pub mod cost_model;
+pub mod pipeline;
+pub mod placement;
+pub mod topology;
+
+pub use cost_model::{ClusterSim, DeviceProfile, ModelCost};
+pub use pipeline::{pipeline_makespan, Schedule};
+pub use topology::Mesh;

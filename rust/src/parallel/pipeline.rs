@@ -1,0 +1,145 @@
+//! Microbatch pipeline scheduling (GPipe fill-drain and 1F1B) over the
+//! simulated cluster — the L3 scheduler a distributed-training deployment
+//! of the paper would run when layers are additionally pipeline-sharded.
+//!
+//! The makespan model treats each stage's per-microbatch time as given
+//! (from the cost model) and simulates the dependency graph exactly; the
+//! closed-form GPipe bound (M + S - 1) * t_stage for uniform stages is a
+//! test oracle.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// GPipe: all forwards, then all backwards (fill-drain bubble).
+    GPipe,
+    /// 1F1B: steady-state interleave (same makespan for uniform stages,
+    /// lower activation memory; modeled here for the ablation bench).
+    OneFOneB,
+}
+
+/// Exact makespan (seconds) for `n_micro` microbatches over stages with
+/// the given forward times; backward time = fwd * bwd_ratio per stage.
+pub fn pipeline_makespan(
+    stage_fwd: &[f64],
+    n_micro: usize,
+    bwd_ratio: f64,
+    schedule: Schedule,
+) -> f64 {
+    let s = stage_fwd.len();
+    assert!(s > 0 && n_micro > 0);
+    match schedule {
+        Schedule::GPipe => {
+            // forward wave then backward wave, each a dependency-exact
+            // wavefront: finish_f[m][i] = max(finish_f[m-1][i],
+            //                                 finish_f[m][i-1]) + t_i
+            let fwd_end = wavefront(stage_fwd, n_micro);
+            let bwd_times: Vec<f64> =
+                stage_fwd.iter().rev().map(|t| t * bwd_ratio).collect();
+            // backward starts when ALL forwards done (fill-drain)
+            fwd_end + wavefront(&bwd_times, n_micro)
+        }
+        Schedule::OneFOneB => {
+            // steady state: every stage alternates F and B; makespan for
+            // uniform-ish stages = warmup (S-1 fwd) + n_micro * (f+b) on
+            // the bottleneck stage + drain. We simulate with a per-stage
+            // ready-time model.
+            let f_bottleneck = stage_fwd.iter().cloned().fold(0.0, f64::max);
+            let warmup: f64 = stage_fwd[..s - 1].iter().sum();
+            let drain: f64 =
+                stage_fwd[..s - 1].iter().map(|t| t * bwd_ratio).sum();
+            warmup
+                + n_micro as f64 * f_bottleneck * (1.0 + bwd_ratio)
+                + drain
+        }
+    }
+}
+
+/// Finish time of the last microbatch through a chain of stages where
+/// stage i takes `times[i]` per microbatch (classic pipeline wavefront).
+fn wavefront(times: &[f64], n_micro: usize) -> f64 {
+    let s = times.len();
+    let mut finish = vec![0.0f64; s];
+    for _m in 0..n_micro {
+        for i in 0..s {
+            let dep = if i == 0 { finish[0] - times[0] } else { finish[i - 1] };
+            // max(previous microbatch on this stage, previous stage of
+            // this microbatch)
+            let start = finish[i].max(dep.max(0.0));
+            finish[i] = start + times[i];
+        }
+    }
+    finish[s - 1]
+}
+
+/// Pipeline bubble fraction: (makespan - ideal) / makespan.
+pub fn bubble_fraction(
+    stage_fwd: &[f64],
+    n_micro: usize,
+    bwd_ratio: f64,
+    schedule: Schedule,
+) -> f64 {
+    let makespan = pipeline_makespan(stage_fwd, n_micro, bwd_ratio, schedule);
+    let work: f64 =
+        stage_fwd.iter().map(|t| t * (1.0 + bwd_ratio)).sum::<f64>()
+            * n_micro as f64
+            / stage_fwd.len() as f64;
+    (makespan - work) / makespan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stage_is_sequential() {
+        let t = pipeline_makespan(&[2.0], 5, 1.0, Schedule::GPipe);
+        assert!((t - (5.0 * 2.0 + 5.0 * 2.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_stages_match_gpipe_closed_form() {
+        // fwd wave over S uniform stages with M microbatches:
+        // (M + S - 1) * t ; same for bwd with t*ratio
+        let (s, m, t, r) = (4usize, 8usize, 0.5f64, 2.0f64);
+        let got = pipeline_makespan(&vec![t; s], m, r, Schedule::GPipe);
+        let want = (m + s - 1) as f64 * t + (m + s - 1) as f64 * t * r;
+        assert!((got - want).abs() < 1e-9, "got {got} want {want}");
+    }
+
+    #[test]
+    fn bottleneck_stage_dominates() {
+        let uniform = pipeline_makespan(&[1.0, 1.0, 1.0], 16, 1.0,
+                                        Schedule::GPipe);
+        let skewed = pipeline_makespan(&[1.0, 3.0, 1.0], 16, 1.0,
+                                       Schedule::GPipe);
+        assert!(skewed > 2.5 * uniform / 1.5);
+        // dominated by (M + S - 1) * t_max per wave, roughly
+        assert!(skewed >= 16.0 * 3.0 * 2.0);
+    }
+
+    #[test]
+    fn more_microbatches_shrink_bubble() {
+        let b2 = bubble_fraction(&vec![1.0; 4], 2, 1.0, Schedule::GPipe);
+        let b32 = bubble_fraction(&vec![1.0; 4], 32, 1.0, Schedule::GPipe);
+        assert!(b32 < b2, "b2 {b2} b32 {b32}");
+        assert!(b32 < 0.15);
+    }
+
+    #[test]
+    fn one_f_one_b_close_to_gpipe_for_uniform_stages() {
+        let g = pipeline_makespan(&vec![1.0; 4], 16, 1.0, Schedule::GPipe);
+        let o = pipeline_makespan(&vec![1.0; 4], 16, 1.0,
+                                  Schedule::OneFOneB);
+        let rel = (g - o).abs() / g;
+        assert!(rel < 0.2, "gpipe {g} 1f1b {o}");
+    }
+
+    #[test]
+    fn makespan_monotone_in_microbatches() {
+        let mut prev = 0.0;
+        for m in [1usize, 2, 4, 8] {
+            let t = pipeline_makespan(&[0.5, 0.7], m, 1.5, Schedule::GPipe);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+}

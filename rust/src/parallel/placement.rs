@@ -1,0 +1,163 @@
+//! Expert-to-device placement optimization.
+//!
+//! Block placement (expert j on device j/(m/E)) is what the simulator —
+//! and most training stacks — use by default. When loads are persistently
+//! skewed (the baselines' regime), co-locating hot experts multiplies the
+//! straggler penalty. This module computes load-aware placements:
+//!
+//!   * [`greedy_placement`] — LPT bin packing: sort experts by observed
+//!     load, assign each to the currently lightest device (classic 4/3-
+//!     approximation for makespan).
+//!   * [`Placement::imbalance`] — max device load / mean device load, the
+//!     quantity the straggler term of the cost model scales with.
+//!
+//! The ablation bench (`bench_ablations`) quantifies how much placement
+//! recovers for the aux baseline vs how little BIP leaves on the table
+//! (when loads are already balanced, placement cannot matter — one more
+//! angle on the paper's claim).
+
+use super::topology::Mesh;
+
+/// An explicit expert -> device assignment (unlike `Mesh`'s block rule).
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub n_devices: usize,
+    pub device_of: Vec<u32>,
+}
+
+impl Placement {
+    pub fn block(mesh: &Mesh) -> Placement {
+        Placement {
+            n_devices: mesh.n_devices,
+            device_of: (0..mesh.n_experts)
+                .map(|j| mesh.device_of(j) as u32)
+                .collect(),
+        }
+    }
+
+    pub fn device_loads(&self, expert_loads: &[f32]) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.n_devices];
+        for (j, &l) in expert_loads.iter().enumerate() {
+            out[self.device_of[j] as usize] += l as f64;
+        }
+        out
+    }
+
+    /// max device load / mean device load (>= 1; 1 = perfectly spread).
+    pub fn imbalance(&self, expert_loads: &[f32]) -> f64 {
+        let loads = self.device_loads(expert_loads);
+        let total: f64 = loads.iter().sum();
+        if total <= 0.0 {
+            return 1.0;
+        }
+        let mean = total / self.n_devices as f64;
+        loads.into_iter().fold(0.0f64, f64::max) / mean
+    }
+
+    /// Experts per device (for capacity checks).
+    pub fn counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.n_devices];
+        for &d in &self.device_of {
+            c[d as usize] += 1;
+        }
+        c
+    }
+}
+
+/// LPT (longest-processing-time) placement from observed per-expert loads,
+/// with an optional per-device expert-count cap (memory constraint).
+pub fn greedy_placement(
+    expert_loads: &[f32],
+    n_devices: usize,
+    max_experts_per_device: Option<usize>,
+) -> Placement {
+    let m = expert_loads.len();
+    let cap = max_experts_per_device.unwrap_or(m);
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| {
+        expert_loads[b].partial_cmp(&expert_loads[a]).unwrap()
+    });
+    let mut device_of = vec![0u32; m];
+    let mut dev_load = vec![0.0f64; n_devices];
+    let mut dev_count = vec![0usize; n_devices];
+    for j in order {
+        // lightest device with remaining capacity
+        let d = (0..n_devices)
+            .filter(|&d| dev_count[d] < cap)
+            .min_by(|&a, &b| dev_load[a].partial_cmp(&dev_load[b]).unwrap())
+            .expect("capacity must admit all experts");
+        device_of[j] = d as u32;
+        dev_load[d] += expert_loads[j] as f64;
+        dev_count[d] += 1;
+    }
+    Placement { n_devices, device_of }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn block_placement_matches_mesh() {
+        let mesh = Mesh::new(4, 16);
+        let p = Placement::block(&mesh);
+        assert_eq!(p.device_of[0], 0);
+        assert_eq!(p.device_of[15], 3);
+        assert_eq!(p.counts(), vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn lpt_beats_block_on_skewed_loads() {
+        // hot experts 0..4 land on device 0 under block placement
+        let mut loads = vec![10.0f32; 16];
+        for j in 0..4 {
+            loads[j] = 100.0;
+        }
+        let mesh = Mesh::new(4, 16);
+        let block = Placement::block(&mesh);
+        let lpt = greedy_placement(&loads, 4, Some(4));
+        assert!(lpt.imbalance(&loads) < block.imbalance(&loads));
+        // LPT spreads the four hot experts across the four devices
+        let hot_devices: std::collections::BTreeSet<u32> =
+            (0..4).map(|j| lpt.device_of[j]).collect();
+        assert_eq!(hot_devices.len(), 4);
+    }
+
+    #[test]
+    fn lpt_respects_capacity() {
+        let mut rng = Pcg64::new(1);
+        let loads: Vec<f32> =
+            (0..32).map(|_| rng.next_f32() * 50.0).collect();
+        let p = greedy_placement(&loads, 8, Some(4));
+        assert!(p.counts().iter().all(|&c| c <= 4));
+        assert_eq!(p.counts().iter().sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn lpt_is_near_optimal_on_uniform_loads() {
+        let loads = vec![7.0f32; 64];
+        let p = greedy_placement(&loads, 8, None);
+        assert!((p.imbalance(&loads) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn balanced_loads_leave_nothing_for_placement() {
+        // the BIP regime: when expert loads are flat, ANY placement with
+        // equal counts is optimal — placement can't add what balancing
+        // already achieved
+        let mut rng = Pcg64::new(2);
+        let loads: Vec<f32> =
+            (0..16).map(|_| 100.0 + rng.next_f32()).collect();
+        let mesh = Mesh::new(4, 16);
+        let block = Placement::block(&mesh).imbalance(&loads);
+        let lpt = greedy_placement(&loads, 4, Some(4)).imbalance(&loads);
+        assert!((block - lpt).abs() < 0.01, "block {block} lpt {lpt}");
+    }
+
+    #[test]
+    fn empty_loads_are_safe() {
+        let p = greedy_placement(&[0.0; 8], 2, None);
+        assert_eq!(p.imbalance(&[0.0; 8]), 1.0);
+    }
+}

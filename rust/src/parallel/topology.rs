@@ -1,0 +1,63 @@
+//! Device mesh + expert placement for the expert-parallel simulator.
+
+/// `n_devices` accelerators, experts block-placed: expert j lives on
+/// device j / (m / n_devices).
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    pub n_devices: usize,
+    pub n_experts: usize,
+}
+
+impl Mesh {
+    pub fn new(n_devices: usize, n_experts: usize) -> Mesh {
+        assert!(n_experts % n_devices == 0,
+                "experts {n_experts} must divide over devices {n_devices}");
+        Mesh { n_devices, n_experts }
+    }
+
+    pub fn experts_per_device(&self) -> usize {
+        self.n_experts / self.n_devices
+    }
+
+    pub fn device_of(&self, expert: usize) -> usize {
+        expert / self.experts_per_device()
+    }
+
+    /// Sum the per-expert loads into per-device loads.
+    pub fn device_loads(&self, expert_loads: &[f32]) -> Vec<f64> {
+        assert_eq!(expert_loads.len(), self.n_experts);
+        let mut out = vec![0.0f64; self.n_devices];
+        for (j, &l) in expert_loads.iter().enumerate() {
+            out[self.device_of(j)] += l as f64;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_placement() {
+        let mesh = Mesh::new(4, 16);
+        assert_eq!(mesh.experts_per_device(), 4);
+        assert_eq!(mesh.device_of(0), 0);
+        assert_eq!(mesh.device_of(3), 0);
+        assert_eq!(mesh.device_of(4), 1);
+        assert_eq!(mesh.device_of(15), 3);
+    }
+
+    #[test]
+    fn device_loads_sum() {
+        let mesh = Mesh::new(2, 4);
+        let loads = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(mesh.device_loads(&loads), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_experts_rejected() {
+        Mesh::new(3, 16);
+    }
+}

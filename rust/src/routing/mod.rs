@@ -1,0 +1,224 @@
+//! Host-side routing strategies behind one trait.
+//!
+//! The production routing runs inside the AOT train step (L2/L1); these
+//! host mirrors exist for (a) the solver benches and cluster-sim ablations
+//! that sweep routing policies without touching PJRT, and (b) equivalence
+//! tests against the in-graph implementations through the probe artifact.
+
+use crate::bip::dual::DualState;
+use crate::bip::{Instance, Routing};
+use crate::util::stats::topk_indices;
+
+/// A stateful routing policy over a stream of score batches.
+pub trait RoutingStrategy {
+    fn name(&self) -> String;
+    /// Route one batch, updating internal state (bias vectors etc.).
+    fn route_batch(&mut self, inst: &Instance) -> Routing;
+}
+
+/// Plain top-k on raw scores.
+pub struct Greedy;
+
+impl RoutingStrategy for Greedy {
+    fn name(&self) -> String {
+        "greedy".into()
+    }
+
+    fn route_batch(&mut self, inst: &Instance) -> Routing {
+        crate::bip::greedy_topk(inst)
+    }
+}
+
+/// Loss-Controlled baseline. The auxiliary loss influences routing only
+/// through training the router weights, which a host-side mirror cannot
+/// do — so its *routing decision* is greedy top-k (as in the real method)
+/// and the aux-loss value is tracked for reporting.
+pub struct AuxLoss {
+    pub alpha: f64,
+    pub last_aux_loss: f64,
+}
+
+impl AuxLoss {
+    pub fn new(alpha: f64) -> Self {
+        AuxLoss { alpha, last_aux_loss: 0.0 }
+    }
+}
+
+impl RoutingStrategy for AuxLoss {
+    fn name(&self) -> String {
+        format!("aux(alpha={})", self.alpha)
+    }
+
+    fn route_batch(&mut self, inst: &Instance) -> Routing {
+        let routing = crate::bip::greedy_topk(inst);
+        let loads = routing.loads(inst.m);
+        let scale = inst.m as f64 / (inst.k * inst.n) as f64;
+        let mut aux = 0.0;
+        for j in 0..inst.m {
+            let f_j = loads[j] as f64 * scale;
+            let p_j: f64 = (0..inst.n)
+                .map(|i| inst.score(i, j) as f64)
+                .sum::<f64>()
+                / inst.n as f64;
+            aux += f_j * p_j;
+        }
+        self.last_aux_loss = self.alpha * aux;
+        routing
+    }
+}
+
+/// Loss-Free baseline (Wang et al. 2024): additive bias b, per-batch sign
+/// update b_j += u * sign(mean - load_j).
+pub struct LossFree {
+    pub u: f32,
+    pub bias: Vec<f32>,
+}
+
+impl LossFree {
+    pub fn new(m: usize, u: f32) -> Self {
+        LossFree { u, bias: vec![0.0; m] }
+    }
+}
+
+impl RoutingStrategy for LossFree {
+    fn name(&self) -> String {
+        format!("lossfree(u={})", self.u)
+    }
+
+    fn route_batch(&mut self, inst: &Instance) -> Routing {
+        let mut biased = vec![0.0f32; inst.m];
+        let assignment: Vec<Vec<u32>> = (0..inst.n)
+            .map(|i| {
+                let row = inst.row(i);
+                for j in 0..inst.m {
+                    biased[j] = row[j] + self.bias[j];
+                }
+                topk_indices(&biased, inst.k)
+                    .into_iter()
+                    .map(|e| e as u32)
+                    .collect()
+            })
+            .collect();
+        let routing = Routing { assignment };
+        let loads = routing.loads(inst.m);
+        let mean = inst.n as f32 * inst.k as f32 / inst.m as f32;
+        for j in 0..inst.m {
+            self.bias[j] += self.u * (mean - loads[j] as f32).signum();
+        }
+        routing
+    }
+}
+
+/// BIP-Based Balancing (Algorithm 1): warm-started dual state + T
+/// iterations per batch.
+pub struct Bip {
+    pub t_iters: usize,
+    state: Option<DualState>,
+}
+
+impl Bip {
+    pub fn new(t_iters: usize) -> Self {
+        Bip { t_iters, state: None }
+    }
+
+    pub fn q(&self) -> Option<&[f32]> {
+        self.state.as_ref().map(|s| s.q.as_slice())
+    }
+}
+
+impl RoutingStrategy for Bip {
+    fn name(&self) -> String {
+        format!("bip(T={})", self.t_iters)
+    }
+
+    fn route_batch(&mut self, inst: &Instance) -> Routing {
+        let state = self
+            .state
+            .get_or_insert_with(|| DualState::new(inst.m));
+        state.update(inst, self.t_iters);
+        state.route(inst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn batches(seed: u64, count: usize) -> Vec<Instance> {
+        let mut rng = Pcg64::new(seed);
+        (0..count)
+            .map(|_| Instance::synthetic(256, 16, 4, 2.0, 3.0, &mut rng))
+            .collect()
+    }
+
+    fn avg_vio(strategy: &mut dyn RoutingStrategy, insts: &[Instance]) -> f64 {
+        let mut sum = 0.0;
+        for inst in insts {
+            sum += strategy.route_batch(inst).max_violation(inst);
+        }
+        sum / insts.len() as f64
+    }
+
+    #[test]
+    fn strategy_ordering_matches_paper_shape() {
+        // on a skewed score stream: bip << lossfree < greedy
+        let insts = batches(1, 20);
+        let vio_greedy = avg_vio(&mut Greedy, &insts);
+        let vio_lf = avg_vio(&mut LossFree::new(16, 1e-3), &insts);
+        let vio_bip = avg_vio(&mut Bip::new(4), &insts);
+        assert!(vio_bip < 0.35, "bip {vio_bip}");
+        assert!(vio_bip < vio_lf, "bip {vio_bip} lf {vio_lf}");
+        assert!(vio_lf <= vio_greedy + 0.05,
+                "lf {vio_lf} greedy {vio_greedy}");
+    }
+
+    #[test]
+    fn lossfree_bias_accumulates_toward_balance() {
+        // with a large-enough u and many identical batches, loss-free does
+        // converge — the paper's point is it needs MANY batches
+        let insts = batches(2, 200);
+        let mut lf = LossFree::new(16, 1e-2);
+        let first = lf.route_batch(&insts[0]).max_violation(&insts[0]);
+        for inst in &insts {
+            lf.route_batch(inst);
+        }
+        let last = lf
+            .route_batch(insts.last().unwrap())
+            .max_violation(insts.last().unwrap());
+        assert!(last < first, "first {first} last {last}");
+    }
+
+    #[test]
+    fn aux_loss_mirrors_track_loss_value() {
+        let insts = batches(3, 3);
+        let mut aux = AuxLoss::new(0.1);
+        aux.route_batch(&insts[0]);
+        assert!(aux.last_aux_loss > 0.0);
+        // alpha scales it linearly
+        let mut aux2 = AuxLoss::new(0.2);
+        aux2.route_batch(&insts[0]);
+        assert!((aux2.last_aux_loss / aux.last_aux_loss - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bip_warm_start_persists_across_batches() {
+        let insts = batches(4, 5);
+        let mut bip = Bip::new(2);
+        bip.route_batch(&insts[0]);
+        let q1 = bip.q().unwrap().to_vec();
+        for inst in &insts[1..] {
+            bip.route_batch(inst);
+        }
+        let q5 = bip.q().unwrap().to_vec();
+        assert_ne!(q1, q5);
+        assert!(q5.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn names_are_descriptive() {
+        assert_eq!(Greedy.name(), "greedy");
+        assert!(Bip::new(8).name().contains("T=8"));
+        assert!(LossFree::new(4, 1e-3).name().contains("u=0.001"));
+    }
+}

@@ -1,0 +1,151 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once
+//! (per-process cache), and runs them with typed I/O validation.
+//!
+//! This is the only module that touches the `xla` crate on the hot path.
+//! Interchange is HLO *text* (see aot.py: jax >= 0.5 protos are rejected
+//! by xla_extension 0.5.1; the text parser reassigns instruction ids).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Artifact, Manifest};
+use super::tensor::Tensor;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    artifacts_dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative (compile_s, execute_s, executions) for perf reporting
+    stats: RefCell<EngineStats>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub compile_seconds: f64,
+    pub execute_seconds: f64,
+    pub executions: u64,
+    pub compiles: u64,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.borrow()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact file.
+    pub fn load(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts_dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {file}"))?,
+        );
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compile_seconds += t0.elapsed().as_secs_f64();
+            st.compiles += 1;
+        }
+        crate::debug_log!("compiled {file} in {:.2}s",
+                          t0.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with typed tensors; validates inputs against
+    /// the manifest spec and returns outputs parsed per the output spec.
+    pub fn run(&self, artifact: &Artifact, inputs: &[Tensor])
+        -> Result<Vec<Tensor>>
+    {
+        if inputs.len() != artifact.inputs.len() {
+            bail!(
+                "{}: got {} inputs, spec wants {}",
+                artifact.file,
+                inputs.len(),
+                artifact.inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&artifact.inputs) {
+            t.check_spec(spec)
+                .with_context(|| format!("input to {}", artifact.file))?;
+        }
+        let exe = self.load(&artifact.file)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.execute_seconds += t0.elapsed().as_secs_f64();
+            st.executions += 1;
+        }
+        // aot.py lowers with return_tuple=True: decompose and type-check
+        let parts = result.to_tuple()?;
+        if parts.len() != artifact.outputs.len() {
+            bail!(
+                "{}: got {} outputs, spec wants {}",
+                artifact.file,
+                parts.len(),
+                artifact.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&artifact.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests need built artifacts; they are integration-level and
+    //! live in rust/tests/integration_runtime.rs (skipped gracefully when
+    //! artifacts/ is absent). Unit coverage here is limited to cache-key
+    //! behavior through the public API with a missing file.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_dir_is_a_clean_error() {
+        let err = Engine::new(Path::new("/nonexistent-artifacts"))
+            .err()
+            .expect("must fail");
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,343 @@
+//! Typed view over `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`): model configs, the flat-theta parameter
+//! table, and the artifact grid (config x mode x kind, with I/O specs).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub std: f64,
+    pub decay: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub n_tokens: usize,
+    pub capacity: usize,
+    pub expert_cap: usize,
+    pub theta_size: usize,
+    pub total_steps: usize,
+    pub params: Vec<ParamEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub config: String,
+    pub mode: String,
+    pub kind: String,
+    pub bip_t: Option<usize>,
+    pub layer: Option<usize>,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub configs: BTreeMap<String, ModelConfig>,
+    pub artifacts: Vec<Artifact>,
+}
+
+fn io_specs(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("io specs not an array"))?
+        .iter()
+        .map(|spec| {
+            Ok(IoSpec {
+                name: spec
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("spec missing name"))?
+                    .to_string(),
+                shape: spec
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("spec missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: DType::parse(
+                    spec.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+                )?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j
+            .get("configs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing configs"))?
+        {
+            let geti = |key: &str| -> Result<usize> {
+                cj.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("config {name} missing {key}"))
+            };
+            let params = cj
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("config {name} missing params"))?
+                .iter()
+                .map(|p| {
+                    Ok(ParamEntry {
+                        name: p
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("param missing name"))?
+                            .to_string(),
+                        shape: p
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                        offset: p
+                            .get("offset")
+                            .and_then(Json::as_usize)
+                            .unwrap_or(0),
+                        std: p.get("std").and_then(Json::as_f64).unwrap_or(0.0),
+                        decay: p
+                            .get("decay")
+                            .and_then(Json::as_bool)
+                            .unwrap_or(false),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            configs.insert(
+                name.clone(),
+                ModelConfig {
+                    name: name.clone(),
+                    vocab_size: geti("vocab_size")?,
+                    d_model: geti("d_model")?,
+                    n_heads: geti("n_heads")?,
+                    n_layers: geti("n_layers")?,
+                    d_ff: geti("d_ff")?,
+                    n_experts: geti("n_experts")?,
+                    top_k: geti("top_k")?,
+                    seq_len: geti("seq_len")?,
+                    batch_size: geti("batch_size")?,
+                    n_tokens: geti("n_tokens")?,
+                    capacity: geti("capacity")?,
+                    expert_cap: geti("expert_cap")?,
+                    theta_size: geti("theta_size")?,
+                    total_steps: geti("total_steps")?,
+                    params,
+                },
+            );
+        }
+
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(|a| {
+                Ok(Artifact {
+                    config: a
+                        .get("config")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    mode: a
+                        .get("mode")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    kind: a
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    bip_t: a.get("bip_T").and_then(Json::as_usize),
+                    layer: a.get("layer").and_then(Json::as_usize),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact missing file"))?
+                        .to_string(),
+                    inputs: io_specs(
+                        a.get("inputs").unwrap_or(&Json::Arr(vec![])))?,
+                    outputs: io_specs(
+                        a.get("outputs").unwrap_or(&Json::Arr(vec![])))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest { fingerprint, configs, artifacts })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs.get(name).ok_or_else(|| {
+            anyhow!(
+                "config {name} not in manifest (have: {:?}); re-run \
+                 `make artifacts` with --configs {name}",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Find an artifact by (config, kind, mode, bip_T).
+    pub fn find(
+        &self,
+        config: &str,
+        kind: &str,
+        mode: &str,
+        bip_t: Option<usize>,
+    ) -> Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.config == config
+                    && a.kind == kind
+                    && a.mode == mode
+                    && (kind != "train" || mode != "bip" || a.bip_t == bip_t)
+            })
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact config={config} kind={kind} mode={mode} \
+                     T={bip_t:?}; re-run `make artifacts`"
+                )
+            })
+    }
+
+    pub fn train_artifact(
+        &self,
+        config: &str,
+        mode: &str,
+        bip_t: usize,
+    ) -> Result<&Artifact> {
+        self.find(config, "train", mode, Some(bip_t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "fingerprint": "deadbeef",
+      "configs": {
+        "tiny": {
+          "vocab_size": 512, "d_model": 32, "n_heads": 4, "n_layers": 2,
+          "d_ff": 32, "n_experts": 8, "top_k": 2, "seq_len": 32,
+          "batch_size": 2, "n_tokens": 64, "capacity": 32,
+          "expert_cap": 16, "theta_size": 74400, "total_steps": 256,
+          "params": [
+            {"name": "embed", "shape": [512, 32], "offset": 0,
+             "std": 0.02, "decay": true},
+            {"name": "final_norm", "shape": [32], "offset": 16384,
+             "std": 0.0, "decay": false}
+          ]
+        }
+      },
+      "artifacts": [
+        {"config": "tiny", "mode": "bip", "kind": "train", "bip_T": 4,
+         "file": "tiny_bip_T4_train.hlo.txt",
+         "inputs": [{"name": "theta", "shape": [74400], "dtype": "f32"},
+                    {"name": "tokens", "shape": [2, 33], "dtype": "i32"}],
+         "outputs": [{"name": "nll_sum", "shape": [], "dtype": "f32"}]},
+        {"config": "tiny", "mode": "aux", "kind": "train",
+         "file": "tiny_aux_train.hlo.txt", "inputs": [], "outputs": []},
+        {"config": "tiny", "mode": "bip", "kind": "eval",
+         "file": "tiny_bip_eval.hlo.txt", "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_configs_and_params() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let c = m.config("tiny").unwrap();
+        assert_eq!(c.n_experts, 8);
+        assert_eq!(c.theta_size, 74400);
+        assert_eq!(c.params.len(), 2);
+        assert!(c.params[0].decay && !c.params[1].decay);
+        assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn finds_artifacts_by_grid_position() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.train_artifact("tiny", "bip", 4).unwrap();
+        assert_eq!(a.file, "tiny_bip_T4_train.hlo.txt");
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.inputs[1].elements(), 66);
+        assert!(m.train_artifact("tiny", "bip", 14).is_err());
+        assert!(m.find("tiny", "eval", "bip", None).is_ok());
+        assert!(m.train_artifact("tiny", "aux", 0).is_ok());
+    }
+
+    #[test]
+    fn scalar_spec_has_one_element() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.train_artifact("tiny", "bip", 4).unwrap();
+        assert_eq!(a.outputs[0].elements(), 1);
+        assert_eq!(a.outputs[0].shape.len(), 0);
+    }
+}

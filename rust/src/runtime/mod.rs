@@ -1,0 +1,1 @@
+pub mod manifest; pub mod tensor; pub mod engine; pub use engine::Engine; pub use manifest::Manifest; pub use tensor::Tensor;

@@ -1,0 +1,204 @@
+//! Host tensors + conversion to/from PJRT literals.
+//!
+//! The train/eval steps exchange a handful of flat arrays (see the
+//! manifest's I/O specs); this module owns the typed copies and the
+//! shape/dtype validation at the rust<->XLA boundary.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, IoSpec};
+
+/// A host tensor: shape + typed storage (f32 or i32 — the only dtypes the
+/// AOT interface uses).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product::<usize>().max(1)],
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.f32s()?;
+        if d.len() != 1 {
+            bail!("tensor has {} elements, wanted scalar", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Validate against a manifest I/O spec.
+    pub fn check_spec(&self, spec: &IoSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!("{}: dtype mismatch", spec.name);
+        }
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "{}: shape {:?} != spec {:?}",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Convert to an xla literal (reshaped to the tensor's shape).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> =
+            self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        if dims.is_empty() {
+            // scalar: vec1 of len 1 -> reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Read back from a literal, trusting `spec` for shape/dtype.
+    pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Tensor> {
+        let t = match spec.dtype {
+            DType::F32 => Tensor::F32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<f32>()?,
+            },
+            DType::I32 => Tensor::I32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<i32>()?,
+            },
+        };
+        if t.len() != spec.elements() {
+            bail!(
+                "{}: literal has {} elements, spec wants {}",
+                spec.name,
+                t.len(),
+                spec.elements()
+            );
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], dtype: DType) -> IoSpec {
+        IoSpec { name: name.into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = Tensor::zeros_f32(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(t.f32s().unwrap().iter().all(|&x| x == 0.0));
+        assert!(t.i32s().is_err());
+
+        let s = Tensor::scalar_i32(7);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn spec_checking() {
+        let t = Tensor::zeros_f32(&[4]);
+        assert!(t.check_spec(&spec("x", &[4], DType::F32)).is_ok());
+        assert!(t.check_spec(&spec("x", &[5], DType::F32)).is_err());
+        assert!(t.check_spec(&spec("x", &[4], DType::I32)).is_err());
+    }
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back =
+            Tensor::from_literal(&lit, &spec("x", &[2, 2], DType::F32))
+                .unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_round_trip_scalar() {
+        let t = Tensor::scalar_i32(42);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, &spec("s", &[], DType::I32))
+            .unwrap();
+        assert_eq!(back.i32s().unwrap(), &[42]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_data_mismatch_panics() {
+        Tensor::from_f32(&[3], vec![1.0, 2.0]);
+    }
+}

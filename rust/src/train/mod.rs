@@ -1,0 +1,1 @@
+pub mod state; pub mod trainer; pub use trainer::{TrainDriver, TrainOutcome};

@@ -1,0 +1,297 @@
+//! Training state: the five threaded arrays of the AOT train step
+//! (theta, adam m/v, step counter, routing state) plus a simple binary
+//! checkpoint format.
+//!
+//! Checkpoint layout: magic `BIPMOE1\n`, u32 little-endian JSON-header
+//! length, JSON header (config, mode, shapes), then each tensor's raw
+//! little-endian payload in header order.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::ModelConfig;
+use crate::runtime::tensor::Tensor;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"BIPMOE1\n";
+
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub theta: Tensor,
+    pub adam_m: Tensor,
+    pub adam_v: Tensor,
+    pub step: Tensor,
+    pub route_state: Tensor,
+}
+
+impl TrainState {
+    /// Fresh optimizer/routing state around an initialized theta.
+    pub fn fresh(theta: Tensor, cfg: &ModelConfig) -> TrainState {
+        let n = theta.len();
+        TrainState {
+            theta,
+            adam_m: Tensor::zeros_f32(&[n]),
+            adam_v: Tensor::zeros_f32(&[n]),
+            step: Tensor::scalar_i32(0),
+            route_state: Tensor::zeros_f32(&[cfg.n_layers, cfg.n_experts]),
+        }
+    }
+
+    pub fn step_count(&self) -> i32 {
+        self.step.i32s().map(|s| s[0]).unwrap_or(0)
+    }
+
+    /// Inputs for the train artifact, in manifest order, tokens appended
+    /// by the caller.
+    pub fn as_inputs(&self, tokens: Tensor) -> Vec<Tensor> {
+        vec![
+            self.theta.clone(),
+            self.adam_m.clone(),
+            self.adam_v.clone(),
+            self.step.clone(),
+            self.route_state.clone(),
+            tokens,
+        ]
+    }
+
+    /// Absorb the train step's first five outputs back into the state.
+    pub fn absorb(&mut self, mut outputs: Vec<Tensor>) -> Vec<Tensor> {
+        let rest = outputs.split_off(5);
+        let mut it = outputs.into_iter();
+        self.theta = it.next().unwrap();
+        self.adam_m = it.next().unwrap();
+        self.adam_v = it.next().unwrap();
+        self.step = it.next().unwrap();
+        self.route_state = it.next().unwrap();
+        rest
+    }
+
+    pub fn save(&self, path: &Path, config: &str, mode: &str) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let tensors: Vec<(&str, &Tensor)> = vec![
+            ("theta", &self.theta),
+            ("adam_m", &self.adam_m),
+            ("adam_v", &self.adam_v),
+            ("step", &self.step),
+            ("route_state", &self.route_state),
+        ];
+        let header = Json::obj(vec![
+            ("config", Json::Str(config.into())),
+            ("mode", Json::Str(mode.into())),
+            ("version", Json::Str(crate::VERSION.into())),
+            (
+                "tensors",
+                Json::Arr(
+                    tensors
+                        .iter()
+                        .map(|(name, t)| {
+                            Json::obj(vec![
+                                ("name", Json::Str((*name).into())),
+                                ("shape", Json::Arr(
+                                    t.shape()
+                                        .iter()
+                                        .map(|&d| Json::Num(d as f64))
+                                        .collect())),
+                                ("dtype", Json::Str(match t {
+                                    Tensor::F32 { .. } => "f32".into(),
+                                    Tensor::I32 { .. } => "i32".into(),
+                                })),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, t) in tensors {
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for x in data {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for x in data {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<(TrainState, String, String)> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening checkpoint {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a bip-moe checkpoint");
+        }
+        let mut len_bytes = [0u8; 4];
+        f.read_exact(&mut len_bytes)?;
+        let header_len = u32::from_le_bytes(len_bytes) as usize;
+        let mut header_bytes = vec![0u8; header_len];
+        f.read_exact(&mut header_bytes)?;
+        let header = Json::parse(std::str::from_utf8(&header_bytes)?)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let config = header
+            .get("config")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let mode = header
+            .get("mode")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let mut tensors = Vec::new();
+        for tj in header
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("bad checkpoint header"))?
+        {
+            let shape: Vec<usize> = tj
+                .get("shape")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            let count = shape.iter().product::<usize>().max(1);
+            let dtype = tj.get("dtype").and_then(Json::as_str).unwrap_or("f32");
+            let t = match dtype {
+                "f32" => {
+                    let mut data = vec![0f32; count];
+                    let mut buf = vec![0u8; count * 4];
+                    f.read_exact(&mut buf)?;
+                    for (i, ch) in buf.chunks_exact(4).enumerate() {
+                        data[i] =
+                            f32::from_le_bytes(ch.try_into().unwrap());
+                    }
+                    Tensor::F32 { shape, data }
+                }
+                "i32" => {
+                    let mut data = vec![0i32; count];
+                    let mut buf = vec![0u8; count * 4];
+                    f.read_exact(&mut buf)?;
+                    for (i, ch) in buf.chunks_exact(4).enumerate() {
+                        data[i] =
+                            i32::from_le_bytes(ch.try_into().unwrap());
+                    }
+                    Tensor::I32 { shape, data }
+                }
+                other => bail!("bad dtype {other}"),
+            };
+            tensors.push(t);
+        }
+        if tensors.len() != 5 {
+            bail!("checkpoint has {} tensors, wanted 5", tensors.len());
+        }
+        let route_state = tensors.pop().unwrap();
+        let step = tensors.pop().unwrap();
+        let adam_v = tensors.pop().unwrap();
+        let adam_m = tensors.pop().unwrap();
+        let theta = tensors.pop().unwrap();
+        Ok((
+            TrainState { theta, adam_m, adam_v, step, route_state },
+            config,
+            mode,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab_size: 16,
+            d_model: 4,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 4,
+            n_experts: 4,
+            top_k: 2,
+            seq_len: 8,
+            batch_size: 2,
+            n_tokens: 16,
+            capacity: 16,
+            expert_cap: 8,
+            theta_size: 10,
+            total_steps: 100,
+            params: vec![],
+        }
+    }
+
+    #[test]
+    fn fresh_state_shapes() {
+        let cfg = tiny_cfg();
+        let st = TrainState::fresh(Tensor::zeros_f32(&[10]), &cfg);
+        assert_eq!(st.adam_m.len(), 10);
+        assert_eq!(st.route_state.shape(), &[2, 4]);
+        assert_eq!(st.step_count(), 0);
+    }
+
+    #[test]
+    fn absorb_splits_outputs() {
+        let cfg = tiny_cfg();
+        let mut st = TrainState::fresh(Tensor::zeros_f32(&[10]), &cfg);
+        let outs = vec![
+            Tensor::from_f32(&[10], vec![1.0; 10]),
+            Tensor::zeros_f32(&[10]),
+            Tensor::zeros_f32(&[10]),
+            Tensor::scalar_i32(1),
+            Tensor::zeros_f32(&[2, 4]),
+            Tensor::from_f32(&[], vec![3.25]),  // nll
+            Tensor::zeros_f32(&[2, 4]),          // loads
+            Tensor::zeros_f32(&[2]),             // drops
+        ];
+        let rest = st.absorb(outs);
+        assert_eq!(st.step_count(), 1);
+        assert_eq!(st.theta.f32s().unwrap()[0], 1.0);
+        assert_eq!(rest.len(), 3);
+        assert_eq!(rest[0].scalar_f32().unwrap(), 3.25);
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        let cfg = tiny_cfg();
+        let mut st = TrainState::fresh(Tensor::zeros_f32(&[10]), &cfg);
+        st.theta = Tensor::from_f32(&[10],
+                                    (0..10).map(|i| i as f32).collect());
+        st.step = Tensor::scalar_i32(42);
+        let path = std::env::temp_dir().join(format!(
+            "bipmoe-ckpt-{}.bin", std::process::id()));
+        st.save(&path, "tiny", "bip").unwrap();
+        let (loaded, config, mode) = TrainState::load(&path).unwrap();
+        assert_eq!(config, "tiny");
+        assert_eq!(mode, "bip");
+        assert_eq!(loaded.theta, st.theta);
+        assert_eq!(loaded.step_count(), 42);
+        assert_eq!(loaded.route_state.shape(), &[2, 4]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join(format!(
+            "bipmoe-garbage-{}.bin", std::process::id()));
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(TrainState::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,211 @@
+//! The training coordinator: drives the AOT train/eval steps from rust,
+//! records balance/loss metrics, accounts perplexity on the held-out
+//! split, and feeds measured load vectors to the cluster simulator —
+//! everything Tables 2-5 and Figures 1-18 are computed from.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::{Corpus, CorpusSpec, Loader, Split};
+use crate::metrics::{Perplexity, RunRecorder};
+use crate::parallel::{ClusterSim, DeviceProfile, Mesh, ModelCost};
+use crate::runtime::{Engine, Tensor};
+use crate::train::state::TrainState;
+use crate::util::json::Json;
+
+/// One training run's setup: which artifact (config x mode x T), how many
+/// steps, seeds and eval budget.
+#[derive(Clone, Debug)]
+pub struct TrainDriver {
+    pub config: String,
+    pub mode: String,       // "aux" | "lossfree" | "bip"
+    pub bip_t: usize,       // used when mode == "bip"
+    pub steps: u64,
+    pub seed: i32,
+    pub eval_batches: u64,
+    pub data_seed: u64,
+    /// devices for the simulated expert-parallel cluster
+    pub sim_devices: usize,
+}
+
+impl TrainDriver {
+    pub fn new(config: &str, mode: &str, bip_t: usize, steps: u64) -> Self {
+        TrainDriver {
+            config: config.to_string(),
+            mode: mode.to_string(),
+            bip_t,
+            steps,
+            seed: 0,
+            eval_batches: 8,
+            data_seed: 20240601,
+            sim_devices: 4,
+        }
+    }
+
+    pub fn run_label(&self) -> String {
+        if self.mode == "bip" {
+            format!("{}_bip_T{}", self.config, self.bip_t)
+        } else {
+            format!("{}_{}", self.config, self.mode)
+        }
+    }
+
+    /// Execute the full run. Artifacts must already be built.
+    pub fn run(&self, engine: &Engine) -> Result<TrainOutcome> {
+        let cfg = engine.manifest().config(&self.config)?.clone();
+        let train_art = engine
+            .manifest()
+            .train_artifact(&self.config, &self.mode, self.bip_t)?
+            .clone();
+        let eval_art = engine
+            .manifest()
+            .find(&self.config, "eval", &self.mode, None)?
+            .clone();
+        let init_art =
+            engine.manifest().find(&self.config, "init", "-", None)?.clone();
+
+        // data pipeline: synthetic corpus at the model's vocab, prefetch
+        // thread with backpressure
+        let corpus = Arc::new(Corpus::build(CorpusSpec {
+            vocab_size: cfg.vocab_size,
+            seed: self.data_seed,
+            ..Default::default()
+        }));
+        let train_loader = Arc::new(Loader::new(
+            corpus.clone(),
+            cfg.batch_size,
+            cfg.seq_len,
+            Split::Train,
+        ));
+        let batches = train_loader.clone().prefetch(0, self.steps, 4);
+
+        // init params on device
+        let theta = engine
+            .run(&init_art, &[Tensor::scalar_i32(self.seed)])?
+            .pop()
+            .unwrap();
+        let mut state = TrainState::fresh(theta, &cfg);
+
+        // simulated expert-parallel cluster fed by measured loads
+        let profile = if cfg.n_experts >= 64 {
+            DeviceProfile::l20()
+        } else {
+            DeviceProfile::rtx4090()
+        };
+        let cost = if cfg.n_experts >= 64 {
+            ModelCost::paper_64e()
+        } else {
+            ModelCost::paper_16e()
+        };
+        let mut sim = ClusterSim::new(
+            Mesh::new(self.sim_devices, cfg.n_experts),
+            profile,
+            cost,
+            self.mode == "aux",
+        )
+        .with_paper_batch(cfg.n_tokens);
+
+        let mut rec = RunRecorder::new(
+            &self.run_label(),
+            cfg.n_layers,
+            cfg.n_tokens,
+            cfg.top_k,
+        );
+        rec.set_meta("config", Json::Str(self.config.clone()));
+        rec.set_meta("mode", Json::Str(self.mode.clone()));
+        rec.set_meta("bip_T", Json::Num(self.bip_t as f64));
+        rec.set_meta("theta_size", Json::Num(cfg.theta_size as f64));
+
+        let m = cfg.n_experts;
+        let n_tok = cfg.n_tokens as f32;
+        while let Some(batch) = batches.recv() {
+            let tokens = Tensor::from_i32(
+                &[cfg.batch_size, cfg.seq_len + 1],
+                batch.tokens.clone(),
+            );
+            let t0 = Instant::now();
+            let outputs = engine
+                .run(&train_art, &state.as_inputs(tokens))
+                .with_context(|| format!("train step {}", batch.index))?;
+            let wall = t0.elapsed().as_secs_f64() as f32;
+            let rest = state.absorb(outputs);
+            let nll = rest[0].scalar_f32()?;
+            let loads = rest[1].f32s()?;
+            let drops = rest[2].f32s()?;
+            let mean_drop =
+                drops.iter().sum::<f32>() / drops.len().max(1) as f32;
+            sim.push_step(loads, m);
+            rec.push_step(loads, m, nll / n_tok, mean_drop, wall);
+            if batch.index % 20 == 0 {
+                crate::info!(
+                    "{} step {:>4} loss {:.4} maxvio {:.4} drop {:.4}",
+                    self.run_label(),
+                    batch.index,
+                    nll / n_tok,
+                    rec.balance.global_series.last().unwrap(),
+                    mean_drop
+                );
+            }
+        }
+
+        // held-out perplexity with frozen routing state
+        let test_loader =
+            Loader::new(corpus, cfg.batch_size, cfg.seq_len, Split::Test);
+        let mut ppl = Perplexity::default();
+        for i in 0..self.eval_batches {
+            let batch = test_loader.batch(i);
+            let tokens = Tensor::from_i32(
+                &[cfg.batch_size, cfg.seq_len + 1],
+                batch.tokens,
+            );
+            let outs = engine.run(
+                &eval_art,
+                &[
+                    state.theta.clone(),
+                    state.route_state.clone(),
+                    tokens,
+                ],
+            )?;
+            ppl.push(outs[0].scalar_f32()? as f64, cfg.n_tokens as u64);
+        }
+
+        rec.set_meta("perplexity", Json::Num(ppl.value()));
+        rec.set_meta("sim_hours", Json::Num(sim.total_hours()));
+        rec.set_meta(
+            "sim_hours_full",
+            Json::Num(sim.extrapolate_hours(cfg.total_steps as u64)),
+        );
+        rec.set_meta("sim_profile", Json::Str(sim.profile.name.into()));
+
+        Ok(TrainOutcome { recorder: rec, perplexity: ppl.value(), sim,
+                          state })
+    }
+}
+
+pub struct TrainOutcome {
+    pub recorder: RunRecorder,
+    pub perplexity: f64,
+    pub sim: ClusterSim,
+    pub state: TrainState,
+}
+
+impl TrainOutcome {
+    /// The paper's Table 2/3 row for this run.
+    pub fn table_row(&self, label: &str) -> Vec<String> {
+        vec![
+            label.to_string(),
+            format!("{:.4}", self.recorder.balance.avg_max_vio()),
+            format!("{:.4}", self.recorder.balance.sup_max_vio()),
+            format!("{:.4}", self.perplexity),
+            format!("{:.4}", self.sim.extrapolate_hours(
+                self.sim.steps.max(1))),
+        ]
+    }
+
+    pub fn dump(&self, reports_dir: &Path) -> Result<std::path::PathBuf> {
+        Ok(self.recorder.dump(reports_dir)?)
+    }
+}

@@ -1,0 +1,144 @@
+//! Tiny CLI argument parser (no clap offline): subcommand + `--key value`
+//! / `--key=value` / boolean `--flag` options, with typed accessors and an
+//! unknown-option check so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(stripped) = item.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.options.insert(stripped.to_string(), "true".into());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(item);
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants int")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants int")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| panic!("--{key} wants float"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on options outside the allowed set (catches typos).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.options.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown option --{k}; allowed: {}",
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --config moe16 --steps 100 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("moe16"));
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = parse("bench --mode=bip --t=4 --lr=2.5e-4");
+        assert_eq!(a.get("mode"), Some("bip"));
+        assert_eq!(a.usize_or("t", 0), 4);
+        assert!((a.f64_or("lr", 0.0) - 2.5e-4).abs() < 1e-12);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("solve file1.json file2.json --out x");
+        assert_eq!(a.subcommand.as_deref(), Some("solve"));
+        assert_eq!(a.positional, vec!["file1.json", "file2.json"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn unknown_check() {
+        let a = parse("x --good 1 --bad 2");
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse("x --bias -0.5");
+        // "-0.5" does not start with --, so it is consumed as the value
+        assert!((a.f64_or("bias", 0.0) + 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,127 @@
+//! CSV writing for figure/table series (reports/*.csv consumed by any
+//! plotting tool). Quoting per RFC 4180 where needed.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter<W: Write> {
+    out: W,
+    cols: usize,
+}
+
+impl CsvWriter<BufWriter<File>> {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = File::create(path)?;
+        Self::new(BufWriter::new(file), header)
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    pub fn new(mut out: W, header: &[&str]) -> io::Result<Self> {
+        write_row(&mut out, header.iter().map(|s| s.to_string()))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    pub fn row<I, S>(&mut self, fields: I) -> io::Result<()>
+    where
+        I: IntoIterator<Item = S>,
+        S: ToString,
+    {
+        let items: Vec<String> =
+            fields.into_iter().map(|f| f.to_string()).collect();
+        assert_eq!(
+            items.len(),
+            self.cols,
+            "csv row width {} != header width {}",
+            items.len(),
+            self.cols
+        );
+        write_row(&mut self.out, items)
+    }
+
+    pub fn row_mixed(&mut self, fields: &[CsvField]) -> io::Result<()> {
+        self.row(fields.iter().map(|f| f.render()))
+    }
+
+    pub fn finish(mut self) -> io::Result<()> {
+        self.out.flush()
+    }
+}
+
+pub enum CsvField {
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl CsvField {
+    fn render(&self) -> String {
+        match self {
+            CsvField::Int(x) => x.to_string(),
+            CsvField::Float(x) => format!("{x:.6}"),
+            CsvField::Str(s) => s.clone(),
+        }
+    }
+}
+
+fn write_row<W: Write, I: IntoIterator<Item = String>>(
+    out: &mut W,
+    fields: I,
+) -> io::Result<()> {
+    let mut first = true;
+    for field in fields {
+        if !first {
+            write!(out, ",")?;
+        }
+        first = false;
+        if field.contains(',') || field.contains('"') || field.contains('\n') {
+            write!(out, "\"{}\"", field.replace('"', "\"\""))?;
+        } else {
+            write!(out, "{field}")?;
+        }
+    }
+    writeln!(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::new(&mut buf, &["step", "maxvio"]).unwrap();
+            w.row(["0", "1.5"]).unwrap();
+            w.row([1.to_string(), format!("{:.4}", 0.25)]).unwrap();
+            w.finish().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text, "step,maxvio\n0,1.5\n1,0.2500\n");
+    }
+
+    #[test]
+    fn quotes_when_needed() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::new(&mut buf, &["a", "b"]).unwrap();
+            w.row(["x,y", "he said \"hi\""]).unwrap();
+            w.finish().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("\"x,y\""));
+        assert!(text.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row width")]
+    fn width_mismatch_panics() {
+        let mut buf = Vec::new();
+        let mut w = CsvWriter::new(&mut buf, &["a", "b"]).unwrap();
+        let _ = w.row(["only-one"]);
+    }
+}

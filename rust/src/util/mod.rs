@@ -1,0 +1,20 @@
+//! Support substrates built from scratch for this crate.
+//!
+//! The offline build environment provides no tokio/serde/clap/criterion/rand,
+//! so the pieces a framework normally pulls from crates.io are implemented
+//! (and unit-tested) here: a PCG64 RNG, a JSON parser/emitter, CSV writing,
+//! a CLI argument parser, summary statistics, wall-clock timers and a
+//! bounded-channel thread pool.
+
+pub mod args;
+pub mod csv;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use args::Args;
+pub use json::Json;
+pub use rng::Pcg64;

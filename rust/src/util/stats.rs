@@ -1,0 +1,250 @@
+//! Summary statistics and online accumulators used by metrics + benches.
+
+/// Online mean/max/min/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: u64,
+    pub mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+    pub sum: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        self.mean = (n1 * self.mean + n2 * other.mean) / (n1 + n2);
+        self.m2 += other.m2 + delta * delta * n1 * n2 / (n1 + n2);
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact quantile over a collected sample (sorts a copy).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// k-th largest (1-based) — the order statistic at the heart of Alg. 1.
+/// O(n) average via quickselect, no allocation beyond one scratch copy.
+pub fn kth_largest(xs: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= xs.len(), "k={k} len={}", xs.len());
+    let mut v = xs.to_vec();
+    let idx = v.len() - k;
+    // f32 total order is fine here: scores are finite softmax outputs.
+    *v.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap()).1
+}
+
+/// In-place quickselect variant for hot loops that own a scratch buffer.
+pub fn kth_largest_in_place(v: &mut [f32], k: usize) -> f32 {
+    let idx = v.len() - k;
+    *v.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap()).1
+}
+
+/// Monotone bijection f32 -> u32 (finite floats): integer comparisons are
+/// ~3x cheaper than partial_cmp in quickselect's partition loop, which is
+/// the dual solver's hot path (EXPERIMENTS.md §Perf).
+#[inline]
+pub fn f32_order_key(x: f32) -> u32 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000
+    }
+}
+
+#[inline]
+pub fn f32_from_order_key(k: u32) -> f32 {
+    let b = if k & 0x8000_0000 != 0 { k & 0x7fff_ffff } else { !k };
+    f32::from_bits(b)
+}
+
+/// k-th largest over a scratch buffer of order keys (integer quickselect).
+pub fn kth_largest_keys(v: &mut [u32], k: usize) -> f32 {
+    let idx = v.len() - k;
+    f32_from_order_key(*v.select_nth_unstable(idx).1)
+}
+
+/// Indices of the k largest values, descending, ties broken by lower index
+/// (matches jax.lax.top_k / the L1 gate kernel).
+pub fn topk_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let k = k.min(xs.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b))
+    });
+    let mut top: Vec<usize> = idx[..k].to_vec();
+    top.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b)));
+    top
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn summary_matches_naive() {
+        let mut rng = Pcg64::new(1);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.normal() * 3.0 + 1.0).collect();
+        let mut s = Summary::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((s.mean - mean).abs() < 1e-9);
+        assert!((s.var() - var).abs() < 1e-9);
+        assert_eq!(s.n, 1000);
+    }
+
+    #[test]
+    fn summary_merge_equals_single_pass() {
+        let mut rng = Pcg64::new(2);
+        let xs: Vec<f64> = (0..500).map(|_| rng.next_f64()).collect();
+        let mut whole = Summary::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for &x in &xs[..200] {
+            a.push(x);
+        }
+        for &x in &xs[200..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean - whole.mean).abs() < 1e-12);
+        assert!((a.var() - whole.var()).abs() < 1e-12);
+        assert_eq!(a.min, whole.min);
+        assert_eq!(a.max, whole.max);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 100.0);
+        assert!((quantile(&xs, 0.5) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kth_largest_matches_sort() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..50 {
+            let n = 1 + rng.below(40) as usize;
+            let xs: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            for k in 1..=n {
+                assert_eq!(kth_largest(&xs, k), sorted[k - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn topk_indices_match_reference() {
+        let mut rng = Pcg64::new(4);
+        for _ in 0..50 {
+            let n = 2 + rng.below(30) as usize;
+            let xs: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let k = 1 + rng.below(n as u64) as usize;
+            let got = topk_indices(&xs, k);
+            let mut want: Vec<usize> = (0..n).collect();
+            want.sort_by(|&a, &b| {
+                xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b))
+            });
+            assert_eq!(got, want[..k].to_vec());
+        }
+    }
+
+    #[test]
+    fn topk_tie_break_lower_index() {
+        let xs = [0.5f32, 0.9, 0.9, 0.1];
+        assert_eq!(topk_indices(&xs, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn order_key_is_monotone_bijection() {
+        let mut rng = Pcg64::new(8);
+        let mut vals: Vec<f32> = (0..500)
+            .map(|_| (rng.next_f32() - 0.5) * 100.0)
+            .collect();
+        vals.extend([0.0, -0.0, 1.0, -1.0, f32::MIN_POSITIVE]);
+        for &v in &vals {
+            let rt = f32_from_order_key(f32_order_key(v));
+            assert!(rt == v || (rt == 0.0 && v == 0.0), "{v} -> {rt}");
+        }
+        let mut sorted_f = vals.clone();
+        sorted_f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut sorted_k = vals.clone();
+        sorted_k.sort_by_key(|&v| f32_order_key(v));
+        for (a, b) in sorted_f.iter().zip(&sorted_k) {
+            assert_eq!(a.to_bits() & 0x7fff_ffff != 0,
+                       b.to_bits() & 0x7fff_ffff != 0);
+            assert!((a - b).abs() == 0.0);
+        }
+    }
+
+    #[test]
+    fn kth_largest_keys_matches_float_path() {
+        let mut rng = Pcg64::new(12);
+        for _ in 0..40 {
+            let n = 2 + rng.below(60) as usize;
+            let xs: Vec<f32> =
+                (0..n).map(|_| rng.next_f32() - 0.3).collect();
+            let k = 1 + rng.below(n as u64) as usize;
+            let mut keys: Vec<u32> =
+                xs.iter().map(|&x| f32_order_key(x)).collect();
+            assert_eq!(kth_largest_keys(&mut keys, k),
+                       kth_largest(&xs, k));
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Wall-clock timing helpers for the bench harness and the training loop.
+
+use std::time::{Duration, Instant};
+
+/// Scoped stopwatch with named laps (for per-phase breakdowns).
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    pub laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now, laps: Vec::new() }
+    }
+
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, d) in &self.laps {
+            s.push_str(&format!("{name}: {:.3}s  ", d.as_secs_f64()));
+        }
+        s.push_str(&format!("total: {:.3}s", self.total().as_secs_f64()));
+        s
+    }
+}
+
+/// Measure a closure's wall time.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Repeat a closure until `min_time` elapses (>= 1 iteration), returning
+/// (iters, mean seconds/iter). The bench harness's inner loop.
+pub fn bench_loop(min_time: Duration, mut f: impl FnMut()) -> (u64, f64) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed() < min_time {
+        f();
+        iters += 1;
+    }
+    (iters, t0.elapsed().as_secs_f64() / iters as f64)
+}
+
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        std::thread::sleep(Duration::from_millis(1));
+        sw.lap("b");
+        assert_eq!(sw.laps.len(), 2);
+        assert!(sw.laps[0].1 >= Duration::from_millis(2));
+        assert!(sw.total() >= Duration::from_millis(3));
+        assert!(sw.report().contains("a:"));
+    }
+
+    #[test]
+    fn bench_loop_runs_at_least_once() {
+        let (iters, per) = bench_loop(Duration::from_millis(1), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(iters >= 1);
+        assert!(per >= 0.0);
+    }
+
+    #[test]
+    fn human_readable() {
+        assert!(human_duration(Duration::from_nanos(50)).ends_with("ns"));
+        assert!(human_duration(Duration::from_micros(50)).ends_with("µs"));
+        assert!(human_duration(Duration::from_millis(50)).ends_with("ms"));
+        assert!(human_duration(Duration::from_secs(5)).ends_with('s'));
+        assert!(human_duration(Duration::from_secs(300)).ends_with("min"));
+    }
+}

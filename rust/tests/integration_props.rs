@@ -1,0 +1,219 @@
+//! Cross-module property tests (hand-rolled proptest: Pcg64-driven random
+//! instances, many trials, shrink-free but seeded and reproducible).
+//!
+//! These pin the relationships BETWEEN subsystems: solver family
+//! consistency (dual vs exact vs online), cost-model/metric coupling,
+//! and the data->routing pipeline.
+
+use bip_moe::bip::approx::ApproxGate;
+use bip_moe::bip::dual;
+use bip_moe::bip::flow::solve_exact;
+use bip_moe::bip::online::OnlineGate;
+use bip_moe::bip::{greedy_topk, Instance};
+use bip_moe::metrics::maxvio::max_violation;
+use bip_moe::parallel::{ClusterSim, DeviceProfile, Mesh, ModelCost};
+use bip_moe::util::rng::Pcg64;
+
+fn random_instance(rng: &mut Pcg64) -> Instance {
+    let m = *[8usize, 16, 32].get(rng.below(3) as usize).unwrap();
+    let k = 1 + rng.below(4.min(m as u64 / 2)) as usize;
+    let n = m * (4 + rng.below(12) as usize);
+    let temp = 0.5 + rng.next_f64() * 2.5;
+    let skew = rng.next_f64() * 4.0;
+    Instance::synthetic(n, m, k, temp, skew, rng)
+}
+
+/// Property: the dual heuristic's objective always sits between the exact
+/// optimum scaled down and the greedy upper bound, and its violation is
+/// bounded. 30 random instances.
+#[test]
+fn prop_dual_objective_sandwiched() {
+    let mut rng = Pcg64::new(0xD1A1);
+    for trial in 0..30 {
+        let inst = random_instance(&mut rng);
+        let (routing, q) = dual::solve(&inst, 8);
+        let obj = routing.objective(&inst);
+        let greedy_obj = greedy_topk(&inst).objective(&inst);
+        assert!(obj <= greedy_obj + 1e-6, "trial {trial}");
+        assert!(obj >= 0.5 * greedy_obj, "trial {trial}: obj {obj} \
+                 greedy {greedy_obj}");
+        assert!(q.iter().all(|&x| x >= 0.0), "trial {trial}");
+        assert!(routing.max_violation(&inst) < 1.0,
+                "trial {trial}: vio {}", routing.max_violation(&inst));
+        assert!(routing.is_row_feasible(inst.k), "trial {trial}");
+    }
+}
+
+/// Property: on small instances the dual heuristic reaches >= 85% of the
+/// exact flow optimum while cutting greedy's violation.
+#[test]
+fn prop_dual_near_optimal_vs_flow() {
+    let mut rng = Pcg64::new(0xF10);
+    for trial in 0..8 {
+        let m = 8;
+        let k = 2;
+        let n = 48;
+        let inst = Instance::synthetic(
+            n, m, k, 1.5, 1.0 + rng.next_f64() * 3.0, &mut rng);
+        let (exact, exact_obj) = solve_exact(&inst);
+        assert!(exact.is_col_feasible(m, inst.cap), "trial {trial}");
+        let (routing, _) = dual::solve(&inst, 14);
+        let obj = routing.objective(&inst);
+        assert!(obj >= 0.85 * exact_obj,
+                "trial {trial}: {obj} vs exact {exact_obj}");
+        let greedy = greedy_topk(&inst);
+        if greedy.max_violation(&inst) > 0.5 {
+            assert!(routing.max_violation(&inst)
+                    < greedy.max_violation(&inst), "trial {trial}");
+        }
+    }
+}
+
+/// Property: processing a batch token-by-token through Algorithm 3 ends
+/// with duals correlated with the batch dual solver's (same constraint
+/// structure, different update schedule).
+#[test]
+fn prop_online_duals_track_batch_duals() {
+    let mut rng = Pcg64::new(0x0917);
+    for trial in 0..6 {
+        let inst = Instance::synthetic(512, 16, 4, 2.0,
+                                       2.0 + rng.next_f64() * 2.0, &mut rng);
+        let (_, q_batch) = dual::solve(&inst, 8);
+        let mut gate = OnlineGate::new(16, 4, inst.cap, 4);
+        for i in 0..inst.n {
+            gate.route_token(inst.row(i));
+        }
+        // experts the batch solver prices highest should also be the
+        // online gate's most-penalized experts (rank correlation on top-4)
+        let top_batch = bip_moe::util::stats::topk_indices(&q_batch, 4);
+        let top_online = bip_moe::util::stats::topk_indices(&gate.q, 4);
+        let overlap = top_batch
+            .iter()
+            .filter(|e| top_online.contains(e))
+            .count();
+        assert!(overlap >= 2,
+                "trial {trial}: batch {top_batch:?} online {top_online:?}");
+    }
+}
+
+/// Property: Algorithm 4 approaches Algorithm 3 as buckets increase, for
+/// the same stream.
+#[test]
+fn prop_approx_converges_to_online_in_buckets() {
+    let mut rng = Pcg64::new(0xA44);
+    let inst = Instance::synthetic(768, 16, 4, 2.0, 3.0, &mut rng);
+    let mut online = OnlineGate::new(16, 4, inst.cap, 2);
+    for i in 0..inst.n {
+        online.route_token(inst.row(i));
+    }
+    let mut errs = Vec::new();
+    for buckets in [4usize, 32, 512] {
+        let mut approx = ApproxGate::new(16, 4, inst.cap, 2, buckets);
+        for i in 0..inst.n {
+            approx.route_token(inst.row(i));
+        }
+        let err: f32 = online
+            .q
+            .iter()
+            .zip(&approx.q)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        errs.push(err);
+    }
+    assert!(errs[2] <= errs[0] + 1e-5, "errs {errs:?}");
+    assert!(errs[2] < 0.1, "512-bucket err {}", errs[2]);
+}
+
+/// Property: simulated step time is monotone in MaxVio when total load is
+/// held fixed — the mechanism behind the paper's training-time savings.
+#[test]
+fn prop_sim_time_monotone_in_maxvio() {
+    let mut rng = Pcg64::new(0x517);
+    let sim = ClusterSim::new(
+        Mesh::new(4, 16),
+        DeviceProfile::rtx4090(),
+        ModelCost::paper_16e(),
+        false,
+    );
+    for _ in 0..10 {
+        let n_tokens = 4096usize;
+        let mean = n_tokens as f32 / 16.0;
+        // two load vectors with the same total, different concentration
+        let spread = rng.next_f32() * 0.5;
+        let mild: Vec<f32> = (0..16)
+            .map(|j| mean * (1.0 + spread * ((j as f32 / 8.0) - 1.0)))
+            .collect();
+        let mut hot = vec![mean * 0.8; 16];
+        hot[0] = mean * 0.8 + (mean * 0.2) * 16.0;
+        let vio_mild = max_violation(&mild, n_tokens, 1);
+        let vio_hot = max_violation(&hot, n_tokens, 1);
+        assert!(vio_hot > vio_mild);
+        let t_mild = sim.step_time(&mild, 16);
+        let t_hot = sim.step_time(&hot, 16);
+        assert!(t_hot > t_mild,
+                "vio {vio_mild}->{vio_hot}, t {t_mild}->{t_hot}");
+    }
+}
+
+/// Property: MaxVio of any routing is >= 0 with equality iff perfectly
+/// balanced, and greedy's violation grows with score skew.
+#[test]
+fn prop_maxvio_semantics() {
+    let mut rng = Pcg64::new(0x3a3);
+    let mut prev_vio = -1.0f64;
+    for skew_step in 0..5 {
+        let skew = skew_step as f64;
+        let inst = Instance::synthetic(512, 16, 4, 1.0, skew, &mut rng);
+        let routing = greedy_topk(&inst);
+        let vio = routing.max_violation(&inst);
+        assert!(vio >= -1e-9);
+        if skew_step >= 2 {
+            // skew 2+: strictly more unbalanced than skew 0
+            assert!(vio > prev_vio.min(0.3),
+                    "skew {skew}: vio {vio} prev {prev_vio}");
+        }
+        if skew_step == 0 {
+            prev_vio = vio;
+        }
+    }
+    // perfectly balanced loads -> exactly 0
+    let loads = vec![128.0f32; 16];
+    assert!(max_violation(&loads, 512, 4).abs() < 1e-12);
+}
+
+/// Property: the data pipeline's batches route like language data — the
+/// corpus's Zipf skew induces router-score imbalance under a random
+/// projection gate (the situation the paper's Figure 1 starts from).
+#[test]
+fn prop_corpus_induces_router_imbalance() {
+    use bip_moe::data::{Corpus, CorpusSpec, Loader, Split};
+    let corpus = std::sync::Arc::new(Corpus::build(CorpusSpec {
+        vocab_size: 1024,
+        ..Default::default()
+    }));
+    let loader = Loader::new(corpus, 4, 64, Split::Train);
+    let mut rng = Pcg64::new(0xC0);
+    // random embedding + gate: token -> expert scores (softmax rows)
+    let m = 16;
+    let emb: Vec<f32> =
+        (0..1024 * m).map(|_| rng.normal() as f32 * 1.5).collect();
+    let mut all_vio = 0.0;
+    let batches = 5;
+    for b in 0..batches {
+        let batch = loader.batch(b);
+        let n = batch.n_tokens();
+        let mut scores = Vec::with_capacity(n * m);
+        for &tok in &batch.tokens[..n] {
+            let row = &emb[(tok as usize) * m..(tok as usize + 1) * m];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> =
+                row.iter().map(|&x| (x - mx).exp()).collect();
+            let total: f32 = exps.iter().sum();
+            scores.extend(exps.iter().map(|&e| e / total));
+        }
+        let inst = Instance { n, m, k: 4, cap: n * 4 / m, scores };
+        all_vio += greedy_topk(&inst).max_violation(&inst);
+    }
+    let avg = all_vio / batches as f64;
+    assert!(avg > 0.3, "corpus should induce imbalance, got {avg}");
+}

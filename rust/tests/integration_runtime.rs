@@ -1,0 +1,217 @@
+//! Integration tests over the PJRT runtime + tiny artifacts.
+//!
+//! These require `make artifacts` to have produced the tiny config; when
+//! artifacts/ is missing the tests skip (printing why) so `cargo test`
+//! stays green on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use bip_moe::bip::dual::DualState;
+use bip_moe::bip::Instance;
+use bip_moe::runtime::{Engine, Tensor};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn engine() -> Option<Engine> {
+    artifacts_dir().map(|d| Engine::new(&d).expect("engine"))
+}
+
+fn init_theta(engine: &Engine, seed: i32) -> Tensor {
+    let art = engine.manifest().find("tiny", "init", "-", None).unwrap();
+    engine
+        .run(art, &[Tensor::scalar_i32(seed)])
+        .unwrap()
+        .pop()
+        .unwrap()
+}
+
+fn tiny_tokens(engine: &Engine, seed: u64) -> Tensor {
+    let cfg = engine.manifest().config("tiny").unwrap();
+    let mut rng = bip_moe::util::rng::Pcg64::new(seed);
+    let data: Vec<i32> = (0..cfg.batch_size * (cfg.seq_len + 1))
+        .map(|_| rng.below(cfg.vocab_size as u64) as i32)
+        .collect();
+    Tensor::from_i32(&[cfg.batch_size, cfg.seq_len + 1], data)
+}
+
+#[test]
+fn init_artifact_is_deterministic_and_seed_sensitive() {
+    let Some(engine) = engine() else { return };
+    let a = init_theta(&engine, 0);
+    let b = init_theta(&engine, 0);
+    let c = init_theta(&engine, 1);
+    assert_eq!(a.f32s().unwrap(), b.f32s().unwrap());
+    assert_ne!(a.f32s().unwrap(), c.f32s().unwrap());
+    let cfg = engine.manifest().config("tiny").unwrap();
+    assert_eq!(a.len(), cfg.theta_size);
+    // init respects the spec: norm gains exactly 1.0 somewhere, embed
+    // values small
+    let theta = a.f32s().unwrap();
+    assert!(theta.iter().any(|&x| x == 1.0));
+    assert!(theta[..100].iter().all(|&x| x.abs() < 0.5));
+}
+
+#[test]
+fn train_step_runs_and_threads_state_for_every_mode() {
+    let Some(engine) = engine() else { return };
+    let cfg = engine.manifest().config("tiny").unwrap().clone();
+    let tokens = tiny_tokens(&engine, 3);
+    for (mode, t) in [("aux", 0), ("lossfree", 0), ("bip", 4)] {
+        let art = engine.manifest().train_artifact("tiny", mode, t).unwrap();
+        let theta = init_theta(&engine, 0);
+        let mut state =
+            bip_moe::train::state::TrainState::fresh(theta, &cfg);
+        let theta_before = state.theta.f32s().unwrap().to_vec();
+        let outs = engine
+            .run(art, &state.as_inputs(tokens.clone()))
+            .unwrap_or_else(|e| panic!("{mode}: {e:#}"));
+        let rest = state.absorb(outs);
+        assert_eq!(state.step_count(), 1, "{mode}");
+        assert_ne!(state.theta.f32s().unwrap(), theta_before.as_slice());
+        let nll = rest[0].scalar_f32().unwrap();
+        let per_tok = nll / cfg.n_tokens as f32;
+        assert!((per_tok - (cfg.vocab_size as f32).ln()).abs() < 1.0,
+                "{mode}: loss/token {per_tok}");
+        // loads: (L, m), each layer sums to n*k
+        let loads = rest[1].f32s().unwrap();
+        for l in 0..cfg.n_layers {
+            let s: f32 =
+                loads[l * cfg.n_experts..(l + 1) * cfg.n_experts].iter()
+                    .sum();
+            assert_eq!(s as usize, cfg.n_tokens * cfg.top_k, "{mode} l{l}");
+        }
+        // route_state behavior per mode
+        let q = state.route_state.f32s().unwrap();
+        match mode {
+            "aux" => assert!(q.iter().all(|&x| x == 0.0)),
+            "lossfree" => assert!(q.iter().all(|&x| x.abs() <= 1.1e-3)),
+            _ => assert!(q.iter().any(|&x| x > 0.0)),
+        }
+    }
+}
+
+#[test]
+fn train_step_is_deterministic() {
+    let Some(engine) = engine() else { return };
+    let cfg = engine.manifest().config("tiny").unwrap().clone();
+    let art = engine.manifest().train_artifact("tiny", "bip", 4).unwrap();
+    let tokens = tiny_tokens(&engine, 9);
+    let run = || {
+        let mut state = bip_moe::train::state::TrainState::fresh(
+            init_theta(&engine, 7), &cfg);
+        let outs = engine.run(art, &state.as_inputs(tokens.clone())).unwrap();
+        let rest = state.absorb(outs);
+        (state.theta.f32s().unwrap().to_vec(),
+         rest[0].scalar_f32().unwrap())
+    };
+    let (t1, l1) = run();
+    let (t2, l2) = run();
+    assert_eq!(l1, l2);
+    assert_eq!(t1, t2);
+}
+
+#[test]
+fn eval_step_agrees_with_frozen_semantics() {
+    let Some(engine) = engine() else { return };
+    let cfg = engine.manifest().config("tiny").unwrap().clone();
+    let eval_art = engine.manifest().find("tiny", "eval", "bip", None)
+        .unwrap();
+    let theta = init_theta(&engine, 0);
+    let tokens = tiny_tokens(&engine, 5);
+    let q = Tensor::zeros_f32(&[cfg.n_layers, cfg.n_experts]);
+    let a = engine
+        .run(eval_art, &[theta.clone(), q.clone(), tokens.clone()])
+        .unwrap();
+    let b = engine.run(eval_art, &[theta, q, tokens]).unwrap();
+    assert_eq!(a[0].scalar_f32().unwrap(), b[0].scalar_f32().unwrap());
+    assert!(a[0].scalar_f32().unwrap() > 0.0);
+}
+
+/// The L1<->L3 equivalence test: the q vector the in-graph Pallas kernel
+/// computes for layer 0 must match the host-side dual solver run on the
+/// probe artifact's scores (same math, two implementations).
+#[test]
+fn in_graph_bip_dual_matches_host_solver() {
+    let Some(engine) = engine() else { return };
+    let cfg = engine.manifest().config("tiny").unwrap().clone();
+    let Ok(probe) = engine.manifest().find("tiny", "probe", "bip", None)
+    else {
+        eprintln!("skipping: probe artifact not built");
+        return;
+    };
+    let train_art =
+        engine.manifest().train_artifact("tiny", "bip", 4).unwrap();
+    let theta = init_theta(&engine, 0);
+    let tokens = tiny_tokens(&engine, 11);
+    let q0 = Tensor::zeros_f32(&[cfg.n_layers, cfg.n_experts]);
+
+    // layer-0 router scores via the probe artifact
+    let scores = engine
+        .run(probe, &[theta.clone(), q0.clone(), tokens.clone()])
+        .unwrap()
+        .pop()
+        .unwrap();
+    let inst = Instance {
+        n: cfg.n_tokens,
+        m: cfg.n_experts,
+        k: cfg.top_k,
+        cap: cfg.expert_cap,
+        scores: scores.f32s().unwrap().to_vec(),
+    };
+    let mut host = DualState::new(cfg.n_experts);
+    host.update(&inst, 4); // tiny bip_T = 4
+
+    // in-graph q for layer 0 comes back in the train step's route_state
+    let mut state = bip_moe::train::state::TrainState::fresh(theta, &cfg);
+    let outs = engine.run(train_art, &state.as_inputs(tokens)).unwrap();
+    state.absorb(outs);
+    let q_graph = &state.route_state.f32s().unwrap()[..cfg.n_experts];
+
+    for (j, (&hq, &gq)) in host.q.iter().zip(q_graph).enumerate() {
+        assert!(
+            (hq - gq).abs() < 1e-5,
+            "expert {j}: host {hq} vs graph {gq}"
+        );
+    }
+}
+
+#[test]
+fn engine_caches_compilations() {
+    let Some(engine) = engine() else { return };
+    let art = engine.manifest().find("tiny", "init", "-", None).unwrap();
+    engine.run(art, &[Tensor::scalar_i32(0)]).unwrap();
+    let compiles_after_first = engine.stats().compiles;
+    engine.run(art, &[Tensor::scalar_i32(1)]).unwrap();
+    assert_eq!(engine.stats().compiles, compiles_after_first);
+    assert_eq!(engine.stats().executions, 2);
+}
+
+#[test]
+fn engine_rejects_bad_inputs() {
+    let Some(engine) = engine() else { return };
+    let art = engine.manifest().train_artifact("tiny", "bip", 4).unwrap();
+    // wrong arity
+    assert!(engine.run(art, &[Tensor::scalar_i32(0)]).is_err());
+    // wrong dtype in position 0
+    let cfg = engine.manifest().config("tiny").unwrap();
+    let mut inputs = vec![
+        Tensor::from_i32(&[cfg.theta_size], vec![0; cfg.theta_size]),
+        Tensor::zeros_f32(&[cfg.theta_size]),
+        Tensor::zeros_f32(&[cfg.theta_size]),
+        Tensor::scalar_i32(0),
+        Tensor::zeros_f32(&[cfg.n_layers, cfg.n_experts]),
+        tiny_tokens(&engine, 0),
+    ];
+    assert!(engine.run(art, &inputs).is_err());
+    // wrong shape
+    inputs[0] = Tensor::zeros_f32(&[cfg.theta_size + 1]);
+    assert!(engine.run(art, &inputs).is_err());
+}
