@@ -1,0 +1,97 @@
+//! Serving-stack benchmarks.
+//!
+//! Two measurements back the serving claims:
+//!   * the router hot path — `route_batch` cost per policy at the
+//!     default gate size (the per-micro-batch overhead a real deployment
+//!     would pay on the critical path);
+//!   * the end-to-end sweep — every scenario x policy through the full
+//!     traffic -> admission -> micro-batch -> router -> SLO pipeline,
+//!     reporting throughput, p99 and balance.
+//!
+//! Results land in reports/BENCH_serving.json (see
+//! `bip_moe::bench::write_bench_json`) so the perf trajectory is tracked
+//! across PRs. BIP_MOE_FULL=1 runs the full-scale sweep.
+
+use bip_moe::bench::{write_bench_json, Bencher};
+use bip_moe::metrics::TablePrinter;
+use bip_moe::serve::{
+    run_scenario, Policy, Request, RouterConfig, SchedulerConfig,
+    Scenario, ServeConfig, ServeReport, ServingRouter, TrafficConfig,
+    TrafficGenerator,
+};
+use bip_moe::util::json::Json;
+
+fn batch_of(scenario: Scenario, n: usize, seed: u64) -> Vec<Request> {
+    TrafficGenerator::new(TrafficConfig {
+        scenario,
+        n_requests: n,
+        seed,
+        ..Default::default()
+    })
+    .collect()
+}
+
+fn main() {
+    let full = std::env::var("BIP_MOE_FULL").as_deref() == Ok("1");
+    let n_requests = if full { 65_536 } else { 8_192 };
+    let mut json_results = Vec::new();
+
+    println!("== route_batch hot path (batch=64, m=16, k=4, L=4) ==");
+    let mut b = Bencher::default();
+    let batch = batch_of(Scenario::Steady, 64, 13);
+    for policy in Policy::all() {
+        let mut router = ServingRouter::new(
+            policy,
+            RouterConfig { expected_stream: 1 << 20, ..Default::default() },
+        );
+        b.bench(&format!("route_batch {}", policy.name()), || {
+            router.route_batch(&batch);
+        });
+    }
+    json_results.push(Json::obj(vec![(
+        "route_batch_us",
+        Json::Arr(b.results.iter().map(|m| m.to_json()).collect()),
+    )]));
+
+    println!("\n== end-to-end scenario sweep ({n_requests} requests) ==");
+    let mut sweep_rows = Vec::new();
+    for scenario in Scenario::all() {
+        let mut table = TablePrinter::new(
+            &format!("serving {}", scenario.name()),
+            ServeReport::headers(),
+        );
+        for policy in Policy::all() {
+            let cfg = ServeConfig::new(
+                TrafficConfig {
+                    scenario,
+                    n_requests,
+                    seed: 2,
+                    ..Default::default()
+                },
+                SchedulerConfig::default(),
+                RouterConfig::default(),
+                policy,
+            );
+            let t0 = std::time::Instant::now();
+            let outcome = run_scenario(&cfg);
+            let wall_s = t0.elapsed().as_secs_f64();
+            table.row(outcome.report.table_row());
+            let mut row = outcome.report.to_json();
+            if let Json::Obj(map) = &mut row {
+                map.insert("wall_s".into(), Json::Num(wall_s));
+                map.insert(
+                    "sim_rps".into(),
+                    Json::Num(outcome.report.completed as f64 / wall_s),
+                );
+            }
+            sweep_rows.push(row);
+        }
+        table.print();
+    }
+    json_results.push(Json::obj(vec![("sweep", Json::Arr(sweep_rows))]));
+
+    match write_bench_json("serving", Json::Arr(json_results)) {
+        Ok(path) => println!("perf record: {}", path.display()),
+        Err(e) => eprintln!("warning: BENCH_serving.json not written: {e}"),
+    }
+}

@@ -7,7 +7,8 @@
 //!   * exact min-cost-flow for reference (orders of magnitude slower);
 //!   * optimality gap of the dual heuristic vs the exact optimum.
 
-use bip_moe::bench::Bencher;
+use bip_moe::bench::{write_bench_json, Bencher};
+use bip_moe::util::json::Json;
 use bip_moe::bip::approx::ApproxGate;
 use bip_moe::bip::dual::DualState;
 use bip_moe::bip::flow::solve_exact;
@@ -96,4 +97,11 @@ fn main() {
          i.e. ~1% overhead at T=14 (µs-scale at the 16-expert gate) ('very small time costs', §3)",
         m.secs_per_iter.mean * 1e6
     );
+
+    // machine-readable perf record for cross-PR tracking
+    let rows: Vec<Json> = b.results.iter().map(|m| m.to_json()).collect();
+    match write_bench_json("solver", Json::Arr(rows)) {
+        Ok(path) => println!("perf record: {}", path.display()),
+        Err(e) => eprintln!("warning: BENCH_solver.json not written: {e}"),
+    }
 }

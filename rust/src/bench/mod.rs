@@ -7,8 +7,10 @@
 
 pub mod experiments;
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// One micro-benchmark measurement.
@@ -86,6 +88,36 @@ impl Bencher {
     }
 }
 
+impl Measurement {
+    /// Machine-readable form for BENCH_*.json perf records.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_us", Json::Num(self.secs_per_iter.mean * 1e6)),
+            ("std_us", Json::Num(self.secs_per_iter.std() * 1e6)),
+            ("iters", Json::Num(self.iters as f64)),
+        ])
+    }
+}
+
+/// Write a `BENCH_<name>.json` perf record under `reports/` (or
+/// `$BIP_MOE_REPORTS`) so the perf trajectory is tracked across PRs.
+/// The payload is wrapped with the crate version.
+pub fn write_bench_json(name: &str, results: Json) -> std::io::Result<PathBuf> {
+    let dir = PathBuf::from(
+        std::env::var("BIP_MOE_REPORTS").unwrap_or_else(|_| "reports".into()),
+    );
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("BENCH_{name}.json"));
+    let doc = Json::obj(vec![
+        ("bench", Json::Str(name.to_string())),
+        ("version", Json::Str(crate::VERSION.to_string())),
+        ("results", results),
+    ]);
+    std::fs::write(&path, doc.to_string())?;
+    Ok(path)
+}
+
 /// Shared env knobs for the table/figure benches.
 pub struct BenchConfig {
     /// full-scale run (BIP_MOE_FULL=1) vs quick default
@@ -127,6 +159,24 @@ mod tests {
         });
         assert!(m.secs_per_iter.mean > 0.0);
         assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn measurement_json_round_trips() {
+        let mut s = Summary::new();
+        s.push(1e-6);
+        s.push(3e-6);
+        let m = Measurement {
+            name: "x".into(),
+            iters: 2,
+            secs_per_iter: s,
+        };
+        let j = m.to_json();
+        assert_eq!(j.path("name").unwrap().as_str(), Some("x"));
+        assert!((j.path("mean_us").unwrap().as_f64().unwrap() - 2.0).abs()
+            < 1e-9);
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(re.path("iters").unwrap().as_usize(), Some(2));
     }
 
     #[test]

@@ -4,11 +4,13 @@
 //! Algorithm for Expert Load Balancing in Mixture-of-Experts Models"*
 //! (Yuan Sun, 2025) as a three-layer rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the training coordinator: data pipeline,
-//!   PJRT runtime, training loop, metrics, expert-parallel cluster
-//!   simulator, BIP solver substrate (exact / dual / online / approx),
-//!   and the §5 online-matching application. Python never runs on the
-//!   training path.
+//! * **L3 (this crate)** — the training coordinator and serving stack:
+//!   data pipeline, PJRT runtime, training loop, metrics,
+//!   expert-parallel cluster simulator, BIP solver substrate (exact /
+//!   dual / online / approx), the §5 online-matching application, and
+//!   the `serve/` online inference-serving subsystem (traffic generator,
+//!   admission control, micro-batch scheduler, capacity-aware BIP
+//!   router). Python never runs on the training or serving path.
 //! * **L2 (`python/compile/model.py`)** — Minimind-style MoE transformer
 //!   (fwd/bwd/AdamW) with the three routing modes (Loss-Controlled,
 //!   Loss-Free, BIP), AOT-lowered once to HLO text artifacts.
@@ -28,6 +30,7 @@ pub mod metrics;
 pub mod parallel;
 pub mod routing;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 pub mod util;
 

@@ -1,16 +1,21 @@
 //! bip-moe CLI — the L3 coordinator entrypoint.
 //!
-//! Subcommands:
+//! Subcommands (keep this list in sync with `run()` and `print_help()`):
 //!   train   train one (config, mode, T) run end-to-end via PJRT
+//!   run     run a named experiment from a JSON run-config file
 //!   eval    evaluate a checkpoint's held-out perplexity
 //!   solve   run the BIP solver family on a synthetic routing instance
 //!   match   run the §5 online ad-matching simulation (Alg 3/4)
+//!   serve   online inference serving: sweep policy x scenario through
+//!           the admission/micro-batch/BIP-router pipeline
 //!   info    list artifact manifest contents and engine stats
 //!
 //! Examples:
 //!   bip-moe train --config moe16-bench --mode bip --bip-t 4 --steps 100
+//!   bip-moe run --config-file configs/table2.json
 //!   bip-moe solve --n 1024 --m 64 --k 8 --skew 3.0 --t 8
 //!   bip-moe match --flows 4096 --ads 32 --slots 2
+//!   bip-moe serve --scenario bursty --policy online
 
 use std::path::{Path, PathBuf};
 
@@ -20,6 +25,10 @@ use bip_moe::bip::{dual, flow, greedy_topk, Instance};
 use bip_moe::matching::simulator::{compare_policies, Workload};
 use bip_moe::metrics::TablePrinter;
 use bip_moe::runtime::Engine;
+use bip_moe::serve::{
+    self, Policy, RouterConfig, SchedulerConfig, Scenario, ServeConfig,
+    ServeReport, TrafficConfig,
+};
 use bip_moe::train::TrainDriver;
 use bip_moe::util::rng::Pcg64;
 use bip_moe::util::Args;
@@ -48,6 +57,7 @@ fn run(args: &Args) -> Result<()> {
         Some("eval") => cmd_eval(args),
         Some("solve") => cmd_solve(args),
         Some("match") => cmd_match(args),
+        Some("serve") => cmd_serve(args),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown subcommand {other}; see --help"),
         None => {
@@ -59,8 +69,8 @@ fn run(args: &Args) -> Result<()> {
 
 fn print_help() {
     println!(
-        "bip-moe {} — BIP-Based Balancing for MoE pre-training\n\n\
-         usage: bip-moe <train|eval|solve|match|info> [--options]\n\n\
+        "bip-moe {} — BIP-Based Balancing for MoE pre-training + serving\n\n\
+         usage: bip-moe <train|run|eval|solve|match|serve|info> [--options]\n\n\
          train  --config <name> --mode <aux|lossfree|bip> [--bip-t N]\n\
                 [--steps N] [--seed N] [--eval-batches N]\n\
                 [--reports DIR] [--save CKPT] [--artifacts DIR]\n\
@@ -68,6 +78,14 @@ fn print_help() {
          eval   --checkpoint CKPT [--eval-batches N] [--artifacts DIR]\n\
          solve  [--n N] [--m M] [--k K] [--skew S] [--t T] [--exact]\n\
          match  [--flows N] [--ads M] [--slots K] [--t T] [--buckets B]\n\
+         serve  [--scenario steady|bursty|diurnal|adversarial|\n\
+                 multitenant|all] [--policy greedy|lossfree|bip|online|\n\
+                 approx|all] [--requests N] [--rate R/s] [--m M] [--k K]\n\
+                 [--layers L] [--tenants T] [--t ITERS] [--buckets B]\n\
+                 [--batch N] [--queue N] [--max-wait-us U] [--slo-ms MS]\n\
+                 [--capacity-factor F] [--devices D] [--placement\n\
+                 block|lpt] [--lpt-refresh BATCHES] [--seed N]\n\
+                 [--json PATH]\n\
          info   [--artifacts DIR]",
         bip_moe::VERSION
     );
@@ -282,6 +300,121 @@ fn cmd_match(args: &Args) -> Result<()> {
         ]);
     }
     table.print();
+    Ok(())
+}
+
+/// Online serving sweep: policy x scenario through the serve/ pipeline.
+/// The greedy baseline always rides along so every table shows the
+/// BIP-balanced policies against unbalanced top-k at equal throughput.
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "scenario", "policy", "requests", "rate", "m", "k", "layers",
+        "tenants", "t", "buckets", "batch", "queue", "max-wait-us",
+        "slo-ms", "capacity-factor", "devices", "placement",
+        "lpt-refresh", "seed", "json",
+    ])
+    .map_err(anyhow::Error::msg)?;
+
+    let scenario_arg = args.str_or("scenario", "all");
+    let scenarios: Vec<Scenario> = if scenario_arg == "all" {
+        Scenario::all().to_vec()
+    } else {
+        vec![Scenario::parse(&scenario_arg).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario {scenario_arg}")
+        })?]
+    };
+    let policy_arg = args.str_or("policy", "all");
+    let mut policies: Vec<Policy> = if policy_arg == "all" {
+        Policy::all().to_vec()
+    } else {
+        vec![Policy::parse(&policy_arg).ok_or_else(|| {
+            anyhow::anyhow!("unknown policy {policy_arg}")
+        })?]
+    };
+    if !policies.contains(&Policy::Greedy) {
+        policies.insert(0, Policy::Greedy);
+    }
+
+    let m = args.usize_or("m", 16);
+    let n_devices = args.usize_or("devices", 4);
+    if n_devices == 0 || m % n_devices != 0 {
+        bail!("--m {m} must be divisible by --devices {n_devices} (>= 1)");
+    }
+    let lpt = match args.str_or("placement", "block").as_str() {
+        "block" => None,
+        "lpt" => match args.u64_or("lpt-refresh", 8) {
+            0 => bail!("--lpt-refresh must be >= 1 batches"),
+            n => Some(n),
+        },
+        other => bail!("unknown placement {other} (block|lpt)"),
+    };
+
+    let traffic = TrafficConfig {
+        scenario: Scenario::Steady, // overwritten per sweep entry
+        n_requests: args.usize_or("requests", 8192),
+        rate_per_s: args.f64_or("rate", 100_000.0),
+        n_layers: args.usize_or("layers", 4),
+        m,
+        k: args.usize_or("k", 4),
+        n_tenants: args.usize_or("tenants", 4),
+        slo_us: (args.f64_or("slo-ms", 20.0) * 1e3) as u64,
+        seed: args.u64_or("seed", 1),
+        ..Default::default()
+    };
+    let sched = SchedulerConfig {
+        queue_cap: args.usize_or("queue", 512),
+        batch_max: args.usize_or("batch", 64),
+        max_wait_us: args.u64_or("max-wait-us", 2_000),
+        drop_expired: true,
+    };
+    let router = RouterConfig {
+        t_iters: args.usize_or("t", 4),
+        buckets: args.usize_or("buckets", 128),
+        capacity_factor: args.f64_or("capacity-factor", 2.0),
+        n_devices,
+        lpt_refresh: lpt,
+        ..Default::default()
+    };
+
+    let mut json_rows = Vec::new();
+    for &scenario in &scenarios {
+        let mut table = TablePrinter::new(
+            &format!(
+                "serving {} — {} requests at {:.0}/s, m={} k={} L={} \
+                 batch<={} cf={}",
+                scenario.name(),
+                traffic.n_requests,
+                traffic.rate_per_s,
+                traffic.m,
+                traffic.k,
+                traffic.n_layers,
+                sched.batch_max,
+                router.capacity_factor,
+            ),
+            ServeReport::headers(),
+        );
+        for &policy in &policies {
+            let cfg = ServeConfig::new(
+                TrafficConfig { scenario, ..traffic.clone() },
+                sched.clone(),
+                router.clone(),
+                policy,
+            );
+            let outcome = serve::run_scenario(&cfg);
+            table.row(outcome.report.table_row());
+            json_rows.push(outcome.report.to_json());
+        }
+        table.print();
+    }
+
+    if let Some(path) = args.get("json") {
+        let doc = bip_moe::util::Json::obj(vec![
+            ("version", bip_moe::util::Json::Str(bip_moe::VERSION.into())),
+            ("results", bip_moe::util::Json::Arr(json_rows)),
+        ]);
+        std::fs::write(path, doc.to_string())?;
+        println!("report: {path}");
+    }
     Ok(())
 }
 

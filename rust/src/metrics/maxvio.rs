@@ -46,12 +46,23 @@ impl BalanceTracker {
 
     /// `loads` is row-major (n_layers, m).
     pub fn push_batch(&mut self, loads: &[f32], m: usize) {
+        self.push_batch_sized(loads, m, self.n_tokens);
+    }
+
+    /// Same recording with an explicit per-call token count — the serving
+    /// path, where micro-batches vary in size (training batches do not).
+    pub fn push_batch_sized(
+        &mut self,
+        loads: &[f32],
+        m: usize,
+        n_tokens: usize,
+    ) {
         assert_eq!(loads.len(), self.n_layers * m);
         let mut sum = 0.0;
         for l in 0..self.n_layers {
             let vio = max_violation(
                 &loads[l * m..(l + 1) * m],
-                self.n_tokens,
+                n_tokens,
                 self.k,
             );
             self.per_layer[l].push(vio);
@@ -118,5 +129,16 @@ mod tests {
     fn wrong_width_panics() {
         let mut t = BalanceTracker::new(2, 8, 2);
         t.push_batch(&[1.0; 7], 4);
+    }
+
+    #[test]
+    fn sized_push_handles_variable_batches() {
+        // serving micro-batches: 8 tokens then 4 tokens, k=2, m=4
+        let mut t = BalanceTracker::new(1, 0, 2);
+        t.push_batch_sized(&[8.0, 4.0, 2.0, 2.0], 4, 8); // mean 4 -> vio 1.0
+        t.push_batch_sized(&[2.0, 2.0, 2.0, 2.0], 4, 4); // mean 2 -> vio 0.0
+        assert!((t.avg_max_vio() - 0.5).abs() < 1e-12);
+        assert!((t.sup_max_vio() - 1.0).abs() < 1e-12);
+        assert_eq!(t.batches(), 2);
     }
 }

@@ -15,6 +15,7 @@
 //! `l20()` approximate the paper's testbeds (Table 1).
 
 use super::collective::{all_to_all_time, LinkProfile};
+use super::placement::Placement;
 use super::topology::Mesh;
 
 /// Accelerator + link constants. The absolute numbers are vendor-sheet
@@ -109,6 +110,9 @@ pub struct ClusterSim {
     pub token_scale: f64,
     pub total_seconds: f64,
     pub steps: u64,
+    /// cached block placement of `mesh` — step_time is the per-step hot
+    /// path and must not rebuild it per call
+    block_placement: Placement,
 }
 
 impl ClusterSim {
@@ -118,8 +122,9 @@ impl ClusterSim {
         cost: ModelCost,
         aux_method: bool,
     ) -> Self {
+        let block_placement = Placement::block(&mesh);
         ClusterSim { mesh, profile, cost, aux_method, token_scale: 1.0,
-                     total_seconds: 0.0, steps: 0 }
+                     total_seconds: 0.0, steps: 0, block_placement }
     }
 
     /// Rescale measured load vectors to the paper's batch volume
@@ -132,7 +137,6 @@ impl ClusterSim {
 
     /// Step time from the (n_layers, m) load matrix (row-major).
     pub fn step_time(&self, loads: &[f32], m: usize) -> f64 {
-        assert_eq!(loads.len() % m, 0);
         let scaled: Vec<f32>;
         let loads: &[f32] = if self.token_scale != 1.0 {
             scaled = loads
@@ -143,28 +147,14 @@ impl ClusterSim {
         } else {
             loads
         };
-        let n_layers = loads.len() / m;
-        let mut fwd = 0.0;
-        for l in 0..n_layers {
-            let layer = &loads[l * m..(l + 1) * m];
-            let total_tokens: f64 = layer.iter().map(|&x| x as f64).sum();
-            let per_device_tokens = total_tokens / self.mesh.n_devices as f64;
-            // attention: balanced data parallel over devices
-            let attn = per_device_tokens * self.cost.attn_flops_per_token
-                / self.profile.flops;
-            // expert FFN: straggler = hottest device's token count
-            let straggler = self
-                .mesh
-                .device_loads(layer)
-                .into_iter()
-                .fold(0.0f64, f64::max);
-            let ffn = straggler * self.cost.ffn_flops_per_token
-                / self.profile.flops;
-            let a2a = all_to_all_time(
-                &self.mesh, layer, self.cost.bytes_per_token,
-                &self.profile.link);
-            fwd += attn + ffn + 2.0 * a2a;
-        }
+        let fwd = forward_seconds(
+            &self.mesh,
+            &self.profile,
+            &self.cost,
+            &self.block_placement,
+            loads,
+            m,
+        );
         let mut t = fwd * (1.0 + self.profile.bwd_ratio)
             + self.profile.fixed_overhead;
         if self.aux_method {
@@ -191,9 +181,85 @@ impl ClusterSim {
     }
 }
 
+/// Shared forward-pass cost of one (n_layers, m) load matrix — the one
+/// formula both the training simulator and the serving cost model price
+/// with, so the two can never drift apart: per layer, balanced attention
+/// + expert-FFN straggler (hottest device under `placement`) + two
+/// all-to-alls.
+fn forward_seconds(
+    mesh: &Mesh,
+    profile: &DeviceProfile,
+    cost: &ModelCost,
+    placement: &Placement,
+    loads: &[f32],
+    m: usize,
+) -> f64 {
+    assert_eq!(loads.len() % m, 0);
+    assert_eq!(placement.n_devices, mesh.n_devices);
+    let n_layers = loads.len() / m;
+    let mut fwd = 0.0;
+    for l in 0..n_layers {
+        let layer = &loads[l * m..(l + 1) * m];
+        let total_tokens: f64 = layer.iter().map(|&x| x as f64).sum();
+        let per_device_tokens = total_tokens / mesh.n_devices as f64;
+        // attention: balanced data parallel over devices
+        let attn =
+            per_device_tokens * cost.attn_flops_per_token / profile.flops;
+        // expert FFN: straggler = hottest device's token count
+        let straggler = placement
+            .device_loads(layer)
+            .into_iter()
+            .fold(0.0f64, f64::max);
+        let ffn = straggler * cost.ffn_flops_per_token / profile.flops;
+        let a2a = all_to_all_time(
+            mesh, layer, cost.bytes_per_token, &profile.link,
+        );
+        fwd += attn + ffn + 2.0 * a2a;
+    }
+    fwd
+}
+
+/// Forward-only micro-batch cost for the serving stack (`serve/`).
+///
+/// Like [`ClusterSim::step_time`] but: no backward pass, a µs-scale fixed
+/// overhead (kernel launch + host sync, not an optimizer step), and an
+/// *explicit* expert [`Placement`] for the straggler term — the serving
+/// router may re-place experts with LPT, which block-`Mesh` cannot
+/// express. The all-to-all estimate still uses the mesh topology (link
+/// traffic depends on total routed tokens, which placement barely moves).
+#[derive(Clone, Debug)]
+pub struct ServeCost {
+    pub mesh: Mesh,
+    pub profile: DeviceProfile,
+    pub cost: ModelCost,
+    /// per-micro-batch launch/sync overhead, microseconds
+    pub fixed_us: f64,
+}
+
+impl ServeCost {
+    pub fn new(mesh: Mesh, profile: DeviceProfile, cost: ModelCost) -> Self {
+        ServeCost { mesh, profile, cost, fixed_us: 50.0 }
+    }
+
+    /// Service time in microseconds for one micro-batch, from its
+    /// row-major (n_layers, m) routed-load matrix.
+    pub fn batch_us(
+        &self,
+        placement: &Placement,
+        loads: &[f32],
+        m: usize,
+    ) -> f64 {
+        forward_seconds(
+            &self.mesh, &self.profile, &self.cost, placement, loads, m,
+        ) * 1e6
+            + self.fixed_us
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::placement::greedy_placement;
 
     fn sim(aux: bool) -> ClusterSim {
         ClusterSim::new(
@@ -261,6 +327,38 @@ mod tests {
         assert_eq!(s.steps, 10);
         let h10 = s.total_hours();
         assert!((s.extrapolate_hours(100) - 10.0 * h10).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_cost_is_monotone_in_straggler_and_placement_aware() {
+        let mesh = Mesh::new(4, 16);
+        let sc = ServeCost::new(
+            mesh.clone(),
+            DeviceProfile::rtx4090(),
+            ModelCost::paper_16e(),
+        );
+        let block = Placement::block(&mesh);
+        let bal = vec![16.0f32; 2 * 16];
+        let t_bal = sc.batch_us(&block, &bal, 16);
+        assert!(t_bal >= sc.fixed_us);
+
+        // pile load onto device 0's experts: slower under block placement
+        let mut skew = bal.clone();
+        for l in 0..2 {
+            for j in 0..4 {
+                skew[l * 16 + j] = 48.0;
+            }
+            for j in 4..16 {
+                skew[l * 16 + j] = 16.0 * 4.0 / 12.0;
+            }
+        }
+        let t_skew = sc.batch_us(&block, &skew, 16);
+        assert!(t_skew > t_bal, "skew {t_skew} bal {t_bal}");
+
+        // LPT placement of the same loads removes the straggler
+        let lpt = greedy_placement(&skew[..16], 4, Some(4));
+        let t_lpt = sc.batch_us(&lpt, &skew, 16);
+        assert!(t_lpt < t_skew, "lpt {t_lpt} block {t_skew}");
     }
 
     #[test]

@@ -17,6 +17,6 @@ pub mod pipeline;
 pub mod placement;
 pub mod topology;
 
-pub use cost_model::{ClusterSim, DeviceProfile, ModelCost};
+pub use cost_model::{ClusterSim, DeviceProfile, ModelCost, ServeCost};
 pub use pipeline::{pipeline_makespan, Schedule};
 pub use topology::Mesh;

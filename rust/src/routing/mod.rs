@@ -5,7 +5,9 @@
 //! that sweep routing policies without touching PJRT, and (b) equivalence
 //! tests against the in-graph implementations through the probe artifact.
 
+use crate::bip::approx::ApproxGate;
 use crate::bip::dual::DualState;
+use crate::bip::online::OnlineGate;
 use crate::bip::{Instance, Routing};
 use crate::util::stats::topk_indices;
 
@@ -14,6 +16,11 @@ pub trait RoutingStrategy {
     fn name(&self) -> String;
     /// Route one batch, updating internal state (bias vectors etc.).
     fn route_batch(&mut self, inst: &Instance) -> Routing;
+    /// Bytes of persistent balancing state (dual vectors, heaps,
+    /// histograms) — the §5.2 footprint the serving report tracks.
+    fn state_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// Plain top-k on raw scores.
@@ -107,6 +114,10 @@ impl RoutingStrategy for LossFree {
         }
         routing
     }
+
+    fn state_bytes(&self) -> usize {
+        self.bias.len() * 4
+    }
 }
 
 /// BIP-Based Balancing (Algorithm 1): warm-started dual state + T
@@ -137,6 +148,84 @@ impl RoutingStrategy for Bip {
             .get_or_insert_with(|| DualState::new(inst.m));
         state.update(inst, self.t_iters);
         state.route(inst)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state
+            .as_ref()
+            .map(|s| (s.q.len() + s.p.len()) * 4)
+            .unwrap_or(0)
+    }
+}
+
+/// Algorithm 3 (`bip::online::OnlineGate`) as a batch strategy: tokens
+/// stream through the gate in row order and the duals + per-expert
+/// top-heaps persist across batches. This is the serving router's exact
+/// online policy; `cap` is the *stream-level* expert capacity
+/// (total_tokens * k / m), per §5 semantics.
+pub struct OnlineBip {
+    pub gate: OnlineGate,
+}
+
+impl OnlineBip {
+    pub fn new(m: usize, k: usize, cap: usize, t_iters: usize) -> Self {
+        OnlineBip { gate: OnlineGate::new(m, k, cap, t_iters) }
+    }
+}
+
+impl RoutingStrategy for OnlineBip {
+    fn name(&self) -> String {
+        format!("bip-online(T={})", self.gate.t_iters)
+    }
+
+    fn route_batch(&mut self, inst: &Instance) -> Routing {
+        let assignment = (0..inst.n)
+            .map(|i| self.gate.route_token(inst.row(i)))
+            .collect();
+        Routing { assignment }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.gate.state_bytes()
+    }
+}
+
+/// Algorithm 4 (`bip::approx::ApproxGate`) as a batch strategy: constant
+/// O(m·b) state regardless of how many batches have streamed through.
+pub struct ApproxBip {
+    pub gate: ApproxGate,
+    pub buckets: usize,
+}
+
+impl ApproxBip {
+    pub fn new(
+        m: usize,
+        k: usize,
+        cap: usize,
+        t_iters: usize,
+        buckets: usize,
+    ) -> Self {
+        ApproxBip {
+            gate: ApproxGate::new(m, k, cap, t_iters, buckets),
+            buckets,
+        }
+    }
+}
+
+impl RoutingStrategy for ApproxBip {
+    fn name(&self) -> String {
+        format!("bip-approx(T={},b={})", self.gate.t_iters, self.buckets)
+    }
+
+    fn route_batch(&mut self, inst: &Instance) -> Routing {
+        let assignment = (0..inst.n)
+            .map(|i| self.gate.route_token(inst.row(i)))
+            .collect();
+        Routing { assignment }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.gate.state_bytes()
     }
 }
 
@@ -220,5 +309,47 @@ mod tests {
         assert_eq!(Greedy.name(), "greedy");
         assert!(Bip::new(8).name().contains("T=8"));
         assert!(LossFree::new(4, 1e-3).name().contains("u=0.001"));
+        assert!(OnlineBip::new(8, 2, 64, 4).name().contains("T=4"));
+        assert!(ApproxBip::new(8, 2, 64, 4, 32).name().contains("b=32"));
+    }
+
+    #[test]
+    fn gate_wrappers_match_direct_gate_streams() {
+        // routing a batch through the wrapper must equal streaming the
+        // rows through a bare gate: same tokens, same order, same duals
+        let insts = batches(7, 3);
+        let (m, k) = (16usize, 4usize);
+        let cap = insts.iter().map(|i| i.n).sum::<usize>() * k / m;
+        let mut wrapper = OnlineBip::new(m, k, cap, 3);
+        let mut bare = crate::bip::online::OnlineGate::new(m, k, cap, 3);
+        for inst in &insts {
+            let routed = wrapper.route_batch(inst);
+            for i in 0..inst.n {
+                assert_eq!(routed.assignment[i], bare.route_token(inst.row(i)));
+            }
+        }
+    }
+
+    #[test]
+    fn state_bytes_grow_only_where_expected() {
+        let insts = batches(8, 4);
+        assert_eq!(Greedy.state_bytes(), 0);
+
+        let mut online = OnlineBip::new(16, 4, 1024, 2);
+        let mut approx = ApproxBip::new(16, 4, 1024, 2, 64);
+        assert_eq!(online.state_bytes(), 16 * 4); // just q before any batch
+        let approx_initial = approx.state_bytes();
+        for inst in &insts {
+            online.route_batch(inst);
+            approx.route_batch(inst);
+        }
+        assert!(online.state_bytes() > 16 * 4);
+        // Algorithm 4: histogram state is constant in the stream length
+        assert_eq!(approx.state_bytes(), approx_initial);
+
+        let mut bip = Bip::new(2);
+        assert_eq!(bip.state_bytes(), 0);
+        bip.route_batch(&insts[0]);
+        assert!(bip.state_bytes() > 0);
     }
 }

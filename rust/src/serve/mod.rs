@@ -1,0 +1,33 @@
+//! Online inference serving on the streaming BIP solvers (§5).
+//!
+//! The paper's online variants (Algorithm 3 `bip::online`, Algorithm 4
+//! `bip::approx`) are streaming balancers — exactly what an inference
+//! router needs: per-token decisions, persistent duals, bounded state.
+//! This subsystem turns them into a serving stack:
+//!
+//! * [`traffic`] — scenario-diverse synthetic request generator
+//!   (steady, bursty, diurnal, adversarially drifting skew,
+//!   multi-tenant), all seeded and reproducible;
+//! * [`scheduler`] — admission control + bounded FIFO queue +
+//!   deadline-aware micro-batch formation;
+//! * [`router`] — per-layer gates behind `routing::RoutingStrategy`
+//!   with hard per-expert capacity enforcement and expert-parallel
+//!   placement accounting;
+//! * [`slo`] — latency percentiles, throughput/goodput, MaxVio reuse;
+//! * [`sim`] — the virtual-time event loop tying it together, with
+//!   service times from `parallel::ServeCost` so imbalance costs
+//!   latency the way a straggling device would.
+//!
+//! Driven by the `bip-moe serve` subcommand and `bench_serving`.
+
+pub mod router;
+pub mod scheduler;
+pub mod sim;
+pub mod slo;
+pub mod traffic;
+
+pub use router::{Policy, RouterConfig, ServingRouter};
+pub use scheduler::{Admission, MicroBatcher, SchedulerConfig};
+pub use sim::{run_scenario, Completion, ServeConfig, ServeOutcome};
+pub use slo::{ServeReport, SloTracker};
+pub use traffic::{Request, Scenario, TrafficConfig, TrafficGenerator};

@@ -1,0 +1,426 @@
+//! Capacity-aware per-layer serving router.
+//!
+//! Each MoE layer owns one [`RoutingStrategy`] (greedy / Loss-Free /
+//! BIP dual per batch / Algorithm 3 / Algorithm 4 — the last two wrap
+//! `bip::online::OnlineGate` and `bip::approx::ApproxGate`). The router
+//! then *enforces* a hard per-expert capacity per micro-batch:
+//! `cap = ceil(batch_n * k / m * capacity_factor)`. A token whose chosen
+//! expert is full is rerouted to its best-scoring expert with room (an
+//! overflow); if no distinct expert has room the slot is dropped (a
+//! degradation). Per-expert loads can therefore never exceed the cap —
+//! the property the tests pin — and balanced policies show up directly
+//! as fewer overflows and lower per-layer MaxVio.
+//!
+//! Device-level accounting runs against an expert-parallel
+//! [`Placement`]: static block placement by default, or periodically
+//! refreshed LPT placement from the observed cumulative loads.
+
+use crate::bip::Instance;
+use crate::metrics::maxvio::BalanceTracker;
+use crate::parallel::placement::{greedy_placement, Placement};
+use crate::parallel::Mesh;
+use crate::routing::{
+    ApproxBip, Bip, Greedy, LossFree, OnlineBip, RoutingStrategy,
+};
+use crate::util::stats::Summary;
+
+use super::traffic::Request;
+
+/// Which balancing policy every layer's gate runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Raw top-k — the unbalanced baseline.
+    Greedy,
+    /// Loss-Free additive bias (Wang et al., 2024).
+    LossFree,
+    /// Algorithm 1: warm-started dual ascent once per micro-batch.
+    BipBatch,
+    /// Algorithm 3: per-token online gate with exact top-heaps.
+    Online,
+    /// Algorithm 4: per-token online gate with constant-space histograms.
+    Approx,
+}
+
+impl Policy {
+    pub fn all() -> [Policy; 5] {
+        [
+            Policy::Greedy,
+            Policy::LossFree,
+            Policy::BipBatch,
+            Policy::Online,
+            Policy::Approx,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Greedy => "greedy",
+            Policy::LossFree => "lossfree",
+            Policy::BipBatch => "bip-batch",
+            Policy::Online => "bip-online",
+            Policy::Approx => "bip-approx",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "greedy" | "topk" => Some(Policy::Greedy),
+            "lossfree" | "loss-free" => Some(Policy::LossFree),
+            "bip" | "bip-batch" | "batch" => Some(Policy::BipBatch),
+            "online" | "bip-online" => Some(Policy::Online),
+            "approx" | "bip-approx" => Some(Policy::Approx),
+            _ => None,
+        }
+    }
+
+    /// BIP-balanced policies (vs the baselines).
+    pub fn is_bip(self) -> bool {
+        matches!(self, Policy::BipBatch | Policy::Online | Policy::Approx)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    pub m: usize,
+    pub k: usize,
+    pub n_layers: usize,
+    /// Algorithm 1/3/4 refinement iterations
+    pub t_iters: usize,
+    /// Algorithm 4 histogram buckets
+    pub buckets: usize,
+    /// total tokens the stream-level gates (Alg 3/4) size their expert
+    /// capacity against — typically the expected request count
+    pub expected_stream: usize,
+    /// per-batch per-expert cap = ceil(batch_n * k / m * capacity_factor)
+    pub capacity_factor: f64,
+    pub n_devices: usize,
+    /// Some(n): refresh the expert placement by LPT from cumulative
+    /// observed loads every n batches; None: static block placement
+    pub lpt_refresh: Option<u64>,
+    /// Loss-Free bias step size
+    pub lossfree_u: f32,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            m: 16,
+            k: 4,
+            n_layers: 4,
+            t_iters: 4,
+            buckets: 128,
+            expected_stream: 4096,
+            capacity_factor: 2.0,
+            n_devices: 4,
+            lpt_refresh: None,
+            lossfree_u: 1e-2,
+        }
+    }
+}
+
+/// Per-batch routing outcome the simulator consumes.
+#[derive(Clone, Debug)]
+pub struct BatchOutcome {
+    /// row-major (n_layers, m) routed loads
+    pub loads: Vec<f32>,
+    /// mean over layers of this batch's per-layer MaxVio
+    pub batch_vio: f64,
+    /// tokens rerouted because their chosen expert was full
+    pub overflow: u64,
+    /// expert slots dropped because no distinct expert had room
+    pub degraded: u64,
+    /// mean over layers of max-device-load / mean-device-load
+    pub device_imbalance: f64,
+}
+
+pub struct ServingRouter {
+    cfg: RouterConfig,
+    policy: Policy,
+    layers: Vec<Box<dyn RoutingStrategy>>,
+    pub placement: Placement,
+    /// cumulative per-expert load (summed over layers) for LPT refresh
+    cum_loads: Vec<f64>,
+    batches: u64,
+    pub overflow_total: u64,
+    pub degraded_total: u64,
+    pub balance: BalanceTracker,
+    pub imbalance: Summary,
+}
+
+impl ServingRouter {
+    pub fn new(policy: Policy, cfg: RouterConfig) -> ServingRouter {
+        assert!(cfg.m >= cfg.k && cfg.k >= 1 && cfg.n_layers >= 1);
+        assert!(cfg.m % cfg.n_devices == 0,
+                "experts {} must divide over devices {}", cfg.m,
+                cfg.n_devices);
+        assert!(cfg.capacity_factor >= 1.0);
+        assert!(
+            cfg.lpt_refresh.map_or(true, |n| n > 0),
+            "lpt_refresh must be >= 1 batch"
+        );
+        let gate_cap =
+            (cfg.expected_stream * cfg.k / cfg.m).max(1);
+        let layers: Vec<Box<dyn RoutingStrategy>> = (0..cfg.n_layers)
+            .map(|_| -> Box<dyn RoutingStrategy> {
+                match policy {
+                    Policy::Greedy => Box::new(Greedy),
+                    Policy::LossFree => {
+                        Box::new(LossFree::new(cfg.m, cfg.lossfree_u))
+                    }
+                    Policy::BipBatch => Box::new(Bip::new(cfg.t_iters)),
+                    Policy::Online => Box::new(OnlineBip::new(
+                        cfg.m, cfg.k, gate_cap, cfg.t_iters,
+                    )),
+                    Policy::Approx => Box::new(ApproxBip::new(
+                        cfg.m, cfg.k, gate_cap, cfg.t_iters, cfg.buckets,
+                    )),
+                }
+            })
+            .collect();
+        let placement =
+            Placement::block(&Mesh::new(cfg.n_devices, cfg.m));
+        let balance = BalanceTracker::new(cfg.n_layers, 0, cfg.k);
+        ServingRouter {
+            cum_loads: vec![0.0; cfg.m],
+            cfg,
+            policy,
+            layers,
+            placement,
+            batches: 0,
+            overflow_total: 0,
+            degraded_total: 0,
+            balance,
+            imbalance: Summary::new(),
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn policy_label(&self) -> String {
+        self.layers[0].name()
+    }
+
+    /// Hard per-expert cap for a batch of `n` tokens.
+    pub fn batch_cap(&self, n: usize) -> usize {
+        ((n * self.cfg.k) as f64 / self.cfg.m as f64
+            * self.cfg.capacity_factor)
+            .ceil()
+            .max(1.0) as usize
+    }
+
+    /// Persistent balancing state across all layers, bytes.
+    pub fn state_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.state_bytes()).sum()
+    }
+
+    /// Route one micro-batch through every layer, enforcing capacity.
+    pub fn route_batch(&mut self, batch: &[Request]) -> BatchOutcome {
+        let (m, k, n_layers) = (self.cfg.m, self.cfg.k, self.cfg.n_layers);
+        let n = batch.len();
+        assert!(n > 0);
+        // refresh BEFORE routing: this batch must be accounted and priced
+        // under the placement learned from *previous* batches, never one
+        // computed with hindsight from its own loads
+        if let Some(every) = self.cfg.lpt_refresh {
+            if self.batches > 0 && self.batches % every == 0 {
+                let profile: Vec<f32> =
+                    self.cum_loads.iter().map(|&x| x as f32).collect();
+                self.placement = greedy_placement(
+                    &profile,
+                    self.cfg.n_devices,
+                    Some(m / self.cfg.n_devices),
+                );
+            }
+        }
+        let cap = self.batch_cap(n);
+        let mut loads = vec![0.0f32; n_layers * m];
+        let mut overflow = 0u64;
+        let mut degraded = 0u64;
+        let mut imbalance_sum = 0.0;
+        let mut occ = vec![0u32; m];
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+
+        for l in 0..n_layers {
+            let mut scores = Vec::with_capacity(n * m);
+            for r in batch {
+                scores.extend_from_slice(r.layer_scores(l, m));
+            }
+            let inst = Instance { n, m, k, cap, scores };
+            let routing = self.layers[l].route_batch(&inst);
+
+            occ.iter_mut().for_each(|o| *o = 0);
+            for (i, experts) in routing.assignment.iter().enumerate() {
+                chosen.clear();
+                for &e in experts.iter().take(k) {
+                    let e = e as usize;
+                    if occ[e] < cap as u32 && !chosen.contains(&e) {
+                        chosen.push(e);
+                        occ[e] += 1;
+                        continue;
+                    }
+                    // full (or duplicate): reroute to the best-scoring
+                    // expert that still has room
+                    overflow += 1;
+                    let row = inst.row(i);
+                    let mut best: Option<usize> = None;
+                    for j in 0..m {
+                        if occ[j] < cap as u32
+                            && !chosen.contains(&j)
+                            && best.map_or(true, |b| row[j] > row[b])
+                        {
+                            best = Some(j);
+                        }
+                    }
+                    match best {
+                        Some(j) => {
+                            chosen.push(j);
+                            occ[j] += 1;
+                        }
+                        None => degraded += 1,
+                    }
+                }
+                let lrow = &mut loads[l * m..(l + 1) * m];
+                for &e in &chosen {
+                    lrow[e] += 1.0;
+                }
+            }
+            let lrow = &loads[l * m..(l + 1) * m];
+            imbalance_sum += self.placement.imbalance(lrow);
+            for (j, &x) in lrow.iter().enumerate() {
+                self.cum_loads[j] += x as f64;
+            }
+        }
+
+        self.balance.push_batch_sized(&loads, m, n);
+        let batch_vio = *self.balance.global_series.last().unwrap() as f64;
+        let device_imbalance = imbalance_sum / n_layers as f64;
+        self.imbalance.push(device_imbalance);
+        self.overflow_total += overflow;
+        self.degraded_total += degraded;
+        self.batches += 1;
+
+        BatchOutcome {
+            loads,
+            batch_vio,
+            overflow,
+            degraded,
+            device_imbalance,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::traffic::{Scenario, TrafficConfig, TrafficGenerator};
+
+    fn requests(scenario: Scenario, n: usize, seed: u64) -> Vec<Request> {
+        TrafficGenerator::new(TrafficConfig {
+            scenario,
+            n_requests: n,
+            seed,
+            ..Default::default()
+        })
+        .collect()
+    }
+
+    fn router(policy: Policy) -> ServingRouter {
+        ServingRouter::new(policy, RouterConfig::default())
+    }
+
+    #[test]
+    fn capacity_is_never_exceeded_under_any_policy() {
+        // the core property: whatever the strategy proposes, enforced
+        // per-expert loads stay within the hard cap — across policies,
+        // scenarios, and ragged batch sizes
+        let reqs = requests(Scenario::Adversarial, 300, 3);
+        for policy in Policy::all() {
+            let mut r = router(policy);
+            let mut start = 0;
+            for size in [64usize, 17, 3, 64, 64, 64, 24] {
+                let batch = &reqs[start..start + size];
+                start += size;
+                let cap = r.batch_cap(size) as f32;
+                let out = r.route_batch(batch);
+                for l in 0..4 {
+                    for &load in &out.loads[l * 16..(l + 1) * 16] {
+                        assert!(
+                            load <= cap,
+                            "{policy:?}: load {load} > cap {cap}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn work_is_conserved_across_layers() {
+        // routed slots + degraded slots == n * k * n_layers, exactly
+        let reqs = requests(Scenario::Bursty, 128, 4);
+        for policy in Policy::all() {
+            let mut r = router(policy);
+            let out = r.route_batch(&reqs);
+            let routed: f32 = out.loads.iter().sum();
+            assert_eq!(
+                routed as u64 + out.degraded,
+                128 * 4 * 4,
+                "{policy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bip_policies_overflow_less_than_greedy_on_skewed_traffic() {
+        let reqs = requests(Scenario::Steady, 512, 5);
+        let mut totals = Vec::new();
+        for policy in [Policy::Greedy, Policy::Online, Policy::BipBatch] {
+            let mut r = router(policy);
+            for chunk in reqs.chunks(64) {
+                r.route_batch(chunk);
+            }
+            totals.push((policy, r.overflow_total, r.balance.avg_max_vio()));
+        }
+        let (_, greedy_of, greedy_vio) = totals[0];
+        for &(policy, of, vio) in &totals[1..] {
+            assert!(
+                of < greedy_of,
+                "{policy:?} overflow {of} vs greedy {greedy_of}"
+            );
+            assert!(
+                vio < greedy_vio,
+                "{policy:?} vio {vio} vs greedy {greedy_vio}"
+            );
+        }
+    }
+
+    #[test]
+    fn lpt_refresh_improves_device_imbalance_for_greedy() {
+        let reqs = requests(Scenario::Steady, 768, 6);
+        let run = |lpt: Option<u64>| -> f64 {
+            let mut r = ServingRouter::new(
+                Policy::Greedy,
+                RouterConfig { lpt_refresh: lpt, ..Default::default() },
+            );
+            for chunk in reqs.chunks(64) {
+                r.route_batch(chunk);
+            }
+            r.imbalance.mean
+        };
+        let block = run(None);
+        let lpt = run(Some(2));
+        assert!(lpt < block, "lpt {lpt} block {block}");
+    }
+
+    #[test]
+    fn state_bytes_sum_layers() {
+        let mut r = router(Policy::Approx);
+        assert!(r.state_bytes() > 0);
+        let reqs = requests(Scenario::Steady, 64, 7);
+        let before = r.state_bytes();
+        r.route_batch(&reqs);
+        assert_eq!(r.state_bytes(), before); // Alg 4: constant space
+    }
+}

@@ -1,0 +1,229 @@
+//! Micro-batching scheduler: admission control, a bounded FIFO queue,
+//! and deadline-aware batch formation.
+//!
+//! Invariants the property tests pin:
+//!
+//! * **bounded queue** — an arrival beyond `queue_cap` is rejected at
+//!   admission, never silently queued;
+//! * **FIFO per tenant** — the queue is globally FIFO and batches close
+//!   from the head, so no two requests of one tenant ever reorder;
+//! * **work conservation** — every offered request is accounted exactly
+//!   once: `offered = admitted + rejected` and
+//!   `admitted = batched + expired + len(queue)` at every instant.
+
+use std::collections::VecDeque;
+
+use super::traffic::Request;
+
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// admission bound: arrivals beyond this queue depth are rejected
+    pub queue_cap: usize,
+    /// close a batch as soon as this many requests wait
+    pub batch_max: usize,
+    /// ... or as soon as the oldest waiter has waited this long
+    pub max_wait_us: u64,
+    /// drop queued requests whose deadline passed before service starts
+    pub drop_expired: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            queue_cap: 512,
+            batch_max: 64,
+            max_wait_us: 2_000,
+            drop_expired: true,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Admitted,
+    Rejected,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedStats {
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    /// admitted but dropped at batch formation (deadline already passed)
+    pub expired: u64,
+    pub batches: u64,
+    /// requests handed out in batches (serviced)
+    pub batched: u64,
+}
+
+pub struct MicroBatcher {
+    cfg: SchedulerConfig,
+    queue: VecDeque<Request>,
+    pub stats: SchedStats,
+}
+
+impl MicroBatcher {
+    pub fn new(cfg: SchedulerConfig) -> MicroBatcher {
+        assert!(cfg.batch_max >= 1 && cfg.queue_cap >= 1);
+        MicroBatcher { cfg, queue: VecDeque::new(), stats: SchedStats::default() }
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admission control: bounded queue, reject-on-full.
+    pub fn offer(&mut self, req: Request) -> Admission {
+        self.stats.offered += 1;
+        if self.queue.len() >= self.cfg.queue_cap {
+            self.stats.rejected += 1;
+            return Admission::Rejected;
+        }
+        self.stats.admitted += 1;
+        self.queue.push_back(req);
+        Admission::Admitted
+    }
+
+    /// Should a batch close now? True once the queue holds a full batch
+    /// or the oldest waiter has hit `max_wait_us`.
+    pub fn ready(&self, now_us: u64) -> bool {
+        if self.queue.len() >= self.cfg.batch_max {
+            return true;
+        }
+        self.queue
+            .front()
+            .map(|r| now_us >= r.arrival_us + self.cfg.max_wait_us)
+            .unwrap_or(false)
+    }
+
+    /// Earliest future instant at which `ready` turns true without any
+    /// new arrival (the event loop's flush timer). None when idle.
+    pub fn flush_at(&self) -> Option<u64> {
+        self.queue
+            .front()
+            .map(|r| r.arrival_us + self.cfg.max_wait_us)
+    }
+
+    /// Close a batch: up to `batch_max` requests from the head, in FIFO
+    /// order. Expired requests are dropped (and counted), not served.
+    pub fn take_batch(&mut self, now_us: u64) -> Vec<Request> {
+        let mut batch = Vec::new();
+        while batch.len() < self.cfg.batch_max {
+            let Some(req) = self.queue.pop_front() else { break };
+            if self.cfg.drop_expired && req.deadline_us < now_us {
+                self.stats.expired += 1;
+                continue;
+            }
+            batch.push(req);
+        }
+        if !batch.is_empty() {
+            self.stats.batches += 1;
+            self.stats.batched += batch.len() as u64;
+        }
+        batch
+    }
+
+    /// `offered = admitted + rejected` and
+    /// `admitted = batched + expired + queued` — must hold always.
+    pub fn conserves_work(&self) -> bool {
+        let s = &self.stats;
+        s.offered == s.admitted + s.rejected
+            && s.admitted
+                == s.batched + s.expired + self.queue.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, tenant: u32, arrival_us: u64, deadline_us: u64) -> Request {
+        Request { id, tenant, arrival_us, deadline_us, scores: Vec::new() }
+    }
+
+    #[test]
+    fn admission_control_bounds_the_queue() {
+        let mut b = MicroBatcher::new(SchedulerConfig {
+            queue_cap: 4,
+            ..Default::default()
+        });
+        for i in 0..10 {
+            b.offer(req(i, 0, i, i + 1000));
+        }
+        assert_eq!(b.queue_len(), 4);
+        assert_eq!(b.stats.admitted, 4);
+        assert_eq!(b.stats.rejected, 6);
+        assert!(b.conserves_work());
+    }
+
+    #[test]
+    fn batches_close_on_size_or_age() {
+        let mut b = MicroBatcher::new(SchedulerConfig {
+            batch_max: 3,
+            max_wait_us: 100,
+            ..Default::default()
+        });
+        b.offer(req(0, 0, 10, 10_000));
+        assert!(!b.ready(50));
+        assert_eq!(b.flush_at(), Some(110));
+        assert!(b.ready(110)); // age trigger
+        b.offer(req(1, 0, 20, 10_000));
+        b.offer(req(2, 0, 30, 10_000));
+        assert!(b.ready(31)); // size trigger
+        let batch = b.take_batch(31);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.flush_at(), None);
+        assert!(b.conserves_work());
+    }
+
+    #[test]
+    fn fifo_order_is_preserved_across_batches() {
+        let mut b = MicroBatcher::new(SchedulerConfig {
+            batch_max: 4,
+            ..Default::default()
+        });
+        for i in 0..10 {
+            b.offer(req(i, (i % 2) as u32, i, i + 100_000));
+        }
+        let mut seen = Vec::new();
+        while b.queue_len() > 0 {
+            seen.extend(b.take_batch(50).into_iter().map(|r| r.id));
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        assert!(b.conserves_work());
+    }
+
+    #[test]
+    fn expired_requests_are_dropped_and_counted() {
+        let mut b = MicroBatcher::new(SchedulerConfig {
+            batch_max: 8,
+            ..Default::default()
+        });
+        b.offer(req(0, 0, 0, 50)); // will be expired at t=100
+        b.offer(req(1, 0, 0, 500));
+        b.offer(req(2, 0, 0, 50)); // expired too
+        b.offer(req(3, 0, 0, 500));
+        let batch = b.take_batch(100);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(b.stats.expired, 2);
+        assert_eq!(b.stats.batched, 2);
+        assert!(b.conserves_work());
+    }
+
+    #[test]
+    fn drop_expired_can_be_disabled() {
+        let mut b = MicroBatcher::new(SchedulerConfig {
+            drop_expired: false,
+            ..Default::default()
+        });
+        b.offer(req(0, 0, 0, 50));
+        let batch = b.take_batch(100);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(b.stats.expired, 0);
+        assert!(b.conserves_work());
+    }
+}

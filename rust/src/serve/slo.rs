@@ -1,0 +1,222 @@
+//! SLO accounting for the serving stack: latency percentiles,
+//! throughput/goodput, and the balance + capacity counters that tie the
+//! report back to the paper's MaxVio metric.
+
+use crate::util::json::Json;
+use crate::util::stats::quantile;
+
+/// Collects per-request latencies and deadline outcomes.
+#[derive(Clone, Debug, Default)]
+pub struct SloTracker {
+    pub slo_us: u64,
+    latencies_us: Vec<f64>,
+    pub completed: u64,
+    /// completed, but after the deadline
+    pub violations: u64,
+    pub last_completion_us: u64,
+}
+
+impl SloTracker {
+    pub fn new(slo_us: u64) -> SloTracker {
+        SloTracker { slo_us, ..Default::default() }
+    }
+
+    pub fn record(
+        &mut self,
+        arrival_us: u64,
+        completion_us: u64,
+        deadline_us: u64,
+    ) {
+        self.latencies_us
+            .push(completion_us.saturating_sub(arrival_us) as f64);
+        self.completed += 1;
+        if completion_us > deadline_us {
+            self.violations += 1;
+        }
+        self.last_completion_us = self.last_completion_us.max(completion_us);
+    }
+
+    /// Latency quantile in microseconds (0.0 when nothing completed).
+    pub fn latency_us(&self, q: f64) -> f64 {
+        if self.latencies_us.is_empty() {
+            0.0
+        } else {
+            quantile(&self.latencies_us, q)
+        }
+    }
+
+    /// Completed requests per second of virtual time.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.last_completion_us == 0 {
+            0.0
+        } else {
+            self.completed as f64
+                / (self.last_completion_us as f64 / 1e6)
+        }
+    }
+
+    /// Requests completed *within* their deadline, per second.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.last_completion_us == 0 {
+            0.0
+        } else {
+            (self.completed - self.violations) as f64
+                / (self.last_completion_us as f64 / 1e6)
+        }
+    }
+}
+
+/// Everything one (scenario, policy) serving run reports.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub scenario: String,
+    pub policy: String,
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub expired: u64,
+    pub completed: u64,
+    pub slo_violations: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub throughput_rps: f64,
+    pub goodput_rps: f64,
+    /// AvgMaxVio / SupMaxVio over micro-batches (mean over layers)
+    pub avg_max_vio: f64,
+    pub sup_max_vio: f64,
+    pub overflow: u64,
+    pub degraded: u64,
+    pub device_imbalance: f64,
+    pub state_bytes: usize,
+    pub horizon_s: f64,
+}
+
+impl ServeReport {
+    pub fn headers() -> &'static [&'static str] {
+        &[
+            "Policy", "Done", "Drop", "p50ms", "p95ms", "p99ms",
+            "Req/s", "AvgMaxVio", "SupMaxVio", "Overflow", "DevImb",
+            "StateKB",
+        ]
+    }
+
+    pub fn table_row(&self) -> Vec<String> {
+        vec![
+            self.policy.clone(),
+            format!("{}", self.completed),
+            format!("{}", self.rejected + self.expired),
+            format!("{:.2}", self.p50_ms),
+            format!("{:.2}", self.p95_ms),
+            format!("{:.2}", self.p99_ms),
+            format!("{:.0}", self.throughput_rps),
+            format!("{:.4}", self.avg_max_vio),
+            format!("{:.4}", self.sup_max_vio),
+            format!("{}", self.overflow),
+            format!("{:.3}", self.device_imbalance),
+            format!("{:.1}", self.state_bytes as f64 / 1024.0),
+        ]
+    }
+
+    /// `admitted = completed + expired` — nothing vanishes in flight.
+    pub fn conserves_work(&self) -> bool {
+        self.offered == self.admitted + self.rejected
+            && self.admitted == self.completed + self.expired
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("offered", Json::Num(self.offered as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("expired", Json::Num(self.expired as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("slo_violations", Json::Num(self.slo_violations as f64)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+            ("avg_max_vio", Json::Num(self.avg_max_vio)),
+            ("sup_max_vio", Json::Num(self.sup_max_vio)),
+            ("overflow", Json::Num(self.overflow as f64)),
+            ("degraded", Json::Num(self.degraded as f64)),
+            ("device_imbalance", Json::Num(self.device_imbalance)),
+            ("state_bytes", Json::Num(self.state_bytes as f64)),
+            ("horizon_s", Json::Num(self.horizon_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_percentiles_and_rates() {
+        let mut t = SloTracker::new(1_000);
+        // 100 requests, latencies 1..=100 us, arrivals at 0
+        for i in 1..=100u64 {
+            t.record(0, i, 1_000);
+        }
+        assert_eq!(t.completed, 100);
+        assert_eq!(t.violations, 0);
+        assert!((t.latency_us(0.5) - 50.5).abs() < 1e-9);
+        assert!(t.latency_us(0.99) > 98.0);
+        // horizon = last completion = 100us -> 100 / 1e-4 s = 1e6 req/s
+        assert!((t.throughput_rps() - 1e6).abs() < 1.0);
+        assert_eq!(t.throughput_rps(), t.goodput_rps());
+    }
+
+    #[test]
+    fn deadline_violations_split_goodput() {
+        let mut t = SloTracker::new(10);
+        t.record(0, 5, 10); // in time
+        t.record(0, 50, 10); // violated
+        assert_eq!(t.violations, 1);
+        assert!(t.goodput_rps() < t.throughput_rps());
+    }
+
+    #[test]
+    fn empty_tracker_is_quiet() {
+        let t = SloTracker::new(10);
+        assert_eq!(t.latency_us(0.99), 0.0);
+        assert_eq!(t.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn report_json_and_table_row_agree() {
+        let r = ServeReport {
+            scenario: "steady".into(),
+            policy: "bip-online".into(),
+            offered: 100,
+            admitted: 90,
+            rejected: 10,
+            expired: 5,
+            completed: 85,
+            slo_violations: 2,
+            p50_ms: 1.5,
+            p95_ms: 3.0,
+            p99_ms: 4.0,
+            throughput_rps: 1000.0,
+            goodput_rps: 980.0,
+            avg_max_vio: 0.12,
+            sup_max_vio: 0.5,
+            overflow: 7,
+            degraded: 0,
+            device_imbalance: 1.1,
+            state_bytes: 2048,
+            horizon_s: 0.085,
+        };
+        assert!(r.conserves_work());
+        assert_eq!(r.table_row().len(), ServeReport::headers().len());
+        let j = r.to_json();
+        assert_eq!(j.path("completed").unwrap().as_usize(), Some(85));
+        assert_eq!(j.path("policy").unwrap().as_str(), Some("bip-online"));
+        // round-trips through the emitter
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(re.path("avg_max_vio").unwrap().as_f64(), Some(0.12));
+    }
+}

@@ -1,0 +1,385 @@
+//! Scenario-diverse synthetic request traffic for the serving stack.
+//!
+//! A [`TrafficGenerator`] is an iterator of timestamped [`Request`]s.
+//! Both the arrival process and the expert-affinity profile are
+//! scenario-driven, so one serving pipeline can be stressed with calm
+//! steady load, Poisson bursts, diurnal ramps, adversarially *drifting*
+//! expert skew (the worst case for stale balancer state), and
+//! multi-tenant mixes where every tenant prefers different experts.
+//! All randomness flows from a seeded [`Pcg64`]; a (config, seed) pair
+//! reproduces the identical stream.
+
+use crate::util::rng::Pcg64;
+
+/// Virtual-time unit used across `serve/`: microseconds.
+pub const US_PER_SEC: f64 = 1e6;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Deterministic interarrivals at the mean rate, static mild skew.
+    Steady,
+    /// Markov-modulated Poisson: calm phases broken by 8x burst episodes.
+    Bursty,
+    /// Sinusoidal rate ramp — three full "days" over the run.
+    Diurnal,
+    /// Steady arrivals, but the strongly-preferred hot-expert set rotates
+    /// through the run, invalidating whatever the balancer has learned.
+    Adversarial,
+    /// Poisson mix of tenants with Zipf-ish weights, each tenant with its
+    /// own hot experts.
+    MultiTenant,
+}
+
+impl Scenario {
+    pub fn all() -> [Scenario; 5] {
+        [
+            Scenario::Steady,
+            Scenario::Bursty,
+            Scenario::Diurnal,
+            Scenario::Adversarial,
+            Scenario::MultiTenant,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Bursty => "bursty",
+            Scenario::Diurnal => "diurnal",
+            Scenario::Adversarial => "adversarial",
+            Scenario::MultiTenant => "multitenant",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s.to_ascii_lowercase().as_str() {
+            "steady" => Some(Scenario::Steady),
+            "bursty" | "burst" => Some(Scenario::Bursty),
+            "diurnal" => Some(Scenario::Diurnal),
+            "adversarial" | "adv" => Some(Scenario::Adversarial),
+            "multitenant" | "multi-tenant" | "tenants" => {
+                Some(Scenario::MultiTenant)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    pub scenario: Scenario,
+    pub n_requests: usize,
+    /// mean offered load, requests per second of virtual time
+    pub rate_per_s: f64,
+    pub n_layers: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n_tenants: usize,
+    /// per-request latency SLO; deadline = arrival + slo
+    pub slo_us: u64,
+    /// per-logit Gaussian noise scale before the softmax (same
+    /// convention as `Instance::synthetic`'s `temp`): larger = noisier
+    /// per-token preferences around the scenario's fixed skew, NOT a
+    /// softmax temperature
+    pub temp: f64,
+    /// strength of the scenario's expert-affinity skew
+    pub skew: f64,
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            scenario: Scenario::Steady,
+            n_requests: 4096,
+            rate_per_s: 100_000.0,
+            n_layers: 4,
+            m: 16,
+            k: 4,
+            n_tenants: 4,
+            slo_us: 20_000,
+            temp: 2.0,
+            skew: 3.5,
+            seed: 1,
+        }
+    }
+}
+
+/// One inference request: a token with per-layer router scores.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tenant: u32,
+    pub arrival_us: u64,
+    pub deadline_us: u64,
+    /// row-major (n_layers, m) softmax router scores
+    pub scores: Vec<f32>,
+}
+
+impl Request {
+    pub fn layer_scores(&self, layer: usize, m: usize) -> &[f32] {
+        &self.scores[layer * m..(layer + 1) * m]
+    }
+}
+
+pub struct TrafficGenerator {
+    cfg: TrafficConfig,
+    rng: Pcg64,
+    clock_us: f64,
+    emitted: usize,
+    /// requests remaining in the current burst episode (Bursty)
+    burst_left: u32,
+    /// (n_tenants, n_layers, m) affinity logits
+    affinity: Vec<f64>,
+    /// tenant sampling weights (MultiTenant)
+    tenant_w: Vec<f64>,
+}
+
+fn exp_sample(rng: &mut Pcg64) -> f64 {
+    -(1.0 - rng.next_f64()).ln()
+}
+
+impl TrafficGenerator {
+    pub fn new(cfg: TrafficConfig) -> TrafficGenerator {
+        assert!(cfg.rate_per_s > 0.0 && cfg.m >= cfg.k && cfg.k >= 1);
+        let mut rng = Pcg64::with_stream(cfg.seed, 0x5e21);
+        let t = cfg.n_tenants.max(1);
+        let (l, m) = (cfg.n_layers, cfg.m);
+        let mut affinity = vec![0.0f64; t * l * m];
+        match cfg.scenario {
+            // static linear skew shared by every tenant and layer — every
+            // token prefers the low-index experts (the paper's hard case)
+            Scenario::Steady | Scenario::Bursty | Scenario::Diurnal => {
+                for slot in affinity.chunks_mut(m) {
+                    for (j, a) in slot.iter_mut().enumerate() {
+                        *a = cfg.skew * (m - 1 - j) as f64
+                            / (m - 1).max(1) as f64;
+                    }
+                }
+            }
+            // the hot set is injected per request (it rotates); the base
+            // affinity stays flat
+            Scenario::Adversarial => {}
+            // each (tenant, layer) draws its own hot quarter of experts
+            Scenario::MultiTenant => {
+                let hot = (m / 4).max(1);
+                for slot in affinity.chunks_mut(m) {
+                    let mut order: Vec<usize> = (0..m).collect();
+                    rng.shuffle(&mut order);
+                    for &j in &order[..hot] {
+                        slot[j] = cfg.skew;
+                    }
+                    for a in slot.iter_mut() {
+                        *a += rng.normal() * 0.3;
+                    }
+                }
+            }
+        }
+        let tenant_w: Vec<f64> =
+            (0..t).map(|i| 1.0 / (i + 1) as f64).collect();
+        TrafficGenerator {
+            cfg,
+            rng,
+            clock_us: 0.0,
+            emitted: 0,
+            burst_left: 0,
+            affinity,
+            tenant_w,
+        }
+    }
+
+    pub fn config(&self) -> &TrafficConfig {
+        &self.cfg
+    }
+
+    fn interarrival_us(&mut self) -> f64 {
+        let base = US_PER_SEC / self.cfg.rate_per_s;
+        match self.cfg.scenario {
+            Scenario::Steady | Scenario::Adversarial => base,
+            Scenario::Bursty => {
+                if self.burst_left == 0 && self.rng.next_f64() < 0.02 {
+                    self.burst_left = 64;
+                }
+                let mult = if self.burst_left > 0 {
+                    self.burst_left -= 1;
+                    8.0
+                } else {
+                    0.875
+                };
+                exp_sample(&mut self.rng) * base / mult
+            }
+            Scenario::Diurnal => {
+                let period =
+                    (self.cfg.n_requests as f64 * base / 3.0).max(base);
+                let phase = self.clock_us / period
+                    * std::f64::consts::TAU;
+                let mult = 0.3 + 0.7 * (1.0 + phase.sin());
+                exp_sample(&mut self.rng) * base / mult
+            }
+            Scenario::MultiTenant => exp_sample(&mut self.rng) * base,
+        }
+    }
+
+    fn pick_tenant(&mut self) -> usize {
+        let t = self.cfg.n_tenants.max(1);
+        match self.cfg.scenario {
+            Scenario::MultiTenant => self.rng.weighted(&self.tenant_w),
+            _ => self.emitted % t,
+        }
+    }
+
+    /// Adversarial drift: which expert offset the hot quarter starts at
+    /// for the current position in the stream (8 rotations per run).
+    fn adversarial_phase(&self) -> usize {
+        let n = self.cfg.n_requests.max(1);
+        let hot = (self.cfg.m / 4).max(1);
+        (self.emitted * 8 / n) * hot % self.cfg.m
+    }
+
+    fn scores_for(&mut self, tenant: usize) -> Vec<f32> {
+        let (l_count, m) = (self.cfg.n_layers, self.cfg.m);
+        let adversarial = self.cfg.scenario == Scenario::Adversarial;
+        let (phase, hot) = (self.adversarial_phase(), (m / 4).max(1));
+        let mut out = Vec::with_capacity(l_count * m);
+        let mut logits = vec![0.0f64; m];
+        for l in 0..l_count {
+            let base = &self.affinity[(tenant * l_count + l) * m..][..m];
+            for j in 0..m {
+                let mut a = base[j];
+                if adversarial && (j + m - phase) % m < hot {
+                    a += self.cfg.skew + 2.0;
+                }
+                logits[j] = self.rng.normal() * self.cfg.temp + a;
+            }
+            let maxv = logits.iter().cloned().fold(f64::MIN, f64::max);
+            let mut total = 0.0;
+            for x in logits.iter_mut() {
+                *x = (*x - maxv).exp();
+                total += *x;
+            }
+            for x in &logits {
+                out.push((x / total) as f32);
+            }
+        }
+        out
+    }
+}
+
+impl Iterator for TrafficGenerator {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.emitted >= self.cfg.n_requests {
+            return None;
+        }
+        self.clock_us += self.interarrival_us();
+        let tenant = self.pick_tenant();
+        let scores = self.scores_for(tenant);
+        let arrival_us = self.clock_us as u64;
+        let req = Request {
+            id: self.emitted as u64,
+            tenant: tenant as u32,
+            arrival_us,
+            deadline_us: arrival_us + self.cfg.slo_us,
+            scores,
+        };
+        self.emitted += 1;
+        Some(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(scenario: Scenario) -> TrafficConfig {
+        TrafficConfig { scenario, n_requests: 512, seed: 9, ..Default::default() }
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_ordered() {
+        for scenario in Scenario::all() {
+            let a: Vec<Request> =
+                TrafficGenerator::new(cfg(scenario)).collect();
+            let b: Vec<Request> =
+                TrafficGenerator::new(cfg(scenario)).collect();
+            assert_eq!(a.len(), 512);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival_us, y.arrival_us);
+                assert_eq!(x.scores, y.scores);
+                assert_eq!(x.tenant, y.tenant);
+            }
+            for w in a.windows(2) {
+                assert!(w[0].arrival_us <= w[1].arrival_us);
+                assert!(w[0].id < w[1].id);
+            }
+            for r in &a {
+                assert_eq!(r.deadline_us, r.arrival_us + 20_000);
+            }
+        }
+    }
+
+    #[test]
+    fn scores_are_per_layer_softmax() {
+        let gen = TrafficGenerator::new(cfg(Scenario::MultiTenant));
+        for r in gen.take(16) {
+            for l in 0..4 {
+                let row = r.layer_scores(l, 16);
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-4);
+                assert!(row.iter().all(|&s| s >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_hot_set_rotates() {
+        let reqs: Vec<Request> =
+            TrafficGenerator::new(cfg(Scenario::Adversarial)).collect();
+        let m = 16;
+        let hot_expert = |r: &Request| -> usize {
+            let row = r.layer_scores(0, m);
+            (0..m).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+                .unwrap()
+        };
+        // modal hot expert early vs late must differ (the set rotated)
+        let mode = |rs: &[Request]| -> usize {
+            let mut counts = vec![0usize; m];
+            for r in rs {
+                counts[hot_expert(r)] += 1;
+            }
+            (0..m).max_by_key(|&j| counts[j]).unwrap()
+        };
+        assert_ne!(mode(&reqs[..64]), mode(&reqs[448..]));
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_steady() {
+        let gaps = |scenario| -> Vec<f64> {
+            let reqs: Vec<Request> =
+                TrafficGenerator::new(cfg(scenario)).collect();
+            reqs.windows(2)
+                .map(|w| (w[1].arrival_us - w[0].arrival_us) as f64)
+                .collect()
+        };
+        let cv = |xs: &[f64]| -> f64 {
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+                / xs.len() as f64;
+            var.sqrt() / mean
+        };
+        assert!(cv(&gaps(Scenario::Bursty)) > cv(&gaps(Scenario::Steady)) + 0.5);
+    }
+
+    #[test]
+    fn multitenant_prefers_heavy_tenants_and_varies_affinity() {
+        let reqs: Vec<Request> =
+            TrafficGenerator::new(cfg(Scenario::MultiTenant)).collect();
+        let mut counts = vec![0usize; 4];
+        for r in &reqs {
+            counts[r.tenant as usize] += 1;
+        }
+        assert!(counts[0] > counts[3], "{counts:?}");
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+    }
+}

@@ -1,0 +1,154 @@
+//! End-to-end serving integration: small bursty scenarios through the
+//! full traffic -> admission -> micro-batch -> BIP router -> SLO
+//! pipeline, plus the cross-policy claims the ISSUE pins:
+//!
+//!   * work conservation (offered = admitted + rejected,
+//!     admitted = completed + expired) for every policy;
+//!   * per-expert capacity is a hard bound (checked in the router's own
+//!     property tests; here the overflow accounting must stay finite);
+//!   * at equal throughput, the BIP-balanced policies show strictly
+//!     lower per-expert max-violation than greedy top-k;
+//!   * no reordering within a tenant;
+//!   * Algorithm 4's state stays small while Algorithm 3's grows.
+
+use bip_moe::serve::{
+    run_scenario, Policy, RouterConfig, SchedulerConfig, Scenario,
+    ServeConfig, ServeOutcome, TrafficConfig,
+};
+
+fn config(scenario: Scenario, policy: Policy) -> ServeConfig {
+    ServeConfig::new(
+        TrafficConfig {
+            scenario,
+            n_requests: 3_000,
+            rate_per_s: 60_000.0,
+            n_layers: 2,
+            slo_us: 25_000,
+            seed: 7,
+            ..Default::default()
+        },
+        SchedulerConfig {
+            queue_cap: 256,
+            batch_max: 64,
+            max_wait_us: 1_500,
+            drop_expired: true,
+        },
+        RouterConfig::default(),
+        policy,
+    )
+}
+
+fn run(scenario: Scenario, policy: Policy) -> ServeOutcome {
+    run_scenario(&config(scenario, policy))
+}
+
+#[test]
+fn bursty_end_to_end_bip_beats_greedy_at_equal_throughput() {
+    let greedy = run(Scenario::Bursty, Policy::Greedy);
+    let online = run(Scenario::Bursty, Policy::Online);
+    let approx = run(Scenario::Bursty, Policy::Approx);
+    let batch = run(Scenario::Bursty, Policy::BipBatch);
+
+    // equal throughput: the load is moderate, every policy serves the
+    // whole stream — same offered, same completed
+    for out in [&greedy, &online, &approx, &batch] {
+        assert!(out.report.conserves_work(), "{:?}", out.report);
+        assert_eq!(out.report.offered, 3_000);
+        assert_eq!(out.report.rejected, 0, "{}", out.report.policy);
+        assert_eq!(out.report.completed, 3_000, "{}", out.report.policy);
+        assert!(out.report.throughput_rps > 0.0);
+    }
+
+    // the paper's claim, at serving time: strictly lower per-expert
+    // max-violation for every BIP-balanced policy
+    let gv = greedy.report.avg_max_vio;
+    for out in [&online, &approx, &batch] {
+        assert!(
+            out.report.avg_max_vio < gv,
+            "{} vio {} !< greedy {gv}",
+            out.report.policy,
+            out.report.avg_max_vio
+        );
+    }
+    // and strictly fewer capacity overflows
+    for out in [&online, &approx, &batch] {
+        assert!(
+            out.report.overflow < greedy.report.overflow,
+            "{} overflow {} !< greedy {}",
+            out.report.policy,
+            out.report.overflow,
+            greedy.report.overflow
+        );
+    }
+}
+
+#[test]
+fn every_policy_conserves_work_on_every_scenario() {
+    for scenario in Scenario::all() {
+        for policy in Policy::all() {
+            let out = run(scenario, policy);
+            assert!(
+                out.report.conserves_work(),
+                "{}/{}: {:?}",
+                scenario.name(),
+                policy.name(),
+                out.report
+            );
+            assert_eq!(
+                out.report.completed,
+                out.completions.len() as u64
+            );
+            assert!(out.report.p50_ms <= out.report.p95_ms);
+            assert!(out.report.p95_ms <= out.report.p99_ms);
+        }
+    }
+}
+
+#[test]
+fn tenants_are_never_reordered() {
+    for policy in [Policy::Greedy, Policy::Online] {
+        let out = run(Scenario::MultiTenant, policy);
+        let mut last_id = std::collections::BTreeMap::new();
+        for c in &out.completions {
+            if let Some(&prev) = last_id.get(&c.tenant) {
+                assert!(
+                    c.id > prev,
+                    "tenant {} saw {} after {}",
+                    c.tenant,
+                    c.id,
+                    prev
+                );
+            }
+            last_id.insert(c.tenant, c.id);
+        }
+        assert!(last_id.len() > 1, "want multiple tenants exercised");
+    }
+}
+
+#[test]
+fn approx_state_is_smaller_than_online_on_long_streams() {
+    let online = run(Scenario::Steady, Policy::Online);
+    let approx = run(Scenario::Steady, Policy::Approx);
+    assert!(
+        approx.report.state_bytes < online.report.state_bytes,
+        "approx {} !< online {}",
+        approx.report.state_bytes,
+        online.report.state_bytes
+    );
+    // and the constant-space policy still balances
+    assert!(approx.report.avg_max_vio < 1.0);
+}
+
+#[test]
+fn adversarial_drift_is_survivable() {
+    // rotating hot experts: the online balancer must still beat greedy
+    // on average, even though each rotation resets its advantage
+    let greedy = run(Scenario::Adversarial, Policy::Greedy);
+    let online = run(Scenario::Adversarial, Policy::Online);
+    assert!(
+        online.report.avg_max_vio < greedy.report.avg_max_vio,
+        "online {} !< greedy {}",
+        online.report.avg_max_vio,
+        greedy.report.avg_max_vio
+    );
+}
