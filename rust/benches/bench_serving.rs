@@ -15,9 +15,9 @@
 use bip_moe::bench::{write_bench_json, Bencher};
 use bip_moe::metrics::TablePrinter;
 use bip_moe::serve::{
-    run_scenario, Policy, Request, RouterConfig, SchedulerConfig,
-    Scenario, ServeConfig, ServeReport, ServingRouter, TrafficConfig,
-    TrafficGenerator,
+    run_replicated, run_scenario, Policy, ReplicaConfig, Request,
+    RouterConfig, SchedulerConfig, Scenario, ServeConfig, ServeReport,
+    ServingRouter, TrafficConfig, TrafficGenerator,
 };
 use bip_moe::util::json::Json;
 
@@ -89,6 +89,93 @@ fn main() {
         table.print();
     }
     json_results.push(Json::obj(vec![("sweep", Json::Arr(sweep_rows))]));
+
+    // Replica scaling: R routers behind one queue on a 4-thread pool,
+    // bursty traffic offered well above one server's service rate so
+    // the set — not the arrival process — is the bottleneck. The
+    // virtual-time micro-batches/sec must scale with R (the acceptance
+    // bar: R=4 >= 2x R=1) while the policy ordering
+    // (bip-* < lossfree < greedy on MaxVio) holds at every R.
+    println!("\n== replica scaling sweep (bursty, saturating load) ==");
+    // longer stream than the SLO sweep: under saturation the routed
+    // batch count scales with the arrival window, and the policy
+    // ordering needs enough batches per replica to be stable
+    let sweep_requests = if full { 65_536 } else { 16_384 };
+    let mut replica_rows = Vec::new();
+    for &r in &[1usize, 2, 4] {
+        let mut table = TablePrinter::new(
+            &format!("replicas={r} threads=4 sync_every=8"),
+            &["Policy", "Batches", "Batches/vs", "Done", "AvgMaxVio",
+              "SupMaxVio", "Syncs", "Wall_s"],
+        );
+        for policy in Policy::all() {
+            let cfg = ServeConfig::new(
+                TrafficConfig {
+                    scenario: Scenario::Bursty,
+                    n_requests: sweep_requests,
+                    rate_per_s: 2_000_000.0,
+                    seed: 2,
+                    slo_us: 500_000,
+                    ..Default::default()
+                },
+                SchedulerConfig::default(),
+                RouterConfig::default(),
+                policy,
+            );
+            let rcfg = ReplicaConfig {
+                replicas: r,
+                threads: 4,
+                sync_every: 8,
+            };
+            let t0 = std::time::Instant::now();
+            let out = run_replicated(&cfg, &rcfg);
+            let wall_s = t0.elapsed().as_secs_f64();
+            let batches_per_vs = if out.report.horizon_s > 0.0 {
+                out.batches as f64 / out.report.horizon_s
+            } else {
+                0.0
+            };
+            table.row(vec![
+                out.report.policy.clone(),
+                format!("{}", out.batches),
+                format!("{batches_per_vs:.0}"),
+                format!("{}", out.report.completed),
+                format!("{:.4}", out.report.avg_max_vio),
+                format!("{:.4}", out.report.sup_max_vio),
+                format!("{}", out.syncs.len()),
+                format!("{wall_s:.2}"),
+            ]);
+            replica_rows.push(Json::obj(vec![
+                ("replicas", Json::Num(r as f64)),
+                ("threads", Json::Num(4.0)),
+                ("sync_every", Json::Num(8.0)),
+                ("policy", Json::Str(out.report.policy.clone())),
+                ("scenario", Json::Str("bursty".into())),
+                ("batches", Json::Num(out.batches as f64)),
+                ("batches_per_vsec", Json::Num(batches_per_vs)),
+                ("completed", Json::Num(out.report.completed as f64)),
+                ("avg_max_vio", Json::Num(out.report.avg_max_vio)),
+                ("sup_max_vio", Json::Num(out.report.sup_max_vio)),
+                ("overflow", Json::Num(out.report.overflow as f64)),
+                ("horizon_s", Json::Num(out.report.horizon_s)),
+                ("syncs", Json::Num(out.syncs.len() as f64)),
+                (
+                    "sync_div_before_last",
+                    Json::Num(
+                        out.syncs
+                            .last()
+                            .map_or(0.0, |s| s.state_div_before),
+                    ),
+                ),
+                ("wall_s", Json::Num(wall_s)),
+            ]));
+        }
+        table.print();
+    }
+    json_results.push(Json::obj(vec![(
+        "replica_sweep",
+        Json::Arr(replica_rows),
+    )]));
 
     match write_bench_json("serving", Json::Arr(json_results)) {
         Ok(path) => println!("perf record: {}", path.display()),

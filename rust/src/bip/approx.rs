@@ -47,6 +47,26 @@ impl Histogram {
         }
     }
 
+    /// The raw bucket counts — the mergeable payload the replica-sync
+    /// protocol ships between gates.
+    pub fn counts(&self) -> &[u32] {
+        &self.counts
+    }
+
+    /// Replace the contents with the given bucket counts, rebuilding
+    /// the suffix sums and total. Used by the replica merge path.
+    pub fn set_counts(&mut self, counts: &[u32]) {
+        assert_eq!(counts.len(), self.counts.len());
+        self.counts.copy_from_slice(counts);
+        self.total = counts.iter().map(|&c| c as u64).sum();
+        // above[l] = count of values recorded in buckets > l
+        let mut running = 0u64;
+        for l in (0..self.counts.len()).rev() {
+            self.above[l] = running;
+            running += self.counts[l] as u64;
+        }
+    }
+
     /// Interpolated value of the `rank`-th largest recorded value
     /// (1-based); None if fewer than `rank` values recorded.
     /// Alg. 4 line 12: find bucket l containing the rank, interpolate
@@ -168,6 +188,19 @@ impl ApproxGate {
         chosen
     }
 
+    /// Per-expert histogram bucket counts, for replica state export.
+    pub fn hist_counts(&self) -> Vec<Vec<u32>> {
+        self.hists.iter().map(|h| h.counts().to_vec()).collect()
+    }
+
+    /// Replace every expert histogram's contents (replica merge path).
+    pub fn set_hist_counts(&mut self, counts: &[Vec<u32>]) {
+        assert_eq!(counts.len(), self.hists.len());
+        for (h, c) in self.hists.iter_mut().zip(counts) {
+            h.set_counts(c);
+        }
+    }
+
     /// O(m·b) — independent of how many tokens have streamed through.
     pub fn state_bytes(&self) -> usize {
         self.hists
@@ -234,6 +267,27 @@ mod tests {
         h.push(1.5); // clamps into last bucket
         assert_eq!(h.total, 1);
         assert!(h.kth_largest(1).unwrap() > 0.74);
+    }
+
+    #[test]
+    fn set_counts_round_trips_rank_queries() {
+        let mut rng = Pcg64::new(5);
+        let mut hist = Histogram::new(32);
+        for _ in 0..200 {
+            hist.push(rng.next_f32());
+        }
+        let mut rebuilt = Histogram::new(32);
+        rebuilt.set_counts(hist.counts());
+        assert_eq!(rebuilt.total, hist.total);
+        for rank in [1u64, 7, 100, 200, 201] {
+            assert_eq!(rebuilt.kth_largest(rank), hist.kth_largest(rank));
+        }
+        for x in [0.3f32, -0.1, 0.99] {
+            assert_eq!(
+                rebuilt.kth_largest_with(x, 50),
+                hist.kth_largest_with(x, 50)
+            );
+        }
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //! the paper's gate sizes — the "very small time costs" claim the solver
 //! bench quantifies.
 
+use std::sync::Mutex;
+
 use super::{Instance, Routing};
+use crate::util::pool::Pool;
 use crate::util::stats::{
     f32_order_key, kth_largest_keys, topk_indices,
 };
@@ -82,6 +85,134 @@ impl DualState {
         }
     }
 
+    /// Shared-pool variant of [`DualState::update`]: the p-phase is
+    /// chunked over token rows and the q-phase over expert columns.
+    /// Every chunk evaluates exactly the serial per-element recurrence
+    /// (a quickselect over the same multiset yields the same order
+    /// statistic regardless of partitioning), so `q`, `p` and the
+    /// subsequent routing are bit-identical to the serial path — the
+    /// equivalence tests pin this.
+    pub fn update_parallel(
+        &mut self,
+        inst: &Instance,
+        t_iters: usize,
+        pool: &Pool,
+    ) {
+        if pool.threads() <= 1 {
+            return self.update(inst, t_iters);
+        }
+        let (n, m, k, cap) = (inst.n, inst.m, inst.k, inst.cap);
+        let kk = (k + 1).min(m);
+        let cc = (cap + 1).min(n);
+        self.p.resize(n, 0.0);
+        // the serial path keeps these as persistent scratch; size them
+        // identically so state_bytes() reports the same footprint on
+        // either path
+        self.scratch_row.resize(m, 0);
+        self.scratch_col.resize(n, 0);
+        self.scores_t.resize(n * m, 0.0);
+        let row_chunks = chunk_bounds(n, pool.threads());
+        let col_chunks = chunk_bounds(m, pool.threads());
+        // each phase gathers per-chunk results through a Mutex and
+        // copies them back — one extra O(len) copy and a handful of
+        // small allocations per phase, deliberately paid to keep the
+        // chunk jobs free of aliased &mut into self (the quickselect
+        // itself is O(n·m) per iteration and dominates)
+
+        // transpose once per batch, column blocks in parallel
+        {
+            let parts: Mutex<Vec<Option<Vec<f32>>>> =
+                Mutex::new(vec![None; col_chunks.len()]);
+            let job = |c: usize| {
+                let (j0, j1) = col_chunks[c];
+                let mut block = vec![0.0f32; (j1 - j0) * n];
+                for i in 0..n {
+                    let row = inst.row(i);
+                    for j in j0..j1 {
+                        block[(j - j0) * n + i] = row[j];
+                    }
+                }
+                parts.lock().unwrap()[c] = Some(block);
+            };
+            pool.scoped_run(col_chunks.len(), &job);
+            let parts = parts.into_inner().unwrap();
+            for (c, part) in parts.into_iter().enumerate() {
+                let (j0, j1) = col_chunks[c];
+                self.scores_t[j0 * n..j1 * n]
+                    .copy_from_slice(&part.expect("transpose chunk"));
+            }
+        }
+
+        for _ in 0..t_iters {
+            // p_i = max(0, (k+1)-th largest of s_i - q): rows are
+            // independent given q
+            {
+                let q = &self.q;
+                let parts: Mutex<Vec<Option<Vec<f32>>>> =
+                    Mutex::new(vec![None; row_chunks.len()]);
+                let job = |c: usize| {
+                    let (i0, i1) = row_chunks[c];
+                    let mut keys = vec![0u32; m];
+                    let mut vals = vec![0.0f32; i1 - i0];
+                    for i in i0..i1 {
+                        let row = inst.row(i);
+                        for j in 0..m {
+                            keys[j] = f32_order_key(row[j] - q[j]);
+                        }
+                        vals[i - i0] =
+                            kth_largest_keys(&mut keys, kk).max(0.0);
+                    }
+                    parts.lock().unwrap()[c] = Some(vals);
+                };
+                pool.scoped_run(row_chunks.len(), &job);
+                let parts = parts.into_inner().unwrap();
+                for (c, part) in parts.into_iter().enumerate() {
+                    let (i0, i1) = row_chunks[c];
+                    self.p[i0..i1]
+                        .copy_from_slice(&part.expect("p chunk"));
+                }
+            }
+            // q_j = max(0, (cap+1)-th largest of s_·j - p): columns are
+            // independent given p
+            {
+                let p = &self.p;
+                let scores_t = &self.scores_t;
+                let parts: Mutex<Vec<Option<Vec<f32>>>> =
+                    Mutex::new(vec![None; col_chunks.len()]);
+                let job = |c: usize| {
+                    let (j0, j1) = col_chunks[c];
+                    let mut keys = vec![0u32; n];
+                    let mut vals = vec![0.0f32; j1 - j0];
+                    for j in j0..j1 {
+                        let col = &scores_t[j * n..(j + 1) * n];
+                        for i in 0..n {
+                            keys[i] = f32_order_key(col[i] - p[i]);
+                        }
+                        vals[j - j0] =
+                            kth_largest_keys(&mut keys, cc).max(0.0);
+                    }
+                    parts.lock().unwrap()[c] = Some(vals);
+                };
+                pool.scoped_run(col_chunks.len(), &job);
+                let parts = parts.into_inner().unwrap();
+                for (c, part) in parts.into_iter().enumerate() {
+                    let (j0, j1) = col_chunks[c];
+                    self.q[j0..j1]
+                        .copy_from_slice(&part.expect("q chunk"));
+                }
+            }
+        }
+    }
+
+    /// Bytes of persistent solver state: the duals plus every buffer
+    /// retained between batches (column-major score copy + quickselect
+    /// scratch) — the full O(n·m) footprint Algorithm 1 carries, which
+    /// the serving report compares against Alg 3/4's bounded state.
+    pub fn state_bytes(&self) -> usize {
+        (self.q.len() + self.p.len() + self.scores_t.len()) * 4
+            + (self.scratch_row.len() + self.scratch_col.len()) * 4
+    }
+
     /// Route with the current duals: Topk(s_i - q, k) per token, gate
     /// weight = original score (Alg. 1 line 13).
     pub fn route(&self, inst: &Instance) -> Routing {
@@ -100,6 +231,20 @@ impl DualState {
             .collect();
         Routing { assignment }
     }
+}
+
+/// Contiguous `[start, end)` ranges splitting `n` items into at most
+/// `chunks` near-equal pieces (never empty, covers exactly `0..n`).
+fn chunk_bounds(n: usize, chunks: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunks = chunks.clamp(1, n);
+    let size = (n + chunks - 1) / chunks;
+    (0..n)
+        .step_by(size)
+        .map(|a| (a, (a + size).min(n)))
+        .collect()
 }
 
 /// One-shot convenience: T iterations from cold start, then route.
@@ -190,6 +335,67 @@ mod tests {
         let vio_t1 = solve(&inst, 1).0.max_violation(&inst);
         let vio_t8 = solve(&inst, 8).0.max_violation(&inst);
         assert!(vio_t8 <= vio_t1 + 0.05, "t1 {vio_t1} t8 {vio_t8}");
+    }
+
+    #[test]
+    fn chunk_bounds_partition_exactly() {
+        for (n, c) in [(10usize, 3usize), (1, 4), (16, 16), (257, 4),
+                       (5, 1), (0, 3)] {
+            let bounds = chunk_bounds(n, c);
+            let mut covered = 0;
+            for (i, &(a, b)) in bounds.iter().enumerate() {
+                assert!(a < b, "empty chunk n={n} c={c}");
+                assert_eq!(a, covered, "gap n={n} c={c} chunk {i}");
+                covered = b;
+            }
+            assert_eq!(covered, n);
+            assert!(bounds.len() <= c.max(1));
+        }
+    }
+
+    #[test]
+    fn parallel_update_is_bit_identical_to_serial() {
+        // the tentpole equivalence claim: chunked p/q phases produce
+        // exactly the serial duals and routing, across seeds, T values,
+        // warm-started multi-batch streams, and ragged sizes
+        let pool = Pool::new(3);
+        for seed in [0u64, 3, 11] {
+            for t in [1usize, 2, 5] {
+                let mut serial = DualState::new(16);
+                let mut parallel = DualState::new(16);
+                for b in 0..3 {
+                    // 257 tokens: not divisible by the chunk count
+                    let inst =
+                        synth(1000 * seed + b, 257, 16, 4, 3.0);
+                    serial.update(&inst, t);
+                    parallel.update_parallel(&inst, t, &pool);
+                    assert_eq!(serial.q, parallel.q,
+                               "q diverged seed={seed} t={t} b={b}");
+                    assert_eq!(serial.p, parallel.p,
+                               "p diverged seed={seed} t={t} b={b}");
+                    assert_eq!(
+                        serial.route(&inst).assignment,
+                        parallel.route(&inst).assignment,
+                        "routing diverged seed={seed} t={t} b={b}"
+                    );
+                    assert_eq!(serial.state_bytes(),
+                               parallel.state_bytes());
+                }
+            }
+        }
+        pool.join();
+    }
+
+    #[test]
+    fn state_bytes_count_every_persistent_buffer() {
+        let mut state = DualState::new(16);
+        // before any batch: just q
+        assert_eq!(state.state_bytes(), 16 * 4);
+        let inst = synth(0, 128, 16, 4, 2.0);
+        state.update(&inst, 2);
+        // q + p + scores_t + row/col quickselect scratch, all 4-byte
+        let expect = (16 + 128 + 128 * 16) * 4 + (16 + 128) * 4;
+        assert_eq!(state.state_bytes(), expect);
     }
 
     #[test]

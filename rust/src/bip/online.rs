@@ -70,6 +70,16 @@ impl TopHeap {
         }
     }
 
+    /// The kept values, unordered (heap layout) — the mergeable payload
+    /// the replica-sync protocol ships between gates.
+    pub fn values(&self) -> &[f32] {
+        &self.heap
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
     /// Insert permanently, evicting the smallest if over bound.
     pub fn push(&mut self, x: f32) {
         if self.heap.len() < self.bound {
@@ -171,6 +181,26 @@ impl OnlineGate {
             self.heaps[j].push(scores[j] - p);
         }
         chosen
+    }
+
+    /// Contents of every expert's top-heap (unordered), for replica
+    /// state export.
+    pub fn heap_values(&self) -> Vec<Vec<f32>> {
+        self.heaps.iter().map(|h| h.values().to_vec()).collect()
+    }
+
+    /// Rebuild every heap from the given per-expert value multisets.
+    /// The bounded push keeps exactly the `cap+1` largest of each
+    /// multiset, whatever the insertion order — so a union of replica
+    /// heaps merges deterministically and stays bounded across syncs.
+    pub fn rebuild_heaps(&mut self, values: &[Vec<f32>]) {
+        assert_eq!(values.len(), self.heaps.len());
+        for (h, vals) in self.heaps.iter_mut().zip(values) {
+            h.clear();
+            for &v in vals {
+                h.push(v);
+            }
+        }
     }
 
     /// Bytes of state held (the O(n k) growth §5.2 worries about).

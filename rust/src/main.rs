@@ -85,6 +85,7 @@ fn print_help() {
                  [--batch N] [--queue N] [--max-wait-us U] [--slo-ms MS]\n\
                  [--capacity-factor F] [--devices D] [--placement\n\
                  block|lpt] [--lpt-refresh BATCHES] [--seed N]\n\
+                 [--replicas R] [--threads T] [--sync-every BATCHES]\n\
                  [--json PATH]\n\
          info   [--artifacts DIR]",
         bip_moe::VERSION
@@ -311,7 +312,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "scenario", "policy", "requests", "rate", "m", "k", "layers",
         "tenants", "t", "buckets", "batch", "queue", "max-wait-us",
         "slo-ms", "capacity-factor", "devices", "placement",
-        "lpt-refresh", "seed", "json",
+        "lpt-refresh", "seed", "replicas", "threads", "sync-every",
+        "json",
     ])
     .map_err(anyhow::Error::msg)?;
 
@@ -376,12 +378,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
 
+    let replicas = args.usize_or("replicas", 1);
+    let threads = args.usize_or("threads", 1);
+    let sync_every = args.u64_or("sync-every", 16);
+    if replicas == 0 {
+        bail!("--replicas must be >= 1");
+    }
+
     let mut json_rows = Vec::new();
     for &scenario in &scenarios {
         let mut table = TablePrinter::new(
             &format!(
                 "serving {} — {} requests at {:.0}/s, m={} k={} L={} \
-                 batch<={} cf={}",
+                 batch<={} cf={} R={}",
                 scenario.name(),
                 traffic.n_requests,
                 traffic.rate_per_s,
@@ -390,9 +399,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 traffic.n_layers,
                 sched.batch_max,
                 router.capacity_factor,
+                replicas,
             ),
             ServeReport::headers(),
         );
+        let mut replica_tables = Vec::new();
         for &policy in &policies {
             let cfg = ServeConfig::new(
                 TrafficConfig { scenario, ..traffic.clone() },
@@ -400,11 +411,88 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 router.clone(),
                 policy,
             );
-            let outcome = serve::run_scenario(&cfg);
-            table.row(outcome.report.table_row());
-            json_rows.push(outcome.report.to_json());
+            if replicas > 1 || threads > 1 {
+                let rcfg = serve::ReplicaConfig {
+                    replicas,
+                    threads,
+                    sync_every,
+                };
+                let outcome = serve::run_replicated(&cfg, &rcfg);
+                table.row(outcome.report.table_row());
+                let mut pr_table = TablePrinter::new(
+                    &format!(
+                        "replicas — {} on {} ({} batches, {} syncs)",
+                        outcome.report.policy,
+                        scenario.name(),
+                        outcome.batches,
+                        outcome.syncs.len(),
+                    ),
+                    bip_moe::serve::ReplicaSummary::headers(),
+                );
+                for p in &outcome.per_replica {
+                    pr_table.row(p.table_row());
+                }
+                replica_tables.push(pr_table);
+                let mut row = outcome.report.to_json();
+                if let bip_moe::util::Json::Obj(map) = &mut row {
+                    map.insert(
+                        "replicas".into(),
+                        bip_moe::util::Json::Num(replicas as f64),
+                    );
+                    map.insert(
+                        "threads".into(),
+                        bip_moe::util::Json::Num(threads as f64),
+                    );
+                    map.insert(
+                        "sync_every".into(),
+                        bip_moe::util::Json::Num(sync_every as f64),
+                    );
+                    map.insert(
+                        "batches".into(),
+                        bip_moe::util::Json::Num(outcome.batches as f64),
+                    );
+                    map.insert(
+                        "syncs".into(),
+                        bip_moe::util::Json::Num(
+                            outcome.syncs.len() as f64,
+                        ),
+                    );
+                    map.insert(
+                        "per_replica".into(),
+                        bip_moe::util::Json::Arr(
+                            outcome
+                                .per_replica
+                                .iter()
+                                .map(|p| p.to_json())
+                                .collect(),
+                        ),
+                    );
+                    if let Some(last) = outcome.syncs.last() {
+                        map.insert(
+                            "last_sync_div_before".into(),
+                            bip_moe::util::Json::Num(
+                                last.state_div_before,
+                            ),
+                        );
+                        map.insert(
+                            "last_sync_div_after".into(),
+                            bip_moe::util::Json::Num(
+                                last.state_div_after,
+                            ),
+                        );
+                    }
+                }
+                json_rows.push(row);
+            } else {
+                let outcome = serve::run_scenario(&cfg);
+                table.row(outcome.report.table_row());
+                json_rows.push(outcome.report.to_json());
+            }
         }
         table.print();
+        for t in replica_tables {
+            t.print();
+        }
     }
 
     if let Some(path) = args.get("json") {

@@ -3,9 +3,15 @@
 use crate::util::stats::Summary;
 
 /// MaxVio for one batch on one gate: max_j load_j / (n k / m) - 1.
+/// An empty batch (n_tokens = 0) has no violation by definition — the
+/// unguarded division would push inf/NaN through every downstream
+/// Summary (the serving path can produce all-expired micro-batches).
 pub fn max_violation(loads: &[f32], n_tokens: usize, k: usize) -> f64 {
     let m = loads.len();
     let mean = n_tokens as f64 * k as f64 / m as f64;
+    if mean <= 0.0 {
+        return 0.0;
+    }
     let max = loads.iter().cloned().fold(f32::MIN, f32::max) as f64;
     max / mean - 1.0
 }
@@ -58,6 +64,11 @@ impl BalanceTracker {
         n_tokens: usize,
     ) {
         assert_eq!(loads.len(), self.n_layers * m);
+        if n_tokens == 0 {
+            // nothing was routed: recording would divide by a zero mean
+            // load and poison the run averages with inf/NaN
+            return;
+        }
         let mut sum = 0.0;
         for l in 0..self.n_layers {
             let vio = max_violation(
@@ -129,6 +140,24 @@ mod tests {
     fn wrong_width_panics() {
         let mut t = BalanceTracker::new(2, 8, 2);
         t.push_batch(&[1.0; 7], 4);
+    }
+
+    #[test]
+    fn empty_batches_are_skipped_not_nan() {
+        // regression: an all-expired micro-batch (0 tokens) divided by
+        // a zero mean load and pushed inf into the SLO report
+        assert_eq!(max_violation(&[0.0, 0.0, 0.0, 0.0], 0, 2), 0.0);
+        assert_eq!(max_violation(&[3.0, 0.0, 0.0, 0.0], 0, 2), 0.0);
+        let mut t = BalanceTracker::new(2, 0, 2);
+        t.push_batch_sized(&[0.0; 8], 4, 0);
+        assert_eq!(t.batches(), 0, "empty batch must not be recorded");
+        assert_eq!(t.global_series.len(), 0);
+        t.push_batch_sized(&[2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0], 4, 4);
+        t.push_batch_sized(&[0.0; 8], 4, 0);
+        assert_eq!(t.batches(), 1);
+        assert!(t.avg_max_vio().is_finite());
+        assert!(t.sup_max_vio().is_finite());
+        assert!((t.avg_max_vio() - 0.0).abs() < 1e-12);
     }
 
     #[test]

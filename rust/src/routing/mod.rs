@@ -5,14 +5,69 @@
 //! that sweep routing policies without touching PJRT, and (b) equivalence
 //! tests against the in-graph implementations through the probe artifact.
 
+use std::sync::Arc;
+
 use crate::bip::approx::ApproxGate;
 use crate::bip::dual::DualState;
 use crate::bip::online::OnlineGate;
 use crate::bip::{Instance, Routing};
+use crate::util::pool::Pool;
 use crate::util::stats::topk_indices;
 
+/// Snapshot of a strategy's *mergeable* balancing state, exchanged by
+/// the replica-sharded serving engine (`serve::replica`). Every policy's
+/// shareable core is tiny — an O(m) dual/bias vector plus, for the
+/// online gates, the bounded per-expert order-statistic sketch — which
+/// is what makes periodic cross-replica reconciliation cheap.
+#[derive(Clone, Debug)]
+pub enum BalanceState {
+    /// stateless (greedy, aux-loss mirror) or not-yet-initialized
+    None,
+    /// Loss-Free additive bias b (Wang et al. 2024)
+    Bias(Vec<f32>),
+    /// Algorithm 1 dual vector q
+    Dual(Vec<f32>),
+    /// Algorithm 3: duals + per-expert top-heap contents
+    Online { q: Vec<f32>, heaps: Vec<Vec<f32>> },
+    /// Algorithm 4: duals + per-expert histogram bucket counts
+    Approx { q: Vec<f32>, hists: Vec<Vec<u32>> },
+}
+
+impl BalanceState {
+    /// The policy's primary dual/bias vector, if it has one — what the
+    /// replica engine measures divergence over.
+    pub fn primary(&self) -> Option<&[f32]> {
+        match self {
+            BalanceState::None => None,
+            BalanceState::Bias(b) => Some(b),
+            BalanceState::Dual(q) => Some(q),
+            BalanceState::Online { q, .. } => Some(q),
+            BalanceState::Approx { q, .. } => Some(q),
+        }
+    }
+}
+
+/// Element-wise mean of same-length vectors (replica order is fixed, so
+/// the f32 summation order — hence the result — is deterministic).
+fn mean_vec(vecs: &[&[f32]]) -> Vec<f32> {
+    let r = vecs.len() as f32;
+    let mut out = vec![0.0f32; vecs[0].len()];
+    for v in vecs {
+        for (o, x) in out.iter_mut().zip(v.iter()) {
+            *o += *x;
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= r;
+    }
+    out
+}
+
 /// A stateful routing policy over a stream of score batches.
-pub trait RoutingStrategy {
+///
+/// `Send` is a supertrait: the serving engine moves per-replica routers
+/// across its worker threads.
+pub trait RoutingStrategy: Send {
     fn name(&self) -> String;
     /// Route one batch, updating internal state (bias vectors etc.).
     fn route_batch(&mut self, inst: &Instance) -> Routing;
@@ -21,6 +76,17 @@ pub trait RoutingStrategy {
     fn state_bytes(&self) -> usize {
         0
     }
+    /// Snapshot the mergeable balance state (None for stateless
+    /// policies). Cheap: O(m) vectors plus bounded sketches.
+    fn export_state(&self) -> BalanceState {
+        BalanceState::None
+    }
+    /// Reconcile with the exported states of *all* replicas (self
+    /// included). Every replica receives the identical slice, and the
+    /// merge is a deterministic function of it, so replicas leave the
+    /// sync with identical balance state. States of a foreign variant
+    /// or shape are ignored; a no-op by default.
+    fn merge_state(&mut self, _states: &[BalanceState]) {}
 }
 
 /// Plain top-k on raw scores.
@@ -110,7 +176,13 @@ impl RoutingStrategy for LossFree {
         let loads = routing.loads(inst.m);
         let mean = inst.n as f32 * inst.k as f32 / inst.m as f32;
         for j in 0..inst.m {
-            self.bias[j] += self.u * (mean - loads[j] as f32).signum();
+            // b_j += u * sign(e_j) with sign(0) = 0, per Wang et al. —
+            // f32::signum(0.0) is 1.0, which would *raise* the bias of
+            // an expert sitting exactly at the mean load
+            let e = mean - loads[j] as f32;
+            if e != 0.0 {
+                self.bias[j] += self.u * e.signum();
+            }
         }
         routing
     }
@@ -118,18 +190,48 @@ impl RoutingStrategy for LossFree {
     fn state_bytes(&self) -> usize {
         self.bias.len() * 4
     }
+
+    fn export_state(&self) -> BalanceState {
+        BalanceState::Bias(self.bias.clone())
+    }
+
+    /// Replica merge: element-wise mean of every replica's bias — each
+    /// replica saw a shard of the traffic, and the averaged bias is the
+    /// bias a single router would have learned from the blended stream
+    /// (the sign updates are additive and commutative).
+    fn merge_state(&mut self, states: &[BalanceState]) {
+        let biases: Vec<&[f32]> = states
+            .iter()
+            .filter_map(|s| match s {
+                BalanceState::Bias(b) if b.len() == self.bias.len() => {
+                    Some(b.as_slice())
+                }
+                _ => None,
+            })
+            .collect();
+        if !biases.is_empty() {
+            self.bias = mean_vec(&biases);
+        }
+    }
 }
 
 /// BIP-Based Balancing (Algorithm 1): warm-started dual state + T
-/// iterations per batch.
+/// iterations per batch. With a shared thread pool attached, the
+/// per-batch dual update runs the chunked p/q phases
+/// ([`DualState::update_parallel`]) — bit-identical to the serial path.
 pub struct Bip {
     pub t_iters: usize,
     state: Option<DualState>,
+    pool: Option<Arc<Pool>>,
 }
 
 impl Bip {
     pub fn new(t_iters: usize) -> Self {
-        Bip { t_iters, state: None }
+        Bip { t_iters, state: None, pool: None }
+    }
+
+    pub fn with_pool(t_iters: usize, pool: Arc<Pool>) -> Self {
+        Bip { t_iters, state: None, pool: Some(pool) }
     }
 
     pub fn q(&self) -> Option<&[f32]> {
@@ -146,15 +248,55 @@ impl RoutingStrategy for Bip {
         let state = self
             .state
             .get_or_insert_with(|| DualState::new(inst.m));
-        state.update(inst, self.t_iters);
+        match &self.pool {
+            Some(pool) => {
+                state.update_parallel(inst, self.t_iters, pool)
+            }
+            None => state.update(inst, self.t_iters),
+        }
         state.route(inst)
     }
 
     fn state_bytes(&self) -> usize {
-        self.state
-            .as_ref()
-            .map(|s| (s.q.len() + s.p.len()) * 4)
-            .unwrap_or(0)
+        // every persistent buffer, not just q + p: Algorithm 1 retains
+        // an O(n·m) transposed score copy + scratch between batches,
+        // which is exactly the footprint the serving report contrasts
+        // with Alg 3/4's bounded state
+        self.state.as_ref().map(|s| s.state_bytes()).unwrap_or(0)
+    }
+
+    fn export_state(&self) -> BalanceState {
+        match &self.state {
+            Some(s) => BalanceState::Dual(s.q.clone()),
+            None => BalanceState::None,
+        }
+    }
+
+    /// Replica merge: element-wise mean of the dual vectors q. The dual
+    /// update is a fixed-point iteration warm-started from q, so every
+    /// replica restarts from the blended duals (a replica that has not
+    /// routed yet adopts them wholesale).
+    fn merge_state(&mut self, states: &[BalanceState]) {
+        let qs: Vec<&[f32]> = states
+            .iter()
+            .filter_map(|s| match s {
+                BalanceState::Dual(q) => Some(q.as_slice()),
+                _ => None,
+            })
+            .collect();
+        if qs.is_empty() {
+            return;
+        }
+        let m = qs[0].len();
+        if qs.iter().any(|q| q.len() != m) {
+            return;
+        }
+        let merged = mean_vec(&qs);
+        let state =
+            self.state.get_or_insert_with(|| DualState::new(m));
+        if state.q.len() == m {
+            state.q = merged;
+        }
     }
 }
 
@@ -187,6 +329,52 @@ impl RoutingStrategy for OnlineBip {
 
     fn state_bytes(&self) -> usize {
         self.gate.state_bytes()
+    }
+
+    fn export_state(&self) -> BalanceState {
+        BalanceState::Online {
+            q: self.gate.q.clone(),
+            heaps: self.gate.heap_values(),
+        }
+    }
+
+    /// Replica merge: mean the duals, and merge the per-expert
+    /// top-heaps as a *scaled* union — concatenate every replica's
+    /// retained values, sort descending, keep every R-th. A plain
+    /// union would re-contribute the post-sync shared content R times
+    /// at every sync (replicas leave a sync with identical heaps),
+    /// letting duplicated historical maxima crowd out fresh values and
+    /// inflate the (cap+1)-th-largest statistic that sets q. Thinning
+    /// by R is idempotent when replicas are identical, keeps the
+    /// sketch at single-shard scale (matching the per-replica cap),
+    /// and the bounded rebuild keeps it from ever growing.
+    fn merge_state(&mut self, states: &[BalanceState]) {
+        let m = self.gate.m;
+        let mut qs: Vec<&[f32]> = Vec::new();
+        let mut unions: Vec<Vec<f32>> = vec![Vec::new(); m];
+        for s in states {
+            if let BalanceState::Online { q, heaps } = s {
+                if q.len() != m || heaps.len() != m {
+                    continue;
+                }
+                qs.push(q);
+                for (j, h) in heaps.iter().enumerate() {
+                    unions[j].extend_from_slice(h);
+                }
+            }
+        }
+        if qs.is_empty() {
+            return;
+        }
+        let r = qs.len();
+        for u in unions.iter_mut() {
+            u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let thinned: Vec<f32> =
+                u.iter().copied().step_by(r).collect();
+            *u = thinned;
+        }
+        self.gate.q = mean_vec(&qs);
+        self.gate.rebuild_heaps(&unions);
     }
 }
 
@@ -226,6 +414,56 @@ impl RoutingStrategy for ApproxBip {
 
     fn state_bytes(&self) -> usize {
         self.gate.state_bytes()
+    }
+
+    fn export_state(&self) -> BalanceState {
+        BalanceState::Approx {
+            q: self.gate.q.clone(),
+            hists: self.gate.hist_counts(),
+        }
+    }
+
+    /// Replica merge: mean the duals, and merge the histograms as a
+    /// *scaled* union — element-wise rounded mean of the bucket counts.
+    /// A plain count union would multiply the totals by R at every sync
+    /// (each replica re-contributing the previous union), blowing up
+    /// the rank scale; the mean keeps the sketch at single-stream scale
+    /// while still blending every replica's observations.
+    fn merge_state(&mut self, states: &[BalanceState]) {
+        let m = self.gate.m;
+        let b = self.buckets;
+        let mut qs: Vec<&[f32]> = Vec::new();
+        let mut sums: Vec<Vec<u64>> = vec![vec![0u64; b]; m];
+        for s in states {
+            if let BalanceState::Approx { q, hists } = s {
+                if q.len() != m
+                    || hists.len() != m
+                    || hists.iter().any(|h| h.len() != b)
+                {
+                    continue;
+                }
+                qs.push(q);
+                for (j, h) in hists.iter().enumerate() {
+                    for (acc, &c) in sums[j].iter_mut().zip(h) {
+                        *acc += c as u64;
+                    }
+                }
+            }
+        }
+        if qs.is_empty() {
+            return;
+        }
+        let r = qs.len() as u64;
+        let merged: Vec<Vec<u32>> = sums
+            .into_iter()
+            .map(|row| {
+                row.into_iter()
+                    .map(|s| ((s + r / 2) / r) as u32)
+                    .collect()
+            })
+            .collect();
+        self.gate.q = mean_vec(&qs);
+        self.gate.set_hist_counts(&merged);
     }
 }
 
@@ -350,6 +588,161 @@ mod tests {
         let mut bip = Bip::new(2);
         assert_eq!(bip.state_bytes(), 0);
         bip.route_batch(&insts[0]);
-        assert!(bip.state_bytes() > 0);
+        // the full Algorithm 1 footprint: q + p + the O(n·m) transposed
+        // score copy + quickselect scratch (not just q + p)
+        let (n, m) = (insts[0].n, insts[0].m);
+        let expect = (m + n + n * m) * 4 + (m + n) * 4;
+        assert_eq!(bip.state_bytes(), expect);
+        // and it dwarfs the online gates' bounded state, which is the
+        // §5.2 comparison the serving report draws
+        assert!(bip.state_bytes() > online.state_bytes());
+    }
+
+    #[test]
+    fn lossfree_zero_error_takes_zero_step() {
+        // a perfectly balanced batch: token i prefers expert i, k=1,
+        // so every load equals the mean load of 1 — no bias may move
+        let m = 4;
+        let mut scores = vec![0.0f32; m * m];
+        for i in 0..m {
+            scores[i * m + i] = 1.0;
+        }
+        let inst = Instance { n: m, m, k: 1, cap: m, scores };
+        let mut lf = LossFree::new(m, 0.1);
+        lf.route_batch(&inst);
+        assert_eq!(
+            lf.bias,
+            vec![0.0; m],
+            "sign(0) must be 0: balanced experts keep their bias"
+        );
+    }
+
+    #[test]
+    fn lossfree_merge_averages_biases() {
+        let insts = batches(21, 6);
+        let mut a = LossFree::new(16, 1e-2);
+        let mut b = LossFree::new(16, 1e-2);
+        for inst in &insts[..3] {
+            a.route_batch(inst);
+        }
+        for inst in &insts[3..] {
+            b.route_batch(inst);
+        }
+        let states = [a.export_state(), b.export_state()];
+        let want: Vec<f32> = a
+            .bias
+            .iter()
+            .zip(&b.bias)
+            .map(|(x, y)| (x + y) / 2.0)
+            .collect();
+        a.merge_state(&states);
+        b.merge_state(&states);
+        assert_eq!(a.bias, want);
+        assert_eq!(a.bias, b.bias, "replicas must leave the sync equal");
+    }
+
+    #[test]
+    fn bip_merge_averages_duals_and_seeds_cold_replicas() {
+        let insts = batches(22, 4);
+        let mut a = Bip::new(3);
+        let mut cold = Bip::new(3);
+        for inst in &insts {
+            a.route_batch(inst);
+        }
+        assert!(matches!(cold.export_state(), BalanceState::None));
+        let states = [a.export_state(), cold.export_state()];
+        let q_before = a.q().unwrap().to_vec();
+        a.merge_state(&states);
+        cold.merge_state(&states);
+        // only one Dual state in the slice: the mean is just a's q,
+        // and the cold replica adopts it wholesale
+        assert_eq!(a.q().unwrap(), q_before.as_slice());
+        assert_eq!(cold.q().unwrap(), q_before.as_slice());
+    }
+
+    #[test]
+    fn online_and_approx_merges_leave_replicas_identical() {
+        let insts = batches(23, 6);
+        let (m, k, cap) = (16usize, 4usize, 512usize);
+        let mut on_a = OnlineBip::new(m, k, cap, 3);
+        let mut on_b = OnlineBip::new(m, k, cap, 3);
+        let mut ap_a = ApproxBip::new(m, k, cap, 3, 64);
+        let mut ap_b = ApproxBip::new(m, k, cap, 3, 64);
+        for inst in &insts[..3] {
+            on_a.route_batch(inst);
+            ap_a.route_batch(inst);
+        }
+        for inst in &insts[3..] {
+            on_b.route_batch(inst);
+            ap_b.route_batch(inst);
+        }
+        let on_states = [on_a.export_state(), on_b.export_state()];
+        on_a.merge_state(&on_states);
+        on_b.merge_state(&on_states);
+        assert_eq!(on_a.gate.q, on_b.gate.q);
+        let (mut ha, mut hb) =
+            (on_a.gate.heap_values(), on_b.gate.heap_values());
+        for (a, b) in ha.iter_mut().zip(hb.iter_mut()) {
+            a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        }
+        assert_eq!(ha, hb, "merged heaps must hold the same multiset");
+        // heap union stays bounded: re-merging cannot grow the state
+        let bytes = on_a.state_bytes();
+        let again = [on_a.export_state(), on_b.export_state()];
+        on_a.merge_state(&again);
+        assert_eq!(on_a.state_bytes(), bytes);
+
+        let ap_states = [ap_a.export_state(), ap_b.export_state()];
+        ap_a.merge_state(&ap_states);
+        ap_b.merge_state(&ap_states);
+        assert_eq!(ap_a.gate.q, ap_b.gate.q);
+        assert_eq!(ap_a.gate.hist_counts(), ap_b.gate.hist_counts());
+        // scaled union: merged totals stay at single-stream scale
+        let total: u64 = ap_a
+            .gate
+            .hist_counts()
+            .iter()
+            .flat_map(|h| h.iter().map(|&c| c as u64))
+            .sum();
+        let single: u64 = ap_states
+            .iter()
+            .map(|s| match s {
+                BalanceState::Approx { hists, .. } => hists
+                    .iter()
+                    .flat_map(|h| h.iter().map(|&c| c as u64))
+                    .sum::<u64>(),
+                _ => 0,
+            })
+            .max()
+            .unwrap();
+        assert!(
+            total <= single + (16 * 64) as u64,
+            "merged totals {total} must not exceed one stream {single} \
+             beyond rounding"
+        );
+    }
+
+    #[test]
+    fn greedy_export_is_none_and_merge_is_noop() {
+        let mut g = Greedy;
+        assert!(matches!(g.export_state(), BalanceState::None));
+        g.merge_state(&[BalanceState::Bias(vec![1.0; 4])]);
+        assert_eq!(g.state_bytes(), 0);
+    }
+
+    #[test]
+    fn bip_with_pool_routes_identically_to_serial() {
+        let insts = batches(24, 4);
+        let pool = std::sync::Arc::new(crate::util::pool::Pool::new(3));
+        let mut serial = Bip::new(3);
+        let mut parallel = Bip::with_pool(3, pool);
+        for inst in &insts {
+            let a = serial.route_batch(inst);
+            let b = parallel.route_batch(inst);
+            assert_eq!(a.assignment, b.assignment);
+        }
+        assert_eq!(serial.q().unwrap(), parallel.q().unwrap());
+        assert_eq!(serial.state_bytes(), parallel.state_bytes());
     }
 }

@@ -16,18 +16,26 @@
 //! * [`slo`] — latency percentiles, throughput/goodput, MaxVio reuse;
 //! * [`sim`] — the virtual-time event loop tying it together, with
 //!   service times from `parallel::ServeCost` so imbalance costs
-//!   latency the way a straggling device would.
+//!   latency the way a straggling device would;
+//! * [`replica`] — the replica-sharded thread-parallel engine: R
+//!   router replicas behind one admission queue, least-work dispatch
+//!   on the shared `util::pool::Pool`, and periodic mergeable-state
+//!   reconciliation (`RoutingStrategy::export_state`/`merge_state`).
 //!
 //! Driven by the `bip-moe serve` subcommand and `bench_serving`.
 
+pub mod replica;
 pub mod router;
 pub mod scheduler;
 pub mod sim;
 pub mod slo;
 pub mod traffic;
 
+pub use replica::{
+    run_replicated, ReplicaConfig, ReplicaOutcome, ReplicaSet, SyncEvent,
+};
 pub use router::{Policy, RouterConfig, ServingRouter};
 pub use scheduler::{Admission, MicroBatcher, SchedulerConfig};
 pub use sim::{run_scenario, Completion, ServeConfig, ServeOutcome};
-pub use slo::{ServeReport, SloTracker};
+pub use slo::{ReplicaSummary, ServeReport, SloTracker};
 pub use traffic::{Request, Scenario, TrafficConfig, TrafficGenerator};

@@ -1,0 +1,600 @@
+//! Replica-sharded, thread-parallel serving engine.
+//!
+//! A [`ReplicaSet`] owns R independent [`ServingRouter`] replicas — R
+//! model servers, each with its own gates, capacity accounting and
+//! placement — and a shared [`Pool`]. The virtual-time event loop
+//! dispatches every ready micro-batch to the free replica with the
+//! least cumulative dispatched work (deterministic tie-break on the
+//! replica index), and batches dispatched at the same instant are
+//! routed *concurrently* on the pool. Inside each routing job, the
+//! Algorithm 1 per-batch dual update additionally chunks its p/q
+//! phases onto the very same pool ([`DualState::update_parallel`]) —
+//! the pool's help-while-wait discipline makes that nesting safe.
+//!
+//! Scale-out would wreck the paper's from-the-first-step balance claim
+//! if each replica had to re-learn its gate state from its 1/R shard
+//! of the traffic. The state every policy learns is tiny and mergeable
+//! — Loss-Free's bias (Wang et al. 2024) and the BIP duals q are O(m)
+//! vectors; Alg 3/4 add bounded order-statistic sketches — so every
+//! `sync_every` dispatched batches the set reconciles:
+//! [`ServingRouter::export_states`] from all replicas, one
+//! deterministic [`ServingRouter::merge_states`] on each, leaving all
+//! replicas with identical balance state. Each sync records the spread
+//! of per-replica MaxVio and the dual/bias divergence before and after
+//! the merge ([`SyncEvent`]), which is the evidence the replica sweep
+//! in `bench_serving` reports.
+//!
+//! With R = 1 the loop reduces exactly to `sim::run_scenario` — pinned
+//! bit-for-bit by the integration tests.
+
+use std::sync::Arc;
+
+use crate::routing::BalanceState;
+use crate::util::pool::Pool;
+use crate::util::stats::Summary;
+
+use super::router::ServingRouter;
+use super::scheduler::MicroBatcher;
+use super::sim::{serve_cost_for, Completion, ServeConfig};
+use super::slo::{ReplicaSummary, ServeReport, SloTracker};
+use super::traffic::{Request, TrafficGenerator};
+
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaConfig {
+    /// independent router replicas (model servers)
+    pub replicas: usize,
+    /// shared worker-pool threads (batch-level + Alg 1 chunk-level)
+    pub threads: usize,
+    /// reconcile balance state every this many dispatched micro-batches
+    /// across the set; 0 disables syncing
+    pub sync_every: u64,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        ReplicaConfig { replicas: 1, threads: 1, sync_every: 16 }
+    }
+}
+
+/// One balance-state reconciliation, with the divergence it erased.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncEvent {
+    /// global dispatched-batch count when the sync fired
+    pub at_batch: u64,
+    /// spread (max − min) of per-replica mean MaxVio over the window
+    /// since the previous sync, measured just before merging
+    pub vio_spread_before: f64,
+    /// the same spread over the window *after* this sync (filled at the
+    /// next sync boundary, or at end of run for the last event)
+    pub vio_spread_after: f64,
+    /// mean abs deviation of the per-replica dual/bias vectors from
+    /// their cross-replica mean, before the merge…
+    pub state_div_before: f64,
+    /// …and after it (0 up to f32 rounding: replicas leave identical)
+    pub state_div_after: f64,
+}
+
+/// Everything a replicated run reports.
+pub struct ReplicaOutcome {
+    /// aggregate over the whole set, same shape as a single-server run
+    pub report: ServeReport,
+    pub per_replica: Vec<ReplicaSummary>,
+    pub syncs: Vec<SyncEvent>,
+    /// completion log in dispatch order (batches in flight on different
+    /// replicas may *complete* out of order — expected at R > 1)
+    pub completions: Vec<Completion>,
+    /// total micro-batches dispatched across the set
+    pub batches: u64,
+}
+
+/// R routers + the shared pool + the sync bookkeeping.
+pub struct ReplicaSet {
+    routers: Vec<Option<ServingRouter>>,
+    pool: Arc<Pool>,
+    sync_every: u64,
+    since_sync: u64,
+    batches: u64,
+    /// per-replica MaxVio accumulated since the last sync
+    window: Vec<Summary>,
+    pub syncs: Vec<SyncEvent>,
+}
+
+impl ReplicaSet {
+    pub fn new(cfg: &ServeConfig, rcfg: &ReplicaConfig) -> ReplicaSet {
+        let r = rcfg.replicas.max(1);
+        let pool = Arc::new(Pool::new(rcfg.threads.max(1)));
+        // each replica's stream-level gates (Alg 3/4) see ~1/R of the
+        // request stream, so their capacity rate is sized to the shard
+        let mut router_cfg = cfg.router.clone();
+        router_cfg.expected_stream =
+            (cfg.router.expected_stream / r).max(1);
+        let routers = (0..r)
+            .map(|_| {
+                Some(ServingRouter::new_with_pool(
+                    cfg.policy,
+                    router_cfg.clone(),
+                    Some(pool.clone()),
+                ))
+            })
+            .collect();
+        ReplicaSet {
+            routers,
+            pool,
+            sync_every: rcfg.sync_every,
+            since_sync: 0,
+            batches: 0,
+            window: vec![Summary::new(); r],
+            syncs: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.routers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.routers.is_empty()
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    fn router(&self, i: usize) -> &ServingRouter {
+        self.routers[i].as_ref().expect("router checked in")
+    }
+
+    /// Route one micro-batch per (replica, batch) pair concurrently on
+    /// the shared pool, returning `(replica, service_us, batch)` in
+    /// dispatch order. Routers move into the worker jobs and are
+    /// checked back in before returning, so the set is always whole
+    /// between calls; a periodic state sync fires here once
+    /// `sync_every` dispatches have accumulated.
+    fn route_parallel(
+        &mut self,
+        cost: &Arc<crate::parallel::ServeCost>,
+        m: usize,
+        dispatch: Vec<(usize, Vec<Request>)>,
+    ) -> Vec<(usize, u64, Vec<Request>)> {
+        let items: Vec<(usize, ServingRouter, Vec<Request>)> = dispatch
+            .into_iter()
+            .map(|(i, b)| {
+                (i, self.routers[i].take().expect("free replica"), b)
+            })
+            .collect();
+        let cost = cost.clone();
+        let routed = self.pool.map(items, move |(i, mut router, batch)| {
+            let outcome = router.route_batch(&batch);
+            let service_us = cost
+                .batch_us(&router.placement, &outcome.loads, m)
+                .max(1.0) as u64;
+            (i, router, batch, outcome.batch_vio, service_us)
+        });
+        let mut out = Vec::with_capacity(routed.len());
+        for (i, router, batch, batch_vio, service_us) in routed {
+            self.routers[i] = Some(router);
+            self.window[i].push(batch_vio);
+            self.batches += 1;
+            self.since_sync += 1;
+            out.push((i, service_us, batch));
+        }
+        if self.routers.len() > 1
+            && self.sync_every > 0
+            && self.since_sync >= self.sync_every
+        {
+            self.since_sync = 0;
+            self.sync();
+        }
+        out
+    }
+
+    /// Reconcile balance state across replicas: export everyone, merge
+    /// the identical slice into everyone, record the divergence erased.
+    fn sync(&mut self) {
+        let spread = window_spread(&self.window);
+        if let Some(prev) = self.syncs.last_mut() {
+            prev.vio_spread_after = spread;
+        }
+        let states: Vec<Vec<BalanceState>> = self
+            .routers
+            .iter()
+            .map(|r| r.as_ref().expect("checked in").export_states())
+            .collect();
+        let div_before = state_divergence(&states);
+        for r in self.routers.iter_mut() {
+            r.as_mut().expect("checked in").merge_states(&states);
+        }
+        let after: Vec<Vec<BalanceState>> = self
+            .routers
+            .iter()
+            .map(|r| r.as_ref().expect("checked in").export_states())
+            .collect();
+        self.syncs.push(SyncEvent {
+            at_batch: self.batches,
+            vio_spread_before: spread,
+            vio_spread_after: 0.0,
+            state_div_before: div_before,
+            state_div_after: state_divergence(&after),
+        });
+        for w in self.window.iter_mut() {
+            *w = Summary::new();
+        }
+    }
+
+    /// Close the MaxVio window of the final sync event at end of run.
+    fn finish(&mut self) {
+        if let Some(prev) = self.syncs.last_mut() {
+            prev.vio_spread_after = window_spread(&self.window);
+        }
+    }
+}
+
+/// Spread (max − min) of per-replica window-mean MaxVio; 0 unless at
+/// least two replicas routed something in the window.
+fn window_spread(window: &[Summary]) -> f64 {
+    let means: Vec<f64> = window
+        .iter()
+        .filter(|s| s.n > 0)
+        .map(|s| s.mean)
+        .collect();
+    if means.len() < 2 {
+        return 0.0;
+    }
+    let max = means.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let min = means.iter().cloned().fold(f64::INFINITY, f64::min);
+    max - min
+}
+
+/// Mean abs deviation of every replica's per-layer dual/bias vector
+/// from the cross-replica mean vector, averaged over layers, replicas
+/// and components. 0 when no policy state is exported (greedy).
+fn state_divergence(states: &[Vec<BalanceState>]) -> f64 {
+    if states.is_empty() {
+        return 0.0;
+    }
+    let layers = states[0].len();
+    let mut dev_sum = 0.0f64;
+    let mut dev_n = 0u64;
+    for l in 0..layers {
+        let vecs: Vec<&[f32]> = states
+            .iter()
+            .filter_map(|r| r.get(l).and_then(|s| s.primary()))
+            .collect();
+        if vecs.len() < 2 {
+            continue;
+        }
+        let len = vecs[0].len();
+        if vecs.iter().any(|v| v.len() != len) {
+            continue;
+        }
+        for j in 0..len {
+            let mean = vecs.iter().map(|v| v[j] as f64).sum::<f64>()
+                / vecs.len() as f64;
+            for v in &vecs {
+                dev_sum += (v[j] as f64 - mean).abs();
+                dev_n += 1;
+            }
+        }
+    }
+    if dev_n == 0 {
+        0.0
+    } else {
+        dev_sum / dev_n as f64
+    }
+}
+
+/// Run one (scenario, policy) simulation on R replicas to completion.
+///
+/// Same virtual-time semantics as [`super::sim::run_scenario`], with R
+/// servers: arrivals feed one admission-controlled queue; every ready
+/// micro-batch goes to the free replica with the least cumulative
+/// work; concurrent dispatches route in parallel on the shared pool.
+pub fn run_replicated(
+    cfg: &ServeConfig,
+    rcfg: &ReplicaConfig,
+) -> ReplicaOutcome {
+    let r = rcfg.replicas.max(1);
+    let mut set = ReplicaSet::new(cfg, rcfg);
+    let serve_cost = Arc::new(serve_cost_for(&cfg.router));
+    let m = cfg.router.m;
+
+    let mut gen = TrafficGenerator::new(cfg.traffic.clone());
+    let mut batcher = MicroBatcher::new(cfg.sched.clone());
+    let mut slo = SloTracker::new(cfg.traffic.slo_us);
+    let mut completions = Vec::new();
+
+    let mut now: u64 = 0;
+    let mut server_free = vec![0u64; r];
+    let mut work_us = vec![0u64; r];
+    let mut served_reqs = vec![0u64; r];
+    let mut next_arrival = gen.next();
+
+    loop {
+        // ingest every arrival due by `now`
+        while next_arrival
+            .as_ref()
+            .map_or(false, |req| req.arrival_us <= now)
+        {
+            batcher.offer(next_arrival.take().unwrap());
+            next_arrival = gen.next();
+        }
+
+        // dispatch: each ready batch to the free replica with the least
+        // cumulative dispatched work (tie -> lowest index)
+        let mut dispatch: Vec<(usize, Vec<Request>)> = Vec::new();
+        loop {
+            if !batcher.ready(now) {
+                break;
+            }
+            let mut target: Option<usize> = None;
+            for i in 0..r {
+                if now >= server_free[i]
+                    && !dispatch.iter().any(|d| d.0 == i)
+                {
+                    let better = match target {
+                        None => true,
+                        Some(b) => work_us[i] < work_us[b],
+                    };
+                    if better {
+                        target = Some(i);
+                    }
+                }
+            }
+            let Some(i) = target else { break };
+            let batch = batcher.take_batch(now);
+            if batch.is_empty() {
+                // the queue held only expired requests; they were
+                // dropped and counted — re-evaluate
+                continue;
+            }
+            dispatch.push((i, batch));
+        }
+
+        if !dispatch.is_empty() {
+            for (i, service_us, batch) in
+                set.route_parallel(&serve_cost, m, dispatch)
+            {
+                server_free[i] = now + service_us;
+                work_us[i] += service_us;
+                served_reqs[i] += batch.len() as u64;
+                for req in &batch {
+                    slo.record(
+                        req.arrival_us,
+                        server_free[i],
+                        req.deadline_us,
+                    );
+                    completions.push(Completion {
+                        id: req.id,
+                        tenant: req.tenant,
+                        arrival_us: req.arrival_us,
+                        completion_us: server_free[i],
+                    });
+                }
+            }
+            // re-evaluate immediately: the queue may hold more ready
+            // batches for replicas still free at `now`
+            continue;
+        }
+
+        // advance virtual time to the next event
+        let mut t_next: Option<u64> = None;
+        if let Some(t) = server_free
+            .iter()
+            .copied()
+            .filter(|&t| t > now)
+            .min()
+        {
+            t_next = Some(t);
+        }
+        if let Some(req) = &next_arrival {
+            t_next = Some(
+                t_next.map_or(req.arrival_us, |t| t.min(req.arrival_us)),
+            );
+        }
+        if server_free.iter().any(|&t| now >= t) {
+            if let Some(flush) = batcher.flush_at() {
+                t_next = Some(t_next.map_or(flush, |t| t.min(flush)));
+            }
+        }
+        match t_next {
+            // progress is guaranteed: every candidate lies in the
+            // future (same argument as the single-server loop)
+            Some(t) => now = t.max(now + 1),
+            None => break, // no arrivals left, queue empty: done
+        }
+    }
+    set.finish();
+
+    debug_assert!(batcher.conserves_work());
+    let stats = batcher.stats;
+    let horizon_s = slo.last_completion_us as f64 / 1e6;
+
+    // aggregate balance across replicas, weighted by batches routed
+    let mut vio_wsum = 0.0f64;
+    let mut imb_wsum = 0.0f64;
+    let mut batches_total = 0u64;
+    let mut sup = f64::NEG_INFINITY;
+    let mut overflow = 0u64;
+    let mut degraded = 0u64;
+    let mut state_bytes = 0usize;
+    let mut per_replica = Vec::with_capacity(r);
+    for i in 0..r {
+        let router = set.router(i);
+        let b = router.balance.batches();
+        batches_total += b;
+        vio_wsum += router.balance.avg_max_vio() * b as f64;
+        imb_wsum += router.imbalance.mean * router.imbalance.n as f64;
+        sup = sup.max(router.balance.sup_max_vio());
+        overflow += router.overflow_total;
+        degraded += router.degraded_total;
+        state_bytes += router.state_bytes();
+    }
+    for i in 0..r {
+        let router = set.router(i);
+        per_replica.push(ReplicaSummary {
+            replica: i,
+            batches: router.balance.batches(),
+            served: served_reqs[i],
+            avg_max_vio: router.balance.avg_max_vio(),
+            sup_max_vio: router.balance.sup_max_vio(),
+            overflow: router.overflow_total,
+            degraded: router.degraded_total,
+            state_bytes: router.state_bytes(),
+            busy_us: work_us[i],
+        });
+    }
+    let report = ServeReport {
+        scenario: cfg.traffic.scenario.name().to_string(),
+        policy: set.router(0).policy().name().to_string(),
+        offered: stats.offered,
+        admitted: stats.admitted,
+        rejected: stats.rejected,
+        expired: stats.expired,
+        completed: slo.completed,
+        slo_violations: slo.violations,
+        p50_ms: slo.latency_us(0.50) / 1e3,
+        p95_ms: slo.latency_us(0.95) / 1e3,
+        p99_ms: slo.latency_us(0.99) / 1e3,
+        throughput_rps: slo.throughput_rps(),
+        goodput_rps: slo.goodput_rps(),
+        // r == 1 takes the router's own mean directly: the weighted
+        // form (mean·b)/b is not a bitwise identity in f64, and the
+        // R = 1 path must reproduce run_scenario exactly
+        avg_max_vio: if r == 1 {
+            set.router(0).balance.avg_max_vio()
+        } else if batches_total > 0 {
+            vio_wsum / batches_total as f64
+        } else {
+            0.0
+        },
+        sup_max_vio: if r == 1 {
+            set.router(0).balance.sup_max_vio()
+        } else if batches_total > 0 {
+            sup
+        } else {
+            0.0
+        },
+        overflow,
+        degraded,
+        device_imbalance: if r == 1 {
+            set.router(0).imbalance.mean
+        } else if batches_total > 0 {
+            imb_wsum / batches_total as f64
+        } else {
+            0.0
+        },
+        state_bytes,
+        horizon_s,
+    };
+    ReplicaOutcome {
+        report,
+        per_replica,
+        syncs: set.syncs.clone(),
+        completions,
+        batches: set.batches(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::router::{Policy, RouterConfig};
+    use crate::serve::scheduler::SchedulerConfig;
+    use crate::serve::traffic::{Scenario, TrafficConfig};
+
+    fn config(scenario: Scenario, policy: Policy) -> ServeConfig {
+        ServeConfig::new(
+            TrafficConfig {
+                scenario,
+                n_requests: 2_000,
+                rate_per_s: 120_000.0,
+                n_layers: 2,
+                seed: 9,
+                ..Default::default()
+            },
+            SchedulerConfig::default(),
+            RouterConfig::default(),
+            policy,
+        )
+    }
+
+    #[test]
+    fn replicated_run_conserves_work() {
+        for policy in [Policy::Greedy, Policy::Online, Policy::BipBatch] {
+            let cfg = config(Scenario::Bursty, policy);
+            let rcfg = ReplicaConfig {
+                replicas: 3,
+                threads: 2,
+                sync_every: 8,
+            };
+            let out = run_replicated(&cfg, &rcfg);
+            assert!(
+                out.report.conserves_work(),
+                "{policy:?}: {:?}",
+                out.report
+            );
+            assert_eq!(
+                out.report.completed,
+                out.completions.len() as u64
+            );
+            assert_eq!(
+                out.batches,
+                out.per_replica.iter().map(|p| p.batches).sum::<u64>()
+            );
+            // every replica took a share of a 2k-request stream
+            for p in &out.per_replica {
+                assert!(p.batches > 0, "replica {} starved", p.replica);
+            }
+        }
+    }
+
+    #[test]
+    fn replicated_run_is_deterministic() {
+        let cfg = config(Scenario::MultiTenant, Policy::Online);
+        let rcfg =
+            ReplicaConfig { replicas: 4, threads: 3, sync_every: 8 };
+        let a = run_replicated(&cfg, &rcfg);
+        let b = run_replicated(&cfg, &rcfg);
+        assert_eq!(a.report.completed, b.report.completed);
+        assert_eq!(a.report.p99_ms, b.report.p99_ms);
+        assert_eq!(a.report.avg_max_vio, b.report.avg_max_vio);
+        assert_eq!(a.batches, b.batches);
+        assert_eq!(a.syncs.len(), b.syncs.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.completion_us, y.completion_us);
+        }
+    }
+
+    #[test]
+    fn syncs_fire_and_erase_state_divergence() {
+        let cfg = config(Scenario::Bursty, Policy::LossFree);
+        let rcfg =
+            ReplicaConfig { replicas: 4, threads: 2, sync_every: 4 };
+        let out = run_replicated(&cfg, &rcfg);
+        assert!(!out.syncs.is_empty(), "sync_every=4 must fire");
+        for s in &out.syncs {
+            assert!(s.state_div_before.is_finite());
+            assert!(
+                s.state_div_after <= 1e-6,
+                "merge must leave replicas identical, got {}",
+                s.state_div_after
+            );
+        }
+        // replicas genuinely diverge between syncs (different shards)
+        assert!(
+            out.syncs.iter().any(|s| s.state_div_before > 0.0),
+            "expected nonzero divergence before some sync"
+        );
+    }
+
+    #[test]
+    fn sync_every_zero_never_syncs() {
+        let cfg = config(Scenario::Steady, Policy::BipBatch);
+        let rcfg =
+            ReplicaConfig { replicas: 2, threads: 2, sync_every: 0 };
+        let out = run_replicated(&cfg, &rcfg);
+        assert!(out.syncs.is_empty());
+        assert!(out.report.conserves_work());
+    }
+}

@@ -15,13 +15,17 @@
 //! [`Placement`]: static block placement by default, or periodically
 //! refreshed LPT placement from the observed cumulative loads.
 
+use std::sync::Arc;
+
 use crate::bip::Instance;
 use crate::metrics::maxvio::BalanceTracker;
 use crate::parallel::placement::{greedy_placement, Placement};
 use crate::parallel::Mesh;
 use crate::routing::{
-    ApproxBip, Bip, Greedy, LossFree, OnlineBip, RoutingStrategy,
+    ApproxBip, BalanceState, Bip, Greedy, LossFree, OnlineBip,
+    RoutingStrategy,
 };
+use crate::util::pool::Pool;
 use crate::util::stats::Summary;
 
 use super::traffic::Request;
@@ -149,6 +153,18 @@ pub struct ServingRouter {
 
 impl ServingRouter {
     pub fn new(policy: Policy, cfg: RouterConfig) -> ServingRouter {
+        ServingRouter::new_with_pool(policy, cfg, None)
+    }
+
+    /// Like [`ServingRouter::new`], with a shared thread pool the
+    /// Algorithm 1 per-batch dual update chunks its p/q phases onto
+    /// (bit-identical to the serial path; only `Policy::BipBatch` has a
+    /// parallelizable batch solve).
+    pub fn new_with_pool(
+        policy: Policy,
+        cfg: RouterConfig,
+        pool: Option<Arc<Pool>>,
+    ) -> ServingRouter {
         assert!(cfg.m >= cfg.k && cfg.k >= 1 && cfg.n_layers >= 1);
         assert!(cfg.m % cfg.n_devices == 0,
                 "experts {} must divide over devices {}", cfg.m,
@@ -167,7 +183,13 @@ impl ServingRouter {
                     Policy::LossFree => {
                         Box::new(LossFree::new(cfg.m, cfg.lossfree_u))
                     }
-                    Policy::BipBatch => Box::new(Bip::new(cfg.t_iters)),
+                    Policy::BipBatch => match &pool {
+                        Some(p) => Box::new(Bip::with_pool(
+                            cfg.t_iters,
+                            p.clone(),
+                        )),
+                        None => Box::new(Bip::new(cfg.t_iters)),
+                    },
                     Policy::Online => Box::new(OnlineBip::new(
                         cfg.m, cfg.k, gate_cap, cfg.t_iters,
                     )),
@@ -213,6 +235,30 @@ impl ServingRouter {
     /// Persistent balancing state across all layers, bytes.
     pub fn state_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.state_bytes()).sum()
+    }
+
+    /// Micro-batches routed so far.
+    pub fn batches_routed(&self) -> u64 {
+        self.batches
+    }
+
+    /// Snapshot every layer's mergeable balance state (replica sync).
+    pub fn export_states(&self) -> Vec<BalanceState> {
+        self.layers.iter().map(|l| l.export_state()).collect()
+    }
+
+    /// Reconcile every layer with the corresponding layer of every
+    /// replica: `all[r][l]` is replica r's state for layer l. Each
+    /// replica is handed the identical slice, so the merge leaves all
+    /// replicas with identical balance state.
+    pub fn merge_states(&mut self, all: &[Vec<BalanceState>]) {
+        for (l, layer) in self.layers.iter_mut().enumerate() {
+            let states: Vec<BalanceState> = all
+                .iter()
+                .filter_map(|r| r.get(l).cloned())
+                .collect();
+            layer.merge_state(&states);
+        }
     }
 
     /// Route one micro-batch through every layer, enforcing capacity.

@@ -42,6 +42,17 @@ impl ServeConfig {
     }
 }
 
+/// The service-time model both the single-server loop and the
+/// replicated engine (`serve::replica`) price micro-batches with — one
+/// constructor so their costs can never drift apart.
+pub(crate) fn serve_cost_for(router: &RouterConfig) -> ServeCost {
+    ServeCost::new(
+        Mesh::new(router.n_devices, router.m),
+        DeviceProfile::rtx4090(),
+        ModelCost::paper_16e(),
+    )
+}
+
 /// One served request, in completion order.
 #[derive(Clone, Copy, Debug)]
 pub struct Completion {
@@ -62,11 +73,7 @@ pub fn run_scenario(cfg: &ServeConfig) -> ServeOutcome {
     let mut gen = TrafficGenerator::new(cfg.traffic.clone());
     let mut batcher = MicroBatcher::new(cfg.sched.clone());
     let mut router = ServingRouter::new(cfg.policy, cfg.router.clone());
-    let serve_cost = ServeCost::new(
-        Mesh::new(cfg.router.n_devices, cfg.router.m),
-        DeviceProfile::rtx4090(),
-        ModelCost::paper_16e(),
-    );
+    let serve_cost = serve_cost_for(&cfg.router);
     let mut slo = SloTracker::new(cfg.traffic.slo_us);
     let mut completions = Vec::new();
 

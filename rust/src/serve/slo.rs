@@ -150,9 +150,84 @@ impl ServeReport {
     }
 }
 
+/// Per-replica accounting for the replicated serving engine
+/// (`serve::replica::run_replicated`): each replica's share of the
+/// stream plus its own balance quality, so divergence across replicas
+/// is visible next to the aggregate [`ServeReport`].
+#[derive(Clone, Debug)]
+pub struct ReplicaSummary {
+    pub replica: usize,
+    /// micro-batches this replica routed
+    pub batches: u64,
+    /// requests this replica served
+    pub served: u64,
+    pub avg_max_vio: f64,
+    pub sup_max_vio: f64,
+    pub overflow: u64,
+    pub degraded: u64,
+    pub state_bytes: usize,
+    /// virtual time this replica spent serving, microseconds
+    pub busy_us: u64,
+}
+
+impl ReplicaSummary {
+    pub fn headers() -> &'static [&'static str] {
+        &[
+            "Replica", "Batches", "Served", "AvgMaxVio", "SupMaxVio",
+            "Overflow", "StateKB", "BusyMs",
+        ]
+    }
+
+    pub fn table_row(&self) -> Vec<String> {
+        vec![
+            format!("{}", self.replica),
+            format!("{}", self.batches),
+            format!("{}", self.served),
+            format!("{:.4}", self.avg_max_vio),
+            format!("{:.4}", self.sup_max_vio),
+            format!("{}", self.overflow),
+            format!("{:.1}", self.state_bytes as f64 / 1024.0),
+            format!("{:.2}", self.busy_us as f64 / 1e3),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replica", Json::Num(self.replica as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("avg_max_vio", Json::Num(self.avg_max_vio)),
+            ("sup_max_vio", Json::Num(self.sup_max_vio)),
+            ("overflow", Json::Num(self.overflow as f64)),
+            ("degraded", Json::Num(self.degraded as f64)),
+            ("state_bytes", Json::Num(self.state_bytes as f64)),
+            ("busy_us", Json::Num(self.busy_us as f64)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn replica_summary_rows_align_with_headers() {
+        let r = ReplicaSummary {
+            replica: 2,
+            batches: 10,
+            served: 640,
+            avg_max_vio: 0.2,
+            sup_max_vio: 0.9,
+            overflow: 3,
+            degraded: 0,
+            state_bytes: 4096,
+            busy_us: 12_000,
+        };
+        assert_eq!(r.table_row().len(), ReplicaSummary::headers().len());
+        let j = r.to_json();
+        assert_eq!(j.path("served").unwrap().as_usize(), Some(640));
+        assert_eq!(j.path("replica").unwrap().as_usize(), Some(2));
+    }
 
     #[test]
     fn tracker_percentiles_and_rates() {

@@ -1,11 +1,28 @@
 //! Minimal thread pool + bounded SPSC channel (no tokio offline).
 //!
-//! Used by the data loader (prefetch with backpressure) and the cluster
-//! simulator (per-device workers).
+//! Used by the data loader (prefetch with backpressure), the cluster
+//! simulator (per-device workers), the parallel Algorithm 1 dual update
+//! (`bip::dual::DualState::update_parallel`), and the replica-sharded
+//! serving engine (`serve::replica::ReplicaSet`).
+//!
+//! Two properties matter for the nested uses:
+//!
+//! * **panic safety** — a job that panics still counts toward its
+//!   batch's completion (drop-guard), the first payload is re-raised on
+//!   the waiting side, and the worker thread survives to take the next
+//!   job;
+//! * **no nested-wait deadlock** — a thread blocked in [`Pool::map`] or
+//!   [`Pool::scoped_run`] *helps*: it pops pending jobs off the queue
+//!   and runs them inline instead of sleeping, so pool jobs may
+//!   themselves fan out onto the same pool (the serving engine routes R
+//!   micro-batches in parallel while each router's Algorithm 1 update
+//!   chunks rows/columns onto the very same workers).
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Bounded multi-producer multi-consumer blocking channel.
 pub struct Bounded<T> {
@@ -63,6 +80,19 @@ impl<T> Bounded<T> {
         }
     }
 
+    /// Non-blocking send: Err(item) when full or closed. The pool's
+    /// nested fan-out path uses this so a worker thread never blocks on
+    /// its own queue (which could deadlock once every worker does it).
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if st.closed || st.items.len() >= self.inner.cap {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Blocks while empty; None once closed AND drained.
     pub fn recv(&self) -> Option<T> {
         let mut st = self.inner.queue.lock().unwrap();
@@ -103,28 +133,84 @@ impl<T> Bounded<T> {
     }
 }
 
+/// Completion latch for one `map`/`scoped_run` batch: counts finished
+/// jobs (panicked ones included) and stores the first panic payload so
+/// the waiting side can re-raise it.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    done: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl Latch {
+    fn new() -> Arc<Latch> {
+        Arc::new(Latch {
+            state: Mutex::new(LatchState { done: 0, panic: None }),
+            cv: Condvar::new(),
+        })
+    }
+}
+
+/// Counts one job on drop. Completion is signalled from a destructor so
+/// that a panicking job still counts: without this, `map` waits for a
+/// completion that never comes (the pre-fix deadlock).
+struct CountGuard(Arc<Latch>);
+
+impl Drop for CountGuard {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap();
+        st.done += 1;
+        self.0.cv.notify_all();
+    }
+}
+
+/// Run one latch-tracked job body: the guard counts it no matter what,
+/// and the first panic payload is parked in the latch for re-raising.
+fn run_counted(latch: &Arc<Latch>, body: impl FnOnce()) {
+    let guard = CountGuard(latch.clone());
+    if let Err(payload) = catch_unwind(AssertUnwindSafe(body)) {
+        let mut st = guard.0.state.lock().unwrap();
+        if st.panic.is_none() {
+            st.panic = Some(payload);
+        }
+    }
+}
+
 /// Fixed-size worker pool executing boxed jobs; join waits for quiescence.
 pub struct Pool {
     tx: Bounded<Job>,
     workers: Vec<JoinHandle<()>>,
+    threads: usize,
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 impl Pool {
     pub fn new(threads: usize) -> Self {
-        let tx = Bounded::<Job>::new(threads.max(1) * 4);
-        let workers = (0..threads.max(1))
+        let threads = threads.max(1);
+        let tx = Bounded::<Job>::new(threads * 4);
+        let workers = (0..threads)
             .map(|_| {
                 let rx = tx.clone();
                 std::thread::spawn(move || {
                     while let Some(job) = rx.recv() {
-                        job();
+                        // keep the worker alive across panicking jobs;
+                        // latch-tracked jobs re-raise on the waiting side
+                        let _ = catch_unwind(AssertUnwindSafe(job));
                     }
                 })
             })
             .collect();
-        Pool { tx, workers }
+        Pool { tx, workers, threads }
+    }
+
+    /// Number of worker threads (parallel chunking sizes against this).
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
@@ -133,7 +219,61 @@ impl Pool {
             .unwrap_or_else(|_| panic!("pool closed"));
     }
 
-    /// Run a closure over each item in parallel, preserving order of results.
+    /// Enqueue, or run inline when the queue is full: a worker fanning
+    /// out onto its own pool must never block on the bounded queue.
+    fn spawn_or_run(&self, job: Job) {
+        if let Err(job) = self.tx.try_send(job) {
+            job();
+        }
+    }
+
+    /// Wait for `n` latch-tracked jobs, helping with queued work instead
+    /// of sleeping so that nested waits cannot starve the pool.
+    fn wait(&self, latch: &Arc<Latch>, n: usize) {
+        loop {
+            // completion first: a finished batch must not be held
+            // hostage by an unrelated queued job
+            if latch.state.lock().unwrap().done >= n {
+                return;
+            }
+            if let Some(job) = self.tx.try_recv() {
+                // a helped job may be a foreign raw spawn(); contain its
+                // panic like the worker loop does — an unwind escaping
+                // here would abandon in-flight latch jobs mid-wait
+                let _ = catch_unwind(AssertUnwindSafe(job));
+                continue;
+            }
+            let st = latch.state.lock().unwrap();
+            if st.done >= n {
+                return;
+            }
+            // the timeout is load-bearing, not belt-and-braces: the
+            // latch condvar is only notified by completions, so a job
+            // enqueued after the try_recv above (by a nested fan-out on
+            // another thread) is otherwise invisible until the next
+            // completion — the poll bounds that window
+            let (st, _timed_out) = latch
+                .cv
+                .wait_timeout(st, Duration::from_millis(5))
+                .unwrap();
+            if st.done >= n {
+                return;
+            }
+        }
+    }
+
+    /// Re-raise the first panic a batch of jobs captured, if any.
+    fn rethrow(latch: &Latch) {
+        let payload = latch.state.lock().unwrap().panic.take();
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+
+    /// Run a closure over each item in parallel, preserving order of
+    /// results. A panicking closure does not deadlock the pool: every
+    /// job counts toward completion via a drop-guard, and the first
+    /// panic is re-raised here after all jobs have settled.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -144,37 +284,72 @@ impl Pool {
         let n = items.len();
         let results: Arc<Mutex<Vec<Option<R>>>> =
             Arc::new(Mutex::new((0..n).map(|_| None).collect()));
-        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let latch = Latch::new();
         for (i, item) in items.into_iter().enumerate() {
             let f = f.clone();
             let results = results.clone();
-            let done = done.clone();
-            self.spawn(move || {
-                let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
-                let (lock, cv) = &*done;
-                *lock.lock().unwrap() += 1;
-                cv.notify_all();
-            });
+            let latch = latch.clone();
+            self.spawn_or_run(Box::new(move || {
+                run_counted(&latch, move || {
+                    let r = f(item);
+                    results.lock().unwrap()[i] = Some(r);
+                });
+            }));
         }
-        let (lock, cv) = &*done;
-        let mut count = lock.lock().unwrap();
-        while *count < n {
-            count = cv.wait(count).unwrap();
-        }
+        self.wait(&latch, n);
+        Self::rethrow(&latch);
         Arc::try_unwrap(results)
             .ok()
             .expect("all workers done")
             .into_inner()
             .unwrap()
             .into_iter()
-            .map(|r| r.unwrap())
+            .map(|r| r.expect("job completed"))
             .collect()
     }
 
-    pub fn join(self) {
+    /// Execute `f(0) .. f(n-1)` across the pool, blocking until every
+    /// call has finished. Unlike [`Pool::map`], `f` may borrow caller
+    /// state (a scoped API): the borrow is erased to ship jobs to the
+    /// workers, which is sound because this function does not return —
+    /// or unwind — before every job has completed. Jobs are counted by
+    /// drop-guards (panics included) and run under `catch_unwind`, so
+    /// no unwind can escape a job while the erased borrow is live; the
+    /// first panic is re-raised here once all jobs have settled.
+    pub fn scoped_run<F>(&self, n: usize, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        match n {
+            0 => return,
+            1 => return f(0),
+            _ => {}
+        }
+        let latch = Latch::new();
+        let fp = f as *const F as usize;
+        for i in 0..n {
+            let latch = latch.clone();
+            self.spawn_or_run(Box::new(move || {
+                run_counted(&latch, || {
+                    // SAFETY: `fp` outlives every job — scoped_run only
+                    // returns after the latch counts all n completions
+                    let f = unsafe { &*(fp as *const F) };
+                    f(i);
+                });
+            }));
+        }
+        self.wait(&latch, n);
+        Self::rethrow(&latch);
+    }
+
+    /// Explicit quiescent shutdown (also runs on drop).
+    pub fn join(self) {}
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
         self.tx.close();
-        for w in self.workers {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -195,6 +370,16 @@ mod tests {
         ch.close();
         assert_eq!(ch.recv(), None);
         assert!(ch.send(3).is_err());
+    }
+
+    #[test]
+    fn try_send_bounces_on_full_and_closed() {
+        let ch = Bounded::new(1);
+        assert!(ch.try_send(1).is_ok());
+        assert_eq!(ch.try_send(2), Err(2));
+        assert_eq!(ch.recv(), Some(1));
+        ch.close();
+        assert_eq!(ch.try_send(3), Err(3));
     }
 
     #[test]
@@ -240,5 +425,75 @@ mod tests {
         }
         pool.join();
         assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn map_propagates_panics_without_deadlock() {
+        // regression: a panicking job used to leave the completion
+        // counter short of n forever — map would never return
+        let pool = Pool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.map((0..8).collect::<Vec<i32>>(), |x| {
+                if x == 3 {
+                    panic!("boom");
+                }
+                x * 2
+            })
+        }));
+        assert!(caught.is_err(), "panic must re-propagate to the caller");
+        // the pool (workers included) survives and keeps serving
+        let out = pool.map(vec![1, 2, 3], |x: i32| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+        pool.join();
+    }
+
+    #[test]
+    fn scoped_run_borrows_caller_state() {
+        let pool = Pool::new(3);
+        let data: Vec<usize> = (0..100).collect();
+        let partial = Mutex::new(vec![0usize; 7]);
+        let f = |c: usize| {
+            let lo = c * 15;
+            let hi = (lo + 15).min(data.len());
+            let s: usize = data[lo..hi].iter().sum();
+            partial.lock().unwrap()[c] = s;
+        };
+        pool.scoped_run(7, &f);
+        let total: usize = partial.lock().unwrap().iter().sum();
+        assert_eq!(total, 100 * 99 / 2);
+        pool.join();
+    }
+
+    #[test]
+    fn scoped_run_propagates_panics() {
+        let pool = Pool::new(2);
+        let f = |c: usize| {
+            if c == 2 {
+                panic!("chunk failure");
+            }
+        };
+        let caught =
+            catch_unwind(AssertUnwindSafe(|| pool.scoped_run(4, &f)));
+        assert!(caught.is_err());
+        pool.join();
+    }
+
+    #[test]
+    fn nested_fan_out_does_not_deadlock() {
+        // every worker blocks in a nested scoped_run; help-while-wait
+        // must keep the queue draining
+        let pool = Arc::new(Pool::new(2));
+        let inner_pool = pool.clone();
+        let out = pool.map((0..8).collect::<Vec<usize>>(), move |x| {
+            let acc = Mutex::new(0usize);
+            let f = |c: usize| {
+                *acc.lock().unwrap() += c + x;
+            };
+            inner_pool.scoped_run(4, &f);
+            let got = *acc.lock().unwrap();
+            got
+        });
+        let want: Vec<usize> = (0..8).map(|x| 6 + 4 * x).collect();
+        assert_eq!(out, want);
     }
 }

@@ -12,8 +12,8 @@
 //!   * Algorithm 4's state stays small while Algorithm 3's grows.
 
 use bip_moe::serve::{
-    run_scenario, Policy, RouterConfig, SchedulerConfig, Scenario,
-    ServeConfig, ServeOutcome, TrafficConfig,
+    run_replicated, run_scenario, Policy, ReplicaConfig, RouterConfig,
+    SchedulerConfig, Scenario, ServeConfig, ServeOutcome, TrafficConfig,
 };
 
 fn config(scenario: Scenario, policy: Policy) -> ServeConfig {
@@ -137,6 +137,100 @@ fn approx_state_is_smaller_than_online_on_long_streams() {
     );
     // and the constant-space policy still balances
     assert!(approx.report.avg_max_vio < 1.0);
+}
+
+#[test]
+fn replica_set_with_r1_reproduces_the_single_router_sim_exactly() {
+    // the replicated event loop must be a strict generalization: one
+    // replica (even on a multi-thread pool, which exercises the
+    // chunked Algorithm 1 dual update) reproduces run_scenario
+    // bit-for-bit — completions, balance, capacity and state accounting
+    for policy in [Policy::BipBatch, Policy::Online, Policy::LossFree] {
+        let cfg = config(Scenario::Bursty, policy);
+        let single = run_scenario(&cfg);
+        let rep = run_replicated(
+            &cfg,
+            &ReplicaConfig { replicas: 1, threads: 3, sync_every: 8 },
+        );
+        let (a, b) = (&single.report, &rep.report);
+        assert_eq!(a.offered, b.offered, "{policy:?}");
+        assert_eq!(a.admitted, b.admitted, "{policy:?}");
+        assert_eq!(a.rejected, b.rejected, "{policy:?}");
+        assert_eq!(a.expired, b.expired, "{policy:?}");
+        assert_eq!(a.completed, b.completed, "{policy:?}");
+        assert_eq!(a.p50_ms, b.p50_ms, "{policy:?}");
+        assert_eq!(a.p99_ms, b.p99_ms, "{policy:?}");
+        assert_eq!(a.avg_max_vio, b.avg_max_vio, "{policy:?}");
+        assert_eq!(a.sup_max_vio, b.sup_max_vio, "{policy:?}");
+        assert_eq!(a.overflow, b.overflow, "{policy:?}");
+        assert_eq!(a.degraded, b.degraded, "{policy:?}");
+        assert_eq!(a.state_bytes, b.state_bytes, "{policy:?}");
+        assert_eq!(a.horizon_s, b.horizon_s, "{policy:?}");
+        assert_eq!(
+            single.completions.len(),
+            rep.completions.len(),
+            "{policy:?}"
+        );
+        for (x, y) in single.completions.iter().zip(&rep.completions) {
+            assert_eq!(x.id, y.id, "{policy:?}");
+            assert_eq!(x.completion_us, y.completion_us, "{policy:?}");
+        }
+        // R = 1 never syncs (nothing to reconcile with)
+        assert!(rep.syncs.is_empty(), "{policy:?}");
+    }
+}
+
+#[test]
+fn merged_state_keeps_replicas_near_single_router_balance() {
+    // the mergeable-state claim: with periodic reconciliation, each
+    // replica — though it sees only a 1/R shard of the bursty stream —
+    // stays within a constant factor of the single router's balance
+    for policy in [Policy::LossFree, Policy::BipBatch] {
+        let cfg = config(Scenario::Bursty, policy);
+        let single = run_scenario(&cfg);
+        let rep = run_replicated(
+            &cfg,
+            &ReplicaConfig { replicas: 4, threads: 2, sync_every: 8 },
+        );
+        assert!(rep.report.conserves_work());
+        assert!(!rep.syncs.is_empty(), "{policy:?}: syncs must fire");
+        let last = rep.syncs.last().unwrap();
+        assert!(
+            last.state_div_after <= 1e-6,
+            "{policy:?}: post-merge divergence {}",
+            last.state_div_after
+        );
+        let bound = single.report.avg_max_vio * 2.5 + 0.30;
+        for p in &rep.per_replica {
+            assert!(
+                p.avg_max_vio <= bound,
+                "{policy:?} replica {}: vio {} > bound {bound} \
+                 (single {})",
+                p.replica,
+                p.avg_max_vio,
+                single.report.avg_max_vio
+            );
+        }
+    }
+}
+
+#[test]
+fn replicated_bip_still_beats_greedy_on_bursty() {
+    // the paper's ordering must survive scale-out: at R=4 with state
+    // syncing, every BIP policy stays better-balanced than greedy
+    let rcfg = ReplicaConfig { replicas: 4, threads: 2, sync_every: 8 };
+    let greedy =
+        run_replicated(&config(Scenario::Bursty, Policy::Greedy), &rcfg);
+    for policy in [Policy::Online, Policy::Approx, Policy::BipBatch] {
+        let out =
+            run_replicated(&config(Scenario::Bursty, policy), &rcfg);
+        assert!(
+            out.report.avg_max_vio < greedy.report.avg_max_vio,
+            "{policy:?} vio {} !< greedy {}",
+            out.report.avg_max_vio,
+            greedy.report.avg_max_vio
+        );
+    }
 }
 
 #[test]
