@@ -1,0 +1,135 @@
+//! Trace-subsystem benchmarks: what recording costs on the serving hot
+//! path, how big traces are on disk, and how fast the regression replay
+//! and the counterfactual reroute run.
+//!
+//! Three claims back the record/replay design:
+//!   * recording is cheap — the `Option<&mut TraceRecorder>` seam
+//!     clones each arrival once and *moves* the per-batch
+//!     assignment/load buffers into the frame, so the overhead over a
+//!     bare `run_scenario` stays small;
+//!   * the binary format is compact — bytes/request is dominated by
+//!     the (n_layers x m) f32 gate scores, everything else is framing;
+//!   * replay is at least as fast as the original run (it skips traffic
+//!     generation) and the counterfactual reroute is cheaper still (no
+//!     event loop, just routing).
+//!
+//! Results land in reports/BENCH_trace.json. BIP_MOE_FULL=1 scales the
+//! stream up.
+
+use bip_moe::bench::{write_bench_json, Bencher};
+use bip_moe::serve::{
+    run_scenario, run_scenario_with, Policy, ReplicaConfig, RouterConfig,
+    SchedulerConfig, Scenario, ServeConfig, TrafficConfig,
+    TrafficGenerator,
+};
+use bip_moe::trace::{replay, reroute, Trace, TraceRecorder};
+use bip_moe::util::json::Json;
+
+fn main() {
+    let full = std::env::var("BIP_MOE_FULL").as_deref() == Ok("1");
+    let n_requests = if full { 32_768 } else { 4_096 };
+
+    let cfg = ServeConfig::new(
+        TrafficConfig {
+            scenario: Scenario::Steady,
+            n_requests,
+            seed: 3,
+            ..Default::default()
+        },
+        SchedulerConfig::default(),
+        RouterConfig::default(),
+        Policy::Online,
+    );
+    let rcfg = ReplicaConfig { replicas: 1, threads: 1, sync_every: 0 };
+
+    println!(
+        "== record overhead (steady / bip-online, {n_requests} requests) =="
+    );
+    let mut b = Bencher::quick();
+    let base = b
+        .bench("run_scenario (no recording)", || {
+            std::hint::black_box(run_scenario(&cfg));
+        })
+        .secs_per_iter
+        .mean;
+    let recorded = b
+        .bench("run_scenario + TraceRecorder", || {
+            let mut rec = TraceRecorder::new(&cfg, &rcfg);
+            run_scenario_with(
+                &cfg,
+                TrafficGenerator::new(cfg.traffic.clone()),
+                Some(&mut rec),
+            );
+            std::hint::black_box(rec.into_trace());
+        })
+        .secs_per_iter
+        .mean;
+    let overhead_pct = (recorded / base - 1.0) * 100.0;
+    println!("record overhead: {overhead_pct:+.1}%");
+
+    // one canonical trace for the replay-side benches
+    let mut rec = TraceRecorder::new(&cfg, &rcfg);
+    run_scenario_with(
+        &cfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        Some(&mut rec),
+    );
+    let trace = rec.into_trace();
+    let bytes = trace.to_bytes();
+    let bytes_per_request = bytes.len() as f64 / n_requests as f64;
+    println!(
+        "trace: {} frames, {} bytes ({bytes_per_request:.1} per request)",
+        trace.frames.len(),
+        bytes.len()
+    );
+
+    println!("\n== replay throughput ==");
+    b.bench("Trace::from_bytes (decode)", || {
+        std::hint::black_box(Trace::from_bytes(&bytes).unwrap());
+    });
+    let rep = b
+        .bench("replay (regression mode)", || {
+            let r = replay(&trace);
+            assert!(r.mismatches.is_empty());
+            std::hint::black_box(r);
+        })
+        .secs_per_iter
+        .mean;
+    let replay_rps = n_requests as f64 / rep;
+    println!("replay throughput: {replay_rps:.0} requests/s");
+
+    println!("\n== counterfactual reroute (per policy) ==");
+    let mut reroute_rows = Vec::new();
+    for policy in
+        [Policy::Greedy, Policy::LossFree, Policy::BipBatch, Policy::Approx]
+    {
+        let m = b.bench(&format!("reroute {}", policy.name()), || {
+            std::hint::black_box(reroute(&trace, policy).unwrap());
+        });
+        let tokens_per_s =
+            trace.routed_tokens() as f64 / m.secs_per_iter.mean;
+        reroute_rows.push(Json::obj(vec![
+            ("policy", Json::Str(policy.name().into())),
+            ("mean_us", Json::Num(m.secs_per_iter.mean * 1e6)),
+            ("tokens_per_s", Json::Num(tokens_per_s)),
+        ]));
+    }
+
+    let doc = Json::Arr(vec![Json::obj(vec![
+        ("n_requests", Json::Num(n_requests as f64)),
+        ("record_overhead_pct", Json::Num(overhead_pct)),
+        ("trace_bytes", Json::Num(bytes.len() as f64)),
+        ("bytes_per_request", Json::Num(bytes_per_request)),
+        ("frames", Json::Num(trace.frames.len() as f64)),
+        ("replay_rps", Json::Num(replay_rps)),
+        ("reroute", Json::Arr(reroute_rows)),
+        (
+            "measurements",
+            Json::Arr(b.results.iter().map(|m| m.to_json()).collect()),
+        ),
+    ])]);
+    match write_bench_json("trace", doc) {
+        Ok(path) => println!("\nperf record: {}", path.display()),
+        Err(e) => eprintln!("warning: BENCH_trace.json not written: {e}"),
+    }
+}

@@ -10,7 +10,9 @@
 //!   dual / online / approx), the §5 online-matching application, and
 //!   the `serve/` online inference-serving subsystem (traffic generator,
 //!   admission control, micro-batch scheduler, capacity-aware BIP
-//!   router). Python never runs on the training or serving path.
+//!   router), and the `trace/` record/replay subsystem (binary routing
+//!   traces, deterministic replay, counterfactual policy diffs).
+//!   Python never runs on the training or serving path.
 //! * **L2 (`python/compile/model.py`)** — Minimind-style MoE transformer
 //!   (fwd/bwd/AdamW) with the three routing modes (Loss-Controlled,
 //!   Loss-Free, BIP), AOT-lowered once to HLO text artifacts.
@@ -31,6 +33,7 @@ pub mod parallel;
 pub mod routing;
 pub mod runtime;
 pub mod serve;
+pub mod trace;
 pub mod train;
 pub mod util;
 

@@ -8,6 +8,9 @@
 //!   match   run the §5 online ad-matching simulation (Alg 3/4)
 //!   serve   online inference serving: sweep policy x scenario through
 //!           the admission/micro-batch/BIP-router pipeline
+//!   trace   record a serving run to a binary routing trace, replay it
+//!           bit-identically, counterfactually diff policies on it, or
+//!           export it as JSON
 //!   info    list artifact manifest contents and engine stats
 //!
 //! Examples:
@@ -16,6 +19,9 @@
 //!   bip-moe solve --n 1024 --m 64 --k 8 --skew 3.0 --t 8
 //!   bip-moe match --flows 4096 --ads 32 --slots 2
 //!   bip-moe serve --scenario bursty --policy online
+//!   bip-moe trace record --scenario steady --policy online --out t.trace
+//!   bip-moe trace replay --trace t.trace
+//!   bip-moe trace diff --trace t.trace --policies bip,lossfree
 
 use std::path::{Path, PathBuf};
 
@@ -26,9 +32,10 @@ use bip_moe::matching::simulator::{compare_policies, Workload};
 use bip_moe::metrics::TablePrinter;
 use bip_moe::runtime::Engine;
 use bip_moe::serve::{
-    self, Policy, RouterConfig, SchedulerConfig, Scenario, ServeConfig,
-    ServeReport, TrafficConfig,
+    self, Policy, ReplicaConfig, RouterConfig, SchedulerConfig, Scenario,
+    ServeConfig, ServeReport, TrafficConfig, TrafficGenerator,
 };
+use bip_moe::trace::{PolicyDiff, Trace, TraceRecorder};
 use bip_moe::train::TrainDriver;
 use bip_moe::util::rng::Pcg64;
 use bip_moe::util::Args;
@@ -58,6 +65,7 @@ fn run(args: &Args) -> Result<()> {
         Some("solve") => cmd_solve(args),
         Some("match") => cmd_match(args),
         Some("serve") => cmd_serve(args),
+        Some("trace") => cmd_trace(args),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown subcommand {other}; see --help"),
         None => {
@@ -70,7 +78,8 @@ fn run(args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "bip-moe {} — BIP-Based Balancing for MoE pre-training + serving\n\n\
-         usage: bip-moe <train|run|eval|solve|match|serve|info> [--options]\n\n\
+         usage: bip-moe <train|run|eval|solve|match|serve|trace|info> \
+         [--options]\n\n\
          train  --config <name> --mode <aux|lossfree|bip> [--bip-t N]\n\
                 [--steps N] [--seed N] [--eval-batches N]\n\
                 [--reports DIR] [--save CKPT] [--artifacts DIR]\n\
@@ -87,6 +96,12 @@ fn print_help() {
                  block|lpt] [--lpt-refresh BATCHES] [--seed N]\n\
                  [--replicas R] [--threads T] [--sync-every BATCHES]\n\
                  [--json PATH]\n\
+         trace  record --out PATH [--scenario S] [--policy P]\n\
+                 [--requests N] [serve-style knobs incl. --replicas]\n\
+                trace replay --trace PATH (asserts bit-identical\n\
+                 completions against the recording)\n\
+                trace diff --trace PATH [--policies a,b,..] [--json P]\n\
+                trace export --trace PATH [--out PATH.json]\n\
          info   [--artifacts DIR]",
         bip_moe::VERSION
     );
@@ -325,6 +340,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             anyhow::anyhow!("unknown scenario {scenario_arg}")
         })?]
     };
+    if scenarios.contains(&Scenario::Replayed) {
+        bail!(
+            "scenario 'replayed' is driven by a recorded trace: use \
+             `bip-moe trace replay --trace PATH`"
+        );
+    }
     let policy_arg = args.str_or("policy", "all");
     let mut policies: Vec<Policy> = if policy_arg == "all" {
         Policy::all().to_vec()
@@ -337,53 +358,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policies.insert(0, Policy::Greedy);
     }
 
-    let m = args.usize_or("m", 16);
-    let n_devices = args.usize_or("devices", 4);
-    if n_devices == 0 || m % n_devices != 0 {
-        bail!("--m {m} must be divisible by --devices {n_devices} (>= 1)");
-    }
-    let lpt = match args.str_or("placement", "block").as_str() {
-        "block" => None,
-        "lpt" => match args.u64_or("lpt-refresh", 8) {
-            0 => bail!("--lpt-refresh must be >= 1 batches"),
-            n => Some(n),
-        },
-        other => bail!("unknown placement {other} (block|lpt)"),
-    };
-
-    let traffic = TrafficConfig {
-        scenario: Scenario::Steady, // overwritten per sweep entry
-        n_requests: args.usize_or("requests", 8192),
-        rate_per_s: args.f64_or("rate", 100_000.0),
-        n_layers: args.usize_or("layers", 4),
-        m,
-        k: args.usize_or("k", 4),
-        n_tenants: args.usize_or("tenants", 4),
-        slo_us: (args.f64_or("slo-ms", 20.0) * 1e3) as u64,
-        seed: args.u64_or("seed", 1),
-        ..Default::default()
-    };
-    let sched = SchedulerConfig {
-        queue_cap: args.usize_or("queue", 512),
-        batch_max: args.usize_or("batch", 64),
-        max_wait_us: args.u64_or("max-wait-us", 2_000),
-        drop_expired: true,
-    };
-    let router = RouterConfig {
-        t_iters: args.usize_or("t", 4),
-        buckets: args.usize_or("buckets", 128),
-        capacity_factor: args.f64_or("capacity-factor", 2.0),
-        n_devices,
-        lpt_refresh: lpt,
-        ..Default::default()
-    };
-
-    let replicas = args.usize_or("replicas", 1);
-    let threads = args.usize_or("threads", 1);
-    let sync_every = args.u64_or("sync-every", 16);
-    if replicas == 0 {
-        bail!("--replicas must be >= 1");
-    }
+    let ServeKnobs { traffic, sched, router, replicas: rknobs } =
+        serve_knobs(args, 8192)?;
+    let (replicas, threads, sync_every) =
+        (rknobs.replicas, rknobs.threads, rknobs.sync_every);
 
     let mut json_rows = Vec::new();
     for &scenario in &scenarios {
@@ -502,6 +480,277 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
         std::fs::write(path, doc.to_string())?;
         println!("report: {path}");
+    }
+    Ok(())
+}
+
+/// Serve-pipeline knobs shared by the `serve` sweep and `trace record`
+/// (which freezes one configuration into a trace header). The caller
+/// overwrites `traffic.scenario`; only the default request count
+/// differs between the two surfaces.
+struct ServeKnobs {
+    traffic: TrafficConfig,
+    sched: SchedulerConfig,
+    router: RouterConfig,
+    replicas: ReplicaConfig,
+}
+
+fn serve_knobs(args: &Args, default_requests: usize) -> Result<ServeKnobs> {
+    let m = args.usize_or("m", 16);
+    let n_devices = args.usize_or("devices", 4);
+    if n_devices == 0 || m % n_devices != 0 {
+        bail!("--m {m} must be divisible by --devices {n_devices} (>= 1)");
+    }
+    let lpt = match args.str_or("placement", "block").as_str() {
+        "block" => None,
+        "lpt" => match args.u64_or("lpt-refresh", 8) {
+            0 => bail!("--lpt-refresh must be >= 1 batches"),
+            n => Some(n),
+        },
+        other => bail!("unknown placement {other} (block|lpt)"),
+    };
+    let traffic = TrafficConfig {
+        scenario: Scenario::Steady, // overwritten by the caller
+        n_requests: args.usize_or("requests", default_requests),
+        rate_per_s: args.f64_or("rate", 100_000.0),
+        n_layers: args.usize_or("layers", 4),
+        m,
+        k: args.usize_or("k", 4),
+        n_tenants: args.usize_or("tenants", 4),
+        slo_us: (args.f64_or("slo-ms", 20.0) * 1e3) as u64,
+        seed: args.u64_or("seed", 1),
+        ..Default::default()
+    };
+    let sched = SchedulerConfig {
+        queue_cap: args.usize_or("queue", 512),
+        batch_max: args.usize_or("batch", 64),
+        max_wait_us: args.u64_or("max-wait-us", 2_000),
+        drop_expired: true,
+    };
+    let router = RouterConfig {
+        t_iters: args.usize_or("t", 4),
+        buckets: args.usize_or("buckets", 128),
+        capacity_factor: args.f64_or("capacity-factor", 2.0),
+        n_devices,
+        lpt_refresh: lpt,
+        ..Default::default()
+    };
+    let replicas = ReplicaConfig {
+        replicas: args.usize_or("replicas", 1),
+        threads: args.usize_or("threads", 1),
+        sync_every: args.u64_or("sync-every", 16),
+    };
+    if replicas.replicas == 0 {
+        bail!("--replicas must be >= 1");
+    }
+    Ok(ServeKnobs { traffic, sched, router, replicas })
+}
+
+/// Routing-trace tooling: record a serving run to a versioned binary
+/// trace, replay it bit-identically (the regression mode), re-route the
+/// recorded gate scores under different policies (the counterfactual
+/// diff), or export the trace as JSON.
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "scenario", "policy", "requests", "rate", "m", "k", "layers",
+        "tenants", "t", "buckets", "batch", "queue", "max-wait-us",
+        "slo-ms", "capacity-factor", "devices", "placement",
+        "lpt-refresh", "seed", "replicas", "threads", "sync-every",
+        "out", "trace", "policies", "json",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    match args.positional.first().map(String::as_str) {
+        Some("record") => cmd_trace_record(args),
+        Some("replay") => cmd_trace_replay(args),
+        Some("diff") => cmd_trace_diff(args),
+        Some("export") => cmd_trace_export(args),
+        Some(other) => bail!("unknown trace action {other}; see --help"),
+        None => bail!(
+            "usage: bip-moe trace <record|replay|diff|export> [--options]"
+        ),
+    }
+}
+
+/// Build the (ServeConfig, ReplicaConfig) pair `trace record` freezes
+/// into the trace header (single scenario + single policy, unlike the
+/// `serve` sweep).
+fn trace_serve_config(args: &Args) -> Result<(ServeConfig, ReplicaConfig)> {
+    let scenario_arg = args.str_or("scenario", "steady");
+    let scenario = Scenario::parse(&scenario_arg).ok_or_else(|| {
+        anyhow::anyhow!("unknown scenario {scenario_arg}")
+    })?;
+    if scenario == Scenario::Replayed {
+        bail!(
+            "trace record needs a generative scenario; 'replayed' is \
+             what replay/diff run"
+        );
+    }
+    let policy_arg = args.str_or("policy", "online");
+    let policy = Policy::parse(&policy_arg)
+        .ok_or_else(|| anyhow::anyhow!("unknown policy {policy_arg}"))?;
+    let ServeKnobs { mut traffic, sched, router, replicas } =
+        serve_knobs(args, 2048)?;
+    traffic.scenario = scenario;
+    Ok((ServeConfig::new(traffic, sched, router, policy), replicas))
+}
+
+fn cmd_trace_record(args: &Args) -> Result<()> {
+    let (cfg, rcfg) = trace_serve_config(args)?;
+    let out_path = args.str_or("out", "bip-moe.trace");
+    let mut rec = TraceRecorder::new(&cfg, &rcfg);
+    let report = if rcfg.replicas > 1 || rcfg.threads > 1 {
+        serve::run_replicated_with(
+            &cfg,
+            &rcfg,
+            TrafficGenerator::new(cfg.traffic.clone()),
+            Some(&mut rec),
+        )
+        .report
+    } else {
+        serve::run_scenario_with(
+            &cfg,
+            TrafficGenerator::new(cfg.traffic.clone()),
+            Some(&mut rec),
+        )
+        .report
+    };
+    let trace = rec.into_trace();
+    let bytes = trace.save(Path::new(&out_path))?;
+
+    let mut table = TablePrinter::new(
+        &format!("recorded {} / {}", report.scenario, report.policy),
+        ServeReport::headers(),
+    );
+    table.row(report.table_row());
+    table.print();
+    println!(
+        "trace: {out_path} ({} arrivals, {} frames, {} syncs, {} \
+         completions, {} routed tokens, {bytes} bytes)",
+        trace.arrivals.len(),
+        trace.frames.len(),
+        trace.syncs.len(),
+        trace.completions.len(),
+        trace.routed_tokens(),
+    );
+    Ok(())
+}
+
+fn cmd_trace_replay(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("--trace PATH required"))?;
+    let trace = Trace::load(Path::new(path))?;
+    let rep = bip_moe::trace::replay(&trace);
+    let mut table = TablePrinter::new(
+        &format!(
+            "replayed {} / {} from {path}",
+            rep.report.scenario, rep.report.policy
+        ),
+        ServeReport::headers(),
+    );
+    table.row(rep.report.table_row());
+    table.print();
+    if !rep.mismatches.is_empty() {
+        for m in &rep.mismatches {
+            eprintln!("  {m}");
+        }
+        bail!(
+            "replay diverged from the recording in {} place(s)",
+            rep.mismatches.len()
+        );
+    }
+    println!(
+        "replay OK: {} completions bit-identical to the recording",
+        rep.completions.len()
+    );
+    Ok(())
+}
+
+fn cmd_trace_diff(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("--trace PATH required"))?;
+    let trace = Trace::load(Path::new(path))?;
+    let policies: Vec<Policy> = match args.get("policies") {
+        Some(spec) => spec
+            .split(',')
+            .map(|s| {
+                Policy::parse(s.trim()).ok_or_else(|| {
+                    anyhow::anyhow!("unknown policy {}", s.trim())
+                })
+            })
+            .collect::<Result<_>>()?,
+        None => vec![
+            Policy::BipBatch,
+            Policy::LossFree,
+            Policy::Online,
+            Policy::Approx,
+        ],
+    };
+    let diffs = bip_moe::trace::diff_policies(&trace, &policies)?;
+    let mut table = TablePrinter::new(
+        &format!(
+            "counterfactual diff — recorded {} / {} ({} frames, {} \
+             tokens)",
+            trace.meta.serve.traffic.scenario.name(),
+            trace.meta.serve.policy.name(),
+            trace.frames.len(),
+            trace.routed_tokens(),
+        ),
+        PolicyDiff::headers(),
+    );
+    for d in &diffs {
+        table.row(d.table_row());
+    }
+    table.print();
+    if let Some(json_path) = args.get("json") {
+        let doc = bip_moe::util::Json::obj(vec![
+            ("version", bip_moe::util::Json::Str(bip_moe::VERSION.into())),
+            (
+                "recorded_policy",
+                bip_moe::util::Json::Str(
+                    trace.meta.serve.policy.name().into(),
+                ),
+            ),
+            (
+                "recorded_scenario",
+                bip_moe::util::Json::Str(
+                    trace.meta.serve.traffic.scenario.name().into(),
+                ),
+            ),
+            (
+                "frames",
+                bip_moe::util::Json::Num(trace.frames.len() as f64),
+            ),
+            (
+                "results",
+                bip_moe::util::Json::Arr(
+                    diffs.iter().map(|d| d.to_json()).collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(json_path, format!("{doc}\n"))?;
+        println!("report: {json_path}");
+    }
+    Ok(())
+}
+
+fn cmd_trace_export(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("--trace PATH required"))?;
+    let trace = Trace::load(Path::new(path))?;
+    let doc = trace.to_json();
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, format!("{doc}\n"))?;
+            println!(
+                "json: {out} ({} arrivals, {} frames)",
+                trace.arrivals.len(),
+                trace.frames.len()
+            );
+        }
+        None => println!("{doc}"),
     }
     Ok(())
 }

@@ -85,9 +85,18 @@ impl RunRecorder {
         Json::obj(pairs)
     }
 
-    /// Write every series + the summary under `dir/<run_id>/`.
+    /// Write every series + the summary under `dir/<run_id>/`. If that
+    /// directory already exists (a rerun with the same run id), the
+    /// output is uniquified to `<run_id>-2`, `-3`, ... instead of
+    /// silently overwriting the earlier run's series; the actual path
+    /// is returned.
     pub fn dump(&self, dir: &Path) -> std::io::Result<PathBuf> {
-        let out = dir.join(&self.run_id);
+        let mut out = dir.join(&self.run_id);
+        let mut suffix = 2;
+        while out.exists() {
+            out = dir.join(format!("{}-{}", self.run_id, suffix));
+            suffix += 1;
+        }
         std::fs::create_dir_all(&out)?;
 
         std::fs::write(out.join("run.json"),
@@ -182,6 +191,30 @@ mod tests {
             &std::fs::read_to_string(out.join("run.json")).unwrap())
             .unwrap();
         assert_eq!(run.get("run_id").unwrap().as_str(), Some("test-run"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dump_never_overwrites_an_existing_run() {
+        let dir = std::env::temp_dir().join(format!(
+            "bipmoe-rec-uniq-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = sample();
+        let first = r.dump(&dir).unwrap();
+        let marker = first.join("maxvio_global.csv");
+        let before = std::fs::read_to_string(&marker).unwrap();
+
+        let second = r.dump(&dir).unwrap();
+        assert_ne!(first, second);
+        assert!(second.ends_with("test-run-2"), "{second:?}");
+        let third = r.dump(&dir).unwrap();
+        assert!(third.ends_with("test-run-3"), "{third:?}");
+
+        for out in [&first, &second, &third] {
+            assert!(out.join("run.json").exists(), "{out:?}");
+        }
+        // the first run's series were left untouched
+        assert_eq!(std::fs::read_to_string(&marker).unwrap(), before);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -22,6 +22,11 @@
 //!   on the shared `util::pool::Pool`, and periodic mergeable-state
 //!   reconciliation (`RoutingStrategy::export_state`/`merge_state`).
 //!
+//! Both event loops also exist as `*_with` variants taking an explicit
+//! request source and an optional `trace::TraceRecorder` — the seam the
+//! `trace/` subsystem records, replays, and counterfactually re-routes
+//! through (`Scenario::Replayed`).
+//!
 //! Driven by the `bip-moe serve` subcommand and `bench_serving`.
 
 pub mod replica;
@@ -32,10 +37,13 @@ pub mod slo;
 pub mod traffic;
 
 pub use replica::{
-    run_replicated, ReplicaConfig, ReplicaOutcome, ReplicaSet, SyncEvent,
+    run_replicated, run_replicated_with, ReplicaConfig, ReplicaOutcome,
+    ReplicaSet, SyncEvent,
 };
-pub use router::{Policy, RouterConfig, ServingRouter};
+pub use router::{BatchOutcome, Policy, RouterConfig, ServingRouter};
 pub use scheduler::{Admission, MicroBatcher, SchedulerConfig};
-pub use sim::{run_scenario, Completion, ServeConfig, ServeOutcome};
+pub use sim::{
+    run_scenario, run_scenario_with, Completion, ServeConfig, ServeOutcome,
+};
 pub use slo::{ReplicaSummary, ServeReport, SloTracker};
 pub use traffic::{Request, Scenario, TrafficConfig, TrafficGenerator};

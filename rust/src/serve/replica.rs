@@ -30,16 +30,17 @@
 use std::sync::Arc;
 
 use crate::routing::BalanceState;
+use crate::trace::TraceRecorder;
 use crate::util::pool::Pool;
 use crate::util::stats::Summary;
 
-use super::router::ServingRouter;
+use super::router::{BatchOutcome, ServingRouter};
 use super::scheduler::MicroBatcher;
 use super::sim::{serve_cost_for, Completion, ServeConfig};
 use super::slo::{ReplicaSummary, ServeReport, SloTracker};
 use super::traffic::{Request, TrafficGenerator};
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ReplicaConfig {
     /// independent router replicas (model servers)
     pub replicas: usize,
@@ -57,7 +58,7 @@ impl Default for ReplicaConfig {
 }
 
 /// One balance-state reconciliation, with the divergence it erased.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SyncEvent {
     /// global dispatched-batch count when the sync fired
     pub at_batch: u64,
@@ -144,9 +145,20 @@ impl ReplicaSet {
         self.routers[i].as_ref().expect("router checked in")
     }
 
+    /// Enable per-token assignment capture on every replica (trace
+    /// recording). Off by default: the production path allocates no
+    /// assignment buffers.
+    pub fn set_capture(&mut self, on: bool) {
+        for r in self.routers.iter_mut() {
+            if let Some(router) = r.as_mut() {
+                router.capture_assignments = on;
+            }
+        }
+    }
+
     /// Route one micro-batch per (replica, batch) pair concurrently on
-    /// the shared pool, returning `(replica, service_us, batch)` in
-    /// dispatch order. Routers move into the worker jobs and are
+    /// the shared pool, returning `(replica, service_us, batch,
+    /// outcome)` in dispatch order. Routers move into the worker jobs and are
     /// checked back in before returning, so the set is always whole
     /// between calls; a periodic state sync fires here once
     /// `sync_every` dispatches have accumulated.
@@ -155,7 +167,7 @@ impl ReplicaSet {
         cost: &Arc<crate::parallel::ServeCost>,
         m: usize,
         dispatch: Vec<(usize, Vec<Request>)>,
-    ) -> Vec<(usize, u64, Vec<Request>)> {
+    ) -> Vec<(usize, u64, Vec<Request>, BatchOutcome)> {
         let items: Vec<(usize, ServingRouter, Vec<Request>)> = dispatch
             .into_iter()
             .map(|(i, b)| {
@@ -168,15 +180,15 @@ impl ReplicaSet {
             let service_us = cost
                 .batch_us(&router.placement, &outcome.loads, m)
                 .max(1.0) as u64;
-            (i, router, batch, outcome.batch_vio, service_us)
+            (i, router, batch, outcome, service_us)
         });
         let mut out = Vec::with_capacity(routed.len());
-        for (i, router, batch, batch_vio, service_us) in routed {
+        for (i, router, batch, outcome, service_us) in routed {
             self.routers[i] = Some(router);
-            self.window[i].push(batch_vio);
+            self.window[i].push(outcome.batch_vio);
             self.batches += 1;
             self.since_sync += 1;
-            out.push((i, service_us, batch));
+            out.push((i, service_us, batch, outcome));
         }
         if self.routers.len() > 1
             && self.sync_every > 0
@@ -293,12 +305,32 @@ pub fn run_replicated(
     cfg: &ServeConfig,
     rcfg: &ReplicaConfig,
 ) -> ReplicaOutcome {
+    run_replicated_with(
+        cfg,
+        rcfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        None,
+    )
+}
+
+/// [`run_replicated`] over an explicit request source — the trace
+/// subsystem's record/replay seam (see [`super::sim::run_scenario_with`]
+/// for the single-server analogue). When `recorder` is present, every
+/// routed frame is tagged with its replica and the merge-sync events
+/// are recorded alongside the completion log.
+pub fn run_replicated_with(
+    cfg: &ServeConfig,
+    rcfg: &ReplicaConfig,
+    source: impl Iterator<Item = Request>,
+    mut recorder: Option<&mut TraceRecorder>,
+) -> ReplicaOutcome {
     let r = rcfg.replicas.max(1);
     let mut set = ReplicaSet::new(cfg, rcfg);
+    set.set_capture(recorder.is_some());
     let serve_cost = Arc::new(serve_cost_for(&cfg.router));
     let m = cfg.router.m;
 
-    let mut gen = TrafficGenerator::new(cfg.traffic.clone());
+    let mut gen = source;
     let mut batcher = MicroBatcher::new(cfg.sched.clone());
     let mut slo = SloTracker::new(cfg.traffic.slo_us);
     let mut completions = Vec::new();
@@ -315,7 +347,11 @@ pub fn run_replicated(
             .as_ref()
             .map_or(false, |req| req.arrival_us <= now)
         {
-            batcher.offer(next_arrival.take().unwrap());
+            let req = next_arrival.take().unwrap();
+            if let Some(rec) = recorder.as_deref_mut() {
+                rec.record_arrival(&req);
+            }
+            batcher.offer(req);
             next_arrival = gen.next();
         }
 
@@ -351,12 +387,22 @@ pub fn run_replicated(
         }
 
         if !dispatch.is_empty() {
-            for (i, service_us, batch) in
+            for (i, service_us, batch, mut outcome) in
                 set.route_parallel(&serve_cost, m, dispatch)
             {
                 server_free[i] = now + service_us;
                 work_us[i] += service_us;
                 served_reqs[i] += batch.len() as u64;
+                if let Some(rec) = recorder.as_deref_mut() {
+                    // consumes the outcome's assignment/load buffers
+                    rec.record_frame(
+                        i,
+                        now,
+                        service_us,
+                        &batch,
+                        &mut outcome,
+                    );
+                }
                 for req in &batch {
                     slo.record(
                         req.arrival_us,
@@ -486,6 +532,10 @@ pub fn run_replicated(
         state_bytes,
         horizon_s,
     };
+    if let Some(rec) = recorder.as_deref_mut() {
+        rec.set_syncs(&set.syncs);
+        rec.set_completions(&completions);
+    }
     ReplicaOutcome {
         report,
         per_replica,

@@ -83,7 +83,7 @@ impl Policy {
     }
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RouterConfig {
     pub m: usize,
     pub k: usize,
@@ -135,6 +135,10 @@ pub struct BatchOutcome {
     pub degraded: u64,
     /// mean over layers of max-device-load / mean-device-load
     pub device_imbalance: f64,
+    /// `[layer][token]` enforced chosen experts — populated only when
+    /// [`ServingRouter::capture_assignments`] is set (trace recording);
+    /// `None` on the production path, which allocates nothing for it
+    pub assignment: Option<Vec<Vec<Vec<u16>>>>,
 }
 
 pub struct ServingRouter {
@@ -149,6 +153,9 @@ pub struct ServingRouter {
     pub degraded_total: u64,
     pub balance: BalanceTracker,
     pub imbalance: Summary,
+    /// collect per-token post-enforcement assignments into
+    /// [`BatchOutcome::assignment`] (trace recording); off by default
+    pub capture_assignments: bool,
 }
 
 impl ServingRouter {
@@ -213,6 +220,7 @@ impl ServingRouter {
             degraded_total: 0,
             balance,
             imbalance: Summary::new(),
+            capture_assignments: false,
         }
     }
 
@@ -287,6 +295,9 @@ impl ServingRouter {
         let mut imbalance_sum = 0.0;
         let mut occ = vec![0u32; m];
         let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        let mut captured: Option<Vec<Vec<Vec<u16>>>> = self
+            .capture_assignments
+            .then(|| Vec::with_capacity(n_layers));
 
         for l in 0..n_layers {
             let mut scores = Vec::with_capacity(n * m);
@@ -297,6 +308,9 @@ impl ServingRouter {
             let routing = self.layers[l].route_batch(&inst);
 
             occ.iter_mut().for_each(|o| *o = 0);
+            let mut layer_cap: Option<Vec<Vec<u16>>> = captured
+                .is_some()
+                .then(|| Vec::with_capacity(n));
             for (i, experts) in routing.assignment.iter().enumerate() {
                 chosen.clear();
                 for &e in experts.iter().take(k) {
@@ -327,10 +341,16 @@ impl ServingRouter {
                         None => degraded += 1,
                     }
                 }
+                if let Some(lc) = layer_cap.as_mut() {
+                    lc.push(chosen.iter().map(|&e| e as u16).collect());
+                }
                 let lrow = &mut loads[l * m..(l + 1) * m];
                 for &e in &chosen {
                     lrow[e] += 1.0;
                 }
+            }
+            if let Some(all) = captured.as_mut() {
+                all.push(layer_cap.take().expect("capture is on"));
             }
             let lrow = &loads[l * m..(l + 1) * m];
             imbalance_sum += self.placement.imbalance(lrow);
@@ -353,6 +373,7 @@ impl ServingRouter {
             overflow,
             degraded,
             device_imbalance,
+            assignment: captured,
         }
     }
 }
@@ -458,6 +479,32 @@ mod tests {
         let block = run(None);
         let lpt = run(Some(2));
         assert!(lpt < block, "lpt {lpt} block {block}");
+    }
+
+    #[test]
+    fn captured_assignments_match_the_enforced_loads() {
+        let reqs = requests(Scenario::Adversarial, 96, 8);
+        for policy in [Policy::Greedy, Policy::Online] {
+            let mut r = router(policy);
+            r.capture_assignments = true;
+            let out = r.route_batch(&reqs);
+            let asn = out.assignment.as_ref().expect("capture on");
+            assert_eq!(asn.len(), 4, "one entry per layer");
+            let mut loads = vec![0.0f32; 4 * 16];
+            for (l, layer) in asn.iter().enumerate() {
+                assert_eq!(layer.len(), 96, "one entry per token");
+                for tok in layer {
+                    assert!(tok.len() <= 4);
+                    for &e in tok {
+                        loads[l * 16 + e as usize] += 1.0;
+                    }
+                }
+            }
+            assert_eq!(loads, out.loads, "{policy:?}");
+            // off by default: the production path allocates nothing
+            let mut plain = router(policy);
+            assert!(plain.route_batch(&reqs).assignment.is_none());
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@ use std::collections::VecDeque;
 
 use super::traffic::Request;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerConfig {
     /// admission bound: arrivals beyond this queue depth are rejected
     pub queue_cap: usize,

@@ -11,13 +11,14 @@
 //! the traffic seed.
 
 use crate::parallel::{DeviceProfile, Mesh, ModelCost, ServeCost};
+use crate::trace::TraceRecorder;
 
 use super::router::{Policy, RouterConfig, ServingRouter};
 use super::scheduler::{MicroBatcher, SchedulerConfig};
 use super::slo::{ServeReport, SloTracker};
 use super::traffic::{Request, TrafficConfig, TrafficGenerator};
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
     pub traffic: TrafficConfig,
     pub sched: SchedulerConfig,
@@ -54,7 +55,7 @@ pub(crate) fn serve_cost_for(router: &RouterConfig) -> ServeCost {
 }
 
 /// One served request, in completion order.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Completion {
     pub id: u64,
     pub tenant: u32,
@@ -70,9 +71,26 @@ pub struct ServeOutcome {
 
 /// Run one (scenario, policy) serving simulation to completion.
 pub fn run_scenario(cfg: &ServeConfig) -> ServeOutcome {
-    let mut gen = TrafficGenerator::new(cfg.traffic.clone());
+    run_scenario_with(cfg, TrafficGenerator::new(cfg.traffic.clone()), None)
+}
+
+/// [`run_scenario`] over an explicit request source — the seam the
+/// trace subsystem records and replays through. `source` is any
+/// timestamp-ordered request iterator (a [`TrafficGenerator`], or a
+/// recorded arrival stream); `recorder`, when present, captures the
+/// offered stream, every routed frame, and the completion log
+/// ([`crate::trace`]). With `recorder = None` this is exactly the
+/// production path: no assignment buffers are allocated and no clones
+/// are made.
+pub fn run_scenario_with(
+    cfg: &ServeConfig,
+    source: impl Iterator<Item = Request>,
+    mut recorder: Option<&mut TraceRecorder>,
+) -> ServeOutcome {
+    let mut gen = source;
     let mut batcher = MicroBatcher::new(cfg.sched.clone());
     let mut router = ServingRouter::new(cfg.policy, cfg.router.clone());
+    router.capture_assignments = recorder.is_some();
     let serve_cost = serve_cost_for(&cfg.router);
     let mut slo = SloTracker::new(cfg.traffic.slo_us);
     let mut completions = Vec::new();
@@ -87,7 +105,11 @@ pub fn run_scenario(cfg: &ServeConfig) -> ServeOutcome {
             .as_ref()
             .map_or(false, |r| r.arrival_us <= now)
         {
-            batcher.offer(next_arrival.take().unwrap());
+            let req = next_arrival.take().unwrap();
+            if let Some(rec) = recorder.as_deref_mut() {
+                rec.record_arrival(&req);
+            }
+            batcher.offer(req);
             next_arrival = gen.next();
         }
 
@@ -95,7 +117,7 @@ pub fn run_scenario(cfg: &ServeConfig) -> ServeOutcome {
         if now >= server_free && batcher.ready(now) {
             let batch = batcher.take_batch(now);
             if !batch.is_empty() {
-                let outcome = router.route_batch(&batch);
+                let mut outcome = router.route_batch(&batch);
                 let service_us = serve_cost
                     .batch_us(
                         &router.placement,
@@ -104,6 +126,16 @@ pub fn run_scenario(cfg: &ServeConfig) -> ServeOutcome {
                     )
                     .max(1.0) as u64;
                 server_free = now + service_us;
+                if let Some(rec) = recorder.as_deref_mut() {
+                    // consumes the outcome's assignment/load buffers
+                    rec.record_frame(
+                        0,
+                        now,
+                        service_us,
+                        &batch,
+                        &mut outcome,
+                    );
+                }
                 for r in &batch {
                     slo.record(r.arrival_us, server_free, r.deadline_us);
                     completions.push(Completion {
@@ -167,6 +199,9 @@ pub fn run_scenario(cfg: &ServeConfig) -> ServeOutcome {
         state_bytes: router.state_bytes(),
         horizon_s,
     };
+    if let Some(rec) = recorder.as_deref_mut() {
+        rec.set_completions(&completions);
+    }
     ServeOutcome { report, completions }
 }
 

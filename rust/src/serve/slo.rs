@@ -262,6 +262,23 @@ mod tests {
     }
 
     #[test]
+    fn zero_admission_percentiles_are_zero_for_every_quantile() {
+        // the trace-diff report path builds SloTrackers straight from
+        // completion logs; a zero-admission trace has none, and every
+        // quantile must come back 0.0 — never an interpolation into an
+        // empty sample (NaN/panic)
+        let t = SloTracker::new(10);
+        for q in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            let v = t.latency_us(q);
+            assert_eq!(v, 0.0, "q={q}");
+            assert!(v.is_finite());
+        }
+        assert_eq!(t.goodput_rps(), 0.0);
+        assert_eq!(t.violations, 0);
+        assert_eq!(t.completed, 0);
+    }
+
+    #[test]
     fn report_json_and_table_row_agree() {
         let r = ServeReport {
             scenario: "steady".into(),

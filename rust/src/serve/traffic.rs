@@ -28,6 +28,10 @@ pub enum Scenario {
     /// Poisson mix of tenants with Zipf-ish weights, each tenant with its
     /// own hot experts.
     MultiTenant,
+    /// A recorded request stream re-driven from a trace
+    /// (`trace::replay`): never generated, so it is excluded from
+    /// [`Scenario::all`] and rejected by [`TrafficGenerator::new`].
+    Replayed,
 }
 
 impl Scenario {
@@ -48,6 +52,7 @@ impl Scenario {
             Scenario::Diurnal => "diurnal",
             Scenario::Adversarial => "adversarial",
             Scenario::MultiTenant => "multitenant",
+            Scenario::Replayed => "replayed",
         }
     }
 
@@ -60,12 +65,13 @@ impl Scenario {
             "multitenant" | "multi-tenant" | "tenants" => {
                 Some(Scenario::MultiTenant)
             }
+            "replayed" | "replay" => Some(Scenario::Replayed),
             _ => None,
         }
     }
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrafficConfig {
     pub scenario: Scenario,
     pub n_requests: usize,
@@ -106,7 +112,7 @@ impl Default for TrafficConfig {
 }
 
 /// One inference request: a token with per-layer router scores.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Request {
     pub id: u64,
     pub tenant: u32,
@@ -142,6 +148,11 @@ fn exp_sample(rng: &mut Pcg64) -> f64 {
 impl TrafficGenerator {
     pub fn new(cfg: TrafficConfig) -> TrafficGenerator {
         assert!(cfg.rate_per_s > 0.0 && cfg.m >= cfg.k && cfg.k >= 1);
+        assert!(
+            cfg.scenario != Scenario::Replayed,
+            "Scenario::Replayed streams from a recorded trace \
+             (trace::replay), not the generator"
+        );
         let mut rng = Pcg64::with_stream(cfg.seed, 0x5e21);
         let t = cfg.n_tenants.max(1);
         let (l, m) = (cfg.n_layers, cfg.m);
@@ -174,6 +185,7 @@ impl TrafficGenerator {
                     }
                 }
             }
+            Scenario::Replayed => unreachable!("rejected above"),
         }
         let tenant_w: Vec<f64> =
             (0..t).map(|i| 1.0 / (i + 1) as f64).collect();
@@ -217,6 +229,7 @@ impl TrafficGenerator {
                 exp_sample(&mut self.rng) * base / mult
             }
             Scenario::MultiTenant => exp_sample(&mut self.rng) * base,
+            Scenario::Replayed => unreachable!("rejected at construction"),
         }
     }
 
@@ -369,6 +382,20 @@ mod tests {
             var.sqrt() / mean
         };
         assert!(cv(&gaps(Scenario::Bursty)) > cv(&gaps(Scenario::Steady)) + 0.5);
+    }
+
+    #[test]
+    fn replayed_is_parseable_but_never_generated() {
+        assert_eq!(Scenario::parse("replayed"), Some(Scenario::Replayed));
+        assert_eq!(Scenario::Replayed.name(), "replayed");
+        // all() enumerates only the generative scenarios
+        assert!(!Scenario::all().contains(&Scenario::Replayed));
+    }
+
+    #[test]
+    #[should_panic(expected = "recorded trace")]
+    fn replayed_traffic_cannot_be_generated() {
+        TrafficGenerator::new(cfg(Scenario::Replayed));
     }
 
     #[test]

@@ -1,0 +1,748 @@
+//! The versioned binary trace format.
+//!
+//! A trace file is a length-prefixed little-endian container:
+//!
+//! ```text
+//! magic "BIPT" (4)  version u32
+//! meta block        — the full (ServeConfig, ReplicaConfig) pair, so a
+//!                     replay rebuilds the *identical* pipeline
+//! arrivals          — count u64, then one block per offered request
+//!                     (id, tenant, arrival_us, deadline_us, and the
+//!                     row-major (n_layers, m) gate scores)
+//! frames            — count u64, then one block per routed micro-batch
+//!                     (seq, replica tag, dispatch virtual time, priced
+//!                     service time, request ids, per-layer per-token
+//!                     enforced top-K, per-layer per-expert loads)
+//! syncs             — count u64, then the replica merge-sync events
+//! completions       — count u64, then the completion log in dispatch
+//!                     order (id, tenant, arrival_us, completion_us)
+//! ```
+//!
+//! Every record is a `u32` length-prefixed block, so a reader can skip
+//! records it does not understand; any change to a record's *interior*
+//! layout must bump [`TRACE_VERSION`]. Version 1 stores each token's
+//! enforced top-K count as a `u8`, so k <= 255 (asserted at recording
+//! time — far above any MoE top-K in the paper's range). Readers reject unknown magic and
+//! versions up front and report truncation with a byte offset. For
+//! small traces [`Trace::to_json`] exports the same content through
+//! `util::json` for inspection and tooling.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::serve::{
+    Completion, Policy, ReplicaConfig, Request, RouterConfig, Scenario,
+    SchedulerConfig, ServeConfig, SyncEvent, TrafficConfig,
+};
+use crate::util::json::Json;
+
+pub const TRACE_MAGIC: [u8; 4] = *b"BIPT";
+pub const TRACE_VERSION: u32 = 1;
+
+/// Everything needed to re-drive the recorded run: the exact serving
+/// configuration (traffic, scheduler, router, policy) plus the replica
+/// topology the stream was served on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMeta {
+    pub serve: ServeConfig,
+    pub replicas: ReplicaConfig,
+}
+
+impl TraceMeta {
+    pub fn new(cfg: &ServeConfig, rcfg: &ReplicaConfig) -> TraceMeta {
+        TraceMeta { serve: cfg.clone(), replicas: *rcfg }
+    }
+
+    /// Whether the recorded run went through the replicated engine
+    /// (`run_replicated`) rather than the single-server loop — replay
+    /// must branch the same way to stay bit-identical.
+    pub fn is_replicated(&self) -> bool {
+        self.replicas.replicas > 1 || self.replicas.threads > 1
+    }
+}
+
+/// One routed micro-batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceFrame {
+    /// global dispatch order across all replicas
+    pub seq: u64,
+    /// which replica routed the batch (0 for the single-server loop)
+    pub replica: u32,
+    /// virtual dispatch time
+    pub now_us: u64,
+    /// priced service time (completion = now_us + service_us)
+    pub service_us: u64,
+    /// requests in the batch, FIFO order
+    pub ids: Vec<u64>,
+    /// `[layer][token]` enforced chosen experts, post capacity
+    /// enforcement (fewer than k entries when slots were degraded)
+    pub topk: Vec<Vec<Vec<u16>>>,
+    /// row-major (n_layers, m) enforced per-expert loads
+    pub loads: Vec<f32>,
+}
+
+/// A recorded serving run: the offered stream, every routing decision,
+/// the replica sync events, and the completion log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub meta: TraceMeta,
+    pub arrivals: Vec<Request>,
+    pub frames: Vec<TraceFrame>,
+    pub syncs: Vec<SyncEvent>,
+    pub completions: Vec<Completion>,
+}
+
+impl Trace {
+    /// Tokens actually routed (batched), summed over frames.
+    pub fn routed_tokens(&self) -> u64 {
+        self.frames.iter().map(|f| f.ids.len() as u64).sum()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.raw(&TRACE_MAGIC);
+        w.u32(TRACE_VERSION);
+
+        let start = w.begin_block();
+        write_meta(&mut w, &self.meta);
+        w.end_block(start);
+
+        w.u64(self.arrivals.len() as u64);
+        for r in &self.arrivals {
+            let start = w.begin_block();
+            w.u64(r.id);
+            w.u32(r.tenant);
+            w.u64(r.arrival_us);
+            w.u64(r.deadline_us);
+            w.u32(r.scores.len() as u32);
+            for &s in &r.scores {
+                w.f32(s);
+            }
+            w.end_block(start);
+        }
+
+        w.u64(self.frames.len() as u64);
+        for f in &self.frames {
+            let start = w.begin_block();
+            write_frame(&mut w, f);
+            w.end_block(start);
+        }
+
+        w.u64(self.syncs.len() as u64);
+        for s in &self.syncs {
+            let start = w.begin_block();
+            w.u64(s.at_batch);
+            w.f64(s.vio_spread_before);
+            w.f64(s.vio_spread_after);
+            w.f64(s.state_div_before);
+            w.f64(s.state_div_after);
+            w.end_block(start);
+        }
+
+        w.u64(self.completions.len() as u64);
+        for c in &self.completions {
+            let start = w.begin_block();
+            w.u64(c.id);
+            w.u32(c.tenant);
+            w.u64(c.arrival_us);
+            w.u64(c.completion_us);
+            w.end_block(start);
+        }
+
+        w.buf
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Trace> {
+        let mut r = ByteReader::new(bytes);
+        let magic = r.take(4)?;
+        if magic != &TRACE_MAGIC[..] {
+            bail!("not a bip-moe trace (bad magic {:02x?})", magic);
+        }
+        let version = r.u32()?;
+        if version != TRACE_VERSION {
+            bail!(
+                "unsupported trace version {version} (this build reads \
+                 version {TRACE_VERSION})"
+            );
+        }
+
+        let mut mb = r.block()?;
+        let meta = read_meta(&mut mb)?;
+
+        let n = r.u64()? as usize;
+        let mut arrivals = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let mut b = r.block()?;
+            let id = b.u64()?;
+            let tenant = b.u32()?;
+            let arrival_us = b.u64()?;
+            let deadline_us = b.u64()?;
+            let ns = b.u32()? as usize;
+            let mut scores = Vec::with_capacity(ns.min(1 << 16));
+            for _ in 0..ns {
+                scores.push(b.f32()?);
+            }
+            arrivals.push(Request {
+                id,
+                tenant,
+                arrival_us,
+                deadline_us,
+                scores,
+            });
+        }
+
+        let n = r.u64()? as usize;
+        let mut frames = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let mut b = r.block()?;
+            frames.push(read_frame(&mut b)?);
+        }
+
+        let n = r.u64()? as usize;
+        let mut syncs = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let mut b = r.block()?;
+            syncs.push(SyncEvent {
+                at_batch: b.u64()?,
+                vio_spread_before: b.f64()?,
+                vio_spread_after: b.f64()?,
+                state_div_before: b.f64()?,
+                state_div_after: b.f64()?,
+            });
+        }
+
+        let n = r.u64()? as usize;
+        let mut completions = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let mut b = r.block()?;
+            completions.push(Completion {
+                id: b.u64()?,
+                tenant: b.u32()?,
+                arrival_us: b.u64()?,
+                completion_us: b.u64()?,
+            });
+        }
+
+        Ok(Trace { meta, arrivals, frames, syncs, completions })
+    }
+
+    /// Number of bytes written.
+    pub fn save(&self, path: &Path) -> Result<usize> {
+        let bytes = self.to_bytes();
+        std::fs::write(path, &bytes)
+            .with_context(|| format!("writing trace {}", path.display()))?;
+        Ok(bytes.len())
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Trace::from_bytes(&bytes)
+            .with_context(|| format!("parsing trace {}", path.display()))
+    }
+
+    /// Full JSON export (intended for *small* traces: the score matrix
+    /// of every arrival is inlined).
+    pub fn to_json(&self) -> Json {
+        let t = &self.meta.serve.traffic;
+        let rc = &self.meta.replicas;
+        Json::obj(vec![
+            ("format", Json::Str("bip-moe-trace".into())),
+            ("version", Json::Num(TRACE_VERSION as f64)),
+            (
+                "meta",
+                Json::obj(vec![
+                    ("scenario", Json::Str(t.scenario.name().into())),
+                    (
+                        "policy",
+                        Json::Str(self.meta.serve.policy.name().into()),
+                    ),
+                    ("n_requests", Json::Num(t.n_requests as f64)),
+                    ("rate_per_s", Json::Num(t.rate_per_s)),
+                    ("m", Json::Num(t.m as f64)),
+                    ("k", Json::Num(t.k as f64)),
+                    ("n_layers", Json::Num(t.n_layers as f64)),
+                    ("slo_us", Json::Num(t.slo_us as f64)),
+                    ("seed", Json::Num(t.seed as f64)),
+                    ("replicas", Json::Num(rc.replicas as f64)),
+                    ("threads", Json::Num(rc.threads as f64)),
+                    ("sync_every", Json::Num(rc.sync_every as f64)),
+                ]),
+            ),
+            (
+                "arrivals",
+                Json::Arr(
+                    self.arrivals
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::Num(r.id as f64)),
+                                ("tenant", Json::Num(r.tenant as f64)),
+                                (
+                                    "arrival_us",
+                                    Json::Num(r.arrival_us as f64),
+                                ),
+                                (
+                                    "deadline_us",
+                                    Json::Num(r.deadline_us as f64),
+                                ),
+                                ("scores", Json::from_f32s(&r.scores)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "frames",
+                Json::Arr(self.frames.iter().map(frame_json).collect()),
+            ),
+            (
+                "syncs",
+                Json::Arr(
+                    self.syncs
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("at_batch", Json::Num(s.at_batch as f64)),
+                                (
+                                    "vio_spread_before",
+                                    Json::Num(s.vio_spread_before),
+                                ),
+                                (
+                                    "vio_spread_after",
+                                    Json::Num(s.vio_spread_after),
+                                ),
+                                (
+                                    "state_div_before",
+                                    Json::Num(s.state_div_before),
+                                ),
+                                (
+                                    "state_div_after",
+                                    Json::Num(s.state_div_after),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "completions",
+                Json::Arr(
+                    self.completions
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("id", Json::Num(c.id as f64)),
+                                ("tenant", Json::Num(c.tenant as f64)),
+                                (
+                                    "arrival_us",
+                                    Json::Num(c.arrival_us as f64),
+                                ),
+                                (
+                                    "completion_us",
+                                    Json::Num(c.completion_us as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn frame_json(f: &TraceFrame) -> Json {
+    Json::obj(vec![
+        ("seq", Json::Num(f.seq as f64)),
+        ("replica", Json::Num(f.replica as f64)),
+        ("now_us", Json::Num(f.now_us as f64)),
+        ("service_us", Json::Num(f.service_us as f64)),
+        (
+            "ids",
+            Json::Arr(f.ids.iter().map(|&i| Json::Num(i as f64)).collect()),
+        ),
+        (
+            "topk",
+            Json::Arr(
+                f.topk
+                    .iter()
+                    .map(|layer| {
+                        Json::Arr(
+                            layer
+                                .iter()
+                                .map(|tok| {
+                                    Json::Arr(
+                                        tok.iter()
+                                            .map(|&e| Json::Num(e as f64))
+                                            .collect(),
+                                    )
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+        ("loads", Json::from_f32s(&f.loads)),
+    ])
+}
+
+fn write_frame(w: &mut ByteWriter, f: &TraceFrame) {
+    w.u64(f.seq);
+    w.u32(f.replica);
+    w.u64(f.now_us);
+    w.u64(f.service_us);
+    w.u32(f.ids.len() as u32);
+    for &id in &f.ids {
+        w.u64(id);
+    }
+    w.u32(f.topk.len() as u32);
+    for layer in &f.topk {
+        debug_assert_eq!(layer.len(), f.ids.len());
+        for tok in layer {
+            debug_assert!(tok.len() <= u8::MAX as usize);
+            w.u8(tok.len() as u8);
+            for &e in tok {
+                w.u16(e);
+            }
+        }
+    }
+    w.u32(f.loads.len() as u32);
+    for &x in &f.loads {
+        w.f32(x);
+    }
+}
+
+fn read_frame(b: &mut ByteReader) -> Result<TraceFrame> {
+    let seq = b.u64()?;
+    let replica = b.u32()?;
+    let now_us = b.u64()?;
+    let service_us = b.u64()?;
+    let n_tokens = b.u32()? as usize;
+    let mut ids = Vec::with_capacity(n_tokens.min(1 << 16));
+    for _ in 0..n_tokens {
+        ids.push(b.u64()?);
+    }
+    let n_layers = b.u32()? as usize;
+    let mut topk = Vec::with_capacity(n_layers.min(1 << 10));
+    for _ in 0..n_layers {
+        let mut layer = Vec::with_capacity(n_tokens.min(1 << 16));
+        for _ in 0..n_tokens {
+            let len = b.u8()? as usize;
+            let mut tok = Vec::with_capacity(len);
+            for _ in 0..len {
+                tok.push(b.u16()?);
+            }
+            layer.push(tok);
+        }
+        topk.push(layer);
+    }
+    let nl = b.u32()? as usize;
+    let mut loads = Vec::with_capacity(nl.min(1 << 16));
+    for _ in 0..nl {
+        loads.push(b.f32()?);
+    }
+    Ok(TraceFrame { seq, replica, now_us, service_us, ids, topk, loads })
+}
+
+fn write_meta(w: &mut ByteWriter, meta: &TraceMeta) {
+    let t = &meta.serve.traffic;
+    w.str(t.scenario.name());
+    w.u64(t.n_requests as u64);
+    w.f64(t.rate_per_s);
+    w.u64(t.n_layers as u64);
+    w.u64(t.m as u64);
+    w.u64(t.k as u64);
+    w.u64(t.n_tenants as u64);
+    w.u64(t.slo_us);
+    w.f64(t.temp);
+    w.f64(t.skew);
+    w.u64(t.seed);
+
+    let s = &meta.serve.sched;
+    w.u64(s.queue_cap as u64);
+    w.u64(s.batch_max as u64);
+    w.u64(s.max_wait_us);
+    w.u8(s.drop_expired as u8);
+
+    let r = &meta.serve.router;
+    w.u64(r.m as u64);
+    w.u64(r.k as u64);
+    w.u64(r.n_layers as u64);
+    w.u64(r.t_iters as u64);
+    w.u64(r.buckets as u64);
+    w.u64(r.expected_stream as u64);
+    w.f64(r.capacity_factor);
+    w.u64(r.n_devices as u64);
+    // 0 encodes None (Some(0) is rejected by the router's constructor)
+    w.u64(r.lpt_refresh.unwrap_or(0));
+    w.f32(r.lossfree_u);
+
+    w.str(meta.serve.policy.name());
+
+    let rc = &meta.replicas;
+    w.u64(rc.replicas as u64);
+    w.u64(rc.threads as u64);
+    w.u64(rc.sync_every);
+}
+
+fn read_meta(b: &mut ByteReader) -> Result<TraceMeta> {
+    let scenario_name = b.str()?;
+    let scenario = Scenario::parse(&scenario_name)
+        .ok_or_else(|| anyhow!("unknown trace scenario {scenario_name}"))?;
+    let traffic = TrafficConfig {
+        scenario,
+        n_requests: b.u64()? as usize,
+        rate_per_s: b.f64()?,
+        n_layers: b.u64()? as usize,
+        m: b.u64()? as usize,
+        k: b.u64()? as usize,
+        n_tenants: b.u64()? as usize,
+        slo_us: b.u64()?,
+        temp: b.f64()?,
+        skew: b.f64()?,
+        seed: b.u64()?,
+    };
+    let sched = SchedulerConfig {
+        queue_cap: b.u64()? as usize,
+        batch_max: b.u64()? as usize,
+        max_wait_us: b.u64()?,
+        drop_expired: b.u8()? != 0,
+    };
+    let router = RouterConfig {
+        m: b.u64()? as usize,
+        k: b.u64()? as usize,
+        n_layers: b.u64()? as usize,
+        t_iters: b.u64()? as usize,
+        buckets: b.u64()? as usize,
+        expected_stream: b.u64()? as usize,
+        capacity_factor: b.f64()?,
+        n_devices: b.u64()? as usize,
+        lpt_refresh: match b.u64()? {
+            0 => None,
+            n => Some(n),
+        },
+        lossfree_u: b.f32()?,
+    };
+    let policy_name = b.str()?;
+    let policy = Policy::parse(&policy_name)
+        .ok_or_else(|| anyhow!("unknown trace policy {policy_name}"))?;
+    let replicas = ReplicaConfig {
+        replicas: b.u64()? as usize,
+        threads: b.u64()? as usize,
+        sync_every: b.u64()?,
+    };
+    Ok(TraceMeta {
+        serve: ServeConfig { traffic, sched, router, policy },
+        replicas,
+    })
+}
+
+// ---- little-endian length-prefixed primitives --------------------------
+
+pub(crate) struct ByteWriter {
+    pub buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    pub fn u16(&mut self, x: u16) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, x: f32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, x: f64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.raw(s.as_bytes());
+    }
+
+    /// Start a length-prefixed block; returns the position to hand to
+    /// [`ByteWriter::end_block`], which patches the length in place.
+    pub fn begin_block(&mut self) -> usize {
+        self.u32(0);
+        self.buf.len()
+    }
+
+    pub fn end_block(&mut self, start: usize) {
+        let len = (self.buf.len() - start) as u32;
+        self.buf[start - 4..start].copy_from_slice(&len.to_le_bytes());
+    }
+}
+
+pub(crate) struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "trace truncated at byte {} (wanted {} more of {})",
+                    self.pos,
+                    n,
+                    self.buf.len()
+                )
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow!("trace string is not utf-8"))
+    }
+
+    /// Read one length-prefixed block as a sub-reader.
+    pub fn block(&mut self) -> Result<ByteReader<'a>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        Ok(ByteReader::new(bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u16(65_535);
+        w.u32(123_456);
+        w.u64(1 << 60);
+        w.f32(-0.5);
+        w.f64(std::f64::consts::PI);
+        w.str("héllo");
+        let start = w.begin_block();
+        w.u32(42);
+        w.end_block(start);
+
+        let mut r = ByteReader::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 65_535);
+        assert_eq!(r.u32().unwrap(), 123_456);
+        assert_eq!(r.u64().unwrap(), 1 << 60);
+        assert_eq!(r.f32().unwrap(), -0.5);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.str().unwrap(), "héllo");
+        let mut b = r.block().unwrap();
+        assert_eq!(b.u32().unwrap(), 42);
+        assert!(b.u8().is_err(), "block must bound its reads");
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = ByteWriter::new();
+        w.u64(9);
+        let mut r = ByteReader::new(&w.buf[..5]);
+        let err = r.u64().unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn meta_round_trips_bit_exactly() {
+        let cfg = ServeConfig::new(
+            TrafficConfig {
+                scenario: Scenario::Bursty,
+                n_requests: 777,
+                rate_per_s: 123_456.789,
+                temp: 1.75,
+                skew: 3.125,
+                seed: 99,
+                ..Default::default()
+            },
+            SchedulerConfig { queue_cap: 33, ..Default::default() },
+            RouterConfig {
+                lpt_refresh: Some(5),
+                capacity_factor: 1.5,
+                ..Default::default()
+            },
+            Policy::Approx,
+        );
+        let rcfg =
+            ReplicaConfig { replicas: 3, threads: 2, sync_every: 11 };
+        let meta = TraceMeta::new(&cfg, &rcfg);
+        let mut w = ByteWriter::new();
+        write_meta(&mut w, &meta);
+        let mut r = ByteReader::new(&w.buf);
+        let back = read_meta(&mut r).unwrap();
+        assert_eq!(back, meta);
+        assert!(back.is_replicated());
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        assert!(Trace::from_bytes(b"nope").is_err());
+        let err = Trace::from_bytes(b"XXXX\x01\x00\x00\x00").unwrap_err();
+        assert!(format!("{err}").contains("magic"), "{err}");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&TRACE_MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        let err = Trace::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+    }
+}

@@ -1,0 +1,34 @@
+//! Routing-trace capture, deterministic replay, and counterfactual
+//! policy re-evaluation.
+//!
+//! The paper's headline claim — balance on every expert in every layer
+//! from the first step to the last — is a *trajectory* claim, and a
+//! trajectory can only be audited if every routing decision is recorded
+//! and replayable. This subsystem gives `serve/` that seam:
+//!
+//! * [`format`] — a compact versioned binary trace: header carrying the
+//!   full serving configuration, the offered arrival stream (ids,
+//!   tenants, timestamps, per-layer gate scores), one frame per routed
+//!   micro-batch (replica tag, virtual-time stamps, enforced top-K,
+//!   per-expert loads), replica merge-sync events, and the completion
+//!   log; length-prefixed records, magic/version checking, JSON export
+//!   for small traces;
+//! * [`record`] — the [`TraceRecorder`] sink threaded through
+//!   `run_scenario` / `run_replicated` behind a zero-cost `Option`, so
+//!   any existing scenario (including replicated runs) can be frozen;
+//! * [`replay`] — regression mode (re-drive the recorded stream through
+//!   the identical pipeline and assert bit-identical completions) and
+//!   counterfactual mode (re-route the recorded gate scores under a
+//!   different policy, reporting MaxVio trajectory deltas, top-K
+//!   agreement and SLO deltas).
+//!
+//! Driven by `bip-moe trace record|replay|diff|export` and measured by
+//! `bench_trace` (record overhead, replay throughput).
+
+pub mod format;
+pub mod record;
+pub mod replay;
+
+pub use format::{Trace, TraceFrame, TraceMeta, TRACE_MAGIC, TRACE_VERSION};
+pub use record::TraceRecorder;
+pub use replay::{diff_policies, replay, reroute, PolicyDiff, Replay};

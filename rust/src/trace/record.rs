@@ -1,0 +1,151 @@
+//! The recording sink the serving loops thread through.
+//!
+//! A [`TraceRecorder`] is handed to `serve::run_scenario_with` /
+//! `serve::run_replicated_with` as an `Option<&mut TraceRecorder>`:
+//! `None` is the production path and costs nothing (the router does not
+//! even allocate per-token assignment buffers); `Some` captures the
+//! offered arrival stream in generation order, one [`TraceFrame`] per
+//! routed micro-batch (tagged with the routing replica), the replica
+//! merge-sync events, and the completion log.
+
+use crate::serve::router::BatchOutcome;
+use crate::serve::{Completion, ReplicaConfig, Request, ServeConfig, SyncEvent};
+
+use super::format::{Trace, TraceFrame, TraceMeta};
+
+pub struct TraceRecorder {
+    trace: Trace,
+    next_seq: u64,
+}
+
+impl TraceRecorder {
+    pub fn new(cfg: &ServeConfig, rcfg: &ReplicaConfig) -> TraceRecorder {
+        assert!(
+            cfg.router.k <= u8::MAX as usize,
+            "trace format v1 stores per-token top-K counts as u8 \
+             (k = {} > 255)",
+            cfg.router.k
+        );
+        TraceRecorder {
+            trace: Trace {
+                meta: TraceMeta::new(cfg, rcfg),
+                arrivals: Vec::new(),
+                frames: Vec::new(),
+                syncs: Vec::new(),
+                completions: Vec::new(),
+            },
+            next_seq: 0,
+        }
+    }
+
+    /// Record one offered request (admitted *or* rejected — admission
+    /// control is part of what a replay must reproduce).
+    pub fn record_arrival(&mut self, req: &Request) {
+        self.trace.arrivals.push(req.clone());
+    }
+
+    /// Record one routed micro-batch. The router must have been run
+    /// with `capture_assignments` on so the outcome carries the
+    /// per-token enforced top-K. The outcome's assignment and load
+    /// buffers are *moved* into the frame (recording is their last
+    /// use at both call sites), so nothing is deep-cloned per batch.
+    pub fn record_frame(
+        &mut self,
+        replica: usize,
+        now_us: u64,
+        service_us: u64,
+        batch: &[Request],
+        outcome: &mut BatchOutcome,
+    ) {
+        let topk = outcome
+            .assignment
+            .take()
+            .expect("recording requires ServingRouter::capture_assignments");
+        self.trace.frames.push(TraceFrame {
+            seq: self.next_seq,
+            replica: replica as u32,
+            now_us,
+            service_us,
+            ids: batch.iter().map(|r| r.id).collect(),
+            topk,
+            loads: std::mem::take(&mut outcome.loads),
+        });
+        self.next_seq += 1;
+    }
+
+    pub fn set_syncs(&mut self, syncs: &[SyncEvent]) {
+        self.trace.syncs = syncs.to_vec();
+    }
+
+    pub fn set_completions(&mut self, completions: &[Completion]) {
+        self.trace.completions = completions.to_vec();
+    }
+
+    pub fn frames_recorded(&self) -> u64 {
+        self.next_seq
+    }
+
+    pub fn into_trace(self) -> Trace {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{
+        Policy, RouterConfig, Scenario, SchedulerConfig, ServingRouter,
+        TrafficConfig, TrafficGenerator,
+    };
+
+    #[test]
+    fn frames_are_sequenced_and_capture_the_enforced_topk() {
+        let traffic = TrafficConfig {
+            scenario: Scenario::Steady,
+            n_requests: 32,
+            seed: 5,
+            ..Default::default()
+        };
+        let cfg = ServeConfig::new(
+            traffic.clone(),
+            SchedulerConfig::default(),
+            RouterConfig::default(),
+            Policy::Greedy,
+        );
+        let rcfg = ReplicaConfig::default();
+        let mut rec = TraceRecorder::new(&cfg, &rcfg);
+        let reqs: Vec<Request> =
+            TrafficGenerator::new(traffic).collect();
+        let mut router =
+            ServingRouter::new(Policy::Greedy, cfg.router.clone());
+        router.capture_assignments = true;
+        for (i, chunk) in reqs.chunks(16).enumerate() {
+            for r in chunk {
+                rec.record_arrival(r);
+            }
+            let mut out = router.route_batch(chunk);
+            rec.record_frame(0, i as u64 * 100, 50, chunk, &mut out);
+            assert!(out.assignment.is_none(), "buffers move into the frame");
+        }
+        let trace = rec.into_trace();
+        assert_eq!(trace.arrivals.len(), 32);
+        assert_eq!(trace.frames.len(), 2);
+        assert_eq!(trace.frames[0].seq, 0);
+        assert_eq!(trace.frames[1].seq, 1);
+        for f in &trace.frames {
+            assert_eq!(f.ids.len(), 16);
+            assert_eq!(f.topk.len(), 4, "one entry per layer");
+            for layer in &f.topk {
+                assert_eq!(layer.len(), 16, "one entry per token");
+                for tok in layer {
+                    assert!(tok.len() <= 4, "at most k experts");
+                }
+            }
+            // frame loads must equal the replayed count of topk slots
+            let routed: f32 = f.loads.iter().sum();
+            let slots: usize =
+                f.topk.iter().flatten().map(|t| t.len()).sum();
+            assert_eq!(routed as usize, slots);
+        }
+    }
+}

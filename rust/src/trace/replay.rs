@@ -1,0 +1,464 @@
+//! Deterministic replay and counterfactual policy re-evaluation.
+//!
+//! **Regression mode** ([`replay`]): rebuild the exact pipeline from the
+//! trace header (same engine: single-server or replicated, same
+//! scheduler/router/policy config) and re-drive it from the recorded
+//! arrival stream instead of a `TrafficGenerator`. Every stage is
+//! deterministic, so the replayed completion log must equal the
+//! recorded one *field for field* — any divergence is a behavior change
+//! in the serving stack and is reported per completion.
+//!
+//! **Counterfactual mode** ([`reroute`] / [`diff_policies`]): freeze the
+//! recorded workload — the same micro-batches, in the same dispatch
+//! order — and re-route the recorded gate scores under a *different*
+//! [`Policy`]. Admission and batch formation stay as recorded (the
+//! "frozen batching" approximation); service times are re-priced from
+//! the counterfactual loads and chained per replica
+//! (`start = max(recorded dispatch, replica busy-until)`), which yields
+//! counterfactual SLO percentiles next to the recorded ones. For a
+//! replicated trace the merged dispatch stream flows through one
+//! counterfactual router, so the comparison isolates the balancing
+//! policy from replica-state sharding. Re-routing a trace under its own
+//! recorded policy is the identity: top-K agreement 1.0, zero MaxVio
+//! delta, equal SLO — pinned by tests.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::max_violation;
+use crate::serve::sim::serve_cost_for;
+use crate::serve::{
+    run_replicated_with, run_scenario_with, Completion, Policy, Request,
+    Scenario, ServeReport, ServingRouter, SloTracker,
+};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+use super::format::Trace;
+
+/// Outcome of a regression replay.
+pub struct Replay {
+    /// the replayed run's report (same shape as the recorded run)
+    pub report: ServeReport,
+    pub completions: Vec<Completion>,
+    /// empty iff the replay is bit-identical to the recording
+    pub mismatches: Vec<String>,
+}
+
+/// Re-drive the recorded run and diff its completions against the
+/// recording.
+pub fn replay(trace: &Trace) -> Replay {
+    let cfg = trace.meta.serve.clone();
+    let rcfg = trace.meta.replicas;
+    let source = trace.arrivals.iter().cloned();
+    let (report, completions) = if trace.meta.is_replicated() {
+        let out = run_replicated_with(&cfg, &rcfg, source, None);
+        (out.report, out.completions)
+    } else {
+        let out = run_scenario_with(&cfg, source, None);
+        (out.report, out.completions)
+    };
+    let mismatches = diff_completions(&trace.completions, &completions);
+    Replay { report, completions, mismatches }
+}
+
+const MAX_REPORTED_MISMATCHES: usize = 8;
+
+fn diff_completions(
+    recorded: &[Completion],
+    replayed: &[Completion],
+) -> Vec<String> {
+    let mut out = Vec::new();
+    if recorded.len() != replayed.len() {
+        out.push(format!(
+            "completion count: recorded {} vs replayed {}",
+            recorded.len(),
+            replayed.len()
+        ));
+    }
+    let mut extra = 0usize;
+    for (i, (a, b)) in recorded.iter().zip(replayed).enumerate() {
+        if a != b {
+            if out.len() < MAX_REPORTED_MISMATCHES {
+                out.push(format!(
+                    "completion {i}: recorded id={} tenant={} \
+                     arrival={} completion={} vs replayed id={} \
+                     tenant={} arrival={} completion={}",
+                    a.id,
+                    a.tenant,
+                    a.arrival_us,
+                    a.completion_us,
+                    b.id,
+                    b.tenant,
+                    b.arrival_us,
+                    b.completion_us
+                ));
+            } else {
+                extra += 1;
+            }
+        }
+    }
+    if extra > 0 {
+        out.push(format!("... and {extra} more mismatched completions"));
+    }
+    out
+}
+
+/// One counterfactual policy's diff against the recording.
+#[derive(Clone, Debug)]
+pub struct PolicyDiff {
+    /// the counterfactual policy
+    pub policy: String,
+    pub recorded_policy: String,
+    /// always [`Scenario::Replayed`]'s name — the workload is the trace
+    pub scenario: String,
+    pub frames: u64,
+    pub tokens: u64,
+    pub avg_max_vio_recorded: f64,
+    pub avg_max_vio: f64,
+    pub sup_max_vio_recorded: f64,
+    pub sup_max_vio: f64,
+    /// mean over frames of (counterfactual − recorded) per-frame MaxVio
+    pub vio_delta_mean: f64,
+    /// fraction of recorded (token, layer) expert slots the
+    /// counterfactual policy also chose
+    pub topk_agreement: f64,
+    pub overflow: u64,
+    pub degraded: u64,
+    pub p50_ms_recorded: f64,
+    pub p50_ms: f64,
+    pub p95_ms_recorded: f64,
+    pub p95_ms: f64,
+    pub p99_ms_recorded: f64,
+    pub p99_ms: f64,
+    pub slo_violations_recorded: u64,
+    pub slo_violations: u64,
+}
+
+impl PolicyDiff {
+    pub fn headers() -> &'static [&'static str] {
+        &[
+            "Policy", "AvgVioRec", "AvgVioCf", "dVio", "TopKAgree",
+            "Overflow", "p99Rec", "p99Cf", "SloVioRec", "SloVioCf",
+        ]
+    }
+
+    pub fn table_row(&self) -> Vec<String> {
+        vec![
+            self.policy.clone(),
+            format!("{:.4}", self.avg_max_vio_recorded),
+            format!("{:.4}", self.avg_max_vio),
+            format!("{:+.4}", self.vio_delta_mean),
+            format!("{:.3}", self.topk_agreement),
+            format!("{}", self.overflow),
+            format!("{:.2}", self.p99_ms_recorded),
+            format!("{:.2}", self.p99_ms),
+            format!("{}", self.slo_violations_recorded),
+            format!("{}", self.slo_violations),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::Str(self.policy.clone())),
+            ("recorded_policy", Json::Str(self.recorded_policy.clone())),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("frames", Json::Num(self.frames as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            (
+                "avg_max_vio_recorded",
+                Json::Num(self.avg_max_vio_recorded),
+            ),
+            ("avg_max_vio", Json::Num(self.avg_max_vio)),
+            (
+                "sup_max_vio_recorded",
+                Json::Num(self.sup_max_vio_recorded),
+            ),
+            ("sup_max_vio", Json::Num(self.sup_max_vio)),
+            ("vio_delta_mean", Json::Num(self.vio_delta_mean)),
+            ("topk_agreement", Json::Num(self.topk_agreement)),
+            ("overflow", Json::Num(self.overflow as f64)),
+            ("degraded", Json::Num(self.degraded as f64)),
+            ("p50_ms_recorded", Json::Num(self.p50_ms_recorded)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms_recorded", Json::Num(self.p95_ms_recorded)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms_recorded", Json::Num(self.p99_ms_recorded)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            (
+                "slo_violations_recorded",
+                Json::Num(self.slo_violations_recorded as f64),
+            ),
+            ("slo_violations", Json::Num(self.slo_violations as f64)),
+        ])
+    }
+}
+
+/// Mean over layers of the per-layer MaxVio of one (n_layers, m) load
+/// matrix — the same f64 arithmetic `BalanceTracker` records, so a
+/// same-policy reroute produces *exactly* zero delta.
+fn frame_vio(
+    loads: &[f32],
+    n_tokens: usize,
+    m: usize,
+    k: usize,
+    n_layers: usize,
+) -> f64 {
+    let mut sum = 0.0;
+    for l in 0..n_layers {
+        sum += max_violation(&loads[l * m..(l + 1) * m], n_tokens, k);
+    }
+    sum / n_layers as f64
+}
+
+/// Re-route the recorded stream under `policy` (frozen batching).
+pub fn reroute(trace: &Trace, policy: Policy) -> Result<PolicyDiff> {
+    let meta = &trace.meta;
+    let rc = meta.serve.router.clone();
+    let (m, k, n_layers) = (rc.m, rc.k, rc.n_layers);
+    let mut router = ServingRouter::new(policy, rc.clone());
+    router.capture_assignments = true;
+    let cost = serve_cost_for(&rc);
+    let by_id: HashMap<u64, &Request> =
+        trace.arrivals.iter().map(|r| (r.id, r)).collect();
+
+    let n_replicas = meta.replicas.replicas.max(1);
+    let mut replica_free = vec![0u64; n_replicas];
+    let slo_us = meta.serve.traffic.slo_us;
+    let mut slo_cf = SloTracker::new(slo_us);
+    let mut rec_vio = Summary::new();
+    let mut cf_vio = Summary::new();
+    let mut delta = Summary::new();
+    let (mut agree_num, mut agree_den) = (0u64, 0u64);
+    let mut tokens = 0u64;
+
+    for f in &trace.frames {
+        if f.replica as usize >= n_replicas {
+            bail!(
+                "frame {}: replica {} outside the recorded set of {}",
+                f.seq,
+                f.replica,
+                n_replicas
+            );
+        }
+        if f.ids.is_empty() {
+            bail!("frame {}: empty micro-batch", f.seq);
+        }
+        if f.topk.len() != n_layers || f.loads.len() != n_layers * m {
+            bail!(
+                "frame {}: shape mismatch (topk layers {}, loads {}, \
+                 expected {} layers x {} experts)",
+                f.seq,
+                f.topk.len(),
+                f.loads.len(),
+                n_layers,
+                m
+            );
+        }
+        let mut batch = Vec::with_capacity(f.ids.len());
+        for &id in &f.ids {
+            match by_id.get(&id) {
+                Some(r) => batch.push((*r).clone()),
+                None => bail!(
+                    "frame {}: request {id} missing from the arrival \
+                     stream",
+                    f.seq
+                ),
+            }
+        }
+        let out = router.route_batch(&batch);
+        let rv = frame_vio(&f.loads, batch.len(), m, k, n_layers);
+        let cv = frame_vio(&out.loads, batch.len(), m, k, n_layers);
+        rec_vio.push(rv);
+        cf_vio.push(cv);
+        delta.push(cv - rv);
+
+        let cf_asn = out.assignment.as_ref().expect("capture is on");
+        for l in 0..n_layers {
+            if f.topk[l].len() != batch.len() {
+                bail!(
+                    "frame {}: layer {} has {} token entries for {} \
+                     tokens",
+                    f.seq,
+                    l,
+                    f.topk[l].len(),
+                    batch.len()
+                );
+            }
+            for (t, rec_tok) in f.topk[l].iter().enumerate() {
+                let cf_tok = &cf_asn[l][t];
+                agree_den += rec_tok.len() as u64;
+                agree_num += rec_tok
+                    .iter()
+                    .filter(|&&e| cf_tok.contains(&e))
+                    .count() as u64;
+            }
+        }
+        tokens += batch.len() as u64;
+
+        // frozen batching: the batch still dispatches no earlier than it
+        // did in the recording, and no earlier than its replica is free
+        // under the counterfactual service times
+        let service = cost
+            .batch_us(&router.placement, &out.loads, m)
+            .max(1.0) as u64;
+        let free = &mut replica_free[f.replica as usize];
+        let start = f.now_us.max(*free);
+        let end = start + service;
+        *free = end;
+        for r in &batch {
+            slo_cf.record(r.arrival_us, end, r.deadline_us);
+        }
+    }
+
+    let mut slo_rec = SloTracker::new(slo_us);
+    for c in &trace.completions {
+        let deadline = by_id
+            .get(&c.id)
+            .map(|r| r.deadline_us)
+            .unwrap_or(c.arrival_us + slo_us);
+        slo_rec.record(c.arrival_us, c.completion_us, deadline);
+    }
+
+    Ok(PolicyDiff {
+        policy: router.policy().name().to_string(),
+        recorded_policy: meta.serve.policy.name().to_string(),
+        scenario: Scenario::Replayed.name().to_string(),
+        frames: trace.frames.len() as u64,
+        tokens,
+        avg_max_vio_recorded: if rec_vio.n > 0 { rec_vio.mean } else { 0.0 },
+        avg_max_vio: if cf_vio.n > 0 { cf_vio.mean } else { 0.0 },
+        sup_max_vio_recorded: if rec_vio.n > 0 { rec_vio.max } else { 0.0 },
+        sup_max_vio: if cf_vio.n > 0 { cf_vio.max } else { 0.0 },
+        vio_delta_mean: if delta.n > 0 { delta.mean } else { 0.0 },
+        topk_agreement: if agree_den > 0 {
+            agree_num as f64 / agree_den as f64
+        } else {
+            1.0
+        },
+        overflow: router.overflow_total,
+        degraded: router.degraded_total,
+        p50_ms_recorded: slo_rec.latency_us(0.50) / 1e3,
+        p50_ms: slo_cf.latency_us(0.50) / 1e3,
+        p95_ms_recorded: slo_rec.latency_us(0.95) / 1e3,
+        p95_ms: slo_cf.latency_us(0.95) / 1e3,
+        p99_ms_recorded: slo_rec.latency_us(0.99) / 1e3,
+        p99_ms: slo_cf.latency_us(0.99) / 1e3,
+        slo_violations_recorded: slo_rec.violations,
+        slo_violations: slo_cf.violations,
+    })
+}
+
+/// Counterfactual diff of the trace under every requested policy.
+pub fn diff_policies(
+    trace: &Trace,
+    policies: &[Policy],
+) -> Result<Vec<PolicyDiff>> {
+    policies.iter().map(|&p| reroute(trace, p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{
+        ReplicaConfig, RouterConfig, SchedulerConfig, ServeConfig,
+        TrafficConfig,
+    };
+    use crate::trace::format::TraceMeta;
+
+    fn empty_trace() -> Trace {
+        let cfg = ServeConfig::new(
+            TrafficConfig {
+                n_requests: 0,
+                ..Default::default()
+            },
+            SchedulerConfig::default(),
+            RouterConfig::default(),
+            Policy::Online,
+        );
+        Trace {
+            meta: TraceMeta::new(&cfg, &ReplicaConfig::default()),
+            arrivals: Vec::new(),
+            frames: Vec::new(),
+            syncs: Vec::new(),
+            completions: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn zero_admission_trace_diffs_to_quiet_zeros_not_nan() {
+        // the slo guard matters here: no frames, no completions — every
+        // percentile and vio statistic must come back 0.0, never NaN
+        let trace = empty_trace();
+        for policy in Policy::all() {
+            let d = reroute(&trace, policy).unwrap();
+            assert_eq!(d.frames, 0);
+            assert_eq!(d.tokens, 0);
+            assert_eq!(d.avg_max_vio, 0.0, "{policy:?}");
+            assert_eq!(d.avg_max_vio_recorded, 0.0);
+            assert_eq!(d.sup_max_vio, 0.0);
+            assert_eq!(d.vio_delta_mean, 0.0);
+            assert_eq!(d.topk_agreement, 1.0);
+            assert_eq!(d.p50_ms, 0.0);
+            assert_eq!(d.p99_ms_recorded, 0.0);
+            assert!(d.p99_ms.is_finite());
+            assert_eq!(d.scenario, "replayed");
+        }
+    }
+
+    #[test]
+    fn replaying_an_empty_trace_is_clean() {
+        let trace = empty_trace();
+        let rep = replay(&trace);
+        assert!(rep.mismatches.is_empty(), "{:?}", rep.mismatches);
+        assert_eq!(rep.completions.len(), 0);
+        assert_eq!(rep.report.offered, 0);
+    }
+
+    #[test]
+    fn malformed_frames_error_instead_of_panicking() {
+        use crate::trace::format::TraceFrame;
+        let mut trace = empty_trace();
+        trace.frames.push(TraceFrame {
+            seq: 0,
+            replica: 7, // outside the recorded 1-replica set
+            now_us: 0,
+            service_us: 1,
+            ids: vec![],
+            topk: vec![],
+            loads: vec![],
+        });
+        let err = reroute(&trace, Policy::Greedy).unwrap_err();
+        assert!(format!("{err}").contains("replica"), "{err}");
+
+        trace.frames[0].replica = 0;
+        let err = reroute(&trace, Policy::Greedy).unwrap_err();
+        assert!(format!("{err}").contains("empty"), "{err}");
+
+        trace.frames[0].ids = vec![0];
+        let err = reroute(&trace, Policy::Greedy).unwrap_err();
+        assert!(format!("{err}").contains("shape"), "{err}");
+
+        // well-shaped frame, but the request is absent from arrivals
+        let (m, l) = (16, 4);
+        trace.frames[0].topk = vec![vec![vec![0u16]]; l];
+        trace.frames[0].loads = vec![0.0; l * m];
+        let err = reroute(&trace, Policy::Greedy).unwrap_err();
+        assert!(format!("{err}").contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn diff_table_rows_align_with_headers() {
+        let trace = empty_trace();
+        let d = reroute(&trace, Policy::LossFree).unwrap();
+        assert_eq!(d.table_row().len(), PolicyDiff::headers().len());
+        let j = d.to_json();
+        assert_eq!(j.path("policy").unwrap().as_str(), Some("lossfree"));
+        assert_eq!(
+            j.path("recorded_policy").unwrap().as_str(),
+            Some("bip-online")
+        );
+        assert_eq!(j.path("topk_agreement").unwrap().as_f64(), Some(1.0));
+    }
+}

@@ -310,20 +310,47 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            let hex = self
-                                .bytes
-                                .get(self.pos + 1..self.pos + 5)
-                                .ok_or_else(|| self.err("bad \\u"))?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex)
-                                    .map_err(|_| self.err("bad \\u"))?,
-                                16,
-                            )
-                            .map_err(|_| self.err("bad \\u"))?;
-                            out.push(
-                                char::from_u32(code).unwrap_or('\u{fffd}'),
-                            );
+                            let code = self.hex4(self.pos + 1)?;
                             self.pos += 4;
+                            if (0xd800..=0xdbff).contains(&code) {
+                                // high surrogate: JSON encodes astral
+                                // characters as a \uD8xx\uDCxx pair
+                                let paired = self.bytes.get(self.pos + 1)
+                                    == Some(&b'\\')
+                                    && self.bytes.get(self.pos + 2)
+                                        == Some(&b'u');
+                                let lo = if paired {
+                                    Some(self.hex4(self.pos + 3)?)
+                                } else {
+                                    None
+                                };
+                                match lo {
+                                    Some(lo)
+                                        if (0xdc00..=0xdfff)
+                                            .contains(&lo) =>
+                                    {
+                                        self.pos += 6;
+                                        let c = 0x10000
+                                            + ((code - 0xd800) << 10)
+                                            + (lo - 0xdc00);
+                                        out.push(
+                                            char::from_u32(c)
+                                                .unwrap_or('\u{fffd}'),
+                                        );
+                                    }
+                                    // unpaired high surrogate: replace
+                                    // it, leave what follows intact
+                                    _ => out.push('\u{fffd}'),
+                                }
+                            } else if (0xdc00..=0xdfff).contains(&code) {
+                                // lone low surrogate
+                                out.push('\u{fffd}');
+                            } else {
+                                out.push(
+                                    char::from_u32(code)
+                                        .unwrap_or('\u{fffd}'),
+                                );
+                            }
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -342,6 +369,20 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits starting at `start` (a `\uXXXX` payload).
+    fn hex4(&self, start: usize) -> Result<u32, ParseError> {
+        let hex = self
+            .bytes
+            .get(start..start + 4)
+            .ok_or_else(|| self.err("bad \\u"))?;
+        let s = std::str::from_utf8(hex)
+            .map_err(|_| self.err("bad \\u"))?;
+        if !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return Err(self.err("bad \\u"));
+        }
+        u32::from_str_radix(s, 16).map_err(|_| self.err("bad \\u"))
     }
 
     fn number(&mut self) -> Result<Json, ParseError> {
@@ -425,6 +466,76 @@ mod tests {
     fn unicode_pass_through() {
         let v = Json::parse("\"héllo 世界\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo 世界"));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_to_astral_chars() {
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap().as_str(),
+            Some("😀")
+        );
+        assert_eq!(
+            Json::parse(r#""x\uD83D\uDE00!""#).unwrap().as_str(),
+            Some("x😀!")
+        );
+        // two pairs back to back
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00\ud83d\ude01""#)
+                .unwrap()
+                .as_str(),
+            Some("😀😁")
+        );
+        // lone surrogates are replaced, not fatal (emitters should never
+        // produce them, but foreign JSON can)
+        assert_eq!(
+            Json::parse(r#""\ud83d""#).unwrap().as_str(),
+            Some("\u{fffd}")
+        );
+        assert_eq!(
+            Json::parse(r#""\ude00""#).unwrap().as_str(),
+            Some("\u{fffd}")
+        );
+        // a high surrogate followed by an ordinary char or escape keeps
+        // the follower intact
+        assert_eq!(
+            Json::parse(r#""\ud83dA""#).unwrap().as_str(),
+            Some("\u{fffd}A")
+        );
+        assert_eq!(
+            Json::parse(r#""\ud83d\u0041""#).unwrap().as_str(),
+            Some("\u{fffd}A")
+        );
+        // truncated or non-hex \u payloads still error
+        assert!(Json::parse("\"\\ud8\"").is_err());
+        assert!(Json::parse("\"\\uzzzz\"").is_err());
+        assert!(Json::parse("\"\\u+123\"").is_err());
+    }
+
+    #[test]
+    fn string_escape_round_trip_property() {
+        // every emitted string must reparse to itself: control chars,
+        // DEL, BMP text, astral-plane chars (the trace JSON export
+        // leans on this)
+        use crate::util::rng::Pcg64;
+        let mut pool: Vec<char> = (0u32..0x20)
+            .map(|c| char::from_u32(c).unwrap())
+            .collect();
+        pool.extend([
+            '\u{7f}', '"', '\\', '/', ' ', 'é', '世', '\u{fffd}',
+            '\u{d7ff}', '\u{e000}', '😀', '🧮', '\u{10ffff}',
+        ]);
+        pool.extend('a'..='e');
+        let mut rng = Pcg64::new(99);
+        for _ in 0..300 {
+            let len = rng.below(24) as usize;
+            let s: String = (0..len)
+                .map(|_| pool[rng.below(pool.len() as u64) as usize])
+                .collect();
+            let emitted = Json::Str(s.clone()).to_string();
+            let parsed = Json::parse(&emitted)
+                .unwrap_or_else(|e| panic!("{e} on {emitted:?}"));
+            assert_eq!(parsed.as_str(), Some(s.as_str()), "{emitted:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! Record → replay determinism, byte-format round trips, and the
+//! counterfactual diff invariants the ISSUE pins:
+//!
+//!   * for every (scenario, policy): replaying a recorded trace
+//!     reproduces the completion log field-for-field (the R = 1
+//!     analogue of the replica equivalence tests);
+//!   * the same holds through a save/load byte round trip, and for a
+//!     replicated (R > 1, threaded) recording with sync events;
+//!   * re-routing a trace under its *own* policy is the identity
+//!     counterfactual: top-K agreement 1.0, zero MaxVio delta, equal
+//!     SLO percentiles;
+//!   * re-routing a greedy recording under the BIP policies recovers
+//!     the paper's balance ordering on the very same token stream.
+
+use bip_moe::serve::{
+    run_replicated_with, run_scenario, run_scenario_with, Policy,
+    ReplicaConfig, RouterConfig, SchedulerConfig, Scenario, ServeConfig,
+    TrafficConfig, TrafficGenerator,
+};
+use bip_moe::trace::{
+    diff_policies, replay, reroute, Trace, TraceRecorder,
+};
+
+fn config(
+    scenario: Scenario,
+    policy: Policy,
+    n_requests: usize,
+) -> ServeConfig {
+    ServeConfig::new(
+        TrafficConfig {
+            scenario,
+            n_requests,
+            rate_per_s: 80_000.0,
+            n_layers: 2,
+            slo_us: 25_000,
+            seed: 17,
+            ..Default::default()
+        },
+        SchedulerConfig {
+            queue_cap: 256,
+            batch_max: 32,
+            max_wait_us: 1_500,
+            drop_expired: true,
+        },
+        RouterConfig::default(),
+        policy,
+    )
+}
+
+fn record_single(cfg: &ServeConfig) -> Trace {
+    let rcfg = ReplicaConfig { replicas: 1, threads: 1, sync_every: 0 };
+    let mut rec = TraceRecorder::new(cfg, &rcfg);
+    run_scenario_with(
+        cfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        Some(&mut rec),
+    );
+    rec.into_trace()
+}
+
+#[test]
+fn every_scenario_policy_replays_bit_identically() {
+    // the determinism property: record once, replay from the trace,
+    // completions must match field-for-field
+    for scenario in Scenario::all() {
+        for policy in Policy::all() {
+            let cfg = config(scenario, policy, 384);
+            let trace = record_single(&cfg);
+            assert!(
+                !trace.frames.is_empty(),
+                "{}/{}: nothing recorded",
+                scenario.name(),
+                policy.name()
+            );
+            assert_eq!(
+                trace.completions.len() as u64,
+                trace.routed_tokens(),
+                "{}/{}: every batched request completes",
+                scenario.name(),
+                policy.name()
+            );
+            let rep = replay(&trace);
+            assert!(
+                rep.mismatches.is_empty(),
+                "{}/{}: {:?}",
+                scenario.name(),
+                policy.name(),
+                rep.mismatches
+            );
+            assert_eq!(rep.completions, trace.completions);
+        }
+    }
+}
+
+#[test]
+fn recording_does_not_change_the_run() {
+    // the Option<recorder> seam must be invisible: the recorded run's
+    // outcome equals a bare run_scenario on the same config
+    for policy in [Policy::Greedy, Policy::Online, Policy::BipBatch] {
+        let cfg = config(Scenario::Bursty, policy, 512);
+        let bare = run_scenario(&cfg);
+        let rcfg =
+            ReplicaConfig { replicas: 1, threads: 1, sync_every: 0 };
+        let mut rec = TraceRecorder::new(&cfg, &rcfg);
+        let recorded = run_scenario_with(
+            &cfg,
+            TrafficGenerator::new(cfg.traffic.clone()),
+            Some(&mut rec),
+        );
+        assert_eq!(bare.completions, recorded.completions, "{policy:?}");
+        assert_eq!(
+            bare.report.avg_max_vio, recorded.report.avg_max_vio,
+            "{policy:?}"
+        );
+        assert_eq!(bare.report.p99_ms, recorded.report.p99_ms);
+        let trace = rec.into_trace();
+        assert_eq!(trace.arrivals.len(), 512, "every offer is recorded");
+    }
+}
+
+#[test]
+fn traces_survive_a_byte_round_trip_and_replay_from_disk() {
+    let cfg = config(Scenario::MultiTenant, Policy::Approx, 300);
+    let trace = record_single(&cfg);
+    let bytes = trace.to_bytes();
+    let back = Trace::from_bytes(&bytes).expect("decode");
+    assert_eq!(back, trace, "byte round trip must be lossless");
+
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("bipmoe-trace-{}.bin", std::process::id()));
+    trace.save(&path).expect("save");
+    let loaded = Trace::load(&path).expect("load");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, trace);
+    let rep = replay(&loaded);
+    assert!(rep.mismatches.is_empty(), "{:?}", rep.mismatches);
+}
+
+#[test]
+fn replicated_recordings_replay_bit_identically() {
+    // offered well above one server's service rate so several replicas
+    // genuinely engage (mirrors the replica.rs engine tests)
+    let mut cfg = config(Scenario::Bursty, Policy::Online, 1200);
+    cfg.traffic.rate_per_s = 250_000.0;
+    cfg.traffic.slo_us = 500_000;
+    let rcfg = ReplicaConfig { replicas: 3, threads: 2, sync_every: 8 };
+    let mut rec = TraceRecorder::new(&cfg, &rcfg);
+    let out = run_replicated_with(
+        &cfg,
+        &rcfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        Some(&mut rec),
+    );
+    let trace = rec.into_trace();
+    assert_eq!(trace.completions.len() as u64, out.report.completed);
+    assert_eq!(trace.frames.len() as u64, out.batches);
+    assert_eq!(trace.syncs.len(), out.syncs.len());
+    let replicas_seen: std::collections::BTreeSet<u32> =
+        trace.frames.iter().map(|f| f.replica).collect();
+    assert!(
+        replicas_seen.len() > 1,
+        "frames must be tagged by replica: {replicas_seen:?}"
+    );
+
+    let rep = replay(&trace);
+    assert!(rep.mismatches.is_empty(), "{:?}", rep.mismatches);
+    assert_eq!(rep.completions, trace.completions);
+    assert_eq!(rep.report.avg_max_vio, out.report.avg_max_vio);
+}
+
+#[test]
+fn same_policy_reroute_is_the_identity_counterfactual() {
+    for policy in [Policy::Greedy, Policy::LossFree, Policy::Online] {
+        let cfg = config(Scenario::Steady, policy, 448);
+        let trace = record_single(&cfg);
+        let d = reroute(&trace, policy).expect("reroute");
+        assert_eq!(d.topk_agreement, 1.0, "{policy:?}");
+        assert_eq!(d.vio_delta_mean, 0.0, "{policy:?}");
+        assert_eq!(d.avg_max_vio, d.avg_max_vio_recorded, "{policy:?}");
+        assert_eq!(d.sup_max_vio, d.sup_max_vio_recorded);
+        // frozen batching over identical service times reproduces the
+        // recorded latency distribution exactly
+        assert_eq!(d.p50_ms, d.p50_ms_recorded, "{policy:?}");
+        assert_eq!(d.p99_ms, d.p99_ms_recorded, "{policy:?}");
+        assert_eq!(d.slo_violations, d.slo_violations_recorded);
+        assert_eq!(d.scenario, "replayed");
+        assert_eq!(d.recorded_policy, d.policy);
+    }
+}
+
+#[test]
+fn bip_counterfactuals_beat_the_recorded_greedy_stream() {
+    // the acceptance shape: diff a greedy recording under the BIP
+    // family + lossfree; every BIP policy must come back better
+    // balanced than the recorded greedy routing of the *same* tokens
+    let cfg = config(Scenario::Steady, Policy::Greedy, 768);
+    let trace = record_single(&cfg);
+    let diffs = diff_policies(
+        &trace,
+        &[
+            Policy::BipBatch,
+            Policy::LossFree,
+            Policy::Online,
+            Policy::Approx,
+        ],
+    )
+    .expect("diff");
+    assert_eq!(diffs.len(), 4);
+    let recorded = diffs[0].avg_max_vio_recorded;
+    for d in &diffs {
+        assert_eq!(d.recorded_policy, "greedy");
+        assert_eq!(d.avg_max_vio_recorded, recorded, "{}", d.policy);
+        assert!(d.topk_agreement > 0.0 && d.topk_agreement <= 1.0);
+        assert!(d.avg_max_vio.is_finite());
+        assert!(d.p99_ms.is_finite());
+    }
+    for d in diffs.iter().filter(|d| d.policy.starts_with("bip")) {
+        assert!(
+            d.avg_max_vio < recorded,
+            "{}: counterfactual vio {} !< recorded greedy {recorded}",
+            d.policy,
+            d.avg_max_vio
+        );
+        assert!(
+            d.vio_delta_mean < 0.0,
+            "{}: delta {}",
+            d.policy,
+            d.vio_delta_mean
+        );
+    }
+}
+
+#[test]
+fn corrupted_traces_are_rejected_cleanly() {
+    let cfg = config(Scenario::Steady, Policy::Greedy, 64);
+    let trace = record_single(&cfg);
+    let mut bytes = trace.to_bytes();
+    // truncation mid-stream
+    bytes.truncate(bytes.len() / 2);
+    assert!(Trace::from_bytes(&bytes).is_err());
+    // bad magic
+    let mut bytes = trace.to_bytes();
+    bytes[0] = b'X';
+    assert!(Trace::from_bytes(&bytes).is_err());
+    // future version
+    let mut bytes = trace.to_bytes();
+    bytes[4] = 0xfe;
+    let err = Trace::from_bytes(&bytes).unwrap_err();
+    assert!(format!("{err}").contains("version"), "{err}");
+}
+
+#[test]
+fn json_export_mirrors_the_trace() {
+    use bip_moe::util::Json;
+    let cfg = config(Scenario::Steady, Policy::Online, 96);
+    let trace = record_single(&cfg);
+    let doc = trace.to_json();
+    // round-trips through the emitter/parser
+    let re = Json::parse(&doc.to_string()).expect("reparse");
+    assert_eq!(
+        re.path("meta.scenario").unwrap().as_str(),
+        Some("steady")
+    );
+    assert_eq!(
+        re.path("meta.policy").unwrap().as_str(),
+        Some("bip-online")
+    );
+    assert_eq!(
+        re.path("arrivals").unwrap().as_arr().unwrap().len(),
+        trace.arrivals.len()
+    );
+    assert_eq!(
+        re.path("frames").unwrap().as_arr().unwrap().len(),
+        trace.frames.len()
+    );
+    assert_eq!(
+        re.path("completions").unwrap().as_arr().unwrap().len(),
+        trace.completions.len()
+    );
+    // spot-check one frame's ids against the source
+    let ids = re.path("frames[0].ids").unwrap().as_arr().unwrap();
+    assert_eq!(ids.len(), trace.frames[0].ids.len());
+    assert_eq!(
+        ids[0].as_usize(),
+        Some(trace.frames[0].ids[0] as usize)
+    );
+}
