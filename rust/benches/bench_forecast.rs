@@ -1,0 +1,413 @@
+//! Forecast-subsystem benchmarks — the evidence behind the forecast/
+//! claims, written to reports/BENCH_forecast.json:
+//!
+//!   * forecast error by horizon: every forecaster kind, walk-forward
+//!     on a held-out suffix of a recorded greedy (demand) trace, per
+//!     scenario, against the naive last-value baseline;
+//!   * warm vs cold first-batch MaxVio: `routing::PredictiveBip`
+//!     seeded from the fitted forecast vs cold-start `routing::Bip` on
+//!     the first micro-batch of the same stream, swept over the dual
+//!     iteration count T (the acceptance bar: warm strictly below cold
+//!     on >= 3 of the 5 scenarios at equal-or-lower T), plus the
+//!     dual-iteration savings at equal MaxVio;
+//!   * serve-level warm start: full cold vs warm runs (first-batch
+//!     MaxVio, AvgMaxVio, p99);
+//!   * predictive vs reactive autoscaling on bursty overload: SLO
+//!     deltas and hindsight-oracle match rates.
+//!
+//! BIP_MOE_FULL=1 runs the full-scale sweep.
+
+use bip_moe::bench::write_bench_json;
+use bip_moe::bip::Instance;
+use bip_moe::forecast::{
+    dual_seed, fit_model, seed_states, AutoScaler, ForecastConfig,
+    ForecasterKind, LoadSeries, ScalePolicy, DEFAULT_SEED_GAIN,
+};
+use bip_moe::metrics::TablePrinter;
+use bip_moe::routing::{Bip, PredictiveBip, RoutingStrategy};
+use bip_moe::serve::{
+    run_autoscaled, run_scenario, run_scenario_seeded, run_scenario_with,
+    Policy, ReplicaConfig, Request, RouterConfig, SchedulerConfig,
+    Scenario, ServeConfig, TrafficConfig, TrafficGenerator,
+};
+use bip_moe::trace::{Trace, TraceRecorder};
+use bip_moe::util::json::Json;
+
+const TRAFFIC_SEED: u64 = 7;
+const T_SWEEP: [usize; 4] = [0, 1, 2, 4];
+
+fn serve_cfg(
+    scenario: Scenario,
+    policy: Policy,
+    n_requests: usize,
+) -> ServeConfig {
+    ServeConfig::new(
+        TrafficConfig {
+            scenario,
+            n_requests,
+            seed: TRAFFIC_SEED,
+            ..Default::default()
+        },
+        SchedulerConfig::default(),
+        RouterConfig::default(),
+        policy,
+    )
+}
+
+/// Record the *demand* trace: greedy routing exposes the raw skew the
+/// duals must counter (a BIP trace is already balanced — nothing to
+/// learn from).
+fn record_demand_trace(scenario: Scenario, n_requests: usize) -> Trace {
+    let cfg = serve_cfg(scenario, Policy::Greedy, n_requests);
+    let mut rec = TraceRecorder::new(&cfg, &ReplicaConfig::default());
+    run_scenario_with(
+        &cfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        Some(&mut rec),
+    );
+    rec.into_trace()
+}
+
+/// One layer of the stream's first `n` requests as a solver instance
+/// with the paper's capacity n*k/m (strategy-level: no serving cap
+/// enforcement, so the warm/cold contrast is not clipped).
+fn layer_instance(
+    reqs: &[Request],
+    l: usize,
+    m: usize,
+    k: usize,
+) -> Instance {
+    let n = reqs.len();
+    let mut scores = Vec::with_capacity(n * m);
+    for r in reqs {
+        scores.extend_from_slice(r.layer_scores(l, m));
+    }
+    Instance { n, m, k, cap: (n * k / m).max(1), scores }
+}
+
+fn main() {
+    let full = std::env::var("BIP_MOE_FULL").as_deref() == Ok("1");
+    let n_requests = if full { 16_384 } else { 4_096 };
+    let horizons = [1usize, 4, 16];
+    let (m, k, n_layers) = (16usize, 4usize, 4usize);
+    let mut json_results = Vec::new();
+
+    // ---- forecast error by horizon + warm-start sweep, per scenario --
+    let mut err_rows = Vec::new();
+    let mut warm_rows = Vec::new();
+    let mut wins_by_t = vec![0usize; T_SWEEP.len()];
+    for scenario in Scenario::all() {
+        let trace = record_demand_trace(scenario, n_requests);
+        let series = LoadSeries::from_trace(&trace).expect("series");
+
+        let mut table = TablePrinter::new(
+            &format!(
+                "forecast error — {} ({} steps, holdout 25%)",
+                scenario.name(),
+                series.steps()
+            ),
+            bip_moe::forecast::FitReport::headers(),
+        );
+        for kind in ForecasterKind::all() {
+            let (_, report) = fit_model(
+                kind,
+                &ForecastConfig::default(),
+                &series,
+                &horizons,
+                0.25,
+            )
+            .expect("fit");
+            for row in report.table_rows() {
+                table.row(row);
+            }
+            for h in &report.by_horizon {
+                err_rows.push(Json::obj(vec![
+                    ("scenario", Json::Str(scenario.name().into())),
+                    ("kind", Json::Str(kind.name().into())),
+                    ("horizon", Json::Num(h.horizon as f64)),
+                    ("mae", Json::Num(h.mae)),
+                    ("naive_mae", Json::Num(h.naive_mae)),
+                    ("samples", Json::Num(h.samples as f64)),
+                ]));
+            }
+        }
+        table.print();
+
+        // warm vs cold first batch, strategy level: the fitted EWMA's
+        // one-step forecast seeds each layer's duals
+        let (model, _) = fit_model(
+            ForecasterKind::Ewma,
+            &ForecastConfig::default(),
+            &series,
+            &[1],
+            0.25,
+        )
+        .expect("fit ewma");
+        let first: Vec<Request> =
+            TrafficGenerator::new(TrafficConfig {
+                scenario,
+                n_requests,
+                seed: TRAFFIC_SEED,
+                ..Default::default()
+            })
+            .take(256)
+            .collect();
+        let mut sweep = Vec::new();
+        for (ti, &t) in T_SWEEP.iter().enumerate() {
+            let (mut cold_sum, mut warm_sum) = (0.0f64, 0.0f64);
+            for l in 0..n_layers {
+                let inst = layer_instance(&first, l, m, k);
+                let seed = dual_seed(
+                    &model.layer_forecast(l, 1),
+                    k,
+                    DEFAULT_SEED_GAIN,
+                );
+                let mut cold = Bip::new(t);
+                let mut warm = PredictiveBip::new(t, seed);
+                cold_sum +=
+                    cold.route_batch(&inst).max_violation(&inst);
+                warm_sum +=
+                    warm.route_batch(&inst).max_violation(&inst);
+            }
+            let (cold_vio, warm_vio) = (
+                cold_sum / n_layers as f64,
+                warm_sum / n_layers as f64,
+            );
+            if warm_vio < cold_vio {
+                wins_by_t[ti] += 1;
+            }
+            sweep.push((t, cold_vio, warm_vio));
+        }
+        // dual-iteration savings: smallest warm T whose first-batch
+        // MaxVio already matches what cold start needs T=4 for
+        let cold_at_4 = sweep.last().unwrap().1;
+        let t_equal = sweep
+            .iter()
+            .find(|&&(_, _, w)| w <= cold_at_4)
+            .map(|&(t, _, _)| t)
+            .unwrap_or(4);
+
+        let mut table = TablePrinter::new(
+            &format!(
+                "warm vs cold first-batch MaxVio — {} (256 tokens, \
+                 seed gain {DEFAULT_SEED_GAIN})",
+                scenario.name()
+            ),
+            &["T", "Cold", "Warm", "Delta", "WarmWins"],
+        );
+        for &(t, c, w) in &sweep {
+            table.row(vec![
+                format!("{t}"),
+                format!("{c:.4}"),
+                format!("{w:.4}"),
+                format!("{:+.4}", w - c),
+                format!("{}", w < c),
+            ]);
+        }
+        table.print();
+        println!(
+            "  {}: warm T={t_equal} matches cold T=4 (dual-iteration \
+             savings {})",
+            scenario.name(),
+            4usize.saturating_sub(t_equal)
+        );
+
+        // serve-level: full cold bip-batch vs warm predictive run on
+        // the same arrivals
+        let seeds =
+            seed_states(&model, n_layers, k, DEFAULT_SEED_GAIN);
+        let cold_out = run_scenario(&serve_cfg(
+            scenario,
+            Policy::BipBatch,
+            n_requests,
+        ));
+        let warm_out = run_scenario_seeded(
+            &serve_cfg(scenario, Policy::Predictive, n_requests),
+            &seeds,
+        );
+        println!(
+            "  serve-level first-batch MaxVio: cold {:.4} -> warm \
+             {:.4}; AvgMaxVio {:.4} -> {:.4}\n",
+            cold_out.first_batch_vio,
+            warm_out.first_batch_vio,
+            cold_out.report.avg_max_vio,
+            warm_out.report.avg_max_vio,
+        );
+        warm_rows.push(Json::obj(vec![
+            ("scenario", Json::Str(scenario.name().into())),
+            (
+                "sweep",
+                Json::Arr(
+                    sweep
+                        .iter()
+                        .map(|&(t, c, w)| {
+                            Json::obj(vec![
+                                ("t", Json::Num(t as f64)),
+                                ("cold_vio", Json::Num(c)),
+                                ("warm_vio", Json::Num(w)),
+                                ("warm_wins", Json::Bool(w < c)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("warm_t_equal_cold_t4", Json::Num(t_equal as f64)),
+            (
+                "dual_iteration_savings",
+                Json::Num(4usize.saturating_sub(t_equal) as f64),
+            ),
+            (
+                "serve_first_batch_cold",
+                Json::Num(cold_out.first_batch_vio),
+            ),
+            (
+                "serve_first_batch_warm",
+                Json::Num(warm_out.first_batch_vio),
+            ),
+            (
+                "serve_avg_max_vio_cold",
+                Json::Num(cold_out.report.avg_max_vio),
+            ),
+            (
+                "serve_avg_max_vio_warm",
+                Json::Num(warm_out.report.avg_max_vio),
+            ),
+            ("serve_p99_cold", Json::Num(cold_out.report.p99_ms)),
+            ("serve_p99_warm", Json::Num(warm_out.report.p99_ms)),
+        ]));
+    }
+    let n_scenarios = Scenario::all().len();
+    for (ti, &t) in T_SWEEP.iter().enumerate() {
+        println!(
+            "warm start wins at T={t}: {}/{} scenarios",
+            wins_by_t[ti], n_scenarios
+        );
+    }
+    json_results.push(Json::obj(vec![(
+        "forecast_error",
+        Json::Arr(err_rows),
+    )]));
+    json_results.push(Json::obj(vec![
+        ("warm_start", Json::Arr(warm_rows)),
+        (
+            "warm_wins_by_t",
+            Json::Arr(
+                T_SWEEP
+                    .iter()
+                    .zip(&wins_by_t)
+                    .map(|(&t, &wins)| {
+                        Json::obj(vec![
+                            ("t", Json::Num(t as f64)),
+                            ("wins", Json::Num(wins as f64)),
+                            (
+                                "scenarios",
+                                Json::Num(n_scenarios as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]));
+
+    // ---- predictive vs reactive autoscaling on bursty overload ------
+    println!("== autoscaling: predictive vs reactive (bursty) ==");
+    // calibrate one server's serviceable rate under saturation
+    let calib_cfg = ServeConfig::new(
+        TrafficConfig {
+            scenario: Scenario::Bursty,
+            n_requests: n_requests / 2,
+            rate_per_s: 2_000_000.0,
+            slo_us: 500_000,
+            seed: TRAFFIC_SEED,
+            ..Default::default()
+        },
+        SchedulerConfig::default(),
+        RouterConfig::default(),
+        Policy::Online,
+    );
+    let replica_rps =
+        run_scenario(&calib_cfg).report.throughput_rps.max(1.0);
+    // offer ~2.5 servers' worth of traffic so the set must scale
+    let offered_rps = replica_rps * 2.5;
+    let scale_cfg = ServeConfig::new(
+        TrafficConfig {
+            scenario: Scenario::Bursty,
+            n_requests,
+            rate_per_s: offered_rps,
+            slo_us: 100_000,
+            seed: TRAFFIC_SEED,
+            ..Default::default()
+        },
+        SchedulerConfig::default(),
+        RouterConfig::default(),
+        Policy::Online,
+    );
+    let rcfg =
+        ReplicaConfig { replicas: 4, threads: 2, sync_every: 8 };
+    // ~24 scale windows across the arrival horizon
+    let horizon_us = n_requests as f64 / offered_rps * 1e6;
+    let window_us = ((horizon_us / 24.0) as u64).max(500);
+    let mut table = TablePrinter::new(
+        &format!(
+            "autoscale bursty @ {offered_rps:.0} rps offered, replica \
+             capacity {replica_rps:.0} rps, window {window_us} us"
+        ),
+        &[
+            "Mode", "Done", "Goodput", "p99ms", "SloVio", "Scales",
+            "OracleMatch",
+        ],
+    );
+    let mut scale_rows = Vec::new();
+    for mode in [ScalePolicy::Predictive, ScalePolicy::Reactive] {
+        let mut scaler = AutoScaler::new(
+            mode, window_us, replica_rps, 0.8, 1, 4,
+        );
+        let t0 = std::time::Instant::now();
+        let out = run_autoscaled(&scale_cfg, &rcfg, None, &mut scaler);
+        let wall_s = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            mode.name().into(),
+            format!("{}", out.report.completed),
+            format!("{:.0}", out.report.goodput_rps),
+            format!("{:.2}", out.report.p99_ms),
+            format!("{}", out.report.slo_violations),
+            format!("{}", out.scale_events.len()),
+            format!("{:.3}", scaler.oracle_match_rate()),
+        ]);
+        scale_rows.push(Json::obj(vec![
+            ("mode", Json::Str(mode.name().into())),
+            ("offered_rps", Json::Num(offered_rps)),
+            ("replica_rps", Json::Num(replica_rps)),
+            ("window_us", Json::Num(window_us as f64)),
+            ("completed", Json::Num(out.report.completed as f64)),
+            ("goodput_rps", Json::Num(out.report.goodput_rps)),
+            ("p99_ms", Json::Num(out.report.p99_ms)),
+            (
+                "slo_violations",
+                Json::Num(out.report.slo_violations as f64),
+            ),
+            (
+                "scale_events",
+                Json::Num(out.scale_events.len() as f64),
+            ),
+            (
+                "oracle_match",
+                Json::Num(scaler.oracle_match_rate()),
+            ),
+            ("wall_s", Json::Num(wall_s)),
+        ]));
+    }
+    table.print();
+    json_results.push(Json::obj(vec![(
+        "autoscale",
+        Json::Arr(scale_rows),
+    )]));
+
+    match write_bench_json("forecast", Json::Arr(json_results)) {
+        Ok(path) => println!("perf record: {}", path.display()),
+        Err(e) => {
+            eprintln!("warning: BENCH_forecast.json not written: {e}")
+        }
+    }
+}

@@ -1,0 +1,550 @@
+//! Turning forecasts into control actions.
+//!
+//! Three consumers of a fitted [`ForecastModel`]:
+//!
+//! * **Dual warm start** ([`dual_seed`] / [`seed_states`]): convert a
+//!   predicted load-fraction vector into an Algorithm 1 dual seed. On a
+//!   deterministic stream whose per-expert score profile equals `pred`,
+//!   Algorithm 1's fixpoint is `q_j = relu(pred_j − pred_(k+1))` (the
+//!   (k+1)-th largest profile entry): the q-phase maps every hot expert
+//!   down to the (k+1)-th level so top-k of `s − q` spreads. Recorded
+//!   load fractions under-state demand — the serving router clips them
+//!   at `capacity_factor ×` fair share — so the seed is amplified by
+//!   [`DEFAULT_SEED_GAIN`]. `routing::PredictiveBip` starts from this q
+//!   and the per-batch dual update refines it, so the very first
+//!   micro-batch routes against the predicted hot set (`bench_forecast`
+//!   measures the first-batch MaxVio drop and the dual-iteration
+//!   savings).
+//! * **Predictive admission** ([`PredictiveAdmission`]): forecast the
+//!   next window's arrival rate and deterministically shed the traffic
+//!   that would exceed the serving capacity *before* it queues, instead
+//!   of letting the bounded queue absorb the burst and blow p99.
+//! * **Autoscaling** ([`AutoScaler`]): forecast the aggregate rate and
+//!   size the active replica set ahead of the load; the reactive
+//!   variant (scale on the last observed window) is the baseline, and
+//!   the hindsight oracle scores both.
+//!
+//! [`route_state_seed`] is the training-side consumer: it warm-starts a
+//! run's `(n_layers, m)` route-state tensor from a prior run's trace.
+
+use anyhow::{bail, Result};
+
+use crate::routing::BalanceState;
+use crate::trace::Trace;
+
+use super::fit::{fit_model, ForecastModel, LoadSeries};
+use super::model::{ForecastConfig, ForecasterKind};
+
+/// Amplification applied to load-fraction dual seeds. Enforced loads in
+/// a trace are clipped at `capacity_factor ×` fair share (default 2×),
+/// so the fraction profile under-states the raw score skew the duals
+/// must counter; 2× restores the scale at the default capacity factor.
+pub const DEFAULT_SEED_GAIN: f64 = 2.0;
+
+/// Algorithm 1 dual seed from a predicted load-fraction vector:
+/// `q_j = gain * relu(pred_j − (k+1)-th largest of pred)`.
+pub fn dual_seed(pred: &[f64], k: usize, gain: f64) -> Vec<f32> {
+    let m = pred.len();
+    if m == 0 {
+        return Vec::new();
+    }
+    let mut sorted: Vec<f64> = pred.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    // the (k+1)-th largest (clamped: with m <= k every entry is top-k
+    // and the seed is all-zero via the smallest entry)
+    let thr = sorted[k.min(m - 1)];
+    pred.iter()
+        .map(|&p| ((p - thr).max(0.0) * gain) as f32)
+        .collect()
+}
+
+/// One [`BalanceState::Dual`] per layer from a fitted model's
+/// one-step-ahead forecasts — what `ServingRouter::seed_layers` (and
+/// `ReplicaSet::seed_all`) consume. Models fitted on fewer layers than
+/// the stack reuse their last layer.
+pub fn seed_states(
+    model: &ForecastModel,
+    n_layers: usize,
+    k: usize,
+    gain: f64,
+) -> Vec<BalanceState> {
+    (0..n_layers)
+        .map(|l| {
+            BalanceState::Dual(dual_seed(&model.layer_forecast(l, 1), k, gain))
+        })
+        .collect()
+}
+
+/// Warm-start a training run's route-state tensor (row-major
+/// `(n_layers, m)`) from a prior run's recorded trace: fit a quick EWMA
+/// on the trace's load series and seed every layer's dual vector.
+pub fn route_state_seed(
+    trace: &Trace,
+    n_layers: usize,
+    m: usize,
+    k: usize,
+    gain: f64,
+) -> Result<Vec<f32>> {
+    if trace.meta.serve.router.m != m {
+        bail!(
+            "trace has {} experts, the training config has {m}",
+            trace.meta.serve.router.m
+        );
+    }
+    let series = LoadSeries::from_trace(trace)?;
+    let (model, _) = fit_model(
+        ForecasterKind::Ewma,
+        &ForecastConfig::default(),
+        &series,
+        &[1],
+        0.25,
+    )?;
+    let mut out = Vec::with_capacity(n_layers * m);
+    for l in 0..n_layers {
+        out.extend(dual_seed(&model.layer_forecast(l, 1), k, gain));
+    }
+    Ok(out)
+}
+
+/// Scalar Holt (double-exponential) smoother for aggregate rates.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalarHolt {
+    pub alpha: f64,
+    pub beta: f64,
+    level: f64,
+    trend: f64,
+    steps: u64,
+}
+
+impl ScalarHolt {
+    pub fn new(alpha: f64, beta: f64) -> ScalarHolt {
+        assert!(alpha > 0.0 && alpha <= 1.0 && (0.0..=1.0).contains(&beta));
+        ScalarHolt { alpha, beta, level: 0.0, trend: 0.0, steps: 0 }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if self.steps == 0 {
+            self.level = x;
+        } else {
+            let prev = self.level;
+            self.level = self.alpha * x
+                + (1.0 - self.alpha) * (self.level + self.trend);
+            self.trend = self.beta * (self.level - prev)
+                + (1.0 - self.beta) * self.trend;
+        }
+        self.steps += 1;
+    }
+
+    /// Predicted value `h >= 1` steps ahead, floored at 0 (rates cannot
+    /// be negative); 0 before any observation.
+    pub fn forecast(&self, h: usize) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        (self.level + h.max(1) as f64 * self.trend).max(0.0)
+    }
+
+    pub fn observed_steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+/// Forecast-gated admission: shed offered traffic the serving set is
+/// predicted not to sustain over the next window. Deterministic — the
+/// shed decision is a pure function of the arrival stream.
+#[derive(Clone, Debug)]
+pub struct PredictiveAdmission {
+    /// rate-accounting window, virtual microseconds
+    pub window_us: u64,
+    /// requests/s the serving set can sustain (calibrate from a
+    /// measured run's throughput)
+    pub capacity_rps: f64,
+    /// admit up to `headroom * capacity_rps` of predicted demand
+    pub headroom: f64,
+    rate: ScalarHolt,
+    window_start: u64,
+    in_window: u64,
+    predicted_rps: f64,
+    /// fractional-shed accumulator (error-diffusion, not RNG)
+    debt: f64,
+    /// requests shed by prediction
+    pub shed: u64,
+    /// windows closed so far
+    pub windows: u64,
+}
+
+impl PredictiveAdmission {
+    pub fn new(
+        window_us: u64,
+        capacity_rps: f64,
+        headroom: f64,
+    ) -> PredictiveAdmission {
+        assert!(window_us > 0 && capacity_rps > 0.0 && headroom > 0.0);
+        PredictiveAdmission {
+            window_us,
+            capacity_rps,
+            headroom,
+            rate: ScalarHolt::new(0.4, 0.1),
+            window_start: 0,
+            in_window: 0,
+            predicted_rps: 0.0,
+            debt: 0.0,
+            shed: 0,
+            windows: 0,
+        }
+    }
+
+    fn roll_to(&mut self, now_us: u64) {
+        let behind = (now_us.saturating_sub(self.window_start))
+            / self.window_us;
+        if behind == 0 {
+            return;
+        }
+        let secs = self.window_us as f64 / 1e6;
+        // close the current window, then account idle gap windows —
+        // capped: after a long gap the smoother has decayed to ~0 anyway
+        for _ in 0..behind.min(64) {
+            self.rate.observe(self.in_window as f64 / secs);
+            self.in_window = 0;
+            self.windows += 1;
+        }
+        self.predicted_rps = self.rate.forecast(1);
+        self.window_start += behind * self.window_us;
+    }
+
+    /// Account one offered arrival; false means shed it (the caller
+    /// must still count it offered + rejected, e.g. `MicroBatcher::shed`).
+    pub fn admit(&mut self, arrival_us: u64) -> bool {
+        self.roll_to(arrival_us);
+        self.in_window += 1;
+        let budget = self.capacity_rps * self.headroom;
+        if self.predicted_rps <= budget {
+            return true;
+        }
+        // shed the predicted excess fraction by error diffusion
+        self.debt += 1.0 - budget / self.predicted_rps;
+        if self.debt >= 1.0 {
+            self.debt -= 1.0;
+            self.shed += 1;
+            false
+        } else {
+            true
+        }
+    }
+}
+
+/// How the autoscaler picks the next window's replica count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalePolicy {
+    /// scale to the *forecast* next-window rate
+    Predictive,
+    /// scale to the last *observed* window rate (always one window late)
+    Reactive,
+}
+
+impl ScalePolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScalePolicy::Predictive => "predictive",
+            ScalePolicy::Reactive => "reactive",
+        }
+    }
+}
+
+/// One replica-count change.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleEvent {
+    pub at_us: u64,
+    pub from: usize,
+    pub to: usize,
+    /// the rate the decision was made against
+    pub decided_rps: f64,
+    /// the rate observed over the window that just closed
+    pub observed_rps: f64,
+}
+
+/// Per-window log for the hindsight oracle.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowObs {
+    pub start_us: u64,
+    pub arrivals: u64,
+    /// replicas active while the window ran
+    pub active: usize,
+}
+
+/// Forecast-driven replica up/down-scaling. The serving loop feeds it
+/// every ingested arrival and reads [`AutoScaler::active`] when picking
+/// dispatch targets; decisions fire on window boundaries.
+#[derive(Clone, Debug)]
+pub struct AutoScaler {
+    pub policy: ScalePolicy,
+    pub window_us: u64,
+    /// requests/s one replica can sustain
+    pub replica_rps: f64,
+    /// target utilization: scale so predicted rate <= headroom *
+    /// active * replica_rps
+    pub headroom: f64,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    rate: ScalarHolt,
+    window_start: u64,
+    in_window: u64,
+    active: usize,
+    pub events: Vec<ScaleEvent>,
+    pub windows: Vec<WindowObs>,
+}
+
+impl AutoScaler {
+    pub fn new(
+        policy: ScalePolicy,
+        window_us: u64,
+        replica_rps: f64,
+        headroom: f64,
+        min_replicas: usize,
+        max_replicas: usize,
+    ) -> AutoScaler {
+        assert!(window_us > 0 && replica_rps > 0.0 && headroom > 0.0);
+        assert!(1 <= min_replicas && min_replicas <= max_replicas);
+        AutoScaler {
+            policy,
+            window_us,
+            replica_rps,
+            headroom,
+            min_replicas,
+            max_replicas,
+            // aggressive tracking: scaling must anticipate ramps, and a
+            // sluggish level forfeits the one-window lead over reactive
+            rate: ScalarHolt::new(0.9, 0.6),
+            window_start: 0,
+            in_window: 0,
+            active: min_replicas,
+            events: Vec::new(),
+            windows: Vec::new(),
+        }
+    }
+
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    /// Replicas needed to serve `rps` at the target utilization.
+    pub fn desired(&self, rps: f64) -> usize {
+        ((rps / (self.replica_rps * self.headroom)).ceil() as usize)
+            .clamp(self.min_replicas, self.max_replicas)
+    }
+
+    /// Account one ingested arrival; window boundaries crossed since
+    /// the last call close (logging + scale decision), then the arrival
+    /// lands in the current window.
+    pub fn on_arrival(&mut self, arrival_us: u64) {
+        while arrival_us >= self.window_start + self.window_us {
+            let secs = self.window_us as f64 / 1e6;
+            let observed_rps = self.in_window as f64 / secs;
+            self.windows.push(WindowObs {
+                start_us: self.window_start,
+                arrivals: self.in_window,
+                active: self.active,
+            });
+            self.rate.observe(observed_rps);
+            let decided_rps = match self.policy {
+                ScalePolicy::Predictive => self.rate.forecast(1),
+                ScalePolicy::Reactive => observed_rps,
+            };
+            let want = self.desired(decided_rps);
+            if want != self.active {
+                self.events.push(ScaleEvent {
+                    at_us: self.window_start + self.window_us,
+                    from: self.active,
+                    to: want,
+                    decided_rps,
+                    observed_rps,
+                });
+                self.active = want;
+            }
+            self.in_window = 0;
+            self.window_start += self.window_us;
+            // long idle gap: decay the smoother once per empty window,
+            // but never loop unbounded on a sparse stream
+            if arrival_us >= self.window_start + 64 * self.window_us {
+                let skip = (arrival_us - self.window_start)
+                    / self.window_us;
+                self.window_start += skip * self.window_us;
+            }
+        }
+        self.in_window += 1;
+    }
+
+    /// Close the final partial window (end of run) so the oracle sees it.
+    pub fn finish(&mut self) {
+        if self.in_window > 0 {
+            self.windows.push(WindowObs {
+                start_us: self.window_start,
+                arrivals: self.in_window,
+                active: self.active,
+            });
+            self.in_window = 0;
+        }
+    }
+
+    /// Hindsight oracle: the fraction of windows whose active count
+    /// equaled the count the window's *own* observed rate needed. The
+    /// reactive baseline is always one window late on every transition;
+    /// an accurate forecaster closes that gap.
+    pub fn oracle_match_rate(&self) -> f64 {
+        if self.windows.is_empty() {
+            return 1.0;
+        }
+        let secs = self.window_us as f64 / 1e6;
+        let matched = self
+            .windows
+            .iter()
+            .filter(|w| w.active == self.desired(w.arrivals as f64 / secs))
+            .count();
+        matched as f64 / self.windows.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual_seed_is_the_fixpoint_of_the_predicted_profile() {
+        // m=8, k=2: threshold is the 3rd largest (0.2); only the two
+        // hotter experts get positive duals
+        let pred = [0.30, 0.25, 0.20, 0.05, 0.05, 0.05, 0.05, 0.05];
+        let q = dual_seed(&pred, 2, 1.0);
+        assert_eq!(q.len(), 8);
+        assert!((q[0] - 0.10).abs() < 1e-6);
+        assert!((q[1] - 0.05).abs() < 1e-6);
+        assert!(q[2..].iter().all(|&x| x == 0.0), "{q:?}");
+        // gain scales linearly
+        let q2 = dual_seed(&pred, 2, 2.0);
+        assert!((q2[0] - 0.20).abs() < 1e-6);
+        // uniform prediction seeds nothing
+        let qu = dual_seed(&[0.125; 8], 2, DEFAULT_SEED_GAIN);
+        assert!(qu.iter().all(|&x| x == 0.0));
+        // degenerate shapes stay in bounds
+        assert!(dual_seed(&[], 2, 1.0).is_empty());
+        let q1 = dual_seed(&[1.0], 4, 1.0);
+        assert_eq!(q1, vec![0.0]);
+    }
+
+    #[test]
+    fn scalar_holt_tracks_a_ramp() {
+        let mut h = ScalarHolt::new(0.5, 0.3);
+        for t in 0..40 {
+            h.observe(100.0 + 10.0 * t as f64);
+        }
+        // next value is 100 + 10*40 = 500; the trend model gets close
+        // where a last-value forecast is off by the full slope
+        let pred = h.forecast(1);
+        assert!((pred - 500.0).abs() < 5.0, "pred {pred}");
+        assert!(h.forecast(5) > pred);
+        // floored at zero on a collapsing series
+        let mut d = ScalarHolt::new(0.5, 0.5);
+        for t in 0..30 {
+            d.observe((300.0 - 30.0 * t as f64).max(0.0));
+        }
+        assert!(d.forecast(8) >= 0.0);
+    }
+
+    #[test]
+    fn predictive_admission_sheds_the_predicted_excess() {
+        // capacity 50 req/s, headroom 1.0, window 1s; offer 100 req/s
+        let mut adm = PredictiveAdmission::new(1_000_000, 50.0, 1.0);
+        let mut admitted = 0u64;
+        let mut offered = 0u64;
+        // 10 virtual seconds of 100 evenly spaced arrivals per second
+        for s in 0..10u64 {
+            for i in 0..100u64 {
+                offered += 1;
+                if adm.admit(s * 1_000_000 + i * 10_000) {
+                    admitted += 1;
+                }
+            }
+        }
+        assert_eq!(offered, admitted + adm.shed);
+        // the first window is un-forecast (admit-all); once the rate is
+        // learned, ~half of each window is shed
+        assert!(adm.shed >= 300, "shed {}", adm.shed);
+        assert!(admitted >= 500, "admitted {admitted}");
+        assert!(adm.windows >= 9);
+        // under-capacity traffic is never shed
+        let mut calm = PredictiveAdmission::new(1_000_000, 50.0, 1.0);
+        for s in 0..5u64 {
+            for i in 0..20u64 {
+                assert!(calm.admit(s * 1_000_000 + i * 50_000));
+            }
+        }
+        assert_eq!(calm.shed, 0);
+    }
+
+    #[test]
+    fn autoscaler_scales_with_the_rate_and_logs_events() {
+        // one replica serves 100 req/s; offered rate ramps 50 -> 350
+        let mk = |policy| {
+            AutoScaler::new(policy, 1_000_000, 100.0, 1.0, 1, 4)
+        };
+        for policy in [ScalePolicy::Predictive, ScalePolicy::Reactive] {
+            let mut sc = mk(policy);
+            assert_eq!(sc.active(), 1);
+            let mut t = 0u64;
+            for w in 0..12u64 {
+                let rate = 50 + w * 30; // arrivals this window
+                for i in 0..rate {
+                    sc.on_arrival(t + i * (1_000_000 / rate));
+                }
+                t += 1_000_000;
+            }
+            sc.finish();
+            assert!(sc.active() >= 3, "{policy:?} ended at {}", sc.active());
+            assert!(!sc.events.is_empty());
+            for e in &sc.events {
+                assert!(e.to >= 1 && e.to <= 4);
+                assert_ne!(e.from, e.to);
+            }
+            assert!(!sc.windows.is_empty());
+            let rate = sc.oracle_match_rate();
+            assert!((0.0..=1.0).contains(&rate), "{rate}");
+        }
+    }
+
+    #[test]
+    fn predictive_scaler_leads_reactive_on_a_steady_ramp() {
+        // under a linear ramp the forecaster anticipates next window's
+        // rate, so across the run the predictive scaler matches the
+        // hindsight oracle at least as often as the reactive one
+        let run = |policy| -> f64 {
+            let mut sc =
+                AutoScaler::new(policy, 1_000_000, 100.0, 1.0, 1, 8);
+            let mut t = 0u64;
+            for w in 0..16u64 {
+                let rate = 40 + w * 45;
+                for i in 0..rate {
+                    sc.on_arrival(t + i * (1_000_000 / rate));
+                }
+                t += 1_000_000;
+            }
+            sc.finish();
+            sc.oracle_match_rate()
+        };
+        let pred = run(ScalePolicy::Predictive);
+        let reac = run(ScalePolicy::Reactive);
+        assert!(pred >= reac, "predictive {pred} !>= reactive {reac}");
+    }
+
+    #[test]
+    fn idle_gaps_do_not_stall_the_controllers() {
+        let mut adm = PredictiveAdmission::new(1_000, 1000.0, 1.0);
+        adm.admit(0);
+        // a huge virtual-time jump must neither loop forever nor panic
+        assert!(adm.admit(10_000_000_000));
+        let mut sc =
+            AutoScaler::new(ScalePolicy::Predictive, 1_000, 1000.0, 1.0, 1, 4);
+        sc.on_arrival(0);
+        sc.on_arrival(10_000_000_000);
+        sc.on_arrival(10_000_000_100);
+        assert_eq!(sc.active(), 1);
+    }
+}

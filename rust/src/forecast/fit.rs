@@ -1,0 +1,597 @@
+//! Fitting forecasters from recorded history, with held-out-suffix
+//! error reporting.
+//!
+//! Two fit sources close the loop the ROADMAP asks for:
+//!
+//! * a recorded **trace** (`trace::format::Trace`) — every frame carries
+//!   the enforced per-layer per-expert loads, which normalize to one
+//!   fraction vector per micro-batch per layer;
+//! * a live **`BalanceTracker`** with its bounded load history enabled
+//!   (`metrics::maxvio::BalanceTracker::enable_load_history`) — the
+//!   same series captured in-process, no trace file needed.
+//!
+//! [`fit_model`] fits one forecaster per layer on the full series and
+//! reports walk-forward errors on a held-out suffix: the model observes
+//! the training prefix, then at every held-out step it first predicts
+//! each requested horizon and only then absorbs the step — so every
+//! error is out-of-sample. The naive last-value forecast is scored on
+//! the same walk as the baseline every model must beat to matter.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::maxvio::BalanceTracker;
+use crate::trace::Trace;
+use crate::util::json::Json;
+
+use super::model::{
+    build_forecaster, forecaster_from_json, ForecastConfig, ForecasterKind,
+    LoadForecaster,
+};
+
+/// Per-layer, per-step expert load fractions: `layers[l][step][expert]`.
+pub struct LoadSeries {
+    pub m: usize,
+    pub layers: Vec<Vec<Vec<f64>>>,
+}
+
+impl LoadSeries {
+    /// Extract the per-layer fraction series from a recorded trace.
+    /// Frames whose layer routed nothing (all-degraded) are skipped for
+    /// that layer.
+    pub fn from_trace(trace: &Trace) -> Result<LoadSeries> {
+        let m = trace.meta.serve.router.m;
+        let n_layers = trace.meta.serve.router.n_layers;
+        let mut layers = vec![Vec::new(); n_layers];
+        for f in &trace.frames {
+            if f.loads.len() != n_layers * m {
+                bail!(
+                    "frame {}: loads len {} != {} layers x {} experts",
+                    f.seq,
+                    f.loads.len(),
+                    n_layers,
+                    m
+                );
+            }
+            for (l, steps) in layers.iter_mut().enumerate() {
+                let row = &f.loads[l * m..(l + 1) * m];
+                let sum: f64 = row.iter().map(|&x| x as f64).sum();
+                if sum <= 0.0 {
+                    continue;
+                }
+                steps.push(
+                    row.iter().map(|&x| x as f64 / sum).collect(),
+                );
+            }
+        }
+        Ok(LoadSeries { m, layers })
+    }
+
+    /// Extract the series from a live tracker's bounded load history.
+    pub fn from_tracker(tracker: &BalanceTracker) -> Result<LoadSeries> {
+        let hist = tracker.load_history.as_ref().ok_or_else(|| {
+            anyhow!(
+                "BalanceTracker has no load history; call \
+                 enable_load_history before routing"
+            )
+        })?;
+        let layers: Vec<Vec<Vec<f64>>> = hist
+            .per_layer
+            .iter()
+            .map(|ring| {
+                ring.iter()
+                    .map(|row| row.iter().map(|&x| x as f64).collect())
+                    .collect()
+            })
+            .collect();
+        Ok(LoadSeries { m: hist.m, layers })
+    }
+
+    /// Steps available on the shortest layer (each layer fits its own
+    /// forecaster, but fit/holdout sizing uses the common length).
+    pub fn steps(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).min().unwrap_or(0)
+    }
+}
+
+/// Walk-forward error at one horizon, pooled over layers and steps.
+#[derive(Clone, Copy, Debug)]
+pub struct HorizonError {
+    pub horizon: usize,
+    /// mean abs error of the forecast fraction vector vs the realized one
+    pub mae: f64,
+    /// the same walk scored with the naive last-value forecast
+    pub naive_mae: f64,
+    pub samples: u64,
+}
+
+/// Held-out-suffix report for one fitted model.
+#[derive(Clone, Debug)]
+pub struct FitReport {
+    pub kind: ForecasterKind,
+    /// steps in the shortest layer series
+    pub steps: usize,
+    /// held-out suffix length the errors are measured on
+    pub holdout: usize,
+    pub by_horizon: Vec<HorizonError>,
+}
+
+impl FitReport {
+    pub fn headers() -> &'static [&'static str] {
+        &["Model", "Horizon", "MAE", "NaiveMAE", "vsNaive", "Samples"]
+    }
+
+    pub fn table_rows(&self) -> Vec<Vec<String>> {
+        self.by_horizon
+            .iter()
+            .map(|h| {
+                vec![
+                    self.kind.name().to_string(),
+                    format!("{}", h.horizon),
+                    format!("{:.5}", h.mae),
+                    format!("{:.5}", h.naive_mae),
+                    format!(
+                        "{:+.1}%",
+                        if h.naive_mae > 0.0 {
+                            (h.mae / h.naive_mae - 1.0) * 100.0
+                        } else {
+                            0.0
+                        }
+                    ),
+                    format!("{}", h.samples),
+                ]
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.name().into())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("holdout", Json::Num(self.holdout as f64)),
+            (
+                "by_horizon",
+                Json::Arr(
+                    self.by_horizon
+                        .iter()
+                        .map(|h| {
+                            Json::obj(vec![
+                                ("horizon", Json::Num(h.horizon as f64)),
+                                ("mae", Json::Num(h.mae)),
+                                ("naive_mae", Json::Num(h.naive_mae)),
+                                ("samples", Json::Num(h.samples as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn mae(pred: &[f64], actual: &[f64]) -> f64 {
+    pred.iter()
+        .zip(actual)
+        .map(|(p, a)| (p - a).abs())
+        .sum::<f64>()
+        / pred.len().max(1) as f64
+}
+
+/// Walk one layer's held-out suffix, accumulating (model, naive) error
+/// sums per horizon into `acc`: `acc[i] = (mae_sum, naive_sum, samples)`.
+fn walk_layer(
+    kind: ForecasterKind,
+    cfg: &ForecastConfig,
+    m: usize,
+    steps: &[Vec<f64>],
+    holdout: usize,
+    horizons: &[usize],
+    acc: &mut [(f64, f64, u64)],
+) {
+    let split = steps.len() - holdout;
+    let mut fc = build_forecaster(kind, m, cfg);
+    for s in &steps[..split] {
+        fc.observe(s);
+    }
+    for t in split..steps.len() {
+        // having observed steps[..t], forecast(h) targets index t-1+h
+        for (i, &h) in horizons.iter().enumerate() {
+            let target = t + h - 1;
+            if target >= steps.len() {
+                continue;
+            }
+            let (ms, ns, n) = &mut acc[i];
+            *ms += mae(&fc.forecast(h), &steps[target]);
+            *ns += mae(&steps[t - 1], &steps[target]);
+            *n += 1;
+        }
+        fc.observe(&steps[t]);
+    }
+}
+
+/// A fitted per-layer forecast model, the artifact `bip-moe forecast
+/// fit` writes and `forecast eval|serve` (and the train warm start)
+/// consume.
+pub struct ForecastModel {
+    pub kind: ForecasterKind,
+    pub m: usize,
+    pub layers: Vec<Box<dyn LoadForecaster>>,
+}
+
+impl ForecastModel {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Forecast for layer `l` (clamped to the last fitted layer, so a
+    /// model fitted on fewer layers still seeds a deeper stack).
+    pub fn layer_forecast(&self, l: usize, h: usize) -> Vec<f64> {
+        let l = l.min(self.layers.len().saturating_sub(1));
+        self.layers[l].forecast(h)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str("bip-moe-forecast".into())),
+            ("version", Json::Str(crate::VERSION.into())),
+            ("kind", Json::Str(self.kind.name().into())),
+            ("m", Json::Num(self.m as f64)),
+            (
+                "layers",
+                Json::Arr(self.layers.iter().map(|f| f.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ForecastModel> {
+        if j.get("format").and_then(Json::as_str)
+            != Some("bip-moe-forecast")
+        {
+            bail!("not a bip-moe forecast model");
+        }
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .and_then(ForecasterKind::parse)
+            .ok_or_else(|| anyhow!("forecast model: bad kind"))?;
+        let m = j
+            .get("m")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("forecast model: missing m"))?;
+        let layers_json = j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("forecast model: missing layers"))?;
+        if layers_json.is_empty() {
+            bail!("forecast model: no layers");
+        }
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for lj in layers_json {
+            let fc = forecaster_from_json(lj)?;
+            if fc.m() != m {
+                bail!("forecast model: layer m {} != model m {m}", fc.m());
+            }
+            layers.push(fc);
+        }
+        Ok(ForecastModel { kind, m, layers })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing model {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<ForecastModel> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading model {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing model {}: {e}", path.display()))?;
+        ForecastModel::from_json(&j)
+    }
+}
+
+/// Fit one forecaster per layer on the full series and report
+/// walk-forward errors on the held-out suffix (pooled over layers).
+/// `holdout_frac` of the steps (at least 1, at most steps-1) form the
+/// suffix; every layer needs at least 2 steps.
+pub fn fit_model(
+    kind: ForecasterKind,
+    cfg: &ForecastConfig,
+    series: &LoadSeries,
+    horizons: &[usize],
+    holdout_frac: f64,
+) -> Result<(ForecastModel, FitReport)> {
+    let steps = series.steps();
+    if steps < 2 {
+        bail!(
+            "need at least 2 recorded steps per layer to fit (shortest \
+             layer has {steps})"
+        );
+    }
+    if series.layers.is_empty() {
+        bail!("series has no layers");
+    }
+    if horizons.is_empty() || horizons.contains(&0) {
+        bail!("horizons must be non-empty and >= 1");
+    }
+    let holdout = ((steps as f64 * holdout_frac).round() as usize)
+        .clamp(1, steps - 1);
+
+    let mut acc = vec![(0.0f64, 0.0f64, 0u64); horizons.len()];
+    let mut layers: Vec<Box<dyn LoadForecaster>> = Vec::new();
+    for layer in &series.layers {
+        // per-layer holdout of the common length keeps the pooled
+        // errors comparable across layers of unequal series length
+        walk_layer(kind, cfg, series.m, layer, holdout, horizons, &mut acc);
+        let mut fc = build_forecaster(kind, series.m, cfg);
+        for s in layer {
+            fc.observe(s);
+        }
+        layers.push(fc);
+    }
+    let by_horizon = horizons
+        .iter()
+        .zip(&acc)
+        .map(|(&h, &(ms, ns, n))| HorizonError {
+            horizon: h,
+            mae: if n > 0 { ms / n as f64 } else { 0.0 },
+            naive_mae: if n > 0 { ns / n as f64 } else { 0.0 },
+            samples: n,
+        })
+        .collect();
+    Ok((
+        ForecastModel { kind, m: series.m, layers },
+        FitReport { kind, steps, holdout, by_horizon },
+    ))
+}
+
+/// Continue a fitted model over a fresh series, scoring every horizon
+/// walk-forward (the `forecast eval` surface: fit on yesterday's trace,
+/// evaluate on today's).
+pub fn eval_model(
+    model: &mut ForecastModel,
+    series: &LoadSeries,
+    horizons: &[usize],
+) -> Result<FitReport> {
+    if series.m != model.m {
+        bail!("series m {} != model m {}", series.m, model.m);
+    }
+    if horizons.is_empty() || horizons.contains(&0) {
+        bail!("horizons must be non-empty and >= 1");
+    }
+    let steps = series.steps();
+    if steps == 0 {
+        bail!("series has no steps to evaluate on");
+    }
+    let mut acc = vec![(0.0f64, 0.0f64, 0u64); horizons.len()];
+    for (l, layer) in series.layers.iter().enumerate() {
+        let fc = {
+            let li = l.min(model.layers.len() - 1);
+            &mut model.layers[li]
+        };
+        for t in 0..layer.len() {
+            for (i, &h) in horizons.iter().enumerate() {
+                let target = t + h - 1;
+                if target >= layer.len() {
+                    continue;
+                }
+                let (ms, ns, n) = &mut acc[i];
+                *ms += mae(&fc.forecast(h), &layer[target]);
+                // naive: the last value the model has absorbed — before
+                // any eval step that is the fit series' final level
+                let naive = if t > 0 {
+                    layer[t - 1].clone()
+                } else {
+                    fc.forecast(1)
+                };
+                *ns += mae(&naive, &layer[target]);
+                *n += 1;
+            }
+            fc.observe(&layer[t]);
+        }
+    }
+    let by_horizon = horizons
+        .iter()
+        .zip(&acc)
+        .map(|(&h, &(ms, ns, n))| HorizonError {
+            horizon: h,
+            mae: if n > 0 { ms / n as f64 } else { 0.0 },
+            naive_mae: if n > 0 { ns / n as f64 } else { 0.0 },
+            samples: n,
+        })
+        .collect();
+    Ok(FitReport { kind: model.kind, steps, holdout: steps, by_horizon })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{
+        Policy, ReplicaConfig, RouterConfig, Scenario, SchedulerConfig,
+        ServeConfig, TrafficConfig, TrafficGenerator,
+    };
+    use crate::trace::TraceRecorder;
+
+    fn synthetic_series(steps: usize) -> LoadSeries {
+        // two layers, 4 experts, slow drift
+        let layer = |phase: f64| -> Vec<Vec<f64>> {
+            (0..steps)
+                .map(|t| {
+                    let d = 0.002 * t as f64 + phase;
+                    vec![0.3 + d, 0.3 - d, 0.2, 0.2]
+                })
+                .collect()
+        };
+        LoadSeries { m: 4, layers: vec![layer(0.0), layer(0.05)] }
+    }
+
+    fn recorded_trace(seed: u64) -> Trace {
+        let cfg = ServeConfig::new(
+            TrafficConfig {
+                scenario: Scenario::Steady,
+                n_requests: 512,
+                seed,
+                ..Default::default()
+            },
+            SchedulerConfig::default(),
+            RouterConfig::default(),
+            Policy::Greedy,
+        );
+        let mut rec = TraceRecorder::new(&cfg, &ReplicaConfig::default());
+        crate::serve::run_scenario_with(
+            &cfg,
+            TrafficGenerator::new(cfg.traffic.clone()),
+            Some(&mut rec),
+        );
+        rec.into_trace()
+    }
+
+    #[test]
+    fn series_from_trace_has_per_layer_fractions() {
+        let trace = recorded_trace(3);
+        let series = LoadSeries::from_trace(&trace).unwrap();
+        assert_eq!(series.m, 16);
+        assert_eq!(series.layers.len(), 4);
+        assert!(series.steps() >= 4, "{}", series.steps());
+        for layer in &series.layers {
+            for step in layer {
+                assert_eq!(step.len(), 16);
+                let sum: f64 = step.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9);
+                assert!(step.iter().all(|&x| x >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn fit_reports_holdout_errors_and_linear_beats_naive_on_drift() {
+        let series = synthetic_series(120);
+        let cfg = ForecastConfig::default();
+        let (model, report) = fit_model(
+            ForecasterKind::Linear,
+            &cfg,
+            &series,
+            &[1, 8],
+            0.25,
+        )
+        .unwrap();
+        assert_eq!(model.n_layers(), 2);
+        assert_eq!(report.holdout, 30);
+        assert_eq!(report.by_horizon.len(), 2);
+        for h in &report.by_horizon {
+            assert!(h.samples > 0);
+            assert!(h.mae.is_finite() && h.naive_mae.is_finite());
+        }
+        // at horizon 8 the linear extrapolator must beat last-value
+        let h8 = &report.by_horizon[1];
+        assert!(
+            h8.mae < h8.naive_mae,
+            "mae {} !< naive {}",
+            h8.mae,
+            h8.naive_mae
+        );
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_inputs() {
+        let series = synthetic_series(1);
+        let cfg = ForecastConfig::default();
+        assert!(fit_model(ForecasterKind::Ewma, &cfg, &series, &[1], 0.25)
+            .is_err());
+        let series = synthetic_series(10);
+        assert!(fit_model(ForecasterKind::Ewma, &cfg, &series, &[], 0.25)
+            .is_err());
+        assert!(fit_model(ForecasterKind::Ewma, &cfg, &series, &[0], 0.25)
+            .is_err());
+        let empty = LoadSeries { m: 4, layers: Vec::new() };
+        assert!(fit_model(ForecasterKind::Ewma, &cfg, &empty, &[1], 0.25)
+            .is_err());
+    }
+
+    #[test]
+    fn fit_from_a_recorded_trace_is_deterministic() {
+        let cfg = ForecastConfig::default();
+        let fit = |trace: &Trace| -> String {
+            let series = LoadSeries::from_trace(trace).unwrap();
+            let (model, _) = fit_model(
+                ForecasterKind::HoltWinters,
+                &cfg,
+                &series,
+                &[1, 4],
+                0.25,
+            )
+            .unwrap();
+            model.to_json().to_string()
+        };
+        let a = recorded_trace(9);
+        let b = recorded_trace(9);
+        assert_eq!(fit(&a), fit(&b), "same trace, same model, bit for bit");
+    }
+
+    #[test]
+    fn model_json_round_trips_forecasts_exactly() {
+        let series = synthetic_series(50);
+        let cfg = ForecastConfig { period: 5, ..Default::default() };
+        for kind in ForecasterKind::all() {
+            let (model, _) =
+                fit_model(kind, &cfg, &series, &[1], 0.2).unwrap();
+            let text = model.to_json().to_string();
+            let back = ForecastModel::from_json(
+                &Json::parse(&text).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.m, model.m);
+            assert_eq!(back.n_layers(), model.n_layers());
+            for l in 0..model.n_layers() {
+                for h in [1usize, 4] {
+                    assert_eq!(
+                        back.layer_forecast(l, h),
+                        model.layer_forecast(l, h),
+                        "{kind:?} layer {l} h={h}"
+                    );
+                }
+            }
+        }
+        assert!(ForecastModel::from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn eval_continues_a_fitted_model_on_a_fresh_series() {
+        let fit_series = synthetic_series(60);
+        let cfg = ForecastConfig::default();
+        let (mut model, _) = fit_model(
+            ForecasterKind::Linear,
+            &cfg,
+            &fit_series,
+            &[1],
+            0.25,
+        )
+        .unwrap();
+        // continuation of the same drift, 60 steps later
+        let eval_series = LoadSeries {
+            m: 4,
+            // both layers share the drift tail
+            layers: (0..fit_series.layers.len())
+                .map(|_| {
+                    (60..90)
+                        .map(|t| {
+                            let d = 0.002 * t as f64;
+                            vec![0.3 + d, 0.3 - d, 0.2, 0.2]
+                        })
+                        .collect::<Vec<_>>()
+                })
+                .collect(),
+        };
+        let report =
+            eval_model(&mut model, &eval_series, &[1, 4]).unwrap();
+        assert_eq!(report.by_horizon.len(), 2);
+        for h in &report.by_horizon {
+            assert!(h.samples > 0);
+            assert!(h.mae < 0.05, "drift continuation mae {}", h.mae);
+        }
+        // shape mismatches are errors, not panics
+        let bad = LoadSeries { m: 3, layers: vec![vec![vec![1.0; 3]]] };
+        assert!(eval_model(&mut model, &bad, &[1]).is_err());
+    }
+}

@@ -1,0 +1,44 @@
+//! Expert-load forecasting with proactive dual warm-start and
+//! predictive serving control.
+//!
+//! The paper's headline result is balance *from the first step*, where
+//! bias-adaptation baselines need many steps to converge; "Prediction
+//! Is All MoE Needs" (Cong et al. 2024) observes that per-expert loads
+//! are highly predictable from recent history. This subsystem exploits
+//! both: it learns per-expert load trajectories from what the repo
+//! already records (`trace/` files, live `BalanceTracker` histories)
+//! and feeds the predictions back into every layer of the stack —
+//!
+//! * [`model`] — EWMA / Holt-Winters / sliding-window-linear per-expert
+//!   forecasters behind one [`LoadForecaster`] trait;
+//! * [`fit`] — fitting from recorded traces or live trackers, with
+//!   walk-forward held-out-suffix error reporting against the naive
+//!   last-value baseline, and the JSON model artifact;
+//! * [`control`] — forecasts turned into actions: Algorithm 1 dual
+//!   seeds for `routing::PredictiveBip` and the serving warm start,
+//!   forecast-gated admission ([`PredictiveAdmission`]), replica
+//!   up/down-scaling ([`AutoScaler`]), and the training route-state
+//!   warm start ([`route_state_seed`]).
+//!
+//! Driven by `bip-moe forecast fit|eval|serve` and measured by
+//! `bench_forecast` (forecast error by horizon, warm- vs cold-start
+//! first-batch MaxVio, dual-iteration savings, predictive- vs
+//! reactive-scaling SLO deltas) in `BENCH_forecast.json`.
+
+pub mod control;
+pub mod fit;
+pub mod model;
+
+pub use control::{
+    dual_seed, route_state_seed, seed_states, AutoScaler,
+    PredictiveAdmission, ScaleEvent, ScalePolicy, ScalarHolt,
+    DEFAULT_SEED_GAIN,
+};
+pub use fit::{
+    eval_model, fit_model, FitReport, ForecastModel, HorizonError,
+    LoadSeries,
+};
+pub use model::{
+    build_forecaster, forecaster_from_json, ForecastConfig,
+    ForecasterKind, LoadForecaster,
+};

@@ -1,0 +1,748 @@
+//! Per-expert load forecasters behind one trait.
+//!
+//! "Prediction Is All MoE Needs" (Cong et al. 2024) observes that
+//! per-expert loads are highly predictable from recent history. A
+//! [`LoadForecaster`] consumes a stream of per-expert load *fractions*
+//! (one observation per routed micro-batch or training step) and
+//! predicts the fraction vector `h` steps ahead. Three models cover the
+//! workload shapes `serve::traffic` generates:
+//!
+//! * [`Ewma`] — exponentially weighted level; the right default for
+//!   steady or bursty-but-stationary skew;
+//! * [`HoltWinters`] — level + trend + optional additive seasonality;
+//!   tracks drifting hot sets and periodic (diurnal) load;
+//! * [`SlidingLinear`] — per-expert least-squares line over a sliding
+//!   window; the strongest extrapolator under sustained linear drift.
+//!
+//! Forecasts are clamped non-negative and renormalized to sum 1, so a
+//! consumer can always treat them as a load distribution (uniform
+//! before any observation). Every model serializes to JSON
+//! ([`LoadForecaster::to_json`] / [`forecaster_from_json`]) so a fit
+//! can be frozen to disk and shipped to a serving or training run.
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Which forecaster family to fit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForecasterKind {
+    Ewma,
+    HoltWinters,
+    Linear,
+}
+
+impl ForecasterKind {
+    pub fn all() -> [ForecasterKind; 3] {
+        [
+            ForecasterKind::Ewma,
+            ForecasterKind::HoltWinters,
+            ForecasterKind::Linear,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ForecasterKind::Ewma => "ewma",
+            ForecasterKind::HoltWinters => "holt-winters",
+            ForecasterKind::Linear => "linear",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ForecasterKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "ewma" => Some(ForecasterKind::Ewma),
+            "holt" | "holt-winters" | "holtwinters" | "hw" => {
+                Some(ForecasterKind::HoltWinters)
+            }
+            "linear" | "lin" | "sliding-linear" => {
+                Some(ForecasterKind::Linear)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        ForecasterKind::all().iter().map(|k| k.name()).collect()
+    }
+}
+
+/// Hyperparameters shared by the forecaster family (each model reads
+/// the fields it needs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ForecastConfig {
+    /// level smoothing (EWMA / Holt-Winters)
+    pub alpha: f64,
+    /// trend smoothing (Holt-Winters)
+    pub beta: f64,
+    /// seasonal smoothing (Holt-Winters, when `period >= 2`)
+    pub gamma: f64,
+    /// seasonal period in steps; 0 or 1 disables seasonality
+    pub period: usize,
+    /// sliding-window length (linear)
+    pub window: usize,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        ForecastConfig {
+            alpha: 0.3,
+            beta: 0.05,
+            gamma: 0.25,
+            period: 0,
+            window: 32,
+        }
+    }
+}
+
+/// A stateful per-expert load forecaster over a stream of observations.
+///
+/// `Send` for parity with `RoutingStrategy`: fitted models move into
+/// serving workers.
+pub trait LoadForecaster: Send {
+    fn name(&self) -> String;
+    /// Number of experts this forecaster tracks.
+    fn m(&self) -> usize;
+    /// Observe one step's per-expert loads (len `m`; any non-negative
+    /// scale — normalized to fractions internally).
+    fn observe(&mut self, loads: &[f64]);
+    /// Predicted per-expert load fractions `h >= 1` steps past the last
+    /// observation: non-negative, summing to 1 (uniform before any
+    /// observation).
+    fn forecast(&self, h: usize) -> Vec<f64>;
+    fn observed_steps(&self) -> u64;
+    /// Self-describing snapshot; [`forecaster_from_json`] inverts it
+    /// bit-exactly (the JSON emitter prints shortest-round-trip floats).
+    fn to_json(&self) -> Json;
+}
+
+/// Clamp negatives/non-finites to 0 and renormalize to sum 1 (uniform
+/// when everything vanishes).
+pub(crate) fn normalize(mut v: Vec<f64>) -> Vec<f64> {
+    let mut sum = 0.0;
+    for x in v.iter_mut() {
+        if !x.is_finite() || *x < 0.0 {
+            *x = 0.0;
+        }
+        sum += *x;
+    }
+    if sum <= 0.0 {
+        let m = v.len().max(1);
+        return vec![1.0 / m as f64; v.len()];
+    }
+    for x in v.iter_mut() {
+        *x /= sum;
+    }
+    v
+}
+
+fn uniform(m: usize) -> Vec<f64> {
+    vec![1.0 / m.max(1) as f64; m]
+}
+
+fn arr_f64(j: &Json, m: usize, what: &str) -> Result<Vec<f64>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow!("forecast model: {what} is not an array"))?;
+    if arr.len() != m {
+        bail!("forecast model: {what} has {} entries, want {m}", arr.len());
+    }
+    arr.iter()
+        .map(|x| {
+            x.as_f64()
+                .ok_or_else(|| anyhow!("forecast model: {what} not numeric"))
+        })
+        .collect()
+}
+
+fn json_f64s(j: &Json, key: &str, m: usize) -> Result<Vec<f64>> {
+    let v = j
+        .get(key)
+        .ok_or_else(|| anyhow!("forecast model: missing array {key}"))?;
+    arr_f64(v, m, key)
+}
+
+fn json_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("forecast model: missing number {key}"))
+}
+
+fn json_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("forecast model: missing count {key}"))
+}
+
+// ---- EWMA ---------------------------------------------------------------
+
+/// Exponentially weighted moving average of the fraction vector.
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    pub alpha: f64,
+    level: Vec<f64>,
+    steps: u64,
+}
+
+impl Ewma {
+    pub fn new(m: usize, alpha: f64) -> Ewma {
+        assert!(m >= 1 && alpha > 0.0 && alpha <= 1.0);
+        Ewma { alpha, level: uniform(m), steps: 0 }
+    }
+}
+
+impl LoadForecaster for Ewma {
+    fn name(&self) -> String {
+        format!("ewma(alpha={})", self.alpha)
+    }
+
+    fn m(&self) -> usize {
+        self.level.len()
+    }
+
+    fn observe(&mut self, loads: &[f64]) {
+        assert_eq!(loads.len(), self.level.len());
+        let x = normalize(loads.to_vec());
+        if self.steps == 0 {
+            self.level = x;
+        } else {
+            for (l, xi) in self.level.iter_mut().zip(&x) {
+                *l = self.alpha * xi + (1.0 - self.alpha) * *l;
+            }
+        }
+        self.steps += 1;
+    }
+
+    fn forecast(&self, _h: usize) -> Vec<f64> {
+        normalize(self.level.clone())
+    }
+
+    fn observed_steps(&self) -> u64 {
+        self.steps
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("ewma".into())),
+            ("m", Json::Num(self.level.len() as f64)),
+            ("alpha", Json::Num(self.alpha)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("level", Json::from_f64s(&self.level)),
+        ])
+    }
+}
+
+// ---- Holt-Winters -------------------------------------------------------
+
+/// Holt-Winters: per-expert level + trend, plus optional additive
+/// seasonal components with period `P` (`P < 2` reduces to Holt's
+/// double-exponential trend model).
+#[derive(Clone, Debug)]
+pub struct HoltWinters {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    pub period: usize,
+    level: Vec<f64>,
+    trend: Vec<f64>,
+    /// `season[t % period]` is the additive component of slot t
+    /// (empty when seasonality is disabled)
+    season: Vec<Vec<f64>>,
+    steps: u64,
+}
+
+impl HoltWinters {
+    pub fn new(
+        m: usize,
+        alpha: f64,
+        beta: f64,
+        gamma: f64,
+        period: usize,
+    ) -> HoltWinters {
+        assert!(m >= 1 && alpha > 0.0 && alpha <= 1.0);
+        assert!((0.0..=1.0).contains(&beta) && (0.0..=1.0).contains(&gamma));
+        let season = if period >= 2 {
+            vec![vec![0.0; m]; period]
+        } else {
+            Vec::new()
+        };
+        HoltWinters {
+            alpha,
+            beta,
+            gamma,
+            period,
+            level: uniform(m),
+            trend: vec![0.0; m],
+            season,
+            steps: 0,
+        }
+    }
+
+    /// Seasonal slot of the observation with 0-based index `t`.
+    fn slot(&self, t: u64) -> Option<usize> {
+        if self.season.is_empty() {
+            None
+        } else {
+            Some((t % self.season.len() as u64) as usize)
+        }
+    }
+}
+
+impl LoadForecaster for HoltWinters {
+    fn name(&self) -> String {
+        if self.season.is_empty() {
+            format!("holt(alpha={},beta={})", self.alpha, self.beta)
+        } else {
+            format!(
+                "holt-winters(alpha={},beta={},gamma={},P={})",
+                self.alpha,
+                self.beta,
+                self.gamma,
+                self.season.len()
+            )
+        }
+    }
+
+    fn m(&self) -> usize {
+        self.level.len()
+    }
+
+    fn observe(&mut self, loads: &[f64]) {
+        assert_eq!(loads.len(), self.level.len());
+        let x = normalize(loads.to_vec());
+        if self.steps == 0 {
+            self.level = x;
+            self.steps = 1;
+            return;
+        }
+        let slot = self.slot(self.steps);
+        for j in 0..self.level.len() {
+            let s_old = slot.map_or(0.0, |s| self.season[s][j]);
+            let prev = self.level[j];
+            self.level[j] = self.alpha * (x[j] - s_old)
+                + (1.0 - self.alpha) * (self.level[j] + self.trend[j]);
+            self.trend[j] = self.beta * (self.level[j] - prev)
+                + (1.0 - self.beta) * self.trend[j];
+            if let Some(s) = slot {
+                self.season[s][j] = self.gamma * (x[j] - self.level[j])
+                    + (1.0 - self.gamma) * s_old;
+            }
+        }
+        self.steps += 1;
+    }
+
+    fn forecast(&self, h: usize) -> Vec<f64> {
+        if self.steps == 0 {
+            return uniform(self.level.len());
+        }
+        let h = h.max(1);
+        // the next unseen observation has index `steps`; `h` steps past
+        // the last one is index steps - 1 + h
+        let slot = self.slot(self.steps - 1 + h as u64);
+        let v: Vec<f64> = (0..self.level.len())
+            .map(|j| {
+                self.level[j]
+                    + h as f64 * self.trend[j]
+                    + slot.map_or(0.0, |s| self.season[s][j])
+            })
+            .collect();
+        normalize(v)
+    }
+
+    fn observed_steps(&self) -> u64 {
+        self.steps
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("holt-winters".into())),
+            ("m", Json::Num(self.level.len() as f64)),
+            ("alpha", Json::Num(self.alpha)),
+            ("beta", Json::Num(self.beta)),
+            ("gamma", Json::Num(self.gamma)),
+            ("period", Json::Num(self.period as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("level", Json::from_f64s(&self.level)),
+            ("trend", Json::from_f64s(&self.trend)),
+            (
+                "season",
+                Json::Arr(
+                    self.season.iter().map(|s| Json::from_f64s(s)).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ---- sliding-window linear ----------------------------------------------
+
+/// Per-expert ordinary-least-squares line over a sliding window of the
+/// last `window` observations, extrapolated `h` steps past the window.
+#[derive(Clone, Debug)]
+pub struct SlidingLinear {
+    m: usize,
+    pub window: usize,
+    hist: VecDeque<Vec<f64>>,
+    steps: u64,
+}
+
+impl SlidingLinear {
+    pub fn new(m: usize, window: usize) -> SlidingLinear {
+        assert!(m >= 1 && window >= 2);
+        SlidingLinear { m, window, hist: VecDeque::new(), steps: 0 }
+    }
+}
+
+impl LoadForecaster for SlidingLinear {
+    fn name(&self) -> String {
+        format!("linear(window={})", self.window)
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn observe(&mut self, loads: &[f64]) {
+        assert_eq!(loads.len(), self.m);
+        self.hist.push_back(normalize(loads.to_vec()));
+        if self.hist.len() > self.window {
+            self.hist.pop_front();
+        }
+        self.steps += 1;
+    }
+
+    fn forecast(&self, h: usize) -> Vec<f64> {
+        let w = self.hist.len();
+        match w {
+            0 => return uniform(self.m),
+            1 => return self.hist[0].clone(),
+            _ => {}
+        }
+        let h = h.max(1);
+        // x = 0..w-1, predict at x* = w - 1 + h
+        let xbar = (w - 1) as f64 / 2.0;
+        let sxx = w as f64 * (w as f64 * w as f64 - 1.0) / 12.0;
+        let xstar = (w - 1 + h) as f64;
+        let mut out = vec![0.0; self.m];
+        for j in 0..self.m {
+            let mut ybar = 0.0;
+            let mut sxy = 0.0;
+            for (i, row) in self.hist.iter().enumerate() {
+                ybar += row[j];
+                sxy += (i as f64 - xbar) * row[j];
+            }
+            ybar /= w as f64;
+            let slope = sxy / sxx;
+            out[j] = ybar + slope * (xstar - xbar);
+        }
+        normalize(out)
+    }
+
+    fn observed_steps(&self) -> u64 {
+        self.steps
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("linear".into())),
+            ("m", Json::Num(self.m as f64)),
+            ("window", Json::Num(self.window as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            (
+                "hist",
+                Json::Arr(
+                    self.hist.iter().map(|r| Json::from_f64s(r)).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ---- construction + JSON round trip -------------------------------------
+
+/// Fresh forecaster of the given kind over `m` experts.
+pub fn build_forecaster(
+    kind: ForecasterKind,
+    m: usize,
+    cfg: &ForecastConfig,
+) -> Box<dyn LoadForecaster> {
+    match kind {
+        ForecasterKind::Ewma => Box::new(Ewma::new(m, cfg.alpha)),
+        ForecasterKind::HoltWinters => Box::new(HoltWinters::new(
+            m, cfg.alpha, cfg.beta, cfg.gamma, cfg.period,
+        )),
+        ForecasterKind::Linear => {
+            Box::new(SlidingLinear::new(m, cfg.window.max(2)))
+        }
+    }
+}
+
+/// Rebuild a forecaster from its [`LoadForecaster::to_json`] snapshot.
+pub fn forecaster_from_json(j: &Json) -> Result<Box<dyn LoadForecaster>> {
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("forecast model: missing kind"))?;
+    let m = json_usize(j, "m")?;
+    if m == 0 {
+        bail!("forecast model: m must be >= 1");
+    }
+    let steps = json_usize(j, "steps")? as u64;
+    // validate before the constructors, whose asserts would abort the
+    // process on a hand-edited model file
+    let level_rate = |key: &str| -> Result<f64> {
+        let x = json_f64(j, key)?;
+        if !(x > 0.0 && x <= 1.0) {
+            bail!("forecast model: {key}={x} outside (0, 1]");
+        }
+        Ok(x)
+    };
+    let unit_rate = |key: &str| -> Result<f64> {
+        let x = json_f64(j, key)?;
+        if !(0.0..=1.0).contains(&x) {
+            bail!("forecast model: {key}={x} outside [0, 1]");
+        }
+        Ok(x)
+    };
+    match kind {
+        "ewma" => {
+            let mut f = Ewma::new(m, level_rate("alpha")?);
+            f.level = json_f64s(j, "level", m)?;
+            f.steps = steps;
+            Ok(Box::new(f))
+        }
+        "holt-winters" => {
+            let period = json_usize(j, "period")?;
+            let mut f = HoltWinters::new(
+                m,
+                level_rate("alpha")?,
+                unit_rate("beta")?,
+                unit_rate("gamma")?,
+                period,
+            );
+            f.level = json_f64s(j, "level", m)?;
+            f.trend = json_f64s(j, "trend", m)?;
+            let season = j
+                .get("season")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("forecast model: missing season"))?;
+            if season.len() != f.season.len() {
+                bail!(
+                    "forecast model: season has {} slots, want {}",
+                    season.len(),
+                    f.season.len()
+                );
+            }
+            for (slot, sj) in f.season.iter_mut().zip(season) {
+                *slot = arr_f64(sj, m, "season slot")?;
+            }
+            f.steps = steps;
+            Ok(Box::new(f))
+        }
+        "linear" => {
+            let window = json_usize(j, "window")?;
+            let mut f = SlidingLinear::new(m, window.max(2));
+            let hist = j
+                .get("hist")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("forecast model: missing hist"))?;
+            for row in hist {
+                f.hist.push_back(arr_f64(row, m, "hist row")?);
+            }
+            if f.hist.len() > f.window {
+                bail!(
+                    "forecast model: hist of {} exceeds window {}",
+                    f.hist.len(),
+                    f.window
+                );
+            }
+            f.steps = steps;
+            Ok(Box::new(f))
+        }
+        other => bail!("forecast model: unknown kind {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mae(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>()
+            / a.len() as f64
+    }
+
+    #[test]
+    fn forecasts_are_distributions_from_the_start() {
+        let cfg = ForecastConfig::default();
+        for kind in ForecasterKind::all() {
+            let mut f = build_forecaster(kind, 8, &cfg);
+            for h in [1usize, 4, 32] {
+                let p = f.forecast(h);
+                assert_eq!(p.len(), 8);
+                assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+                assert!(p.iter().all(|&x| (x - 0.125).abs() < 1e-12),
+                        "{kind:?}: uniform before data");
+            }
+            f.observe(&[4.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 4.0]);
+            let p = f.forecast(1);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x >= 0.0), "{kind:?}");
+            assert_eq!(f.observed_steps(), 1);
+        }
+    }
+
+    #[test]
+    fn ewma_converges_to_a_constant_signal() {
+        let mut f = Ewma::new(4, 0.3);
+        let x = [0.4, 0.3, 0.2, 0.1];
+        for _ in 0..60 {
+            f.observe(&x);
+        }
+        assert!(mae(&f.forecast(1), &x) < 1e-6);
+        // and the horizon does not change a level-only forecast
+        assert_eq!(f.forecast(1), f.forecast(16));
+    }
+
+    #[test]
+    fn holt_tracks_linear_drift_where_ewma_lags() {
+        // expert 0 gains 0.005 fraction per step at expert 3's expense
+        let series: Vec<Vec<f64>> = (0..80)
+            .map(|t| {
+                let d = 0.005 * t as f64;
+                vec![0.1 + d, 0.3, 0.3, 0.3 - d]
+            })
+            .collect();
+        let mut holt = HoltWinters::new(4, 0.3, 0.2, 0.0, 0);
+        let mut ewma = Ewma::new(4, 0.3);
+        for s in &series {
+            holt.observe(s);
+            ewma.observe(s);
+        }
+        // truth 8 steps past the end of the series
+        let truth = normalize(vec![0.1 + 0.005 * 87.0, 0.3, 0.3,
+                                   0.3 - 0.005 * 87.0]);
+        let he = mae(&holt.forecast(8), &truth);
+        let ee = mae(&ewma.forecast(8), &truth);
+        assert!(he < ee, "holt {he} !< ewma {ee}");
+    }
+
+    #[test]
+    fn linear_extrapolates_drift_exactly() {
+        let series: Vec<Vec<f64>> = (0..40)
+            .map(|t| {
+                let d = 0.004 * t as f64;
+                vec![0.2 + d, 0.3, 0.3 - d, 0.2]
+            })
+            .collect();
+        let mut lin = SlidingLinear::new(4, 16);
+        for s in &series {
+            lin.observe(s);
+        }
+        let truth = normalize(vec![0.2 + 0.004 * 45.0, 0.3,
+                                   0.3 - 0.004 * 45.0, 0.2]);
+        assert!(mae(&lin.forecast(6), &truth) < 1e-9);
+    }
+
+    #[test]
+    fn holt_winters_learns_a_periodic_signal() {
+        // period-8 square wave between experts 0 and 1
+        let series: Vec<Vec<f64>> = (0..96)
+            .map(|t| {
+                if (t / 4) % 2 == 0 {
+                    vec![0.5, 0.1, 0.2, 0.2]
+                } else {
+                    vec![0.1, 0.5, 0.2, 0.2]
+                }
+            })
+            .collect();
+        let mut hw = HoltWinters::new(4, 0.2, 0.0, 0.5, 8);
+        let mut ewma = Ewma::new(4, 0.2);
+        for s in &series {
+            hw.observe(s);
+            ewma.observe(s);
+        }
+        // 4 steps ahead lands in the opposite phase: index 96+3 = 99,
+        // (99/4) % 2 = 0 -> expert 0 hot
+        let truth = vec![0.5, 0.1, 0.2, 0.2];
+        let hwe = mae(&hw.forecast(4), &truth);
+        let ee = mae(&ewma.forecast(4), &truth);
+        assert!(hwe < ee, "hw {hwe} !< ewma {ee}");
+    }
+
+    #[test]
+    fn observations_are_normalized_not_trusted() {
+        let mut f = Ewma::new(3, 1.0);
+        f.observe(&[30.0, 20.0, 50.0]); // raw counts, not fractions
+        let p = f.forecast(1);
+        assert!((p[0] - 0.3).abs() < 1e-12);
+        assert!((p[2] - 0.5).abs() < 1e-12);
+        // negative / non-finite garbage is clamped, never propagated
+        let mut g = Ewma::new(3, 1.0);
+        g.observe(&[-1.0, f64::NAN, 2.0]);
+        assert_eq!(g.forecast(1), vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn json_round_trips_every_kind_bit_exactly() {
+        let cfg = ForecastConfig { period: 6, ..Default::default() };
+        for kind in ForecasterKind::all() {
+            let mut f = build_forecaster(kind, 5, &cfg);
+            for t in 0..23 {
+                let x: Vec<f64> = (0..5)
+                    .map(|j| 1.0 + ((t * 7 + j * 3) % 11) as f64)
+                    .collect();
+                f.observe(&x);
+            }
+            let j = f.to_json();
+            let back = forecaster_from_json(&j).unwrap();
+            assert_eq!(back.observed_steps(), f.observed_steps());
+            for h in [1usize, 3, 9] {
+                assert_eq!(back.forecast(h), f.forecast(h), "{kind:?} h={h}");
+            }
+            // the snapshot survives the text emitter too
+            let text = j.to_string();
+            let rebuilt = forecaster_from_json(
+                &crate::util::json::Json::parse(&text).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(rebuilt.forecast(2), f.forecast(2), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_models() {
+        assert!(forecaster_from_json(&Json::obj(vec![])).is_err());
+        let j = Json::obj(vec![
+            ("kind", Json::Str("ewma".into())),
+            ("m", Json::Num(3.0)),
+            ("alpha", Json::Num(0.3)),
+            ("steps", Json::Num(1.0)),
+            ("level", Json::from_f64s(&[0.5, 0.5])), // wrong length
+        ]);
+        assert!(forecaster_from_json(&j).is_err());
+        let j = Json::obj(vec![
+            ("kind", Json::Str("nope".into())),
+            ("m", Json::Num(3.0)),
+            ("steps", Json::Num(0.0)),
+        ]);
+        assert!(forecaster_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn kind_parse_is_forgiving() {
+        assert_eq!(ForecasterKind::parse("EWMA"), Some(ForecasterKind::Ewma));
+        assert_eq!(
+            ForecasterKind::parse(" holt "),
+            Some(ForecasterKind::HoltWinters)
+        );
+        assert_eq!(
+            ForecasterKind::parse("lin"),
+            Some(ForecasterKind::Linear)
+        );
+        assert_eq!(ForecasterKind::parse("arima"), None);
+        assert_eq!(ForecasterKind::names().len(), 3);
+    }
+}

@@ -10,8 +10,10 @@
 //!   dual / online / approx), the §5 online-matching application, and
 //!   the `serve/` online inference-serving subsystem (traffic generator,
 //!   admission control, micro-batch scheduler, capacity-aware BIP
-//!   router), and the `trace/` record/replay subsystem (binary routing
-//!   traces, deterministic replay, counterfactual policy diffs).
+//!   router), the `trace/` record/replay subsystem (binary routing
+//!   traces, deterministic replay, counterfactual policy diffs), and
+//!   the `forecast/` subsystem (per-expert load forecasting, proactive
+//!   dual warm-start, predictive admission + autoscaling).
 //!   Python never runs on the training or serving path.
 //! * **L2 (`python/compile/model.py`)** — Minimind-style MoE transformer
 //!   (fwd/bwd/AdamW) with the three routing modes (Loss-Controlled,
@@ -27,6 +29,7 @@ pub mod bench;
 pub mod bip;
 pub mod config;
 pub mod data;
+pub mod forecast;
 pub mod matching;
 pub mod metrics;
 pub mod parallel;

@@ -11,6 +11,9 @@
 //!   trace   record a serving run to a binary routing trace, replay it
 //!           bit-identically, counterfactually diff policies on it, or
 //!           export it as JSON
+//!   forecast fit a per-expert load forecaster from a recorded trace
+//!           (or a live run), evaluate it walk-forward, and serve with
+//!           a forecast warm start / predictive autoscaling
 //!   info    list artifact manifest contents and engine stats
 //!
 //! Examples:
@@ -22,18 +25,28 @@
 //!   bip-moe trace record --scenario steady --policy online --out t.trace
 //!   bip-moe trace replay --trace t.trace
 //!   bip-moe trace diff --trace t.trace --policies bip,lossfree
+//!   bip-moe forecast fit --trace t.trace --kind holt --out model.json
+//!   bip-moe forecast eval --model model.json --trace t2.trace
+//!   bip-moe forecast serve --model model.json --scenario bursty
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
 use bip_moe::bip::{dual, flow, greedy_topk, Instance};
+use bip_moe::forecast::{
+    eval_model, fit_model, seed_states, AutoScaler, FitReport,
+    ForecastConfig, ForecastModel, ForecasterKind, LoadSeries,
+    ScalePolicy, DEFAULT_SEED_GAIN,
+};
 use bip_moe::matching::simulator::{compare_policies, Workload};
 use bip_moe::metrics::TablePrinter;
+use bip_moe::routing::BalanceState;
 use bip_moe::runtime::Engine;
 use bip_moe::serve::{
     self, Policy, ReplicaConfig, RouterConfig, SchedulerConfig, Scenario,
-    ServeConfig, ServeReport, TrafficConfig, TrafficGenerator,
+    ServeConfig, ServeReport, ServingRouter, TrafficConfig,
+    TrafficGenerator,
 };
 use bip_moe::trace::{PolicyDiff, Trace, TraceRecorder};
 use bip_moe::train::TrainDriver;
@@ -57,6 +70,21 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
 }
 
+/// An unknown --scenario must tell the operator what IS valid.
+fn scenario_err(arg: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "unknown scenario '{arg}'; valid: {} (or 'all')",
+        Scenario::names().join(", ")
+    )
+}
+
+fn policy_err(arg: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "unknown policy '{arg}'; valid: {} (or 'all')",
+        Policy::names().join(", ")
+    )
+}
+
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(args),
@@ -66,6 +94,7 @@ fn run(args: &Args) -> Result<()> {
         Some("match") => cmd_match(args),
         Some("serve") => cmd_serve(args),
         Some("trace") => cmd_trace(args),
+        Some("forecast") => cmd_forecast(args),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown subcommand {other}; see --help"),
         None => {
@@ -78,11 +107,12 @@ fn run(args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "bip-moe {} — BIP-Based Balancing for MoE pre-training + serving\n\n\
-         usage: bip-moe <train|run|eval|solve|match|serve|trace|info> \
-         [--options]\n\n\
+         usage: bip-moe <train|run|eval|solve|match|serve|trace|\
+         forecast|info> [--options]\n\n\
          train  --config <name> --mode <aux|lossfree|bip> [--bip-t N]\n\
                 [--steps N] [--seed N] [--eval-batches N]\n\
                 [--reports DIR] [--save CKPT] [--artifacts DIR]\n\
+                [--warm-start-trace PATH]\n\
          run    --config-file configs/<exp>.json [--artifacts DIR]\n\
          eval   --checkpoint CKPT [--eval-batches N] [--artifacts DIR]\n\
          solve  [--n N] [--m M] [--k K] [--skew S] [--t T] [--exact]\n\
@@ -102,6 +132,16 @@ fn print_help() {
                  completions against the recording)\n\
                 trace diff --trace PATH [--policies a,b,..] [--json P]\n\
                 trace export --trace PATH [--out PATH.json]\n\
+         forecast fit [--trace PATH | serve-style knobs for a live\n\
+                 run] [--kind ewma|holt|linear] [--alpha A] [--beta B]\n\
+                 [--gamma G] [--period P] [--window W]\n\
+                 [--horizons 1,4,16] [--holdout F] [--out MODEL.json]\n\
+                forecast eval --model MODEL.json --trace PATH\n\
+                 [--horizons ..] [--json P]\n\
+                forecast serve --model MODEL.json [serve-style knobs]\n\
+                 [--policy predictive] [--seed-gain G] [--autoscale]\n\
+                 [--max-replicas R] [--scale-window-ms MS]\n\
+                 [--replica-rps X] [--headroom H] [--json P]\n\
          info   [--artifacts DIR]",
         bip_moe::VERSION
     );
@@ -111,6 +151,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "mode", "bip-t", "steps", "seed", "eval-batches",
         "reports", "save", "artifacts", "sim-devices", "data-seed",
+        "warm-start-trace",
     ])
     .map_err(anyhow::Error::msg)?;
     let engine = Engine::new(&artifacts_dir(args))?;
@@ -124,6 +165,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     driver.eval_batches = args.u64_or("eval-batches", 8);
     driver.sim_devices = args.usize_or("sim-devices", 4);
     driver.data_seed = args.u64_or("data-seed", 20240601);
+    driver.warm_start_trace =
+        args.get("warm-start-trace").map(PathBuf::from);
 
     let outcome = driver.run(&engine)?;
     let reports = PathBuf::from(args.str_or("reports", "reports"));
@@ -332,13 +375,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     ])
     .map_err(anyhow::Error::msg)?;
 
-    let scenario_arg = args.str_or("scenario", "all");
+    let scenario_arg =
+        args.str_or("scenario", "all").trim().to_ascii_lowercase();
     let scenarios: Vec<Scenario> = if scenario_arg == "all" {
         Scenario::all().to_vec()
     } else {
-        vec![Scenario::parse(&scenario_arg).ok_or_else(|| {
-            anyhow::anyhow!("unknown scenario {scenario_arg}")
-        })?]
+        vec![Scenario::parse(&scenario_arg)
+            .ok_or_else(|| scenario_err(&scenario_arg))?]
     };
     if scenarios.contains(&Scenario::Replayed) {
         bail!(
@@ -346,13 +389,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
              `bip-moe trace replay --trace PATH`"
         );
     }
-    let policy_arg = args.str_or("policy", "all");
+    let policy_arg =
+        args.str_or("policy", "all").trim().to_ascii_lowercase();
     let mut policies: Vec<Policy> = if policy_arg == "all" {
         Policy::all().to_vec()
     } else {
-        vec![Policy::parse(&policy_arg).ok_or_else(|| {
-            anyhow::anyhow!("unknown policy {policy_arg}")
-        })?]
+        vec![Policy::parse(&policy_arg)
+            .ok_or_else(|| policy_err(&policy_arg))?]
     };
     if !policies.contains(&Policy::Greedy) {
         policies.insert(0, Policy::Greedy);
@@ -576,9 +619,8 @@ fn cmd_trace(args: &Args) -> Result<()> {
 /// `serve` sweep).
 fn trace_serve_config(args: &Args) -> Result<(ServeConfig, ReplicaConfig)> {
     let scenario_arg = args.str_or("scenario", "steady");
-    let scenario = Scenario::parse(&scenario_arg).ok_or_else(|| {
-        anyhow::anyhow!("unknown scenario {scenario_arg}")
-    })?;
+    let scenario = Scenario::parse(&scenario_arg)
+        .ok_or_else(|| scenario_err(&scenario_arg))?;
     if scenario == Scenario::Replayed {
         bail!(
             "trace record needs a generative scenario; 'replayed' is \
@@ -587,7 +629,7 @@ fn trace_serve_config(args: &Args) -> Result<(ServeConfig, ReplicaConfig)> {
     }
     let policy_arg = args.str_or("policy", "online");
     let policy = Policy::parse(&policy_arg)
-        .ok_or_else(|| anyhow::anyhow!("unknown policy {policy_arg}"))?;
+        .ok_or_else(|| policy_err(&policy_arg))?;
     let ServeKnobs { mut traffic, sched, router, replicas } =
         serve_knobs(args, 2048)?;
     traffic.scenario = scenario;
@@ -675,9 +717,7 @@ fn cmd_trace_diff(args: &Args) -> Result<()> {
         Some(spec) => spec
             .split(',')
             .map(|s| {
-                Policy::parse(s.trim()).ok_or_else(|| {
-                    anyhow::anyhow!("unknown policy {}", s.trim())
-                })
+                Policy::parse(s).ok_or_else(|| policy_err(s.trim()))
             })
             .collect::<Result<_>>()?,
         None => vec![
@@ -751,6 +791,413 @@ fn cmd_trace_export(args: &Args) -> Result<()> {
             );
         }
         None => println!("{doc}"),
+    }
+    Ok(())
+}
+
+/// Expert-load forecasting: fit per-layer forecasters from a recorded
+/// trace (or a live routed run), evaluate them walk-forward against a
+/// fresh trace, and serve with the forecast warm start / predictive
+/// autoscaling. Shares the serve_knobs arg-builder with `serve` and
+/// `trace record`, so a pipeline configured once records, fits and
+/// serves identically.
+fn cmd_forecast(args: &Args) -> Result<()> {
+    args.check_known(&[
+        // serve-pipeline knobs (shared with `serve` / `trace record`)
+        "scenario", "policy", "requests", "rate", "m", "k", "layers",
+        "tenants", "t", "buckets", "batch", "queue", "max-wait-us",
+        "slo-ms", "capacity-factor", "devices", "placement",
+        "lpt-refresh", "seed", "replicas", "threads", "sync-every",
+        // forecast-specific
+        "trace", "model", "kind", "alpha", "beta", "gamma", "period",
+        "window", "horizons", "holdout", "out", "seed-gain",
+        "autoscale", "max-replicas", "scale-window-ms", "replica-rps",
+        "headroom", "json",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    match args.positional.first().map(String::as_str) {
+        Some("fit") => cmd_forecast_fit(args),
+        Some("eval") => cmd_forecast_eval(args),
+        Some("serve") => cmd_forecast_serve(args),
+        Some(other) => {
+            bail!("unknown forecast action {other}; see --help")
+        }
+        None => {
+            bail!("usage: bip-moe forecast <fit|eval|serve> [--options]")
+        }
+    }
+}
+
+fn forecast_cfg(args: &Args) -> ForecastConfig {
+    let d = ForecastConfig::default();
+    ForecastConfig {
+        alpha: args.f64_or("alpha", d.alpha),
+        beta: args.f64_or("beta", d.beta),
+        gamma: args.f64_or("gamma", d.gamma),
+        period: args.usize_or("period", d.period),
+        window: args.usize_or("window", d.window),
+    }
+}
+
+fn forecast_kind(args: &Args) -> Result<ForecasterKind> {
+    let spec = args.str_or("kind", "holt");
+    ForecasterKind::parse(&spec).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown forecaster kind '{spec}'; valid: {}",
+            ForecasterKind::names().join(", ")
+        )
+    })
+}
+
+fn parse_horizons(args: &Args) -> Result<Vec<usize>> {
+    let spec = args.str_or("horizons", "1,4,16");
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let h: usize = part.trim().parse().map_err(|_| {
+            anyhow::anyhow!("bad horizon '{}' in --horizons", part.trim())
+        })?;
+        if h == 0 {
+            bail!("horizons must be >= 1");
+        }
+        out.push(h);
+    }
+    Ok(out)
+}
+
+/// The fit series and a label describing where it came from: a trace
+/// file, or a live routed run (default greedy — the raw *demand*
+/// signal, not an already-balanced trajectory) with the tracker's
+/// bounded load history enabled.
+fn forecast_series(args: &Args) -> Result<(LoadSeries, String)> {
+    if let Some(path) = args.get("trace") {
+        let trace = Trace::load(Path::new(path))?;
+        let label =
+            format!("trace {path} ({} frames)", trace.frames.len());
+        return Ok((LoadSeries::from_trace(&trace)?, label));
+    }
+    let scenario_arg = args.str_or("scenario", "steady");
+    let scenario = Scenario::parse(&scenario_arg)
+        .ok_or_else(|| scenario_err(&scenario_arg))?;
+    if scenario == Scenario::Replayed {
+        bail!("forecast fit needs a generative scenario or --trace PATH");
+    }
+    let policy_arg = args.str_or("policy", "greedy");
+    let policy = Policy::parse(&policy_arg)
+        .ok_or_else(|| policy_err(&policy_arg))?;
+    let ServeKnobs { mut traffic, sched, router, .. } =
+        serve_knobs(args, 4096)?;
+    traffic.scenario = scenario;
+    let cfg = ServeConfig::new(traffic, sched.clone(), router, policy);
+    let mut router = ServingRouter::new(policy, cfg.router.clone());
+    let batch = sched.batch_max.max(1);
+    router.track_load_history(
+        (cfg.traffic.n_requests / batch + 2).max(8),
+    );
+    let reqs: Vec<bip_moe::serve::Request> =
+        TrafficGenerator::new(cfg.traffic.clone()).collect();
+    for chunk in reqs.chunks(batch) {
+        router.route_batch(chunk);
+    }
+    let label = format!(
+        "live {} / {} ({} batches)",
+        scenario.name(),
+        policy.name(),
+        router.batches_routed()
+    );
+    Ok((LoadSeries::from_tracker(&router.balance)?, label))
+}
+
+fn cmd_forecast_fit(args: &Args) -> Result<()> {
+    let kind = forecast_kind(args)?;
+    let horizons = parse_horizons(args)?;
+    let holdout = args.f64_or("holdout", 0.25);
+    if !(holdout > 0.0 && holdout < 1.0) {
+        bail!("--holdout must be a fraction in (0, 1)");
+    }
+    let (series, label) = forecast_series(args)?;
+    let fcfg = forecast_cfg(args);
+    let (model, report) =
+        fit_model(kind, &fcfg, &series, &horizons, holdout)?;
+    let mut table = TablePrinter::new(
+        &format!(
+            "forecast fit {} on {label} — {} layers x {} experts, \
+             {} steps, holdout {}",
+            kind.name(),
+            model.n_layers(),
+            model.m,
+            report.steps,
+            report.holdout
+        ),
+        FitReport::headers(),
+    );
+    for row in report.table_rows() {
+        table.row(row);
+    }
+    table.print();
+    if let Some(out) = args.get("out") {
+        model.save(Path::new(out))?;
+        println!("model: {out}");
+    }
+    Ok(())
+}
+
+fn cmd_forecast_eval(args: &Args) -> Result<()> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model PATH required"))?;
+    let trace_path = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("--trace PATH required"))?;
+    let mut model = ForecastModel::load(Path::new(model_path))?;
+    let trace = Trace::load(Path::new(trace_path))?;
+    let series = LoadSeries::from_trace(&trace)?;
+    let horizons = parse_horizons(args)?;
+    let report = eval_model(&mut model, &series, &horizons)?;
+    let mut table = TablePrinter::new(
+        &format!(
+            "forecast eval {} on {trace_path} ({} steps)",
+            model.kind.name(),
+            report.steps
+        ),
+        FitReport::headers(),
+    );
+    for row in report.table_rows() {
+        table.row(row);
+    }
+    table.print();
+    if let Some(json_path) = args.get("json") {
+        let doc = bip_moe::util::Json::obj(vec![
+            ("version", bip_moe::util::Json::Str(bip_moe::VERSION.into())),
+            ("model", bip_moe::util::Json::Str(model_path.into())),
+            ("trace", bip_moe::util::Json::Str(trace_path.into())),
+            ("report", report.to_json()),
+        ]);
+        std::fs::write(json_path, format!("{doc}\n"))?;
+        println!("report: {json_path}");
+    }
+    Ok(())
+}
+
+fn cmd_forecast_serve(args: &Args) -> Result<()> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model PATH required"))?;
+    let model = ForecastModel::load(Path::new(model_path))?;
+    let scenario_arg = args.str_or("scenario", "bursty");
+    let scenario = Scenario::parse(&scenario_arg)
+        .ok_or_else(|| scenario_err(&scenario_arg))?;
+    if scenario == Scenario::Replayed {
+        bail!("forecast serve needs a generative scenario");
+    }
+    let policy_arg = args.str_or("policy", "predictive");
+    let policy = Policy::parse(&policy_arg)
+        .ok_or_else(|| policy_err(&policy_arg))?;
+    let ServeKnobs { mut traffic, sched, router, replicas: rknobs } =
+        serve_knobs(args, 8192)?;
+    traffic.scenario = scenario;
+    if model.m != traffic.m {
+        bail!(
+            "model has {} experts but the serve config has {}",
+            model.m,
+            traffic.m
+        );
+    }
+    let gain = args.f64_or("seed-gain", DEFAULT_SEED_GAIN);
+    let seeds = seed_states(&model, traffic.n_layers, traffic.k, gain);
+    // the cold baseline runs the identical pipeline unseeded (for the
+    // predictive policy that IS cold-start Bip)
+    let cold_policy = if policy == Policy::Predictive {
+        Policy::BipBatch
+    } else {
+        policy
+    };
+    let warm_cfg = ServeConfig::new(
+        traffic.clone(),
+        sched.clone(),
+        router.clone(),
+        policy,
+    );
+    let cold_cfg =
+        ServeConfig::new(traffic.clone(), sched, router, cold_policy);
+
+    if args.flag("autoscale") {
+        return forecast_autoscale(
+            args, &warm_cfg, &cold_cfg, &rknobs, &seeds,
+        );
+    }
+
+    let run_one = |cfg: &ServeConfig,
+                   seeds: Option<&[BalanceState]>|
+     -> (f64, ServeReport) {
+        if rknobs.replicas > 1 || rknobs.threads > 1 {
+            let out = match seeds {
+                Some(s) => serve::run_replicated_seeded(cfg, &rknobs, s),
+                None => serve::run_replicated(cfg, &rknobs),
+            };
+            (out.first_batch_vio, out.report)
+        } else {
+            let out = match seeds {
+                Some(s) => serve::run_scenario_seeded(cfg, s),
+                None => serve::run_scenario(cfg),
+            };
+            (out.first_batch_vio, out.report)
+        }
+    };
+    let (cold_first, cold) = run_one(&cold_cfg, None);
+    let (warm_first, warm) = run_one(&warm_cfg, Some(&seeds));
+
+    let mut table = TablePrinter::new(
+        &format!(
+            "forecast serve {} — model {} ({}), seed gain {gain}, R={}",
+            scenario.name(),
+            model_path,
+            model.kind.name(),
+            rknobs.replicas,
+        ),
+        &[
+            "Run", "Policy", "FirstVio", "AvgMaxVio", "SupMaxVio",
+            "p99ms", "Done", "Overflow",
+        ],
+    );
+    let mut json_rows = Vec::new();
+    for (run, first, rep) in
+        [("cold", cold_first, &cold), ("warm", warm_first, &warm)]
+    {
+        table.row(vec![
+            run.into(),
+            rep.policy.clone(),
+            format!("{first:.4}"),
+            format!("{:.4}", rep.avg_max_vio),
+            format!("{:.4}", rep.sup_max_vio),
+            format!("{:.2}", rep.p99_ms),
+            format!("{}", rep.completed),
+            format!("{}", rep.overflow),
+        ]);
+        let mut row = rep.to_json();
+        if let bip_moe::util::Json::Obj(map) = &mut row {
+            map.insert(
+                "run".into(),
+                bip_moe::util::Json::Str(run.into()),
+            );
+            map.insert(
+                "first_batch_vio".into(),
+                bip_moe::util::Json::Num(first),
+            );
+        }
+        json_rows.push(row);
+    }
+    table.print();
+    println!(
+        "first-batch MaxVio: cold {cold_first:.4} -> warm \
+         {warm_first:.4} ({:+.1}%)",
+        if cold_first > 0.0 {
+            (warm_first / cold_first - 1.0) * 100.0
+        } else {
+            0.0
+        }
+    );
+    if let Some(path) = args.get("json") {
+        let doc = bip_moe::util::Json::obj(vec![
+            ("version", bip_moe::util::Json::Str(bip_moe::VERSION.into())),
+            ("results", bip_moe::util::Json::Arr(json_rows)),
+        ]);
+        std::fs::write(path, format!("{doc}\n"))?;
+        println!("report: {path}");
+    }
+    Ok(())
+}
+
+/// Predictive vs reactive autoscaling on the same warm-started
+/// pipeline, sized against a calibrated (or given) per-replica rate.
+fn forecast_autoscale(
+    args: &Args,
+    warm_cfg: &ServeConfig,
+    cold_cfg: &ServeConfig,
+    rknobs: &ReplicaConfig,
+    seeds: &[BalanceState],
+) -> Result<()> {
+    let max_replicas =
+        args.usize_or("max-replicas", rknobs.replicas.max(4));
+    let rcfg = ReplicaConfig {
+        replicas: max_replicas,
+        threads: rknobs.threads,
+        sync_every: rknobs.sync_every,
+    };
+    // per-replica serviceable rate: given, or calibrated from a cold
+    // single-server run's measured throughput
+    let replica_rps = match args.get("replica-rps") {
+        Some(_) => args.f64_or("replica-rps", 0.0),
+        None => serve::run_scenario(cold_cfg)
+            .report
+            .throughput_rps
+            .max(1.0),
+    };
+    if replica_rps <= 0.0 {
+        bail!("--replica-rps must be > 0");
+    }
+    let window_us = (args.f64_or("scale-window-ms", 2.0) * 1e3) as u64;
+    if window_us == 0 {
+        bail!("--scale-window-ms must be > 0");
+    }
+    let headroom = args.f64_or("headroom", 0.8);
+    let mut table = TablePrinter::new(
+        &format!(
+            "autoscaled {} / {} — <= {max_replicas} replicas @ \
+             {replica_rps:.0} rps each, window {window_us} us",
+            warm_cfg.traffic.scenario.name(),
+            warm_cfg.policy.name(),
+        ),
+        &[
+            "Mode", "FirstVio", "AvgMaxVio", "p99ms", "Done", "SloVio",
+            "Scales", "OracleMatch",
+        ],
+    );
+    let mut json_rows = Vec::new();
+    for mode in [ScalePolicy::Predictive, ScalePolicy::Reactive] {
+        let mut scaler = AutoScaler::new(
+            mode, window_us, replica_rps, headroom, 1, max_replicas,
+        );
+        let out =
+            serve::run_autoscaled(warm_cfg, &rcfg, Some(seeds), &mut scaler);
+        table.row(vec![
+            mode.name().into(),
+            format!("{:.4}", out.first_batch_vio),
+            format!("{:.4}", out.report.avg_max_vio),
+            format!("{:.2}", out.report.p99_ms),
+            format!("{}", out.report.completed),
+            format!("{}", out.report.slo_violations),
+            format!("{}", out.scale_events.len()),
+            format!("{:.3}", scaler.oracle_match_rate()),
+        ]);
+        let mut row = out.report.to_json();
+        if let bip_moe::util::Json::Obj(map) = &mut row {
+            map.insert(
+                "mode".into(),
+                bip_moe::util::Json::Str(mode.name().into()),
+            );
+            map.insert(
+                "first_batch_vio".into(),
+                bip_moe::util::Json::Num(out.first_batch_vio),
+            );
+            map.insert(
+                "scale_events".into(),
+                bip_moe::util::Json::Num(out.scale_events.len() as f64),
+            );
+            map.insert(
+                "oracle_match".into(),
+                bip_moe::util::Json::Num(scaler.oracle_match_rate()),
+            );
+        }
+        json_rows.push(row);
+    }
+    table.print();
+    if let Some(path) = args.get("json") {
+        let doc = bip_moe::util::Json::obj(vec![
+            ("version", bip_moe::util::Json::Str(bip_moe::VERSION.into())),
+            ("results", bip_moe::util::Json::Arr(json_rows)),
+        ]);
+        std::fs::write(path, format!("{doc}\n"))?;
+        println!("report: {path}");
     }
     Ok(())
 }

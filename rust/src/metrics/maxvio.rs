@@ -1,6 +1,48 @@
 //! MaxVio / AvgMaxVio / SupMaxVio (paper §4.1, after Wang et al. 2024).
 
+use std::collections::VecDeque;
+
 use crate::util::stats::Summary;
+
+/// Bounded per-batch load-fraction history, off by default (the MaxVio
+/// scalars are O(1) per batch; the raw fraction vectors are only worth
+/// retaining when a forecaster will consume them —
+/// `forecast::fit::LoadSeries::from_tracker`).
+#[derive(Clone, Debug)]
+pub struct LoadHistory {
+    pub m: usize,
+    /// ring bound, in batches, per layer
+    pub cap: usize,
+    /// `per_layer[l]` holds the last `cap` batches' per-expert load
+    /// fractions for layer l, oldest first
+    pub per_layer: Vec<VecDeque<Vec<f32>>>,
+}
+
+impl LoadHistory {
+    fn new(n_layers: usize, m: usize, cap: usize) -> LoadHistory {
+        LoadHistory {
+            m,
+            cap,
+            per_layer: vec![VecDeque::new(); n_layers],
+        }
+    }
+
+    /// Record one batch's (n_layers, m) loads as per-layer fractions;
+    /// a layer that routed nothing is skipped (no fraction exists).
+    fn push(&mut self, loads: &[f32], m: usize) {
+        for (l, ring) in self.per_layer.iter_mut().enumerate() {
+            let row = &loads[l * m..(l + 1) * m];
+            let sum: f32 = row.iter().sum();
+            if sum <= 0.0 {
+                continue;
+            }
+            ring.push_back(row.iter().map(|&x| x / sum).collect());
+            if ring.len() > self.cap {
+                ring.pop_front();
+            }
+        }
+    }
+}
 
 /// MaxVio for one batch on one gate: max_j load_j / (n k / m) - 1.
 /// An empty batch (n_tokens = 0) has no violation by definition — the
@@ -35,6 +77,8 @@ pub struct BalanceTracker {
     /// full series for figure dumps: series[layer][batch]
     pub series: Vec<Vec<f32>>,
     pub global_series: Vec<f32>,
+    /// bounded raw-fraction history (None unless enabled)
+    pub load_history: Option<LoadHistory>,
 }
 
 impl BalanceTracker {
@@ -47,7 +91,15 @@ impl BalanceTracker {
             per_layer: vec![Summary::new(); n_layers],
             series: vec![Vec::new(); n_layers],
             global_series: Vec::new(),
+            load_history: None,
         }
+    }
+
+    /// Retain the last `cap` batches' per-layer load fractions for
+    /// forecaster fitting. Idempotent; history starts empty.
+    pub fn enable_load_history(&mut self, m: usize, cap: usize) {
+        assert!(m >= 1 && cap >= 1);
+        self.load_history = Some(LoadHistory::new(self.n_layers, m, cap));
     }
 
     /// `loads` is row-major (n_layers, m).
@@ -83,6 +135,9 @@ impl BalanceTracker {
         let batch_vio = sum / self.n_layers as f64;
         self.global.push(batch_vio);
         self.global_series.push(batch_vio as f32);
+        if let Some(h) = &mut self.load_history {
+            h.push(loads, m);
+        }
     }
 
     pub fn avg_max_vio(&self) -> f64 {
@@ -158,6 +213,34 @@ mod tests {
         assert!(t.avg_max_vio().is_finite());
         assert!(t.sup_max_vio().is_finite());
         assert!((t.avg_max_vio() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_history_rings_are_bounded_and_skip_empty_layers() {
+        let mut t = BalanceTracker::new(2, 0, 2);
+        t.enable_load_history(4, 3);
+        for i in 0..5u32 {
+            let x = i as f32 + 1.0;
+            // layer 0 routed; layer 1 empty on even batches
+            let l1 = if i % 2 == 0 { 0.0 } else { x };
+            t.push_batch_sized(
+                &[x, x, 0.0, 0.0, l1, 0.0, l1, 0.0],
+                4,
+                4,
+            );
+        }
+        let h = t.load_history.as_ref().unwrap();
+        assert_eq!(h.per_layer[0].len(), 3, "bounded at cap");
+        assert_eq!(h.per_layer[1].len(), 2, "empty layers skipped");
+        for row in h.per_layer[0].iter().chain(h.per_layer[1].iter()) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        }
+        // the ring keeps the newest batches: fractions of batch 2..4
+        // for layer 0 are all [0.5, 0.5, 0, 0]
+        assert_eq!(h.per_layer[0][2], vec![0.5, 0.5, 0.0, 0.0]);
+        // disabled by default
+        let plain = BalanceTracker::new(2, 0, 2);
+        assert!(plain.load_history.is_none());
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod maxvio;
 pub mod recorder;
 pub mod table;
 
-pub use maxvio::{max_violation, BalanceTracker};
+pub use maxvio::{max_violation, BalanceTracker, LoadHistory};
 pub use recorder::RunRecorder;
 pub use table::TablePrinter;
 

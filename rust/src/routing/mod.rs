@@ -87,6 +87,12 @@ pub trait RoutingStrategy: Send {
     /// sync with identical balance state. States of a foreign variant
     /// or shape are ignored; a no-op by default.
     fn merge_state(&mut self, _states: &[BalanceState]) {}
+    /// Warm-start from a snapshot *before* routing anything: adopt the
+    /// state wholesale (unlike [`RoutingStrategy::merge_state`], which
+    /// blends). The seam `forecast::control::seed_states` and a prior
+    /// run's `export_state` both feed. States of a foreign variant or
+    /// shape are ignored; a no-op by default (stateless policies).
+    fn seed_state(&mut self, _state: &BalanceState) {}
 }
 
 /// Plain top-k on raw scores.
@@ -213,6 +219,21 @@ impl RoutingStrategy for LossFree {
             self.bias = mean_vec(&biases);
         }
     }
+
+    fn seed_state(&mut self, state: &BalanceState) {
+        match state {
+            BalanceState::Bias(b) if b.len() == self.bias.len() => {
+                self.bias = b.clone();
+            }
+            // a forecast dual seed maps onto the bias with flipped
+            // sign: Loss-Free *adds* its bias where Alg. 1 *subtracts*
+            // its duals
+            BalanceState::Dual(q) if q.len() == self.bias.len() => {
+                self.bias = q.iter().map(|&x| -x).collect();
+            }
+            _ => {}
+        }
+    }
 }
 
 /// BIP-Based Balancing (Algorithm 1): warm-started dual state + T
@@ -298,6 +319,88 @@ impl RoutingStrategy for Bip {
             state.q = merged;
         }
     }
+
+    fn seed_state(&mut self, state: &BalanceState) {
+        if let BalanceState::Dual(q) = state {
+            match &mut self.state {
+                Some(s) if s.q.len() == q.len() => s.q = q.clone(),
+                Some(_) => {}
+                None => {
+                    let mut s = DualState::new(q.len());
+                    s.q = q.clone();
+                    self.state = Some(s);
+                }
+            }
+        }
+    }
+}
+
+/// Algorithm 1 warm-started from a forecast-derived dual seed
+/// (`forecast::control::dual_seed`): a thin wrapper over [`Bip`] that
+/// installs its seed lazily before the first batch, so the *first*
+/// micro-batch already routes against the predicted hot set instead of
+/// an all-zero dual. Everything else — the per-batch dual update, the
+/// replica merge, the state footprint — IS [`Bip`]; with an empty (or
+/// misshapen) seed the wrapper is bit-identical to cold start.
+pub struct PredictiveBip {
+    inner: Bip,
+    /// pending constructor seed, consumed at the first route
+    seed: Vec<f32>,
+}
+
+impl PredictiveBip {
+    pub fn new(t_iters: usize, seed: Vec<f32>) -> Self {
+        PredictiveBip { inner: Bip::new(t_iters), seed }
+    }
+
+    pub fn with_pool(
+        t_iters: usize,
+        seed: Vec<f32>,
+        pool: Arc<Pool>,
+    ) -> Self {
+        PredictiveBip { inner: Bip::with_pool(t_iters, pool), seed }
+    }
+
+    pub fn q(&self) -> Option<&[f32]> {
+        self.inner.q()
+    }
+}
+
+impl RoutingStrategy for PredictiveBip {
+    fn name(&self) -> String {
+        format!("bip-predictive(T={})", self.inner.t_iters)
+    }
+
+    fn route_batch(&mut self, inst: &Instance) -> Routing {
+        // install the pending seed only if it matches this gate's width
+        // (a misshapen forecast degrades to cold start, never a panic)
+        // and nothing has routed or seeded the duals yet
+        if !self.seed.is_empty() {
+            let seed = std::mem::take(&mut self.seed);
+            if seed.len() == inst.m && self.inner.q().is_none() {
+                self.inner.seed_state(&BalanceState::Dual(seed));
+            }
+        }
+        self.inner.route_batch(inst)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.inner.state_bytes()
+    }
+
+    fn export_state(&self) -> BalanceState {
+        self.inner.export_state()
+    }
+
+    fn merge_state(&mut self, states: &[BalanceState]) {
+        self.inner.merge_state(states);
+    }
+
+    fn seed_state(&mut self, state: &BalanceState) {
+        // an explicit seed supersedes whatever the constructor carried
+        self.seed.clear();
+        self.inner.seed_state(state);
+    }
 }
 
 /// Algorithm 3 (`bip::online::OnlineGate`) as a batch strategy: tokens
@@ -375,6 +478,26 @@ impl RoutingStrategy for OnlineBip {
         }
         self.gate.q = mean_vec(&qs);
         self.gate.rebuild_heaps(&unions);
+    }
+
+    /// Adopt a snapshot wholesale: duals, plus the per-expert top-heaps
+    /// rebuilt through the bounded push (seeding cannot over-grow the
+    /// sketch). A bare [`BalanceState::Dual`] seed (forecast-derived)
+    /// warm-starts the duals alone.
+    fn seed_state(&mut self, state: &BalanceState) {
+        match state {
+            BalanceState::Online { q, heaps }
+                if q.len() == self.gate.m
+                    && heaps.len() == self.gate.m =>
+            {
+                self.gate.q = q.clone();
+                self.gate.rebuild_heaps(heaps);
+            }
+            BalanceState::Dual(q) if q.len() == self.gate.m => {
+                self.gate.q = q.clone();
+            }
+            _ => {}
+        }
     }
 }
 
@@ -464,6 +587,25 @@ impl RoutingStrategy for ApproxBip {
             .collect();
         self.gate.q = mean_vec(&qs);
         self.gate.set_hist_counts(&merged);
+    }
+
+    /// Adopt a snapshot wholesale: duals + histogram counts. A bare
+    /// [`BalanceState::Dual`] seed warm-starts the duals alone.
+    fn seed_state(&mut self, state: &BalanceState) {
+        match state {
+            BalanceState::Approx { q, hists }
+                if q.len() == self.gate.m
+                    && hists.len() == self.gate.m
+                    && hists.iter().all(|h| h.len() == self.buckets) =>
+            {
+                self.gate.q = q.clone();
+                self.gate.set_hist_counts(hists);
+            }
+            BalanceState::Dual(q) if q.len() == self.gate.m => {
+                self.gate.q = q.clone();
+            }
+            _ => {}
+        }
     }
 }
 
@@ -729,6 +871,192 @@ mod tests {
         assert!(matches!(g.export_state(), BalanceState::None));
         g.merge_state(&[BalanceState::Bias(vec![1.0; 4])]);
         assert_eq!(g.state_bytes(), 0);
+    }
+
+    #[test]
+    fn primary_covers_every_state_variant() {
+        assert!(BalanceState::None.primary().is_none());
+        assert_eq!(
+            BalanceState::Bias(vec![1.0, 2.0]).primary(),
+            Some(&[1.0, 2.0][..])
+        );
+        assert_eq!(
+            BalanceState::Dual(vec![3.0]).primary(),
+            Some(&[3.0][..])
+        );
+        assert_eq!(
+            BalanceState::Online { q: vec![4.0], heaps: vec![vec![]] }
+                .primary(),
+            Some(&[4.0][..])
+        );
+        assert_eq!(
+            BalanceState::Approx { q: vec![5.0, 6.0], hists: vec![] }
+                .primary(),
+            Some(&[5.0, 6.0][..])
+        );
+    }
+
+    #[test]
+    fn online_merge_ignores_misshapen_sketches() {
+        // a replica slice can carry foreign shapes (config drift,
+        // version skew): the merge must use only the well-shaped states
+        // and never panic or corrupt the gate
+        let insts = batches(31, 4);
+        let (m, k, cap) = (16usize, 4usize, 512usize);
+        let mut a = OnlineBip::new(m, k, cap, 3);
+        let mut b = OnlineBip::new(m, k, cap, 3);
+        for inst in &insts[..2] {
+            a.route_batch(inst);
+        }
+        for inst in &insts[2..] {
+            b.route_batch(inst);
+        }
+        let good = [a.export_state(), b.export_state()];
+        let mut want_a = OnlineBip::new(m, k, cap, 3);
+        let mut want_b = OnlineBip::new(m, k, cap, 3);
+        for inst in &insts[..2] {
+            want_a.route_batch(inst);
+        }
+        for inst in &insts[2..] {
+            want_b.route_batch(inst);
+        }
+        want_a.merge_state(&good);
+        want_b.merge_state(&good);
+
+        // misshapen: wrong dual width, wrong heap count, foreign variant
+        let noisy = [
+            good[0].clone(),
+            BalanceState::Online {
+                q: vec![9.0; m / 2],
+                heaps: vec![vec![9.0]; m / 2],
+            },
+            BalanceState::Online {
+                q: vec![9.0; m],
+                heaps: vec![vec![9.0]; m - 1],
+            },
+            BalanceState::Bias(vec![9.0; m]),
+            good[1].clone(),
+        ];
+        a.merge_state(&noisy);
+        b.merge_state(&noisy);
+        assert_eq!(a.gate.q, want_a.gate.q);
+        assert_eq!(b.gate.q, want_b.gate.q);
+        let (mut ha, mut hw) =
+            (a.gate.heap_values(), want_a.gate.heap_values());
+        for (x, y) in ha.iter_mut().zip(hw.iter_mut()) {
+            x.sort_by(|p, q| p.partial_cmp(q).unwrap());
+            y.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        }
+        assert_eq!(ha, hw, "noise must not leak into the heap union");
+    }
+
+    #[test]
+    fn approx_merge_ignores_misshapen_sketches() {
+        let insts = batches(32, 4);
+        let (m, k, cap, b_buckets) = (16usize, 4usize, 512usize, 64usize);
+        let mut a = ApproxBip::new(m, k, cap, 3, b_buckets);
+        let mut b = ApproxBip::new(m, k, cap, 3, b_buckets);
+        for inst in &insts[..2] {
+            a.route_batch(inst);
+        }
+        for inst in &insts[2..] {
+            b.route_batch(inst);
+        }
+        let good = [a.export_state(), b.export_state()];
+        let mut want = ApproxBip::new(m, k, cap, 3, b_buckets);
+        for inst in &insts[..2] {
+            want.route_batch(inst);
+        }
+        want.merge_state(&good);
+
+        let noisy = [
+            good[0].clone(),
+            // wrong bucket count in one expert's histogram
+            BalanceState::Approx {
+                q: vec![1.0; m],
+                hists: {
+                    let mut h = vec![vec![1u32; b_buckets]; m];
+                    h[3] = vec![1u32; b_buckets / 2];
+                    h
+                },
+            },
+            // wrong expert count
+            BalanceState::Approx {
+                q: vec![1.0; m + 1],
+                hists: vec![vec![1u32; b_buckets]; m + 1],
+            },
+            BalanceState::None,
+            good[1].clone(),
+        ];
+        a.merge_state(&noisy);
+        assert_eq!(a.gate.q, want.gate.q);
+        assert_eq!(a.gate.hist_counts(), want.gate.hist_counts());
+    }
+
+    #[test]
+    fn predictive_bip_with_empty_seed_is_bit_identical_to_bip() {
+        let insts = batches(33, 5);
+        let mut bip = Bip::new(3);
+        let mut pred = PredictiveBip::new(3, Vec::new());
+        for inst in &insts {
+            assert_eq!(
+                bip.route_batch(inst).assignment,
+                pred.route_batch(inst).assignment
+            );
+        }
+        assert_eq!(bip.q().unwrap(), pred.q().unwrap());
+        assert_eq!(bip.state_bytes(), pred.state_bytes());
+    }
+
+    #[test]
+    fn predictive_bip_seed_shapes_the_first_route_only_as_a_warm_start() {
+        let insts = batches(34, 3);
+        let m = 16;
+        // a seed penalizing the first quarter of experts
+        let mut seed = vec![0.0f32; m];
+        for q in seed.iter_mut().take(m / 4) {
+            *q = 0.2;
+        }
+        let mut pred = PredictiveBip::new(0, seed.clone());
+        let mut warm_bip = Bip::new(0);
+        warm_bip.seed_state(&BalanceState::Dual(seed.clone()));
+        for inst in &insts {
+            // T=0: both route directly with the seeded duals
+            assert_eq!(
+                pred.route_batch(inst).assignment,
+                warm_bip.route_batch(inst).assignment
+            );
+        }
+        assert_eq!(pred.q().unwrap(), seed.as_slice());
+        assert!(pred.name().contains("predictive"));
+        // a misshapen seed degrades to cold start instead of panicking
+        let mut bad = PredictiveBip::new(2, vec![1.0; 3]);
+        let mut cold = Bip::new(2);
+        assert_eq!(
+            bad.route_batch(&insts[0]).assignment,
+            cold.route_batch(&insts[0]).assignment
+        );
+    }
+
+    #[test]
+    fn seed_state_ignores_foreign_variants() {
+        let insts = batches(35, 2);
+        let mut lf = LossFree::new(16, 1e-2);
+        lf.route_batch(&insts[0]);
+        let bias = lf.bias.clone();
+        lf.seed_state(&BalanceState::Online {
+            q: vec![1.0; 16],
+            heaps: vec![vec![]; 16],
+        });
+        lf.seed_state(&BalanceState::Bias(vec![1.0; 5]));
+        assert_eq!(lf.bias, bias, "foreign/misshapen seeds are ignored");
+        // the forecast dual seed lands with flipped sign
+        lf.seed_state(&BalanceState::Dual(vec![0.5; 16]));
+        assert!(lf.bias.iter().all(|&b| b == -0.5));
+
+        let mut g = Greedy;
+        g.seed_state(&BalanceState::Dual(vec![1.0; 16]));
+        assert!(matches!(g.export_state(), BalanceState::None));
     }
 
     #[test]

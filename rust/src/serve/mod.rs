@@ -25,9 +25,15 @@
 //! Both event loops also exist as `*_with` variants taking an explicit
 //! request source and an optional `trace::TraceRecorder` — the seam the
 //! `trace/` subsystem records, replays, and counterfactually re-routes
-//! through (`Scenario::Replayed`).
+//! through (`Scenario::Replayed`) — and as forecast-driven variants:
+//! `run_scenario_seeded` / `run_replicated_seeded` warm-start every
+//! layer's balance state from forecast dual seeds,
+//! `run_scenario_predictive` sheds predicted overload ahead of the
+//! queue, and `run_autoscaled` sizes the active replica set from the
+//! predicted aggregate rate (`forecast::control`).
 //!
-//! Driven by the `bip-moe serve` subcommand and `bench_serving`.
+//! Driven by the `bip-moe serve` + `bip-moe forecast` subcommands,
+//! `bench_serving`, and `bench_forecast`.
 
 pub mod replica;
 pub mod router;
@@ -37,13 +43,15 @@ pub mod slo;
 pub mod traffic;
 
 pub use replica::{
-    run_replicated, run_replicated_with, ReplicaConfig, ReplicaOutcome,
-    ReplicaSet, SyncEvent,
+    run_autoscaled, run_replicated, run_replicated_seeded,
+    run_replicated_with, ReplicaConfig, ReplicaOutcome, ReplicaSet,
+    SyncEvent,
 };
 pub use router::{BatchOutcome, Policy, RouterConfig, ServingRouter};
 pub use scheduler::{Admission, MicroBatcher, SchedulerConfig};
 pub use sim::{
-    run_scenario, run_scenario_with, Completion, ServeConfig, ServeOutcome,
+    run_scenario, run_scenario_predictive, run_scenario_seeded,
+    run_scenario_with, Completion, ServeConfig, ServeOutcome,
 };
 pub use slo::{ReplicaSummary, ServeReport, SloTracker};
 pub use traffic::{Request, Scenario, TrafficConfig, TrafficGenerator};

@@ -29,6 +29,7 @@
 
 use std::sync::Arc;
 
+use crate::forecast::{AutoScaler, ScaleEvent};
 use crate::routing::BalanceState;
 use crate::trace::TraceRecorder;
 use crate::util::pool::Pool;
@@ -86,6 +87,10 @@ pub struct ReplicaOutcome {
     pub completions: Vec<Completion>,
     /// total micro-batches dispatched across the set
     pub batches: u64,
+    /// MaxVio of the first routed micro-batch (0.0 if nothing routed)
+    pub first_batch_vio: f64,
+    /// replica-count changes, when a `forecast::AutoScaler` drove the run
+    pub scale_events: Vec<ScaleEvent>,
 }
 
 /// R routers + the shared pool + the sync bookkeeping.
@@ -152,6 +157,18 @@ impl ReplicaSet {
         for r in self.routers.iter_mut() {
             if let Some(router) = r.as_mut() {
                 router.capture_assignments = on;
+            }
+        }
+    }
+
+    /// Warm-start every replica's layers from the same per-layer seeds
+    /// (forecast duals or a prior run's exports) — the replicated
+    /// analogue of `ServingRouter::seed_layers`. Seeding every replica
+    /// identically preserves the leave-syncs-identical invariant.
+    pub fn seed_all(&mut self, seeds: &[BalanceState]) {
+        for r in self.routers.iter_mut() {
+            if let Some(router) = r.as_mut() {
+                router.seed_layers(seeds);
             }
         }
     }
@@ -305,10 +322,12 @@ pub fn run_replicated(
     cfg: &ServeConfig,
     rcfg: &ReplicaConfig,
 ) -> ReplicaOutcome {
-    run_replicated_with(
+    run_replicated_hooked(
         cfg,
         rcfg,
         TrafficGenerator::new(cfg.traffic.clone()),
+        None,
+        None,
         None,
     )
 }
@@ -322,11 +341,66 @@ pub fn run_replicated_with(
     cfg: &ServeConfig,
     rcfg: &ReplicaConfig,
     source: impl Iterator<Item = Request>,
+    recorder: Option<&mut TraceRecorder>,
+) -> ReplicaOutcome {
+    run_replicated_hooked(cfg, rcfg, source, recorder, None, None)
+}
+
+/// [`run_replicated`] with every replica warm-started from the same
+/// per-layer forecast seeds before the first dispatch.
+pub fn run_replicated_seeded(
+    cfg: &ServeConfig,
+    rcfg: &ReplicaConfig,
+    seeds: &[BalanceState],
+) -> ReplicaOutcome {
+    run_replicated_hooked(
+        cfg,
+        rcfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        None,
+        Some(seeds),
+        None,
+    )
+}
+
+/// [`run_replicated`] under a `forecast::AutoScaler`: `rcfg.replicas`
+/// replicas exist, but each dispatch only considers the scaler's
+/// currently *active* prefix, so predicted load ramps grow the set
+/// ahead of demand and calm windows shrink it. Scale-downs drain
+/// gracefully — a deactivated replica finishes its batch in flight and
+/// simply stops receiving work (its balance state stays mergeable, so
+/// a later scale-up rejoins warm). Optionally warm-started.
+pub fn run_autoscaled(
+    cfg: &ServeConfig,
+    rcfg: &ReplicaConfig,
+    seeds: Option<&[BalanceState]>,
+    scaler: &mut AutoScaler,
+) -> ReplicaOutcome {
+    run_replicated_hooked(
+        cfg,
+        rcfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        None,
+        seeds,
+        Some(scaler),
+    )
+}
+
+/// The one event loop behind every replicated entry point.
+fn run_replicated_hooked(
+    cfg: &ServeConfig,
+    rcfg: &ReplicaConfig,
+    source: impl Iterator<Item = Request>,
     mut recorder: Option<&mut TraceRecorder>,
+    seeds: Option<&[BalanceState]>,
+    mut scaler: Option<&mut AutoScaler>,
 ) -> ReplicaOutcome {
     let r = rcfg.replicas.max(1);
     let mut set = ReplicaSet::new(cfg, rcfg);
     set.set_capture(recorder.is_some());
+    if let Some(states) = seeds {
+        set.seed_all(states);
+    }
     let serve_cost = Arc::new(serve_cost_for(&cfg.router));
     let m = cfg.router.m;
 
@@ -339,6 +413,7 @@ pub fn run_replicated_with(
     let mut server_free = vec![0u64; r];
     let mut work_us = vec![0u64; r];
     let mut served_reqs = vec![0u64; r];
+    let mut first_batch_vio: Option<f64> = None;
     let mut next_arrival = gen.next();
 
     loop {
@@ -351,19 +426,25 @@ pub fn run_replicated_with(
             if let Some(rec) = recorder.as_deref_mut() {
                 rec.record_arrival(&req);
             }
+            if let Some(sc) = scaler.as_deref_mut() {
+                sc.on_arrival(req.arrival_us);
+            }
             batcher.offer(req);
             next_arrival = gen.next();
         }
 
         // dispatch: each ready batch to the free replica with the least
-        // cumulative dispatched work (tie -> lowest index)
+        // cumulative dispatched work (tie -> lowest index), considering
+        // only the autoscaler's active prefix when one drives the run
+        let active =
+            scaler.as_deref().map_or(r, |sc| sc.active().min(r));
         let mut dispatch: Vec<(usize, Vec<Request>)> = Vec::new();
         loop {
             if !batcher.ready(now) {
                 break;
             }
             let mut target: Option<usize> = None;
-            for i in 0..r {
+            for i in 0..active {
                 if now >= server_free[i]
                     && !dispatch.iter().any(|d| d.0 == i)
                 {
@@ -390,6 +471,7 @@ pub fn run_replicated_with(
             for (i, service_us, batch, mut outcome) in
                 set.route_parallel(&serve_cost, m, dispatch)
             {
+                first_batch_vio.get_or_insert(outcome.batch_vio);
                 server_free[i] = now + service_us;
                 work_us[i] += service_us;
                 served_reqs[i] += batch.len() as u64;
@@ -437,7 +519,9 @@ pub fn run_replicated_with(
                 t_next.map_or(req.arrival_us, |t| t.min(req.arrival_us)),
             );
         }
-        if server_free.iter().any(|&t| now >= t) {
+        // only a free *active* replica can act on a flush — waking for
+        // an idle deactivated one would busy-step the clock instead
+        if server_free[..active].iter().any(|&t| now >= t) {
             if let Some(flush) = batcher.flush_at() {
                 t_next = Some(t_next.map_or(flush, |t| t.min(flush)));
             }
@@ -450,6 +534,9 @@ pub fn run_replicated_with(
         }
     }
     set.finish();
+    if let Some(sc) = scaler.as_deref_mut() {
+        sc.finish();
+    }
 
     debug_assert!(batcher.conserves_work());
     let stats = batcher.stats;
@@ -542,6 +629,11 @@ pub fn run_replicated_with(
         syncs: set.syncs.clone(),
         completions,
         batches: set.batches(),
+        first_batch_vio: first_batch_vio.unwrap_or(0.0),
+        scale_events: scaler
+            .as_deref()
+            .map(|sc| sc.events.clone())
+            .unwrap_or_default(),
     }
 }
 
@@ -646,5 +738,63 @@ mod tests {
         let out = run_replicated(&cfg, &rcfg);
         assert!(out.syncs.is_empty());
         assert!(out.report.conserves_work());
+    }
+
+    #[test]
+    fn noop_seeds_reproduce_the_replicated_run_exactly() {
+        let cfg = config(Scenario::Bursty, Policy::Online);
+        let rcfg =
+            ReplicaConfig { replicas: 3, threads: 2, sync_every: 8 };
+        let plain = run_replicated(&cfg, &rcfg);
+        let seeds = vec![BalanceState::None; cfg.router.n_layers];
+        let seeded = run_replicated_seeded(&cfg, &rcfg, &seeds);
+        assert_eq!(plain.report.completed, seeded.report.completed);
+        assert_eq!(plain.report.avg_max_vio, seeded.report.avg_max_vio);
+        assert_eq!(plain.report.p99_ms, seeded.report.p99_ms);
+        assert_eq!(plain.first_batch_vio, seeded.first_batch_vio);
+        assert!(plain.scale_events.is_empty());
+    }
+
+    #[test]
+    fn autoscaled_run_conserves_work_and_stays_in_bounds() {
+        use crate::forecast::{AutoScaler, ScalePolicy};
+        let cfg = config(Scenario::Bursty, Policy::Online);
+        let rcfg =
+            ReplicaConfig { replicas: 4, threads: 2, sync_every: 8 };
+        let run = |policy| {
+            let mut sc = AutoScaler::new(
+                policy, 2_000, 45_000.0, 0.9, 1, 4,
+            );
+            let out = run_autoscaled(&cfg, &rcfg, None, &mut sc);
+            (out, sc)
+        };
+        for policy in [ScalePolicy::Predictive, ScalePolicy::Reactive] {
+            let (out, sc) = run(policy);
+            assert!(
+                out.report.conserves_work(),
+                "{policy:?}: {:?}",
+                out.report
+            );
+            assert_eq!(out.report.offered, 2_000, "{policy:?}");
+            for e in &out.scale_events {
+                assert!(e.to >= 1 && e.to <= 4, "{policy:?} {e:?}");
+                assert_ne!(e.from, e.to);
+            }
+            assert_eq!(out.scale_events.len(), sc.events.len());
+            let rate = sc.oracle_match_rate();
+            assert!((0.0..=1.0).contains(&rate), "{policy:?} {rate}");
+            // bursty at 120k rps against 45k-rps replicas must need
+            // more than the 1-replica floor at least once
+            assert!(
+                sc.events.iter().any(|e| e.to > 1)
+                    || sc.windows.iter().all(|w| w.active == 1),
+                "{policy:?}"
+            );
+            // deterministic: a fresh scaler reproduces the run
+            let (again, _) = run(policy);
+            assert_eq!(out.report.completed, again.report.completed);
+            assert_eq!(out.report.p99_ms, again.report.p99_ms);
+            assert_eq!(out.scale_events, again.scale_events);
+        }
     }
 }

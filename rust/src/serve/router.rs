@@ -23,7 +23,7 @@ use crate::parallel::placement::{greedy_placement, Placement};
 use crate::parallel::Mesh;
 use crate::routing::{
     ApproxBip, BalanceState, Bip, Greedy, LossFree, OnlineBip,
-    RoutingStrategy,
+    PredictiveBip, RoutingStrategy,
 };
 use crate::util::pool::Pool;
 use crate::util::stats::Summary;
@@ -43,16 +43,20 @@ pub enum Policy {
     Online,
     /// Algorithm 4: per-token online gate with constant-space histograms.
     Approx,
+    /// Algorithm 1 warm-started from a forecast-derived dual seed
+    /// (`routing::PredictiveBip`); cold (unseeded) it equals `BipBatch`.
+    Predictive,
 }
 
 impl Policy {
-    pub fn all() -> [Policy; 5] {
+    pub fn all() -> [Policy; 6] {
         [
             Policy::Greedy,
             Policy::LossFree,
             Policy::BipBatch,
             Policy::Online,
             Policy::Approx,
+            Policy::Predictive,
         ]
     }
 
@@ -63,23 +67,36 @@ impl Policy {
             Policy::BipBatch => "bip-batch",
             Policy::Online => "bip-online",
             Policy::Approx => "bip-approx",
+            Policy::Predictive => "bip-predictive",
         }
     }
 
     pub fn parse(s: &str) -> Option<Policy> {
-        match s.to_ascii_lowercase().as_str() {
+        match s.trim().to_ascii_lowercase().as_str() {
             "greedy" | "topk" => Some(Policy::Greedy),
             "lossfree" | "loss-free" => Some(Policy::LossFree),
             "bip" | "bip-batch" | "batch" => Some(Policy::BipBatch),
             "online" | "bip-online" => Some(Policy::Online),
             "approx" | "bip-approx" => Some(Policy::Approx),
+            "predictive" | "bip-predictive" => Some(Policy::Predictive),
             _ => None,
         }
     }
 
+    /// Valid CLI spellings, for error messages.
+    pub fn names() -> Vec<&'static str> {
+        Policy::all().iter().map(|p| p.name()).collect()
+    }
+
     /// BIP-balanced policies (vs the baselines).
     pub fn is_bip(self) -> bool {
-        matches!(self, Policy::BipBatch | Policy::Online | Policy::Approx)
+        matches!(
+            self,
+            Policy::BipBatch
+                | Policy::Online
+                | Policy::Approx
+                | Policy::Predictive
+        )
     }
 }
 
@@ -197,6 +214,19 @@ impl ServingRouter {
                         )),
                         None => Box::new(Bip::new(cfg.t_iters)),
                     },
+                    // constructed cold (empty seed, == BipBatch);
+                    // `seed_layers` installs the forecast duals
+                    Policy::Predictive => match &pool {
+                        Some(p) => Box::new(PredictiveBip::with_pool(
+                            cfg.t_iters,
+                            Vec::new(),
+                            p.clone(),
+                        )),
+                        None => Box::new(PredictiveBip::new(
+                            cfg.t_iters,
+                            Vec::new(),
+                        )),
+                    },
                     Policy::Online => Box::new(OnlineBip::new(
                         cfg.m, cfg.k, gate_cap, cfg.t_iters,
                     )),
@@ -267,6 +297,22 @@ impl ServingRouter {
                 .collect();
             layer.merge_state(&states);
         }
+    }
+
+    /// Warm-start every layer from per-layer states — forecast dual
+    /// seeds (`forecast::control::seed_states`) or a prior run's
+    /// `export_states`. Extra states are ignored; missing layers stay
+    /// cold. Call before the first batch is routed.
+    pub fn seed_layers(&mut self, states: &[BalanceState]) {
+        for (layer, state) in self.layers.iter_mut().zip(states) {
+            layer.seed_state(state);
+        }
+    }
+
+    /// Keep a bounded per-batch load-fraction history on the balance
+    /// tracker (`forecast::fit::LoadSeries::from_tracker` consumes it).
+    pub fn track_load_history(&mut self, cap: usize) {
+        self.balance.enable_load_history(self.cfg.m, cap);
     }
 
     /// Route one micro-batch through every layer, enforcing capacity.
@@ -504,6 +550,46 @@ mod tests {
             // off by default: the production path allocates nothing
             let mut plain = router(policy);
             assert!(plain.route_batch(&reqs).assignment.is_none());
+        }
+    }
+
+    #[test]
+    fn predictive_policy_is_cold_bip_until_seeded() {
+        let reqs = requests(Scenario::Steady, 128, 9);
+        let mut bip = router(Policy::BipBatch);
+        let mut pred = router(Policy::Predictive);
+        let a = bip.route_batch(&reqs);
+        let b = pred.route_batch(&reqs);
+        assert_eq!(a.loads, b.loads, "cold predictive == bip-batch");
+
+        // seeding a fresh predictive router with bip's learned duals
+        // adopts them layer for layer
+        let states = bip.export_states();
+        let mut seeded = router(Policy::Predictive);
+        seeded.seed_layers(&states);
+        let adopted = seeded.export_states();
+        for (l, (s, w)) in states.iter().zip(&adopted).enumerate() {
+            assert_eq!(s.primary(), w.primary(), "layer {l}");
+        }
+    }
+
+    #[test]
+    fn load_history_is_bounded_and_normalized() {
+        let mut r = router(Policy::Greedy);
+        r.track_load_history(4);
+        let reqs = requests(Scenario::Steady, 6 * 64, 11);
+        for chunk in reqs.chunks(64) {
+            r.route_batch(chunk);
+        }
+        let h = r.balance.load_history.as_ref().expect("enabled");
+        assert_eq!(h.per_layer.len(), 4);
+        for ring in &h.per_layer {
+            assert_eq!(ring.len(), 4, "ring keeps the last cap batches");
+            for row in ring {
+                assert_eq!(row.len(), 16);
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-4, "sum {sum}");
+            }
         }
     }
 

@@ -88,6 +88,15 @@ impl MicroBatcher {
         Admission::Admitted
     }
 
+    /// Account one offered request shed *upstream* of the queue
+    /// (forecast-gated admission, `forecast::control::PredictiveAdmission`):
+    /// counted offered + rejected, never enqueued, so
+    /// [`MicroBatcher::conserves_work`] keeps holding on gated runs.
+    pub fn shed(&mut self) {
+        self.stats.offered += 1;
+        self.stats.rejected += 1;
+    }
+
     /// Should a batch close now? True once the queue holds a full batch
     /// or the oldest waiter has hit `max_wait_us`.
     pub fn ready(&self, now_us: u64) -> bool {
@@ -177,6 +186,18 @@ mod tests {
         let batch = b.take_batch(31);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
         assert_eq!(b.flush_at(), None);
+        assert!(b.conserves_work());
+    }
+
+    #[test]
+    fn upstream_sheds_count_as_rejections() {
+        let mut b = MicroBatcher::new(SchedulerConfig::default());
+        b.offer(req(0, 0, 0, 1000));
+        b.shed();
+        b.shed();
+        assert_eq!(b.stats.offered, 3);
+        assert_eq!(b.stats.rejected, 2);
+        assert_eq!(b.queue_len(), 1);
         assert!(b.conserves_work());
     }
 

@@ -10,7 +10,9 @@
 //! passes before service are dropped. Everything is deterministic given
 //! the traffic seed.
 
+use crate::forecast::PredictiveAdmission;
 use crate::parallel::{DeviceProfile, Mesh, ModelCost, ServeCost};
+use crate::routing::BalanceState;
 use crate::trace::TraceRecorder;
 
 use super::router::{Policy, RouterConfig, ServingRouter};
@@ -67,11 +69,20 @@ pub struct ServeOutcome {
     pub report: ServeReport,
     /// completion log, in service order (for fairness/ordering checks)
     pub completions: Vec<Completion>,
+    /// MaxVio of the first routed micro-batch (0.0 if nothing routed) —
+    /// the from-the-first-step number the forecast warm start targets
+    pub first_batch_vio: f64,
 }
 
 /// Run one (scenario, policy) serving simulation to completion.
 pub fn run_scenario(cfg: &ServeConfig) -> ServeOutcome {
-    run_scenario_with(cfg, TrafficGenerator::new(cfg.traffic.clone()), None)
+    run_scenario_hooked(
+        cfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        None,
+        None,
+        None,
+    )
 }
 
 /// [`run_scenario`] over an explicit request source — the seam the
@@ -85,15 +96,63 @@ pub fn run_scenario(cfg: &ServeConfig) -> ServeOutcome {
 pub fn run_scenario_with(
     cfg: &ServeConfig,
     source: impl Iterator<Item = Request>,
+    recorder: Option<&mut TraceRecorder>,
+) -> ServeOutcome {
+    run_scenario_hooked(cfg, source, recorder, None, None)
+}
+
+/// [`run_scenario`] with every layer's balance state warm-started
+/// before the first batch (forecast dual seeds via
+/// `forecast::control::seed_states`, or a prior run's exported states).
+pub fn run_scenario_seeded(
+    cfg: &ServeConfig,
+    seeds: &[BalanceState],
+) -> ServeOutcome {
+    run_scenario_hooked(
+        cfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        None,
+        Some(seeds),
+        None,
+    )
+}
+
+/// [`run_scenario`] with forecast-gated admission (and optionally a
+/// warm start): predicted-overload traffic is shed before it queues.
+pub fn run_scenario_predictive(
+    cfg: &ServeConfig,
+    seeds: Option<&[BalanceState]>,
+    admission: &mut PredictiveAdmission,
+) -> ServeOutcome {
+    run_scenario_hooked(
+        cfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        None,
+        seeds,
+        Some(admission),
+    )
+}
+
+/// The one event loop behind every single-server entry point; the
+/// hooks are all zero-cost when absent.
+pub(crate) fn run_scenario_hooked(
+    cfg: &ServeConfig,
+    source: impl Iterator<Item = Request>,
     mut recorder: Option<&mut TraceRecorder>,
+    seeds: Option<&[BalanceState]>,
+    mut admission: Option<&mut PredictiveAdmission>,
 ) -> ServeOutcome {
     let mut gen = source;
     let mut batcher = MicroBatcher::new(cfg.sched.clone());
     let mut router = ServingRouter::new(cfg.policy, cfg.router.clone());
     router.capture_assignments = recorder.is_some();
+    if let Some(states) = seeds {
+        router.seed_layers(states);
+    }
     let serve_cost = serve_cost_for(&cfg.router);
     let mut slo = SloTracker::new(cfg.traffic.slo_us);
     let mut completions = Vec::new();
+    let mut first_batch_vio: Option<f64> = None;
 
     let mut now: u64 = 0;
     let mut server_free: u64 = 0;
@@ -109,7 +168,16 @@ pub fn run_scenario_with(
             if let Some(rec) = recorder.as_deref_mut() {
                 rec.record_arrival(&req);
             }
-            batcher.offer(req);
+            // forecast-gated admission sheds ahead of the queue; the
+            // shed still counts offered + rejected (work conservation)
+            let shed = admission
+                .as_deref_mut()
+                .map_or(false, |a| !a.admit(req.arrival_us));
+            if shed {
+                batcher.shed();
+            } else {
+                batcher.offer(req);
+            }
             next_arrival = gen.next();
         }
 
@@ -118,6 +186,7 @@ pub fn run_scenario_with(
             let batch = batcher.take_batch(now);
             if !batch.is_empty() {
                 let mut outcome = router.route_batch(&batch);
+                first_batch_vio.get_or_insert(outcome.batch_vio);
                 let service_us = serve_cost
                     .batch_us(
                         &router.placement,
@@ -202,7 +271,11 @@ pub fn run_scenario_with(
     if let Some(rec) = recorder.as_deref_mut() {
         rec.set_completions(&completions);
     }
-    ServeOutcome { report, completions }
+    ServeOutcome {
+        report,
+        completions,
+        first_batch_vio: first_batch_vio.unwrap_or(0.0),
+    }
 }
 
 #[cfg(test)]
@@ -274,5 +347,42 @@ mod tests {
             assert!(c.completion_us >= prev);
             prev = c.completion_us;
         }
+    }
+
+    #[test]
+    fn noop_seeds_reproduce_the_unseeded_run_exactly() {
+        use crate::routing::BalanceState;
+        let cfg = config(Scenario::Bursty, Policy::Online);
+        let plain = run_scenario(&cfg);
+        let seeded = run_scenario_seeded(
+            &cfg,
+            &[BalanceState::None, BalanceState::None],
+        );
+        assert_eq!(plain.report.completed, seeded.report.completed);
+        assert_eq!(plain.report.avg_max_vio, seeded.report.avg_max_vio);
+        assert_eq!(plain.report.p99_ms, seeded.report.p99_ms);
+        assert_eq!(plain.first_batch_vio, seeded.first_batch_vio);
+        assert!(plain.first_batch_vio.is_finite());
+    }
+
+    #[test]
+    fn predictive_admission_sheds_overload_and_conserves_work() {
+        use crate::forecast::PredictiveAdmission;
+        // heavy offered load against a deliberately tiny admitted
+        // capacity: the gate must shed, and the books must balance
+        let mut cfg = config(Scenario::Steady, Policy::Online);
+        cfg.traffic.rate_per_s = 400_000.0;
+        let mut adm = PredictiveAdmission::new(1_000, 50_000.0, 1.0);
+        let out = run_scenario_predictive(&cfg, None, &mut adm);
+        assert!(adm.shed > 0, "gate never shed under 8x overload");
+        assert_eq!(out.report.offered, 1024);
+        assert!(out.report.rejected >= adm.shed);
+        assert!(out.report.conserves_work(), "{:?}", out.report);
+        // calm traffic passes untouched
+        let calm_cfg = config(Scenario::Steady, Policy::Online);
+        let mut calm = PredictiveAdmission::new(1_000, 1e9, 1.0);
+        let calm_out = run_scenario_predictive(&calm_cfg, None, &mut calm);
+        assert_eq!(calm.shed, 0);
+        assert_eq!(calm_out.report.completed, 1024);
     }
 }

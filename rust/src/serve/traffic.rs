@@ -56,8 +56,10 @@ impl Scenario {
         }
     }
 
+    /// Case-insensitive, whitespace-tolerant. CLI surfaces that reject
+    /// a `None` should list [`Scenario::names`] in the error.
     pub fn parse(s: &str) -> Option<Scenario> {
-        match s.to_ascii_lowercase().as_str() {
+        match s.trim().to_ascii_lowercase().as_str() {
             "steady" => Some(Scenario::Steady),
             "bursty" | "burst" => Some(Scenario::Bursty),
             "diurnal" => Some(Scenario::Diurnal),
@@ -68,6 +70,11 @@ impl Scenario {
             "replayed" | "replay" => Some(Scenario::Replayed),
             _ => None,
         }
+    }
+
+    /// The generative scenario names, for CLI error messages.
+    pub fn names() -> Vec<&'static str> {
+        Scenario::all().iter().map(|s| s.name()).collect()
     }
 }
 
@@ -390,6 +397,26 @@ mod tests {
         assert_eq!(Scenario::Replayed.name(), "replayed");
         // all() enumerates only the generative scenarios
         assert!(!Scenario::all().contains(&Scenario::Replayed));
+    }
+
+    #[test]
+    fn parse_is_case_insensitive_and_trims() {
+        assert_eq!(Scenario::parse("STEADY"), Some(Scenario::Steady));
+        assert_eq!(Scenario::parse(" Bursty "), Some(Scenario::Bursty));
+        assert_eq!(
+            Scenario::parse("Multi-Tenant"),
+            Some(Scenario::MultiTenant)
+        );
+        assert_eq!(Scenario::parse("warmup"), None);
+        // every canonical name round-trips through parse
+        for s in Scenario::all() {
+            assert_eq!(Scenario::parse(s.name()), Some(s));
+        }
+        assert_eq!(
+            Scenario::names(),
+            vec!["steady", "bursty", "diurnal", "adversarial",
+                 "multitenant"]
+        );
     }
 
     #[test]

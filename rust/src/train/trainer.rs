@@ -29,6 +29,10 @@ pub struct TrainDriver {
     pub data_seed: u64,
     /// devices for the simulated expert-parallel cluster
     pub sim_devices: usize,
+    /// warm-start step 0's route state (the per-layer dual/bias tensor)
+    /// from a prior run's recorded serving trace, via a quick forecast
+    /// fit (`forecast::control::route_state_seed`)
+    pub warm_start_trace: Option<std::path::PathBuf>,
 }
 
 impl TrainDriver {
@@ -42,6 +46,7 @@ impl TrainDriver {
             eval_batches: 8,
             data_seed: 20240601,
             sim_devices: 4,
+            warm_start_trace: None,
         }
     }
 
@@ -88,6 +93,46 @@ impl TrainDriver {
             .pop()
             .unwrap();
         let mut state = TrainState::fresh(theta, &cfg);
+        if let Some(path) = &self.warm_start_trace {
+            // balance from step 0: fit a forecast on the prior run's
+            // load trajectory and seed every layer's routing state.
+            // The in-graph sign differs by mode (model.py): BIP
+            // *subtracts* its duals q, Loss-Free *adds* its bias —
+            // so the bias consumer takes the negated seed; aux never
+            // reads route_state at all.
+            let trace = crate::trace::Trace::load(path)?;
+            let mut seed = crate::forecast::route_state_seed(
+                &trace,
+                cfg.n_layers,
+                cfg.n_experts,
+                cfg.top_k,
+                crate::forecast::DEFAULT_SEED_GAIN,
+            )
+            .with_context(|| {
+                format!("warm-starting from {}", path.display())
+            })?;
+            match self.mode.as_str() {
+                "bip" => {}
+                "lossfree" => {
+                    for x in seed.iter_mut() {
+                        *x = -*x;
+                    }
+                }
+                other => anyhow::bail!(
+                    "--warm-start-trace needs a routing state to seed \
+                     (mode bip or lossfree), but mode is {other}"
+                ),
+            }
+            state.route_state = Tensor::from_f32(
+                &[cfg.n_layers, cfg.n_experts],
+                seed,
+            );
+            crate::info!(
+                "{}: route_state warm-started from {}",
+                self.run_label(),
+                path.display()
+            );
+        }
 
         // simulated expert-parallel cluster fed by measured loads
         let profile = if cfg.n_experts >= 64 {

@@ -71,16 +71,26 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
 
 /// k-th largest (1-based) — the order statistic at the heart of Alg. 1.
 /// O(n) average via quickselect, no allocation beyond one scratch copy.
+///
+/// Out-of-range ranks are clamped into `1..=len`: `k = 0` answers the
+/// maximum, `k > len` the minimum — callers sizing ranks from stream
+/// parameters (`cap + 1`, `k + 1`) can never index out of bounds.
+/// Panics on an empty slice (it has no order statistic at any rank).
 pub fn kth_largest(xs: &[f32], k: usize) -> f32 {
-    assert!(k >= 1 && k <= xs.len(), "k={k} len={}", xs.len());
+    assert!(!xs.is_empty(), "kth_largest of an empty slice");
+    let k = k.clamp(1, xs.len());
     let mut v = xs.to_vec();
     let idx = v.len() - k;
     // f32 total order is fine here: scores are finite softmax outputs.
     *v.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap()).1
 }
 
-/// In-place quickselect variant for hot loops that own a scratch buffer.
+/// In-place quickselect variant for hot loops that own a scratch
+/// buffer. Same contract as [`kth_largest`]: rank clamped into
+/// `1..=len`, panics on an empty slice.
 pub fn kth_largest_in_place(v: &mut [f32], k: usize) -> f32 {
+    assert!(!v.is_empty(), "kth_largest_in_place of an empty slice");
+    let k = k.clamp(1, v.len());
     let idx = v.len() - k;
     *v.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap()).1
 }
@@ -187,6 +197,35 @@ mod tests {
                 assert_eq!(kth_largest(&xs, k), sorted[k - 1]);
             }
         }
+    }
+
+    #[test]
+    fn kth_largest_clamps_out_of_range_ranks() {
+        let xs = [0.25f32, -1.0, 3.5, 0.0];
+        // k = 0 clamps to the maximum, k > len to the minimum
+        assert_eq!(kth_largest(&xs, 0), 3.5);
+        assert_eq!(kth_largest(&xs, 1), 3.5);
+        assert_eq!(kth_largest(&xs, 4), -1.0);
+        assert_eq!(kth_largest(&xs, 99), -1.0);
+        let mut v = xs.to_vec();
+        assert_eq!(kth_largest_in_place(&mut v, 0), 3.5);
+        let mut v = xs.to_vec();
+        assert_eq!(kth_largest_in_place(&mut v, 99), -1.0);
+        // singleton: every rank answers the only element
+        assert_eq!(kth_largest(&[7.0], 0), 7.0);
+        assert_eq!(kth_largest(&[7.0], 5), 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty slice")]
+    fn kth_largest_of_empty_slice_panics_with_a_message() {
+        kth_largest(&[], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty slice")]
+    fn kth_largest_in_place_of_empty_slice_panics_with_a_message() {
+        kth_largest_in_place(&mut [], 1);
     }
 
     #[test]
