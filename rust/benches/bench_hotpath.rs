@@ -1,0 +1,416 @@
+//! Hot-path benchmark + zero-allocation gate (ISSUE 5).
+//!
+//! Four measurements back the `perf/` claims, all written to
+//! reports/BENCH_hotpath.json:
+//!
+//!   * **route_batch throughput** — tokens/sec through
+//!     `ServingRouter::route_batch_into` (the arena path) vs a
+//!     faithful in-file replica of the pre-PR allocating hot loop
+//!     (fresh score `Vec` per layer, per-token `Vec<Vec<u32>>` routing,
+//!     allocating placement accounting), per policy, swept over
+//!     (batch, m, k) gate shapes on the skewed steady scenario;
+//!   * **allocation counts** — a counting global allocator
+//!     (`perf::alloc::CountingAlloc`) is installed in this binary; the
+//!     arena path must report **0 heap allocations per batch** in
+//!     steady state for every policy (the bench exits nonzero
+//!     otherwise — this is the CI gate), while the baseline's per-batch
+//!     allocation count is recorded alongside;
+//!   * **adaptive solver** — iterations and MaxVio of
+//!     `--solver-tol`-style adaptive Algorithm 1 vs the fixed-T solver
+//!     at equal t_max, quantifying iteration savings at equal balance;
+//!   * **replica scaling** — wall-clock micro-batch throughput of the
+//!     replicated engine at R ∈ {1, 2, 4} on the same arena path.
+//!
+//! BIP_MOE_FULL=1 widens the sweep.
+
+use bip_moe::bench::{write_bench_json, Bencher};
+use bip_moe::bip::{dual::DualState, Instance};
+use bip_moe::metrics::maxvio::BalanceTracker;
+use bip_moe::parallel::placement::Placement;
+use bip_moe::parallel::Mesh;
+use bip_moe::perf::alloc::{
+    reset_thread_counts, thread_allocs, CountingAlloc,
+};
+use bip_moe::routing::{
+    ApproxBip, Bip, Greedy, LossFree, OnlineBip, PredictiveBip,
+    RoutingStrategy,
+};
+use bip_moe::serve::{
+    run_replicated, Policy, ReplicaConfig, Request, RouterConfig,
+    SchedulerConfig, Scenario, ServeConfig, ServingRouter,
+    TrafficConfig, TrafficGenerator,
+};
+use bip_moe::util::json::Json;
+use bip_moe::util::rng::Pcg64;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Requests for one (m, k) gate shape on the skewed steady scenario.
+fn batch_of(n: usize, m: usize, k: usize, seed: u64) -> Vec<Request> {
+    TrafficGenerator::new(TrafficConfig {
+        scenario: Scenario::Steady,
+        n_requests: n,
+        m,
+        k,
+        seed,
+        ..Default::default()
+    })
+    .collect()
+}
+
+fn router_cfg(m: usize, k: usize) -> RouterConfig {
+    RouterConfig {
+        m,
+        k,
+        // bounded so the online gate's eager heap reservation stays
+        // modest at m=64
+        expected_stream: 1 << 16,
+        ..Default::default()
+    }
+}
+
+/// Faithful replica of the pre-PR `ServingRouter::route_batch` hot
+/// loop: fresh score buffer per layer, allocating
+/// `RoutingStrategy::route_batch`, fresh occupancy/choice scratch and
+/// allocating placement accounting per call. This is the measured
+/// baseline the arena path is priced against.
+struct BaselineRouter {
+    cfg: RouterConfig,
+    layers: Vec<Box<dyn RoutingStrategy>>,
+    placement: Placement,
+    cum_loads: Vec<f64>,
+    balance: BalanceTracker,
+}
+
+impl BaselineRouter {
+    fn new(policy: Policy, cfg: RouterConfig) -> BaselineRouter {
+        let gate_cap = (cfg.expected_stream * cfg.k / cfg.m).max(1);
+        let layers: Vec<Box<dyn RoutingStrategy>> = (0..cfg.n_layers)
+            .map(|_| -> Box<dyn RoutingStrategy> {
+                match policy {
+                    Policy::Greedy => Box::new(Greedy),
+                    Policy::LossFree => {
+                        Box::new(LossFree::new(cfg.m, cfg.lossfree_u))
+                    }
+                    Policy::BipBatch => Box::new(Bip::new(cfg.t_iters)),
+                    Policy::Predictive => Box::new(PredictiveBip::new(
+                        cfg.t_iters,
+                        Vec::new(),
+                    )),
+                    Policy::Online => Box::new(OnlineBip::new(
+                        cfg.m, cfg.k, gate_cap, cfg.t_iters,
+                    )),
+                    Policy::Approx => Box::new(ApproxBip::new(
+                        cfg.m, cfg.k, gate_cap, cfg.t_iters, cfg.buckets,
+                    )),
+                }
+            })
+            .collect();
+        let placement =
+            Placement::block(&Mesh::new(cfg.n_devices, cfg.m));
+        let balance = BalanceTracker::new(cfg.n_layers, 0, cfg.k);
+        BaselineRouter {
+            cum_loads: vec![0.0; cfg.m],
+            cfg,
+            layers,
+            placement,
+            balance,
+        }
+    }
+
+    fn batch_cap(&self, n: usize) -> usize {
+        ((n * self.cfg.k) as f64 / self.cfg.m as f64
+            * self.cfg.capacity_factor)
+            .ceil()
+            .max(1.0) as usize
+    }
+
+    fn route_batch(&mut self, batch: &[Request]) -> Vec<f32> {
+        let (m, k, n_layers) =
+            (self.cfg.m, self.cfg.k, self.cfg.n_layers);
+        let n = batch.len();
+        let cap = self.batch_cap(n);
+        let mut loads = vec![0.0f32; n_layers * m];
+        let mut occ = vec![0u32; m];
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        let mut imbalance_sum = 0.0;
+        for l in 0..n_layers {
+            let mut scores = Vec::with_capacity(n * m);
+            for r in batch {
+                scores.extend_from_slice(r.layer_scores(l, m));
+            }
+            let inst = Instance { n, m, k, cap, scores };
+            let routing = self.layers[l].route_batch(&inst);
+            occ.iter_mut().for_each(|o| *o = 0);
+            for (i, experts) in routing.assignment.iter().enumerate() {
+                chosen.clear();
+                for &e in experts.iter().take(k) {
+                    let e = e as usize;
+                    if occ[e] < cap as u32 && !chosen.contains(&e) {
+                        chosen.push(e);
+                        occ[e] += 1;
+                        continue;
+                    }
+                    let row = inst.row(i);
+                    let mut best: Option<usize> = None;
+                    for j in 0..m {
+                        if occ[j] < cap as u32
+                            && !chosen.contains(&j)
+                            && best.map_or(true, |b| row[j] > row[b])
+                        {
+                            best = Some(j);
+                        }
+                    }
+                    if let Some(j) = best {
+                        chosen.push(j);
+                        occ[j] += 1;
+                    }
+                }
+                let lrow = &mut loads[l * m..(l + 1) * m];
+                for &e in &chosen {
+                    lrow[e] += 1.0;
+                }
+            }
+            let lrow = &loads[l * m..(l + 1) * m];
+            imbalance_sum += self.placement.imbalance(lrow);
+            for (j, &x) in lrow.iter().enumerate() {
+                self.cum_loads[j] += x as f64;
+            }
+        }
+        self.balance.push_batch_sized(&loads, m, n);
+        std::hint::black_box(imbalance_sum);
+        loads
+    }
+}
+
+/// Allocations per call over a post-warm-up window. The warm-up is
+/// sized so the balance tracker's unbounded series (the one amortized
+/// grower on the path) cannot double inside the window.
+fn allocs_per_batch(
+    mut call: impl FnMut(),
+    warmup: usize,
+    window: usize,
+) -> f64 {
+    for _ in 0..warmup {
+        call();
+    }
+    reset_thread_counts();
+    for _ in 0..window {
+        call();
+    }
+    thread_allocs() as f64 / window as f64
+}
+
+fn main() {
+    let full = std::env::var("BIP_MOE_FULL").as_deref() == Ok("1");
+    let mut sections = Vec::new();
+
+    // (batch tokens, experts, top-k) gate shapes
+    let mut shapes = vec![(64usize, 16usize, 4usize), (256, 16, 4)];
+    if full {
+        shapes.push((256, 64, 8));
+        shapes.push((1024, 16, 4));
+    } else {
+        shapes.push((128, 64, 8));
+    }
+
+    println!("== route_batch: arena vs pre-PR baseline (steady/skewed) ==");
+    let mut rows = Vec::new();
+    let mut zero_alloc_ok = true;
+    let mut speedup_product = 1.0f64;
+    let mut speedup_count = 0u32;
+    for &(n, m, k) in &shapes {
+        let batch = batch_of(n, m, k, 13);
+        for policy in Policy::all() {
+            let mut arena_router =
+                ServingRouter::new(policy, router_cfg(m, k));
+            let mut out = bip_moe::serve::BatchOutcome::default();
+            let mut bench = Bencher::default();
+            let label =
+                format!("route {} n={n} m={m} k={k}", policy.name());
+            let meas = bench.bench(&format!("{label} [arena]"), || {
+                arena_router.route_batch_into(&batch, &mut out);
+            });
+            let arena_us = meas.secs_per_iter.mean * 1e6;
+
+            let mut base_router =
+                BaselineRouter::new(policy, router_cfg(m, k));
+            let meas = bench.bench(&format!("{label} [baseline]"), || {
+                std::hint::black_box(base_router.route_batch(&batch));
+            });
+            let base_us = meas.secs_per_iter.mean * 1e6;
+
+            // allocation accounting on fresh routers (same shapes)
+            let mut ar = ServingRouter::new(policy, router_cfg(m, k));
+            let mut aout = bip_moe::serve::BatchOutcome::default();
+            let arena_allocs = allocs_per_batch(
+                || ar.route_batch_into(&batch, &mut aout),
+                300,
+                100,
+            );
+            let mut br = BaselineRouter::new(policy, router_cfg(m, k));
+            let base_allocs = allocs_per_batch(
+                || {
+                    std::hint::black_box(br.route_batch(&batch));
+                },
+                20,
+                20,
+            );
+            if arena_allocs != 0.0 {
+                zero_alloc_ok = false;
+                eprintln!(
+                    "ZERO-ALLOC VIOLATION: {} n={n} m={m} k={k}: \
+                     {arena_allocs} allocs/batch in steady state",
+                    policy.name()
+                );
+            }
+            let speedup = base_us / arena_us;
+            speedup_product *= speedup;
+            speedup_count += 1;
+            println!(
+                "  {:<14} n={n:<5} m={m:<3} k={k}: {arena_us:>8.2} us \
+                 vs {base_us:>8.2} us  ({speedup:.2}x, allocs/batch \
+                 {arena_allocs:.1} vs {base_allocs:.1})",
+                policy.name()
+            );
+            rows.push(Json::obj(vec![
+                ("policy", Json::Str(policy.name().into())),
+                ("scenario", Json::Str("steady".into())),
+                ("batch", Json::Num(n as f64)),
+                ("m", Json::Num(m as f64)),
+                ("k", Json::Num(k as f64)),
+                ("arena_us_per_batch", Json::Num(arena_us)),
+                ("baseline_us_per_batch", Json::Num(base_us)),
+                (
+                    "arena_tokens_per_sec",
+                    Json::Num(n as f64 / (arena_us / 1e6)),
+                ),
+                (
+                    "baseline_tokens_per_sec",
+                    Json::Num(n as f64 / (base_us / 1e6)),
+                ),
+                ("speedup", Json::Num(speedup)),
+                ("arena_allocs_per_batch", Json::Num(arena_allocs)),
+                ("baseline_allocs_per_batch", Json::Num(base_allocs)),
+            ]));
+        }
+    }
+    let speedup_geomean =
+        speedup_product.powf(1.0 / speedup_count.max(1) as f64);
+    sections.push(Json::obj(vec![
+        ("route_batch", Json::Arr(rows)),
+        ("speedup_geomean", Json::Num(speedup_geomean)),
+        ("zero_alloc_steady_state", Json::Bool(zero_alloc_ok)),
+    ]));
+    println!("  speedup geomean: {speedup_geomean:.2}x");
+
+    // Adaptive Algorithm 1: iteration savings at equal MaxVio. The
+    // solver regime (tight cap = n*k/m) on a warm-started skewed
+    // stream, fixed T=16 vs --solver-tol-style early exit.
+    println!("\n== adaptive solver: iterations vs MaxVio (T<=16) ==");
+    let t_max = 16usize;
+    let batches = if full { 32 } else { 12 };
+    let mut adaptive_rows = Vec::new();
+    for tol in [0.0f32, 0.02, 0.05, 0.1] {
+        let mut state = DualState::new(16);
+        let mut rng = Pcg64::new(7);
+        let mut iters_total = 0usize;
+        let mut vio_sum = 0.0f64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..batches {
+            let inst =
+                Instance::synthetic(1024, 16, 4, 2.0, 3.0, &mut rng);
+            iters_total += if tol > 0.0 {
+                state.update_adaptive(&inst, t_max, tol)
+            } else {
+                state.update(&inst, t_max);
+                t_max
+            };
+            vio_sum += state.route(&inst).max_violation(&inst);
+        }
+        let wall_us =
+            t0.elapsed().as_secs_f64() * 1e6 / batches as f64;
+        let avg_iters = iters_total as f64 / batches as f64;
+        let avg_vio = vio_sum / batches as f64;
+        println!(
+            "  tol={tol:<5}: {avg_iters:>5.2} iters/batch, avg MaxVio \
+             {avg_vio:.4}, {wall_us:>8.1} us/batch"
+        );
+        adaptive_rows.push(Json::obj(vec![
+            ("tol", Json::Num(tol as f64)),
+            ("t_max", Json::Num(t_max as f64)),
+            ("avg_iters", Json::Num(avg_iters)),
+            ("avg_max_vio", Json::Num(avg_vio)),
+            ("us_per_batch", Json::Num(wall_us)),
+        ]));
+    }
+    sections.push(Json::obj(vec![(
+        "adaptive_solver",
+        Json::Arr(adaptive_rows),
+    )]));
+
+    // Replica scaling on the arena path: virtual-time micro-batch
+    // throughput of the replicated engine under saturating load.
+    println!("\n== replica scaling (bursty, bip-batch, threads=4) ==");
+    let requests = if full { 65_536 } else { 8_192 };
+    let mut replica_rows = Vec::new();
+    for &r in &[1usize, 2, 4] {
+        let cfg = ServeConfig::new(
+            TrafficConfig {
+                scenario: Scenario::Bursty,
+                n_requests: requests,
+                rate_per_s: 2_000_000.0,
+                seed: 2,
+                slo_us: 500_000,
+                ..Default::default()
+            },
+            SchedulerConfig::default(),
+            RouterConfig::default(),
+            Policy::BipBatch,
+        );
+        let rcfg = ReplicaConfig { replicas: r, threads: 4, sync_every: 8 };
+        let t0 = std::time::Instant::now();
+        let out = run_replicated(&cfg, &rcfg);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let batches_per_vs = if out.report.horizon_s > 0.0 {
+            out.batches as f64 / out.report.horizon_s
+        } else {
+            0.0
+        };
+        println!(
+            "  R={r}: {} batches, {batches_per_vs:.0} batches/vsec, \
+             wall {wall_s:.2}s, AvgMaxVio {:.4}",
+            out.batches, out.report.avg_max_vio
+        );
+        replica_rows.push(Json::obj(vec![
+            ("replicas", Json::Num(r as f64)),
+            ("threads", Json::Num(4.0)),
+            ("batches", Json::Num(out.batches as f64)),
+            ("batches_per_vsec", Json::Num(batches_per_vs)),
+            ("avg_max_vio", Json::Num(out.report.avg_max_vio)),
+            ("completed", Json::Num(out.report.completed as f64)),
+            ("wall_s", Json::Num(wall_s)),
+        ]));
+    }
+    sections.push(Json::obj(vec![(
+        "replica_scaling",
+        Json::Arr(replica_rows),
+    )]));
+
+    match write_bench_json("hotpath", Json::Arr(sections)) {
+        Ok(path) => println!("\nperf record: {}", path.display()),
+        Err(e) => {
+            eprintln!("warning: BENCH_hotpath.json not written: {e}")
+        }
+    }
+
+    if !zero_alloc_ok {
+        eprintln!(
+            "bench_hotpath FAILED: steady-state allocations detected \
+             on the arena path"
+        );
+        std::process::exit(1);
+    }
+    println!("zero-alloc steady state: OK (every policy, every shape)");
+}

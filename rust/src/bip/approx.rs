@@ -7,7 +7,7 @@
 //! bucket. Space is O(m·b), independent of stream length — the property
 //! §5.2 needs for recommendation-scale flows.
 
-use crate::util::stats::{kth_largest_in_place, topk_indices};
+use crate::util::stats::{kth_largest_in_place, topk_indices, topk_into};
 
 /// Per-expert histogram over [0,1) with `b` equal buckets.
 ///
@@ -165,7 +165,31 @@ impl ApproxGate {
             .into_iter()
             .map(|e| e as u32)
             .collect();
+        self.refine_and_absorb(scores);
+        chosen
+    }
 
+    /// Allocation-free [`ApproxGate::route_token`]: identical decisions
+    /// and histogram updates, chosen experts written into `out[..len]`
+    /// with the caller's `idx` scratch (`idx.len() == m`).
+    pub fn route_token_into(
+        &mut self,
+        scores: &[f32],
+        idx: &mut [u32],
+        out: &mut [u32],
+    ) -> usize {
+        assert_eq!(scores.len(), self.m);
+        for j in 0..self.m {
+            self.scratch[j] = scores[j] - self.q[j];
+        }
+        let len = topk_into(&self.scratch, self.k, idx, out);
+        self.refine_and_absorb(scores);
+        len
+    }
+
+    /// The T-iteration dual refinement + histogram absorption for one
+    /// token (shared by both routing entry points).
+    fn refine_and_absorb(&mut self, scores: &[f32]) {
         let kk = (self.k + 1).min(self.m);
         let rank = (self.cap + 1) as u64;
         let mut p = 0.0f32;
@@ -185,7 +209,6 @@ impl ApproxGate {
         for j in 0..self.m {
             self.hists[j].push(scores[j] - p);
         }
-        chosen
     }
 
     /// Per-expert histogram bucket counts, for replica state export.

@@ -10,207 +10,406 @@
 //! Complexity: O(T · n · m) with quickselect (no sort), ~microseconds for
 //! the paper's gate sizes — the "very small time costs" claim the solver
 //! bench quantifies.
-
-use std::sync::Mutex;
+//!
+//! All scratch lives in a [`ScoreArena`] (`perf::arena`): the serving
+//! stack hands one shared arena down through every layer (`*_in`
+//! variants), so the O(n·m) transpose + order-key buffers exist once
+//! per router and the steady state allocates nothing; the plain
+//! `update`/`update_parallel`/`update_adaptive` entry points fall back
+//! to a private arena for standalone use (`solve`, benches, tests).
+//!
+//! Three solver modes:
+//!   * [`DualState::update`] — the fixed-T path (bit-compatible with
+//!     the kernel);
+//!   * [`DualState::update_parallel`] — the same recurrence with the
+//!     p-phase chunked over token rows and the q-phase over expert
+//!     columns on a shared [`Pool`]. Chunks write pre-partitioned
+//!     disjoint slices directly (no mutexes, no per-phase gather
+//!     buffers), and a quickselect over the same multiset yields the
+//!     same order statistic regardless of partitioning, so the result
+//!     is bit-identical to serial — pinned by the equivalence tests;
+//!   * [`DualState::update_adaptive`] — the convergence-adaptive path:
+//!     early-exits when the duals go quiet AND the routed MaxVio has
+//!     stopped improving, restores the best duals seen, and lazily
+//!     re-evaluates converged expert columns only every other
+//!     iteration. `tol = 0` disables every approximation and is
+//!     bit-identical to the fixed-T path (serial and parallel).
 
 use super::{Instance, Routing};
+use crate::perf::{AssignmentBuf, ScoreArena};
 use crate::util::pool::Pool;
 use crate::util::stats::{
-    f32_order_key, kth_largest_keys, topk_indices,
+    f32_order_key, kth_largest_keys, topk_indices, topk_into,
 };
 
+/// Scale from the caller's MaxVio-level tolerance to the dual-delta
+/// threshold the early exit checks: duals move on the softmax-score
+/// scale, where steps ~100x smaller than a MaxVio step still shuffle
+/// near-tie tokens (calibrated in python against f64 dynamics; see the
+/// adaptive tests' margins).
+const ADAPTIVE_TOL_TO_DELTA: f32 = 0.05;
+/// Consecutive no-new-best primal evaluations before the exit arms.
+const ADAPTIVE_PATIENCE: u32 = 3;
+/// Consecutive exactly-unchanged iterations before a column goes lazy.
+const ADAPTIVE_CALM_NEED: u32 = 2;
+/// Lazy columns are re-evaluated every this many iterations.
+const ADAPTIVE_RECHECK: usize = 2;
+
+/// Raw-pointer capsule for handing disjoint chunk writes to pool jobs.
+/// SAFETY: every user writes only its own pre-partitioned index range,
+/// and `scoped_run` returns only after all jobs complete, so the
+/// pointee outlives every access and no two jobs alias.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
 /// Reusable solver state: the warm-started dual vector q (Alg. 1 line 2
-/// initializes it once per gate, NOT once per batch) plus scratch space.
+/// initializes it once per gate, NOT once per batch) plus the token
+/// duals p. Batch-shaped scratch lives in the arena.
 #[derive(Clone, Debug)]
 pub struct DualState {
     pub q: Vec<f32>,
-    /// order-key scratch: quickselect partitions on u32 keys instead of
-    /// f32 partial_cmp — the solver's hot path (EXPERIMENTS.md §Perf)
-    scratch_row: Vec<u32>,
-    scratch_col: Vec<u32>,
-    /// column-major copy of the current batch's scores so the q-phase
-    /// reads expert columns sequentially
-    scores_t: Vec<f32>,
     pub p: Vec<f32>,
+    /// fallback arena for the standalone entry points; the serving
+    /// stack passes its shared arena to the `*_in` variants and this
+    /// stays empty
+    arena: ScoreArena,
 }
 
 impl DualState {
     pub fn new(m: usize) -> Self {
         DualState {
             q: vec![0.0; m],
-            scratch_row: Vec::new(),
-            scratch_col: Vec::new(),
-            scores_t: Vec::new(),
             p: Vec::new(),
+            arena: ScoreArena::new(),
         }
     }
 
-    /// Run T dual iterations against one batch's scores (Alg. 1 lines 7-12).
+    /// Run `f` against this state's private fallback arena (every
+    /// standalone/compat entry point funnels through here, so the
+    /// take-and-restore dance exists once).
+    pub fn with_fallback_arena<R>(
+        &mut self,
+        f: impl FnOnce(&mut DualState, &mut ScoreArena) -> R,
+    ) -> R {
+        let mut arena = std::mem::take(&mut self.arena);
+        let out = f(self, &mut arena);
+        self.arena = arena;
+        out
+    }
+
+    /// Run T dual iterations against one batch's scores (Alg. 1 lines
+    /// 7-12), using the private fallback arena.
     pub fn update(&mut self, inst: &Instance, t_iters: usize) {
+        self.with_fallback_arena(|s, a| s.update_in(inst, t_iters, a));
+    }
+
+    /// [`DualState::update`] against a caller-owned arena — the serving
+    /// stack's zero-allocation seam.
+    pub fn update_in(
+        &mut self,
+        inst: &Instance,
+        t_iters: usize,
+        arena: &mut ScoreArena,
+    ) {
         let (n, m, k, cap) = (inst.n, inst.m, inst.k, inst.cap);
         let kk = (k + 1).min(m);
         let cc = (cap + 1).min(n);
         self.p.resize(n, 0.0);
-        self.scratch_row.resize(m, 0);
-        self.scratch_col.resize(n, 0);
-        // transpose once per batch
-        self.scores_t.resize(n * m, 0.0);
-        for i in 0..n {
-            let row = inst.row(i);
-            for j in 0..m {
-                self.scores_t[j * n + i] = row[j];
-            }
-        }
+        arena.prepare_batch(n, m);
+        transpose_serial(inst, &mut arena.scores_t);
         for _ in 0..t_iters {
-            // p_i = max(0, (k+1)-th largest of s_i - q)
-            for i in 0..n {
-                let row = inst.row(i);
-                for j in 0..m {
-                    self.scratch_row[j] =
-                        f32_order_key(row[j] - self.q[j]);
-                }
-                self.p[i] =
-                    kth_largest_keys(&mut self.scratch_row, kk).max(0.0);
-            }
-            // q_j = max(0, (cap+1)-th largest of s_·j - p)
-            for j in 0..m {
-                let col = &self.scores_t[j * n..(j + 1) * n];
-                for i in 0..n {
-                    self.scratch_col[i] =
-                        f32_order_key(col[i] - self.p[i]);
-                }
-                self.q[j] =
-                    kth_largest_keys(&mut self.scratch_col, cc).max(0.0);
-            }
+            p_phase_serial(
+                inst,
+                &self.q,
+                &mut self.p,
+                &mut arena.order_keys,
+                kk,
+            );
+            q_phase_serial(
+                n,
+                m,
+                &arena.scores_t,
+                &self.p,
+                &mut self.q,
+                &mut arena.order_keys,
+                cc,
+                None,
+                0,
+            );
         }
     }
 
     /// Shared-pool variant of [`DualState::update`]: the p-phase is
     /// chunked over token rows and the q-phase over expert columns.
     /// Every chunk evaluates exactly the serial per-element recurrence
-    /// (a quickselect over the same multiset yields the same order
-    /// statistic regardless of partitioning), so `q`, `p` and the
-    /// subsequent routing are bit-identical to the serial path — the
-    /// equivalence tests pin this.
+    /// into its own pre-partitioned slice of `p`/`q`/the key scratch,
+    /// so `q`, `p` and the subsequent routing are bit-identical to the
+    /// serial path — the equivalence tests pin this.
     pub fn update_parallel(
         &mut self,
         inst: &Instance,
         t_iters: usize,
         pool: &Pool,
     ) {
+        self.with_fallback_arena(|s, a| {
+            s.update_parallel_in(inst, t_iters, pool, a)
+        });
+    }
+
+    /// [`DualState::update_parallel`] against a caller-owned arena.
+    pub fn update_parallel_in(
+        &mut self,
+        inst: &Instance,
+        t_iters: usize,
+        pool: &Pool,
+        arena: &mut ScoreArena,
+    ) {
         if pool.threads() <= 1 {
-            return self.update(inst, t_iters);
+            return self.update_in(inst, t_iters, arena);
         }
         let (n, m, k, cap) = (inst.n, inst.m, inst.k, inst.cap);
         let kk = (k + 1).min(m);
         let cc = (cap + 1).min(n);
         self.p.resize(n, 0.0);
-        // the serial path keeps these as persistent scratch; size them
-        // identically so state_bytes() reports the same footprint on
-        // either path
-        self.scratch_row.resize(m, 0);
-        self.scratch_col.resize(n, 0);
-        self.scores_t.resize(n * m, 0.0);
-        let row_chunks = chunk_bounds(n, pool.threads());
-        let col_chunks = chunk_bounds(m, pool.threads());
-        // each phase gathers per-chunk results through a Mutex and
-        // copies them back — one extra O(len) copy and a handful of
-        // small allocations per phase, deliberately paid to keep the
-        // chunk jobs free of aliased &mut into self (the quickselect
-        // itself is O(n·m) per iteration and dominates)
-
-        // transpose once per batch, column blocks in parallel
-        {
-            let parts: Mutex<Vec<Option<Vec<f32>>>> =
-                Mutex::new(vec![None; col_chunks.len()]);
-            let job = |c: usize| {
-                let (j0, j1) = col_chunks[c];
-                let mut block = vec![0.0f32; (j1 - j0) * n];
-                for i in 0..n {
-                    let row = inst.row(i);
-                    for j in j0..j1 {
-                        block[(j - j0) * n + i] = row[j];
-                    }
-                }
-                parts.lock().unwrap()[c] = Some(block);
-            };
-            pool.scoped_run(col_chunks.len(), &job);
-            let parts = parts.into_inner().unwrap();
-            for (c, part) in parts.into_iter().enumerate() {
-                let (j0, j1) = col_chunks[c];
-                self.scores_t[j0 * n..j1 * n]
-                    .copy_from_slice(&part.expect("transpose chunk"));
-            }
-        }
-
+        arena.prepare_batch(n, m);
+        transpose_parallel(inst, &mut arena.scores_t, pool);
         for _ in 0..t_iters {
-            // p_i = max(0, (k+1)-th largest of s_i - q): rows are
-            // independent given q
-            {
-                let q = &self.q;
-                let parts: Mutex<Vec<Option<Vec<f32>>>> =
-                    Mutex::new(vec![None; row_chunks.len()]);
-                let job = |c: usize| {
-                    let (i0, i1) = row_chunks[c];
-                    let mut keys = vec![0u32; m];
-                    let mut vals = vec![0.0f32; i1 - i0];
-                    for i in i0..i1 {
-                        let row = inst.row(i);
-                        for j in 0..m {
-                            keys[j] = f32_order_key(row[j] - q[j]);
-                        }
-                        vals[i - i0] =
-                            kth_largest_keys(&mut keys, kk).max(0.0);
-                    }
-                    parts.lock().unwrap()[c] = Some(vals);
-                };
-                pool.scoped_run(row_chunks.len(), &job);
-                let parts = parts.into_inner().unwrap();
-                for (c, part) in parts.into_iter().enumerate() {
-                    let (i0, i1) = row_chunks[c];
-                    self.p[i0..i1]
-                        .copy_from_slice(&part.expect("p chunk"));
-                }
-            }
-            // q_j = max(0, (cap+1)-th largest of s_·j - p): columns are
-            // independent given p
-            {
-                let p = &self.p;
-                let scores_t = &self.scores_t;
-                let parts: Mutex<Vec<Option<Vec<f32>>>> =
-                    Mutex::new(vec![None; col_chunks.len()]);
-                let job = |c: usize| {
-                    let (j0, j1) = col_chunks[c];
-                    let mut keys = vec![0u32; n];
-                    let mut vals = vec![0.0f32; j1 - j0];
-                    for j in j0..j1 {
-                        let col = &scores_t[j * n..(j + 1) * n];
-                        for i in 0..n {
-                            keys[i] = f32_order_key(col[i] - p[i]);
-                        }
-                        vals[j - j0] =
-                            kth_largest_keys(&mut keys, cc).max(0.0);
-                    }
-                    parts.lock().unwrap()[c] = Some(vals);
-                };
-                pool.scoped_run(col_chunks.len(), &job);
-                let parts = parts.into_inner().unwrap();
-                for (c, part) in parts.into_iter().enumerate() {
-                    let (j0, j1) = col_chunks[c];
-                    self.q[j0..j1]
-                        .copy_from_slice(&part.expect("q chunk"));
-                }
-            }
+            p_phase_parallel(
+                inst,
+                &self.q,
+                &mut self.p,
+                &mut arena.order_keys,
+                kk,
+                pool,
+            );
+            q_phase_parallel(
+                n,
+                m,
+                &arena.scores_t,
+                &self.p,
+                &mut self.q,
+                &mut arena.order_keys,
+                cc,
+                None,
+                0,
+                pool,
+            );
         }
     }
 
+    /// Convergence-adaptive Algorithm 1 (serial), using the private
+    /// fallback arena. Returns the iterations actually run.
+    ///
+    /// Semantics (`tol > 0`):
+    ///   * after every iteration the current duals are priced by a
+    ///     primal evaluation (route + MaxVio, reusing arena scratch);
+    ///     the best duals seen are snapshotted;
+    ///   * the solver stops once `ADAPTIVE_PATIENCE` consecutive
+    ///     evaluations fail to set a new best AND the max dual delta
+    ///     over live columns is `<= tol * ADAPTIVE_TOL_TO_DELTA`; the
+    ///     best snapshot is restored (also on t_max exhaustion);
+    ///   * an expert column whose dual was *exactly* unchanged for
+    ///     `ADAPTIVE_CALM_NEED` consecutive live iterations goes lazy:
+    ///     it is only re-evaluated every `ADAPTIVE_RECHECK`-th
+    ///     iteration (and wakes back up the moment a recheck moves it)
+    ///     — the "prune converged columns" part of the q-phase.
+    ///
+    /// With `tol = 0` every approximation is disabled and the loop
+    /// early-exits only at an *exact* fixpoint (`Δq == 0`), after which
+    /// further fixed iterations would recompute identical p and q — so
+    /// the result is bit-identical to `update(inst, t_max)`, serial and
+    /// parallel, which the pinning tests assert.
+    ///
+    /// `p` reflects the final iteration run, not the restored best-q
+    /// snapshot (only `q` feeds routing).
+    pub fn update_adaptive(
+        &mut self,
+        inst: &Instance,
+        t_max: usize,
+        tol: f32,
+    ) -> usize {
+        self.with_fallback_arena(|s, a| {
+            s.update_adaptive_in(inst, t_max, tol, a)
+        })
+    }
+
+    /// [`DualState::update_adaptive`] against a caller-owned arena.
+    pub fn update_adaptive_in(
+        &mut self,
+        inst: &Instance,
+        t_max: usize,
+        tol: f32,
+        arena: &mut ScoreArena,
+    ) -> usize {
+        self.adaptive_core(inst, t_max, tol, arena, None)
+    }
+
+    /// Pool-chunked [`DualState::update_adaptive`] on the private
+    /// fallback arena (standalone / compat callers).
+    pub fn update_adaptive_parallel(
+        &mut self,
+        inst: &Instance,
+        t_max: usize,
+        tol: f32,
+        pool: &Pool,
+    ) -> usize {
+        self.with_fallback_arena(|s, a| {
+            s.update_adaptive_parallel_in(inst, t_max, tol, pool, a)
+        })
+    }
+
+    /// Pool-chunked adaptive update: phases run like
+    /// [`DualState::update_parallel_in`], all convergence decisions are
+    /// taken serially from bit-identical phase outputs — so the
+    /// adaptive path is itself bit-identical serial vs parallel.
+    pub fn update_adaptive_parallel_in(
+        &mut self,
+        inst: &Instance,
+        t_max: usize,
+        tol: f32,
+        pool: &Pool,
+        arena: &mut ScoreArena,
+    ) -> usize {
+        if pool.threads() <= 1 {
+            return self.adaptive_core(inst, t_max, tol, arena, None);
+        }
+        self.adaptive_core(inst, t_max, tol, arena, Some(pool))
+    }
+
+    fn adaptive_core(
+        &mut self,
+        inst: &Instance,
+        t_max: usize,
+        tol: f32,
+        arena: &mut ScoreArena,
+        pool: Option<&Pool>,
+    ) -> usize {
+        let (n, m, k, cap) = (inst.n, inst.m, inst.k, inst.cap);
+        let kk = (k + 1).min(m);
+        let cc = (cap + 1).min(n);
+        self.p.resize(n, 0.0);
+        arena.prepare_batch(n, m);
+        arena.prepare_adaptive(m, k);
+        arena.prepare_gate(m);
+        match pool {
+            Some(pool) => {
+                transpose_parallel(inst, &mut arena.scores_t, pool)
+            }
+            None => transpose_serial(inst, &mut arena.scores_t),
+        }
+        let eps = tol * ADAPTIVE_TOL_TO_DELTA;
+        let mut best_vio = f64::INFINITY;
+        let mut stale = 0u32;
+        arena.best_q[..m].copy_from_slice(&self.q);
+        let mut iters = 0usize;
+        for t in 0..t_max {
+            iters += 1;
+            arena.prev_q[..m].copy_from_slice(&self.q);
+            match pool {
+                Some(pool) => {
+                    p_phase_parallel(
+                        inst,
+                        &self.q,
+                        &mut self.p,
+                        &mut arena.order_keys,
+                        kk,
+                        pool,
+                    );
+                    q_phase_parallel(
+                        n,
+                        m,
+                        &arena.scores_t,
+                        &self.p,
+                        &mut self.q,
+                        &mut arena.order_keys,
+                        cc,
+                        (tol > 0.0).then_some(arena.calm.as_slice()),
+                        t,
+                        pool,
+                    );
+                }
+                None => {
+                    p_phase_serial(
+                        inst,
+                        &self.q,
+                        &mut self.p,
+                        &mut arena.order_keys,
+                        kk,
+                    );
+                    q_phase_serial(
+                        n,
+                        m,
+                        &arena.scores_t,
+                        &self.p,
+                        &mut self.q,
+                        &mut arena.order_keys,
+                        cc,
+                        (tol > 0.0).then_some(arena.calm.as_slice()),
+                        t,
+                    );
+                }
+            }
+            // delta + calm bookkeeping over live columns (serial: the
+            // decisions must not depend on the chunking)
+            let mut max_delta = 0.0f32;
+            for j in 0..m {
+                let live = !(tol > 0.0
+                    && arena.calm[j] >= ADAPTIVE_CALM_NEED
+                    && t % ADAPTIVE_RECHECK != 0);
+                if !live {
+                    continue;
+                }
+                let d = (self.q[j] - arena.prev_q[j]).abs();
+                if d > max_delta {
+                    max_delta = d;
+                }
+                arena.calm[j] =
+                    if d == 0.0 { arena.calm[j] + 1 } else { 0 };
+            }
+            if tol <= 0.0 {
+                // exact fixpoint: every further iteration is a no-op,
+                // so stopping here is bit-identical to running them
+                if max_delta == 0.0 {
+                    break;
+                }
+                continue;
+            }
+            let vio = eval_max_vio(
+                inst,
+                &self.q,
+                &mut arena.biased,
+                &mut arena.topk_idx,
+                &mut arena.topk_out,
+                &mut arena.loads_scratch,
+            );
+            if vio < best_vio {
+                best_vio = vio;
+                arena.best_q[..m].copy_from_slice(&self.q);
+                stale = 0;
+            } else {
+                stale += 1;
+            }
+            if stale >= ADAPTIVE_PATIENCE && max_delta <= eps {
+                break;
+            }
+        }
+        if tol > 0.0 && best_vio.is_finite() {
+            self.q.copy_from_slice(&arena.best_q[..m]);
+        }
+        iters
+    }
+
     /// Bytes of persistent solver state: the duals plus every buffer
-    /// retained between batches (column-major score copy + quickselect
-    /// scratch) — the full O(n·m) footprint Algorithm 1 carries, which
-    /// the serving report compares against Alg 3/4's bounded state.
+    /// the fallback arena retains between batches (column-major score
+    /// copy + quickselect scratch) — the full O(n·m) footprint
+    /// Algorithm 1 carries when it runs standalone. On the serving
+    /// path the shared arena is counted once at the router level
+    /// instead (`ServingRouter::state_bytes`), not per layer.
     pub fn state_bytes(&self) -> usize {
-        (self.q.len() + self.p.len() + self.scores_t.len()) * 4
-            + (self.scratch_row.len() + self.scratch_col.len()) * 4
+        (self.q.len() + self.p.len()) * 4 + self.arena.state_bytes()
     }
 
     /// Route with the current duals: Topk(s_i - q, k) per token, gate
@@ -231,20 +430,256 @@ impl DualState {
             .collect();
         Routing { assignment }
     }
+
+    /// Allocation-free [`DualState::route`]: same decisions (the
+    /// biased-score top-k has a total order), written into the reusable
+    /// assignment buffer via arena scratch.
+    pub fn route_into(
+        &self,
+        inst: &Instance,
+        arena: &mut ScoreArena,
+        out: &mut AssignmentBuf,
+    ) {
+        arena.prepare_gate(inst.m);
+        out.reset(inst.n, inst.k);
+        for i in 0..inst.n {
+            let row = inst.row(i);
+            for j in 0..inst.m {
+                arena.biased[j] = row[j] - self.q[j];
+            }
+            let len = topk_into(
+                &arena.biased,
+                inst.k,
+                &mut arena.topk_idx,
+                out.row_mut(i),
+            );
+            out.set_len(i, len);
+        }
+    }
+}
+
+/// Primal pricing of a dual vector: MaxVio of Topk(s - q) routing,
+/// entirely on arena scratch (the adaptive solver calls this once per
+/// iteration).
+fn eval_max_vio(
+    inst: &Instance,
+    q: &[f32],
+    biased: &mut Vec<f32>,
+    topk_idx: &mut Vec<u32>,
+    topk_out: &mut Vec<u32>,
+    loads: &mut Vec<u32>,
+) -> f64 {
+    let (n, m, k) = (inst.n, inst.m, inst.k);
+    biased.resize(m, 0.0);
+    topk_idx.resize(m, 0);
+    topk_out.resize(k, 0);
+    loads.resize(m, 0);
+    loads.iter_mut().for_each(|x| *x = 0);
+    for i in 0..n {
+        let row = inst.row(i);
+        for j in 0..m {
+            biased[j] = row[j] - q[j];
+        }
+        let len = topk_into(biased, k, topk_idx, topk_out);
+        for &e in &topk_out[..len] {
+            loads[e as usize] += 1;
+        }
+    }
+    let mean = n as f64 * k as f64 / m as f64;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    *loads.iter().max().unwrap_or(&0) as f64 / mean - 1.0
+}
+
+fn transpose_serial(inst: &Instance, scores_t: &mut [f32]) {
+    let (n, m) = (inst.n, inst.m);
+    for i in 0..n {
+        let row = inst.row(i);
+        for j in 0..m {
+            scores_t[j * n + i] = row[j];
+        }
+    }
+}
+
+fn transpose_parallel(
+    inst: &Instance,
+    scores_t: &mut [f32],
+    pool: &Pool,
+) {
+    let (n, m) = (inst.n, inst.m);
+    let chunks = chunk_count(m, pool.threads());
+    let t_ptr = SendPtr(scores_t.as_mut_ptr());
+    let job = |c: usize| {
+        let (j0, j1) = chunk_range(m, chunks, c);
+        for i in 0..n {
+            let row = inst.row(i);
+            for j in j0..j1 {
+                // SAFETY: column blocks [j0*n, j1*n) are disjoint per c
+                unsafe { *t_ptr.0.add(j * n + i) = row[j] };
+            }
+        }
+    };
+    pool.scoped_run(chunks, &job);
+}
+
+fn p_phase_serial(
+    inst: &Instance,
+    q: &[f32],
+    p: &mut [f32],
+    keys: &mut [u32],
+    kk: usize,
+) {
+    let m = inst.m;
+    for i in 0..inst.n {
+        let row = inst.row(i);
+        let krow = &mut keys[i * m..(i + 1) * m];
+        for j in 0..m {
+            krow[j] = f32_order_key(row[j] - q[j]);
+        }
+        p[i] = kth_largest_keys(krow, kk).max(0.0);
+    }
+}
+
+fn p_phase_parallel(
+    inst: &Instance,
+    q: &[f32],
+    p: &mut [f32],
+    keys: &mut [u32],
+    kk: usize,
+    pool: &Pool,
+) {
+    let (n, m) = (inst.n, inst.m);
+    let chunks = chunk_count(n, pool.threads());
+    let p_ptr = SendPtr(p.as_mut_ptr());
+    let k_ptr = SendPtr(keys.as_mut_ptr());
+    let job = |c: usize| {
+        let (i0, i1) = chunk_range(n, chunks, c);
+        for i in i0..i1 {
+            let row = inst.row(i);
+            // SAFETY: row ranges [i0, i1) are disjoint per chunk, and
+            // key row i belongs to exactly one row chunk
+            let krow = unsafe {
+                std::slice::from_raw_parts_mut(k_ptr.0.add(i * m), m)
+            };
+            for j in 0..m {
+                krow[j] = f32_order_key(row[j] - q[j]);
+            }
+            unsafe {
+                *p_ptr.0.add(i) = kth_largest_keys(krow, kk).max(0.0)
+            };
+        }
+    };
+    pool.scoped_run(chunks, &job);
+}
+
+/// Whether an expert column sits out this iteration of the q-phase
+/// (adaptive pruning): calm for long enough, and not a recheck turn.
+#[inline]
+fn column_is_lazy(calm: Option<&[u32]>, j: usize, t: usize) -> bool {
+    match calm {
+        Some(calm) => {
+            calm[j] >= ADAPTIVE_CALM_NEED && t % ADAPTIVE_RECHECK != 0
+        }
+        None => false,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn q_phase_serial(
+    n: usize,
+    m: usize,
+    scores_t: &[f32],
+    p: &[f32],
+    q: &mut [f32],
+    keys: &mut [u32],
+    cc: usize,
+    calm: Option<&[u32]>,
+    t: usize,
+) {
+    for j in 0..m {
+        if column_is_lazy(calm, j, t) {
+            continue;
+        }
+        let col = &scores_t[j * n..(j + 1) * n];
+        let kcol = &mut keys[j * n..(j + 1) * n];
+        for i in 0..n {
+            kcol[i] = f32_order_key(col[i] - p[i]);
+        }
+        q[j] = kth_largest_keys(kcol, cc).max(0.0);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn q_phase_parallel(
+    n: usize,
+    m: usize,
+    scores_t: &[f32],
+    p: &[f32],
+    q: &mut [f32],
+    keys: &mut [u32],
+    cc: usize,
+    calm: Option<&[u32]>,
+    t: usize,
+    pool: &Pool,
+) {
+    let chunks = chunk_count(m, pool.threads());
+    let q_ptr = SendPtr(q.as_mut_ptr());
+    let k_ptr = SendPtr(keys.as_mut_ptr());
+    let job = |c: usize| {
+        let (j0, j1) = chunk_range(m, chunks, c);
+        for j in j0..j1 {
+            if column_is_lazy(calm, j, t) {
+                continue;
+            }
+            let col = &scores_t[j * n..(j + 1) * n];
+            // SAFETY: column ranges [j0, j1) are disjoint per chunk
+            let kcol = unsafe {
+                std::slice::from_raw_parts_mut(k_ptr.0.add(j * n), n)
+            };
+            for i in 0..n {
+                kcol[i] = f32_order_key(col[i] - p[i]);
+            }
+            unsafe {
+                *q_ptr.0.add(j) = kth_largest_keys(kcol, cc).max(0.0)
+            };
+        }
+    };
+    pool.scoped_run(chunks, &job);
+}
+
+/// How many chunks [`chunk_range`] splits `n` items into for `threads`
+/// workers (same arithmetic as [`chunk_bounds`], allocation-free).
+pub(crate) fn chunk_count(n: usize, threads: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let chunks = threads.clamp(1, n);
+    let size = (n + chunks - 1) / chunks;
+    (n + size - 1) / size
+}
+
+/// The `c`-th contiguous `[start, end)` range of `n` items split into
+/// `chunks` near-equal pieces (never empty, covers exactly `0..n` —
+/// pinned against [`chunk_bounds`] by the tests).
+pub(crate) fn chunk_range(
+    n: usize,
+    chunks: usize,
+    c: usize,
+) -> (usize, usize) {
+    let size = (n + chunks - 1) / chunks;
+    let a = c * size;
+    (a, (a + size).min(n))
 }
 
 /// Contiguous `[start, end)` ranges splitting `n` items into at most
 /// `chunks` near-equal pieces (never empty, covers exactly `0..n`).
+/// Kept as the allocating reference for [`chunk_range`]; the hot path
+/// computes ranges arithmetically instead.
+#[cfg(test)]
 fn chunk_bounds(n: usize, chunks: usize) -> Vec<(usize, usize)> {
-    if n == 0 {
-        return Vec::new();
-    }
-    let chunks = chunks.clamp(1, n);
-    let size = (n + chunks - 1) / chunks;
-    (0..n)
-        .step_by(size)
-        .map(|a| (a, (a + size).min(n)))
-        .collect()
+    let count = chunk_count(n, chunks);
+    (0..count).map(|c| chunk_range(n, count, c)).collect()
 }
 
 /// One-shot convenience: T iterations from cold start, then route.
@@ -354,6 +789,23 @@ mod tests {
     }
 
     #[test]
+    fn chunk_range_agrees_with_chunk_bounds() {
+        // the no-alloc path computes ranges arithmetically; it must
+        // reproduce the allocating reference exactly
+        for (n, threads) in [(10usize, 3usize), (1, 4), (16, 16),
+                             (257, 4), (5, 1), (64, 5), (63, 8)] {
+            let bounds = chunk_bounds(n, threads);
+            let count = chunk_count(n, threads);
+            assert_eq!(bounds.len(), count, "n={n} threads={threads}");
+            for (c, &want) in bounds.iter().enumerate() {
+                assert_eq!(chunk_range(n, count, c), want,
+                           "n={n} threads={threads} chunk {c}");
+            }
+        }
+        assert_eq!(chunk_count(0, 3), 0);
+    }
+
+    #[test]
     fn parallel_update_is_bit_identical_to_serial() {
         // the tentpole equivalence claim: chunked p/q phases produce
         // exactly the serial duals and routing, across seeds, T values,
@@ -389,13 +841,27 @@ mod tests {
     #[test]
     fn state_bytes_count_every_persistent_buffer() {
         let mut state = DualState::new(16);
-        // before any batch: just q
+        // before any batch: just q (p and the fallback arena are empty)
         assert_eq!(state.state_bytes(), 16 * 4);
         let inst = synth(0, 128, 16, 4, 2.0);
         state.update(&inst, 2);
-        // q + p + scores_t + row/col quickselect scratch, all 4-byte
-        let expect = (16 + 128 + 128 * 16) * 4 + (16 + 128) * 4;
+        // q + p, plus the fallback arena's batch scratch: the (m, n)
+        // transpose and the n*m order-key buffer, all 4-byte. Any newly
+        // added DualState or batch-scratch field must be counted in
+        // state_bytes AND here, or this exact equality fails.
+        let expect = (16 + 128) * 4 + 2 * (128 * 16) * 4;
         assert_eq!(state.state_bytes(), expect);
+
+        // the serving seam leaves the fallback arena untouched: a
+        // state driven via update_in reports only its own q + p, and
+        // the shared arena is accounted once by the router
+        let mut shared = ScoreArena::new();
+        let mut lean = DualState::new(16);
+        lean.update_in(&inst, 2, &mut shared);
+        assert_eq!(lean.state_bytes(), (16 + 128) * 4);
+        assert_eq!(shared.state_bytes(), 2 * (128 * 16) * 4);
+        assert_eq!(lean.q, state.q);
+        assert_eq!(lean.p, state.p);
     }
 
     #[test]
@@ -407,5 +873,135 @@ mod tests {
             routing.assignment.iter().map(|a| a.len()).sum::<usize>(),
             inst.n * inst.k
         );
+    }
+
+    #[test]
+    fn route_into_matches_route() {
+        let mut state = DualState::new(16);
+        let inst = synth(9, 128, 16, 4, 3.0);
+        state.update(&inst, 4);
+        let mut arena = ScoreArena::new();
+        let mut buf = AssignmentBuf::new();
+        state.route_into(&inst, &mut arena, &mut buf);
+        assert_eq!(
+            buf.to_routing().assignment,
+            state.route(&inst).assignment
+        );
+    }
+
+    #[test]
+    fn adaptive_tol_zero_is_bit_identical_to_fixed_t() {
+        // the tentpole pinning claim, serial and pooled, across seeded
+        // skewed/uniform instances and warm-started streams
+        let pool = Pool::new(3);
+        for seed in [0u64, 7, 21] {
+            for skew in [0.0, 3.0] {
+                for t_max in [1usize, 4, 24] {
+                    let mut fixed = DualState::new(16);
+                    let mut adapt = DualState::new(16);
+                    let mut padapt = DualState::new(16);
+                    for b in 0..3 {
+                        let inst = synth(
+                            7000 + 100 * seed + b,
+                            257,
+                            16,
+                            4,
+                            skew,
+                        );
+                        fixed.update(&inst, t_max);
+                        let iters =
+                            adapt.update_adaptive(&inst, t_max, 0.0);
+                        let mut arena = ScoreArena::new();
+                        let piters = padapt.update_adaptive_parallel_in(
+                            &inst, t_max, 0.0, &pool, &mut arena,
+                        );
+                        assert!(iters <= t_max && iters >= 1.min(t_max));
+                        assert_eq!(iters, piters,
+                                   "iter count diverged seed={seed}");
+                        assert_eq!(fixed.q, adapt.q,
+                                   "q seed={seed} skew={skew} t={t_max}");
+                        assert_eq!(fixed.p, adapt.p,
+                                   "p seed={seed} skew={skew} t={t_max}");
+                        assert_eq!(fixed.q, padapt.q,
+                                   "pooled q seed={seed} t={t_max}");
+                        assert_eq!(fixed.p, padapt.p,
+                                   "pooled p seed={seed} t={t_max}");
+                        assert_eq!(
+                            fixed.route(&inst).assignment,
+                            adapt.route(&inst).assignment
+                        );
+                    }
+                }
+            }
+        }
+        pool.join();
+    }
+
+    #[test]
+    fn adaptive_tolerance_bounds_the_maxvio_gap() {
+        // python-validated margins (3.2x-25x headroom over 30 seeds):
+        // the adaptive solver never lands more than tol above the
+        // fixed-T MaxVio on the paper's gate sizes, while saving a
+        // large share of the iterations
+        let t_max = 16usize;
+        for (n, tol) in [(1024usize, 0.05f32), (1024, 0.1), (256, 0.1)] {
+            for skew in [0.0, 3.0] {
+                for seed in [0u64, 1, 2, 3] {
+                    let mut fixed = DualState::new(16);
+                    let mut adapt = DualState::new(16);
+                    let mut total_iters = 0usize;
+                    for b in 0..4 {
+                        let inst = synth(
+                            9000 + 100 * seed + b,
+                            n,
+                            16,
+                            4,
+                            skew,
+                        );
+                        fixed.update(&inst, t_max);
+                        total_iters +=
+                            adapt.update_adaptive(&inst, t_max, tol);
+                        let vf = fixed
+                            .route(&inst)
+                            .max_violation(&inst);
+                        let va = adapt
+                            .route(&inst)
+                            .max_violation(&inst);
+                        assert!(
+                            va <= vf + tol as f64,
+                            "n={n} tol={tol} skew={skew} seed={seed} \
+                             b={b}: adaptive {va} fixed {vf}"
+                        );
+                    }
+                    assert!(
+                        total_iters < 4 * t_max,
+                        "adaptive never early-exited (n={n} tol={tol} \
+                         skew={skew} seed={seed})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_is_bit_identical_serial_vs_parallel_at_positive_tol() {
+        let pool = Pool::new(3);
+        for seed in [2u64, 13] {
+            let mut serial = DualState::new(16);
+            let mut parallel = DualState::new(16);
+            let mut sa = ScoreArena::new();
+            let mut pa = ScoreArena::new();
+            for b in 0..3 {
+                let inst = synth(5500 + 10 * seed + b, 511, 16, 4, 3.0);
+                let si = serial
+                    .update_adaptive_in(&inst, 16, 0.05, &mut sa);
+                let pi = parallel.update_adaptive_parallel_in(
+                    &inst, 16, 0.05, &pool, &mut pa,
+                );
+                assert_eq!(si, pi, "iters seed={seed} b={b}");
+                assert_eq!(serial.q, parallel.q, "seed={seed} b={b}");
+            }
+        }
+        pool.join();
     }
 }

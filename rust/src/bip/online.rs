@@ -9,7 +9,7 @@
 //! This is the variant §5.1 proposes for multi-slot online matching /
 //! recommendation; the `matching` module drives it on an ad-slot workload.
 
-use crate::util::stats::{kth_largest_in_place, topk_indices};
+use crate::util::stats::{kth_largest_in_place, topk_indices, topk_into};
 
 /// Bounded min-heap holding the `bound` largest values ever pushed.
 /// Answers min (the bound-th largest) and second-min in O(1).
@@ -159,7 +159,33 @@ impl OnlineGate {
             .into_iter()
             .map(|e| e as u32)
             .collect();
+        self.refine_and_absorb(scores);
+        chosen
+    }
 
+    /// Allocation-free [`OnlineGate::route_token`]: the chosen experts
+    /// go into `out[..len]` using the caller's `idx` scratch
+    /// (`idx.len() == m`). Identical decisions and identical dual/heap
+    /// updates — the top-k comparator is a total order, so both paths
+    /// select the same set in the same order.
+    pub fn route_token_into(
+        &mut self,
+        scores: &[f32],
+        idx: &mut [u32],
+        out: &mut [u32],
+    ) -> usize {
+        assert_eq!(scores.len(), self.m);
+        for j in 0..self.m {
+            self.scratch[j] = scores[j] - self.q[j];
+        }
+        let len = topk_into(&self.scratch, self.k, idx, out);
+        self.refine_and_absorb(scores);
+        len
+    }
+
+    /// Lines 7-14 for one token: the T-iteration dual refinement, then
+    /// absorb the reduced scores into every expert's top-heap.
+    fn refine_and_absorb(&mut self, scores: &[f32]) {
         let kk = (self.k + 1).min(self.m);
         let mut p = 0.0f32;
         for _ in 0..self.t_iters {
@@ -180,7 +206,6 @@ impl OnlineGate {
         for j in 0..self.m {
             self.heaps[j].push(scores[j] - p);
         }
-        chosen
     }
 
     /// Contents of every expert's top-heap (unordered), for replica

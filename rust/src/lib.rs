@@ -13,7 +13,9 @@
 //!   router), the `trace/` record/replay subsystem (binary routing
 //!   traces, deterministic replay, counterfactual policy diffs), and
 //!   the `forecast/` subsystem (per-expert load forecasting, proactive
-//!   dual warm-start, predictive admission + autoscaling).
+//!   dual warm-start, predictive admission + autoscaling), and the
+//!   `perf/` subsystem (shared score-arena for the zero-allocation
+//!   serving hot path + counting allocator backing `bench_hotpath`).
 //!   Python never runs on the training or serving path.
 //! * **L2 (`python/compile/model.py`)** — Minimind-style MoE transformer
 //!   (fwd/bwd/AdamW) with the three routing modes (Loss-Controlled,
@@ -33,6 +35,7 @@ pub mod forecast;
 pub mod matching;
 pub mod metrics;
 pub mod parallel;
+pub mod perf;
 pub mod routing;
 pub mod runtime;
 pub mod serve;

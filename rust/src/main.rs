@@ -124,6 +124,9 @@ fn print_help() {
                  [--batch N] [--queue N] [--max-wait-us U] [--slo-ms MS]\n\
                  [--capacity-factor F] [--devices D] [--placement\n\
                  block|lpt] [--lpt-refresh BATCHES] [--seed N]\n\
+                 [--solver-tol TOL] [--solver-t-max N] (adaptive\n\
+                 Algorithm 1 for bip/bip-predictive: early-exit at\n\
+                 TOL, iteration cap N; TOL 0 = fixed-T)\n\
                  [--replicas R] [--threads T] [--sync-every BATCHES]\n\
                  [--json PATH]\n\
          trace  record --out PATH [--scenario S] [--policy P]\n\
@@ -368,9 +371,10 @@ fn cmd_match(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "scenario", "policy", "requests", "rate", "m", "k", "layers",
-        "tenants", "t", "buckets", "batch", "queue", "max-wait-us",
-        "slo-ms", "capacity-factor", "devices", "placement",
-        "lpt-refresh", "seed", "replicas", "threads", "sync-every",
+        "tenants", "t", "solver-tol", "solver-t-max", "buckets",
+        "batch", "queue", "max-wait-us", "slo-ms", "capacity-factor",
+        "devices", "placement", "lpt-refresh", "seed", "replicas",
+        "threads", "sync-every",
         "json",
     ])
     .map_err(anyhow::Error::msg)?;
@@ -570,12 +574,25 @@ fn serve_knobs(args: &Args, default_requests: usize) -> Result<ServeKnobs> {
         max_wait_us: args.u64_or("max-wait-us", 2_000),
         drop_expired: true,
     };
+    let solver_tol = args.f64_or("solver-tol", 0.0);
+    if !solver_tol.is_finite() || solver_tol < 0.0 {
+        bail!(
+            "--solver-tol must be a finite value >= 0 (got \
+             {solver_tol}); 0 keeps the fixed-T solver, > 0 enables \
+             the convergence-adaptive Algorithm 1 for the bip-batch / \
+             bip-predictive policies"
+        );
+    }
     let router = RouterConfig {
         t_iters: args.usize_or("t", 4),
         buckets: args.usize_or("buckets", 128),
         capacity_factor: args.f64_or("capacity-factor", 2.0),
         n_devices,
         lpt_refresh: lpt,
+        solver_tol,
+        // 0 follows --t; the adaptive solver typically wants a higher
+        // cap (it early-exits once converged)
+        solver_t_max: args.usize_or("solver-t-max", 0),
         ..Default::default()
     };
     let replicas = ReplicaConfig {
@@ -596,9 +613,10 @@ fn serve_knobs(args: &Args, default_requests: usize) -> Result<ServeKnobs> {
 fn cmd_trace(args: &Args) -> Result<()> {
     args.check_known(&[
         "scenario", "policy", "requests", "rate", "m", "k", "layers",
-        "tenants", "t", "buckets", "batch", "queue", "max-wait-us",
-        "slo-ms", "capacity-factor", "devices", "placement",
-        "lpt-refresh", "seed", "replicas", "threads", "sync-every",
+        "tenants", "t", "solver-tol", "solver-t-max", "buckets",
+        "batch", "queue", "max-wait-us", "slo-ms", "capacity-factor",
+        "devices", "placement", "lpt-refresh", "seed", "replicas",
+        "threads", "sync-every",
         "out", "trace", "policies", "json",
     ])
     .map_err(anyhow::Error::msg)?;
@@ -805,9 +823,10 @@ fn cmd_forecast(args: &Args) -> Result<()> {
     args.check_known(&[
         // serve-pipeline knobs (shared with `serve` / `trace record`)
         "scenario", "policy", "requests", "rate", "m", "k", "layers",
-        "tenants", "t", "buckets", "batch", "queue", "max-wait-us",
-        "slo-ms", "capacity-factor", "devices", "placement",
-        "lpt-refresh", "seed", "replicas", "threads", "sync-every",
+        "tenants", "t", "solver-tol", "solver-t-max", "buckets",
+        "batch", "queue", "max-wait-us", "slo-ms", "capacity-factor",
+        "devices", "placement", "lpt-refresh", "seed", "replicas",
+        "threads", "sync-every",
         // forecast-specific
         "trace", "model", "kind", "alpha", "beta", "gamma", "period",
         "window", "horizons", "holdout", "out", "seed-gain",

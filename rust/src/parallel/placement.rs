@@ -45,13 +45,29 @@ impl Placement {
 
     /// max device load / mean device load (>= 1; 1 = perfectly spread).
     pub fn imbalance(&self, expert_loads: &[f32]) -> f64 {
-        let loads = self.device_loads(expert_loads);
-        let total: f64 = loads.iter().sum();
+        let mut scratch = Vec::new();
+        self.imbalance_into(expert_loads, &mut scratch)
+    }
+
+    /// [`Placement::imbalance`] against caller-owned device-load
+    /// scratch — the serving hot path's allocation-free seam (the
+    /// router lends its arena's `dev_loads`).
+    pub fn imbalance_into(
+        &self,
+        expert_loads: &[f32],
+        scratch: &mut Vec<f64>,
+    ) -> f64 {
+        scratch.clear();
+        scratch.resize(self.n_devices, 0.0);
+        for (j, &l) in expert_loads.iter().enumerate() {
+            scratch[self.device_of[j] as usize] += l as f64;
+        }
+        let total: f64 = scratch.iter().sum();
         if total <= 0.0 {
             return 1.0;
         }
         let mean = total / self.n_devices as f64;
-        loads.into_iter().fold(0.0f64, f64::max) / mean
+        scratch.iter().cloned().fold(0.0f64, f64::max) / mean
     }
 
     /// Experts per device (for capacity checks).

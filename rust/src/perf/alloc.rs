@@ -1,0 +1,115 @@
+//! A counting global allocator for the zero-allocation hot-path gate.
+//!
+//! No external crates (the build is fully offline), so the counter is a
+//! thin wrapper over [`std::alloc::System`] with **thread-local**
+//! tallies: the hot-path bench and the `integration_perf` test install
+//! it with `#[global_allocator]` and measure only the calling thread,
+//! so parallel test threads and pool workers cannot pollute a
+//! measurement window.
+//!
+//! The library never installs it itself — a crate can only have one
+//! global allocator, and production binaries should not pay even the
+//! thread-local increment. Binaries that want the accounting opt in:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: bip_moe::perf::alloc::CountingAlloc = CountingAlloc;
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static FREES: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Thread-locally counting wrapper over the system allocator.
+pub struct CountingAlloc;
+
+#[inline]
+fn bump(cell: &'static std::thread::LocalKey<Cell<u64>>, by: u64) {
+    // try_with: allocator calls can outlive thread-local teardown
+    let _ = cell.try_with(|c| c.set(c.get() + by));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump(&ALLOCS, 1);
+        bump(&BYTES, layout.size() as u64);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        bump(&FREES, 1);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        // a realloc is a (potential) fresh allocation on the hot path
+        bump(&ALLOCS, 1);
+        bump(&BYTES, new_size as u64);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump(&ALLOCS, 1);
+        bump(&BYTES, layout.size() as u64);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Heap allocations (incl. reallocs) made by the current thread since
+/// the last [`reset_thread_counts`].
+pub fn thread_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// Deallocations made by the current thread since the last reset.
+pub fn thread_frees() -> u64 {
+    FREES.with(|c| c.get())
+}
+
+/// Bytes requested by the current thread since the last reset.
+pub fn thread_alloc_bytes() -> u64 {
+    BYTES.with(|c| c.get())
+}
+
+/// Zero the current thread's counters (start of a measurement window).
+pub fn reset_thread_counts() {
+    ALLOCS.with(|c| c.set(0));
+    FREES.with(|c| c.set(0));
+    BYTES.with(|c| c.set(0));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: the library's own test binary does NOT install
+    // CountingAlloc (only one global allocator is allowed per binary,
+    // and these unit tests must not tax every other test). The
+    // counters are exercised end-to-end in tests/integration_perf.rs;
+    // here we only pin the bookkeeping arithmetic.
+    #[test]
+    fn counters_reset_and_accumulate() {
+        reset_thread_counts();
+        assert_eq!(thread_allocs(), 0);
+        assert_eq!(thread_frees(), 0);
+        assert_eq!(thread_alloc_bytes(), 0);
+        bump(&super::ALLOCS, 2);
+        bump(&super::BYTES, 128);
+        bump(&super::FREES, 1);
+        assert_eq!(thread_allocs(), 2);
+        assert_eq!(thread_alloc_bytes(), 128);
+        assert_eq!(thread_frees(), 1);
+        reset_thread_counts();
+        assert_eq!(thread_allocs(), 0);
+    }
+}

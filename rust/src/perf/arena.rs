@@ -1,0 +1,243 @@
+//! The score-arena: every buffer the serving hot path needs, owned in
+//! one place and reused across micro-batches.
+//!
+//! Ownership rules (DESIGN.md `perf/`):
+//!
+//! * **One arena per [`crate::serve::ServingRouter`]** — all of a
+//!   router's layers share it, so the O(n·m) solver scratch exists once
+//!   per router instead of once per layer. Replicas each own a router
+//!   and therefore an arena; concurrent replica routing never shares an
+//!   arena.
+//! * **Handed down, never stored**: `ServingRouter::route_batch_into`
+//!   passes `&mut ScoreArena` through
+//!   `RoutingStrategy::route_batch_into` into
+//!   `bip::dual::DualState::update_in` / `update_parallel_in` /
+//!   `update_adaptive_in`. Strategies may use any buffer except
+//!   [`ScoreArena::scores`], which the router lends to the
+//!   [`crate::bip::Instance`] for the duration of the call.
+//! * **Standalone solvers own a fallback arena**: `DualState` keeps a
+//!   private arena so `dual::solve` and the trace/counterfactual paths
+//!   work without a router; the serving stack bypasses it entirely.
+//! * **Steady state is allocation-free**: every `resize` here re-uses
+//!   retained capacity once the largest batch shape has been seen. The
+//!   hot-path bench (`bench_hotpath`) and the `integration_perf` test
+//!   install a counting allocator and pin the zero.
+//!
+//! `state_bytes` counts every buffer (current lengths), so the serving
+//! report's persistent-state accounting stays honest about the arena.
+
+use crate::bip::Routing;
+
+/// Reusable scratch for score assembly, the Algorithm 1 dual solver,
+/// capacity enforcement, and device-placement accounting.
+#[derive(Clone, Debug, Default)]
+pub struct ScoreArena {
+    /// flat (n, m) batch scores the router assembles per layer; lent to
+    /// the `Instance` while a strategy routes
+    pub scores: Vec<f32>,
+    /// (m, n) column-major copy for the solver q-phase
+    pub scores_t: Vec<f32>,
+    /// n*m quickselect order-key scratch, viewed as row slices
+    /// (`[i*m..]`) by the p-phase and column slices (`[j*n..]`) by the
+    /// q-phase — one buffer serves both shapes and both the serial and
+    /// chunk-parallel paths, so the footprint never depends on which
+    /// path routed
+    pub order_keys: Vec<u32>,
+    /// m: per-token biased scores (s - q, or s + bias)
+    pub biased: Vec<f32>,
+    /// m: top-k index scratch
+    pub topk_idx: Vec<u32>,
+    /// k: top-k result scratch (adaptive-solver primal evaluation)
+    pub topk_out: Vec<u32>,
+    /// m: per-expert load counts (Loss-Free bias step, primal eval)
+    pub loads_scratch: Vec<u32>,
+    /// n_devices: device-load scratch for placement imbalance
+    pub dev_loads: Vec<f64>,
+    /// m: per-expert occupancy for capacity enforcement
+    pub occ: Vec<u32>,
+    /// k: enforced expert choices for one token
+    pub chosen: Vec<u32>,
+    /// m: previous dual vector (adaptive-solver delta tracking)
+    pub prev_q: Vec<f32>,
+    /// m: consecutive exactly-unchanged iterations per expert column
+    pub calm: Vec<u32>,
+    /// m: best-MaxVio dual snapshot the adaptive solver restores
+    pub best_q: Vec<f32>,
+}
+
+impl ScoreArena {
+    pub fn new() -> ScoreArena {
+        ScoreArena::default()
+    }
+
+    /// Size the solver-scratch buffers for an (n, m) batch. Idempotent
+    /// and allocation-free once capacity covers the largest batch.
+    pub fn prepare_batch(&mut self, n: usize, m: usize) {
+        self.scores_t.resize(n * m, 0.0);
+        self.order_keys.resize(n * m, 0);
+    }
+
+    /// Size the per-gate O(m) scratch (biased scores, top-k, loads).
+    pub fn prepare_gate(&mut self, m: usize) {
+        self.biased.resize(m, 0.0);
+        self.topk_idx.resize(m, 0);
+        self.loads_scratch.resize(m, 0);
+    }
+
+    /// Size the adaptive-solver bookkeeping and reset the calm counts
+    /// (convergence state is per `update_adaptive` call, never carried
+    /// across batches).
+    pub fn prepare_adaptive(&mut self, m: usize, k: usize) {
+        self.prev_q.resize(m, 0.0);
+        self.best_q.resize(m, 0.0);
+        self.topk_out.resize(k, 0);
+        self.calm.resize(m, 0);
+        self.calm.iter_mut().for_each(|c| *c = 0);
+    }
+
+    /// Bytes currently held across every buffer — the arena's share of
+    /// the persistent serving state (`ServingRouter::state_bytes` adds
+    /// this on top of the per-layer gate state).
+    pub fn state_bytes(&self) -> usize {
+        (self.scores.len()
+            + self.scores_t.len()
+            + self.order_keys.len()
+            + self.biased.len()
+            + self.topk_idx.len()
+            + self.topk_out.len()
+            + self.loads_scratch.len()
+            + self.occ.len()
+            + self.chosen.len()
+            + self.prev_q.len()
+            + self.calm.len()
+            + self.best_q.len())
+            * 4
+            + self.dev_loads.len() * 8
+    }
+}
+
+/// Flat, reusable routing output: token i's enforced/proposed experts
+/// live in `experts[i*k..i*k + len(i)]`. Replaces the per-token
+/// `Vec<Vec<u32>>` of [`Routing`] on the hot path — after warm-up a
+/// `reset` + per-row writes allocate nothing.
+#[derive(Clone, Debug, Default)]
+pub struct AssignmentBuf {
+    n: usize,
+    k: usize,
+    experts: Vec<u32>,
+    lens: Vec<u8>,
+}
+
+impl AssignmentBuf {
+    pub fn new() -> AssignmentBuf {
+        AssignmentBuf::default()
+    }
+
+    /// Shape the buffer for an (n, k) batch and zero every row length.
+    pub fn reset(&mut self, n: usize, k: usize) {
+        assert!(k <= u8::MAX as usize, "AssignmentBuf stores row lengths as u8");
+        self.n = n;
+        self.k = k;
+        self.experts.resize(n * k, 0);
+        self.lens.resize(n, 0);
+        self.lens.iter_mut().for_each(|l| *l = 0);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Token i's full k-wide slot row, for a strategy to write into;
+    /// follow with [`AssignmentBuf::set_len`].
+    pub fn row_mut(&mut self, i: usize) -> &mut [u32] {
+        &mut self.experts[i * self.k..(i + 1) * self.k]
+    }
+
+    pub fn set_len(&mut self, i: usize, len: usize) {
+        debug_assert!(len <= self.k);
+        self.lens[i] = len as u8;
+    }
+
+    /// Copy a whole row in (the allocating-fallback seam).
+    pub fn put(&mut self, i: usize, experts: &[u32]) {
+        let len = experts.len().min(self.k);
+        self.experts[i * self.k..i * self.k + len]
+            .copy_from_slice(&experts[..len]);
+        self.lens[i] = len as u8;
+    }
+
+    /// Token i's routed experts.
+    pub fn token(&self, i: usize) -> &[u32] {
+        &self.experts[i * self.k..i * self.k + self.lens[i] as usize]
+    }
+
+    /// Materialize as the allocating [`Routing`] (compat/test seam).
+    pub fn to_routing(&self) -> Routing {
+        Routing {
+            assignment: (0..self.n).map(|i| self.token(i).to_vec()).collect(),
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.experts.len() * 4 + self.lens.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_state_bytes_count_every_buffer() {
+        let mut a = ScoreArena::new();
+        assert_eq!(a.state_bytes(), 0);
+        a.prepare_batch(8, 4);
+        a.prepare_gate(4);
+        a.prepare_adaptive(4, 2);
+        a.dev_loads.resize(2, 0.0);
+        a.occ.resize(4, 0);
+        a.chosen.resize(2, 0);
+        a.scores.resize(8 * 4, 0.0);
+        // scores + scores_t + order_keys: 3 * n*m * 4B; biased +
+        // topk_idx + loads + occ + prev_q + calm + best_q: 7 * m * 4B;
+        // topk_out + chosen: 2 * k * 4B; dev_loads: d * 8B. Any newly
+        // added arena field must be counted here or this exact-equality
+        // check goes stale and fails.
+        let expect = 3 * 8 * 4 * 4 + 7 * 4 * 4 + 2 * 2 * 4 + 2 * 8;
+        assert_eq!(a.state_bytes(), expect);
+    }
+
+    #[test]
+    fn prepare_is_idempotent_and_resets_calm() {
+        let mut a = ScoreArena::new();
+        a.prepare_adaptive(4, 2);
+        a.calm[1] = 9;
+        a.prepare_adaptive(4, 2);
+        assert_eq!(a.calm, vec![0; 4]);
+        let bytes = a.state_bytes();
+        a.prepare_adaptive(4, 2);
+        assert_eq!(a.state_bytes(), bytes);
+    }
+
+    #[test]
+    fn assignment_buf_round_trips_rows() {
+        let mut buf = AssignmentBuf::new();
+        buf.reset(3, 2);
+        buf.put(0, &[4, 1]);
+        buf.row_mut(1).copy_from_slice(&[7, 0]);
+        buf.set_len(1, 1);
+        assert_eq!(buf.token(0), &[4, 1]);
+        assert_eq!(buf.token(1), &[7]);
+        assert_eq!(buf.token(2), &[] as &[u32]);
+        let routing = buf.to_routing();
+        assert_eq!(routing.assignment, vec![vec![4, 1], vec![7], vec![]]);
+        // reset reuses the buffers and clears stale lengths
+        buf.reset(2, 2);
+        assert_eq!(buf.token(0), &[] as &[u32]);
+        assert_eq!(buf.state_bytes(), 2 * 2 * 4 + 2);
+    }
+}

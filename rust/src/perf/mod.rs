@@ -1,0 +1,29 @@
+//! Hot-path performance substrate (ISSUE 5).
+//!
+//! The paper's §3 headline is that BIP balancing works at "very small
+//! time costs"; this module is where the serving stack earns that at
+//! the systems level:
+//!
+//! * [`arena`] — the [`ScoreArena`]: one reusable home for the flat
+//!   score matrix, the solver transpose + order-key scratch, top-K
+//!   index buffers, capacity-enforcement occupancy and
+//!   device-placement scratch, threaded from
+//!   `serve::ServingRouter::route_batch_into` through
+//!   `routing::RoutingStrategy::route_batch_into` into the Algorithm 1
+//!   dual update — so the steady-state serving hot path performs zero
+//!   heap allocations per micro-batch. [`AssignmentBuf`] is the flat
+//!   reusable replacement for the per-token `Vec<Vec<u32>>` routing
+//!   output on that path.
+//! * [`alloc`] — a thread-locally counting global allocator (std-only;
+//!   the build is offline) that `bench_hotpath` and the
+//!   `integration_perf` test install to *prove* the zero, batch after
+//!   batch, and to price the allocating baseline against it.
+//!
+//! `bench_hotpath` writes the resulting throughput/allocation/adaptive
+//! -solver record to `reports/BENCH_hotpath.json` — the repo's durable
+//! perf baseline for the routing hot path.
+
+pub mod alloc;
+pub mod arena;
+
+pub use arena::{AssignmentBuf, ScoreArena};

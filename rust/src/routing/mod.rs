@@ -11,8 +11,9 @@ use crate::bip::approx::ApproxGate;
 use crate::bip::dual::DualState;
 use crate::bip::online::OnlineGate;
 use crate::bip::{Instance, Routing};
+use crate::perf::{AssignmentBuf, ScoreArena};
 use crate::util::pool::Pool;
-use crate::util::stats::topk_indices;
+use crate::util::stats::{topk_indices, topk_into};
 
 /// Snapshot of a strategy's *mergeable* balancing state, exchanged by
 /// the replica-sharded serving engine (`serve::replica`). Every policy's
@@ -70,7 +71,28 @@ fn mean_vec(vecs: &[&[f32]]) -> Vec<f32> {
 pub trait RoutingStrategy: Send {
     fn name(&self) -> String;
     /// Route one batch, updating internal state (bias vectors etc.).
+    /// This is the allocating compatibility path (per-token `Vec`s);
+    /// the serving hot loop drives
+    /// [`RoutingStrategy::route_batch_into`] instead.
     fn route_batch(&mut self, inst: &Instance) -> Routing;
+    /// Allocation-free routing: identical decisions to
+    /// [`RoutingStrategy::route_batch`], written into the reusable
+    /// `out` buffer using `arena` scratch. Every production strategy
+    /// overrides this with a zero-allocation implementation; the
+    /// default falls back to the allocating path (correct, not fast).
+    fn route_batch_into(
+        &mut self,
+        inst: &Instance,
+        arena: &mut ScoreArena,
+        out: &mut AssignmentBuf,
+    ) {
+        let _ = arena;
+        let routing = self.route_batch(inst);
+        out.reset(inst.n, inst.k);
+        for (i, experts) in routing.assignment.iter().enumerate() {
+            out.put(i, experts);
+        }
+    }
     /// Bytes of persistent balancing state (dual vectors, heaps,
     /// histograms) — the §5.2 footprint the serving report tracks.
     fn state_bytes(&self) -> usize {
@@ -105,6 +127,25 @@ impl RoutingStrategy for Greedy {
 
     fn route_batch(&mut self, inst: &Instance) -> Routing {
         crate::bip::greedy_topk(inst)
+    }
+
+    fn route_batch_into(
+        &mut self,
+        inst: &Instance,
+        arena: &mut ScoreArena,
+        out: &mut AssignmentBuf,
+    ) {
+        arena.prepare_gate(inst.m);
+        out.reset(inst.n, inst.k);
+        for i in 0..inst.n {
+            let len = topk_into(
+                inst.row(i),
+                inst.k,
+                &mut arena.topk_idx,
+                out.row_mut(i),
+            );
+            out.set_len(i, len);
+        }
     }
 }
 
@@ -157,6 +198,20 @@ impl LossFree {
     pub fn new(m: usize, u: f32) -> Self {
         LossFree { u, bias: vec![0.0; m] }
     }
+
+    /// The per-batch sign update shared by both routing paths:
+    /// b_j += u * sign(mean - load_j) with sign(0) = 0, per Wang et
+    /// al. — f32::signum(0.0) is 1.0, which would *raise* the bias of
+    /// an expert sitting exactly at the mean load.
+    fn bias_step(&mut self, loads: &[u32], n: usize, k: usize) {
+        let mean = n as f32 * k as f32 / self.bias.len() as f32;
+        for (b, &load) in self.bias.iter_mut().zip(loads) {
+            let e = mean - load as f32;
+            if e != 0.0 {
+                *b += self.u * e.signum();
+            }
+        }
+    }
 }
 
 impl RoutingStrategy for LossFree {
@@ -180,17 +235,38 @@ impl RoutingStrategy for LossFree {
             .collect();
         let routing = Routing { assignment };
         let loads = routing.loads(inst.m);
-        let mean = inst.n as f32 * inst.k as f32 / inst.m as f32;
-        for j in 0..inst.m {
-            // b_j += u * sign(e_j) with sign(0) = 0, per Wang et al. —
-            // f32::signum(0.0) is 1.0, which would *raise* the bias of
-            // an expert sitting exactly at the mean load
-            let e = mean - loads[j] as f32;
-            if e != 0.0 {
-                self.bias[j] += self.u * e.signum();
+        self.bias_step(&loads, inst.n, inst.k);
+        routing
+    }
+
+    fn route_batch_into(
+        &mut self,
+        inst: &Instance,
+        arena: &mut ScoreArena,
+        out: &mut AssignmentBuf,
+    ) {
+        arena.prepare_gate(inst.m);
+        out.reset(inst.n, inst.k);
+        arena.loads_scratch.iter_mut().for_each(|x| *x = 0);
+        for i in 0..inst.n {
+            let row = inst.row(i);
+            for j in 0..inst.m {
+                arena.biased[j] = row[j] + self.bias[j];
+            }
+            let len = topk_into(
+                &arena.biased,
+                inst.k,
+                &mut arena.topk_idx,
+                out.row_mut(i),
+            );
+            out.set_len(i, len);
+            for &e in out.token(i) {
+                arena.loads_scratch[e as usize] += 1;
             }
         }
-        routing
+        // the same sign update as the allocating path, from the same
+        // integer load counts
+        self.bias_step(&arena.loads_scratch, inst.n, inst.k);
     }
 
     fn state_bytes(&self) -> usize {
@@ -240,49 +316,127 @@ impl RoutingStrategy for LossFree {
 /// iterations per batch. With a shared thread pool attached, the
 /// per-batch dual update runs the chunked p/q phases
 /// ([`DualState::update_parallel`]) — bit-identical to the serial path.
+/// With `tol > 0` the per-batch solve is the convergence-adaptive
+/// [`DualState::update_adaptive`] capped at `t_iters` iterations.
 pub struct Bip {
     pub t_iters: usize,
+    /// adaptive-solver tolerance (`--solver-tol`); 0 = fixed-T solve
+    pub tol: f32,
+    /// iterations the most recent batch actually ran (= `t_iters` on
+    /// the fixed path; the bench reads this for the savings record)
+    pub last_iters: usize,
     state: Option<DualState>,
     pool: Option<Arc<Pool>>,
 }
 
 impl Bip {
     pub fn new(t_iters: usize) -> Self {
-        Bip { t_iters, state: None, pool: None }
+        Bip {
+            t_iters,
+            tol: 0.0,
+            last_iters: 0,
+            state: None,
+            pool: None,
+        }
     }
 
     pub fn with_pool(t_iters: usize, pool: Arc<Pool>) -> Self {
-        Bip { t_iters, state: None, pool: Some(pool) }
+        Bip { pool: Some(pool), ..Bip::new(t_iters) }
+    }
+
+    /// Enable the convergence-adaptive solver (`tol > 0`); `tol = 0`
+    /// restores the fixed-T path bit-identically.
+    pub fn set_solver_tol(&mut self, tol: f32) {
+        assert!(tol.is_finite() && tol >= 0.0, "solver tol {tol}");
+        self.tol = tol;
     }
 
     pub fn q(&self) -> Option<&[f32]> {
         self.state.as_ref().map(|s| s.q.as_slice())
     }
+
+    /// One per-batch dual solve against the given arena, honoring the
+    /// pool and tolerance knobs; records the iterations run. The
+    /// compat path routes through here too (with the state's fallback
+    /// arena), so the dispatch exists once.
+    fn solve_batch(&mut self, inst: &Instance, arena: &mut ScoreArena) {
+        let t = self.t_iters;
+        let tol = self.tol;
+        let state = self
+            .state
+            .get_or_insert_with(|| DualState::new(inst.m));
+        self.last_iters =
+            dispatch_solve(state, self.pool.as_deref(), inst, t, tol, arena);
+    }
+}
+
+/// The one (pool, tol) -> solver-mode dispatch both `Bip` entry points
+/// share: fixed-T or convergence-adaptive, serial or pool-chunked.
+/// Returns the iterations run.
+fn dispatch_solve(
+    state: &mut DualState,
+    pool: Option<&Pool>,
+    inst: &Instance,
+    t: usize,
+    tol: f32,
+    arena: &mut ScoreArena,
+) -> usize {
+    match (pool, tol > 0.0) {
+        (Some(pool), true) => {
+            state.update_adaptive_parallel_in(inst, t, tol, pool, arena)
+        }
+        (Some(pool), false) => {
+            state.update_parallel_in(inst, t, pool, arena);
+            t
+        }
+        (None, true) => state.update_adaptive_in(inst, t, tol, arena),
+        (None, false) => {
+            state.update_in(inst, t, arena);
+            t
+        }
+    }
 }
 
 impl RoutingStrategy for Bip {
     fn name(&self) -> String {
-        format!("bip(T={})", self.t_iters)
+        if self.tol > 0.0 {
+            format!("bip(T<={},tol={})", self.t_iters, self.tol)
+        } else {
+            format!("bip(T={})", self.t_iters)
+        }
     }
 
     fn route_batch(&mut self, inst: &Instance) -> Routing {
+        let t = self.t_iters;
+        let tol = self.tol;
+        let pool = self.pool.clone();
         let state = self
             .state
             .get_or_insert_with(|| DualState::new(inst.m));
-        match &self.pool {
-            Some(pool) => {
-                state.update_parallel(inst, self.t_iters, pool)
-            }
-            None => state.update(inst, self.t_iters),
-        }
+        self.last_iters = state.with_fallback_arena(|s, a| {
+            dispatch_solve(s, pool.as_deref(), inst, t, tol, a)
+        });
         state.route(inst)
     }
 
+    fn route_batch_into(
+        &mut self,
+        inst: &Instance,
+        arena: &mut ScoreArena,
+        out: &mut AssignmentBuf,
+    ) {
+        self.solve_batch(inst, arena);
+        self.state
+            .as_ref()
+            .expect("solved above")
+            .route_into(inst, arena, out);
+    }
+
     fn state_bytes(&self) -> usize {
-        // every persistent buffer, not just q + p: Algorithm 1 retains
-        // an O(n·m) transposed score copy + scratch between batches,
-        // which is exactly the footprint the serving report contrasts
-        // with Alg 3/4's bounded state
+        // q + p, plus whatever the state's *fallback* arena retains —
+        // the full O(n·m) footprint when Algorithm 1 runs standalone.
+        // On the serving path the shared arena is counted once at the
+        // router level instead (`ServingRouter::state_bytes`).
         self.state.as_ref().map(|s| s.state_bytes()).unwrap_or(0)
     }
 
@@ -361,8 +515,25 @@ impl PredictiveBip {
         PredictiveBip { inner: Bip::with_pool(t_iters, pool), seed }
     }
 
+    /// Forwarded [`Bip::set_solver_tol`].
+    pub fn set_solver_tol(&mut self, tol: f32) {
+        self.inner.set_solver_tol(tol);
+    }
+
     pub fn q(&self) -> Option<&[f32]> {
         self.inner.q()
+    }
+
+    /// Install the pending constructor seed if it matches this gate's
+    /// width (a misshapen forecast degrades to cold start, never a
+    /// panic) and nothing has routed or seeded the duals yet.
+    fn consume_seed(&mut self, m: usize) {
+        if !self.seed.is_empty() {
+            let seed = std::mem::take(&mut self.seed);
+            if seed.len() == m && self.inner.q().is_none() {
+                self.inner.seed_state(&BalanceState::Dual(seed));
+            }
+        }
     }
 }
 
@@ -372,16 +543,18 @@ impl RoutingStrategy for PredictiveBip {
     }
 
     fn route_batch(&mut self, inst: &Instance) -> Routing {
-        // install the pending seed only if it matches this gate's width
-        // (a misshapen forecast degrades to cold start, never a panic)
-        // and nothing has routed or seeded the duals yet
-        if !self.seed.is_empty() {
-            let seed = std::mem::take(&mut self.seed);
-            if seed.len() == inst.m && self.inner.q().is_none() {
-                self.inner.seed_state(&BalanceState::Dual(seed));
-            }
-        }
+        self.consume_seed(inst.m);
         self.inner.route_batch(inst)
+    }
+
+    fn route_batch_into(
+        &mut self,
+        inst: &Instance,
+        arena: &mut ScoreArena,
+        out: &mut AssignmentBuf,
+    ) {
+        self.consume_seed(inst.m);
+        self.inner.route_batch_into(inst, arena, out);
     }
 
     fn state_bytes(&self) -> usize {
@@ -428,6 +601,24 @@ impl RoutingStrategy for OnlineBip {
             .map(|i| self.gate.route_token(inst.row(i)))
             .collect();
         Routing { assignment }
+    }
+
+    fn route_batch_into(
+        &mut self,
+        inst: &Instance,
+        arena: &mut ScoreArena,
+        out: &mut AssignmentBuf,
+    ) {
+        arena.prepare_gate(self.gate.m);
+        out.reset(inst.n, inst.k);
+        for i in 0..inst.n {
+            let len = self.gate.route_token_into(
+                inst.row(i),
+                &mut arena.topk_idx,
+                out.row_mut(i),
+            );
+            out.set_len(i, len);
+        }
     }
 
     fn state_bytes(&self) -> usize {
@@ -533,6 +724,24 @@ impl RoutingStrategy for ApproxBip {
             .map(|i| self.gate.route_token(inst.row(i)))
             .collect();
         Routing { assignment }
+    }
+
+    fn route_batch_into(
+        &mut self,
+        inst: &Instance,
+        arena: &mut ScoreArena,
+        out: &mut AssignmentBuf,
+    ) {
+        arena.prepare_gate(self.gate.m);
+        out.reset(inst.n, inst.k);
+        for i in 0..inst.n {
+            let len = self.gate.route_token_into(
+                inst.row(i),
+                &mut arena.topk_idx,
+                out.row_mut(i),
+            );
+            out.set_len(i, len);
+        }
     }
 
     fn state_bytes(&self) -> usize {
@@ -730,14 +939,82 @@ mod tests {
         let mut bip = Bip::new(2);
         assert_eq!(bip.state_bytes(), 0);
         bip.route_batch(&insts[0]);
-        // the full Algorithm 1 footprint: q + p + the O(n·m) transposed
-        // score copy + quickselect scratch (not just q + p)
+        // the full standalone Algorithm 1 footprint: q + p plus the
+        // fallback arena's O(n·m) transpose + order-key scratch
         let (n, m) = (insts[0].n, insts[0].m);
-        let expect = (m + n + n * m) * 4 + (m + n) * 4;
+        let expect = (m + n) * 4 + 2 * (n * m) * 4;
         assert_eq!(bip.state_bytes(), expect);
-        // and it dwarfs the online gates' bounded state, which is the
-        // §5.2 comparison the serving report draws
-        assert!(bip.state_bytes() > online.state_bytes());
+        // and it dwarfs Algorithm 4's constant-space sketch, which is
+        // the §5.2 comparison the serving report draws
+        assert!(bip.state_bytes() > approx.state_bytes());
+    }
+
+    #[test]
+    fn route_batch_into_matches_route_batch_for_every_strategy() {
+        use crate::perf::{AssignmentBuf, ScoreArena};
+        // the zero-allocation path must take identical decisions AND
+        // leave identical balancer state as the allocating path, batch
+        // after warm-started batch
+        let insts = batches(41, 4);
+        let (m, k, cap) = (16usize, 4usize, 1024usize);
+        let make = || -> Vec<Box<dyn RoutingStrategy>> {
+            vec![
+                Box::new(Greedy),
+                Box::new(LossFree::new(m, 1e-2)),
+                Box::new(Bip::new(3)),
+                Box::new(PredictiveBip::new(3, vec![0.1; m])),
+                Box::new(OnlineBip::new(m, k, cap, 3)),
+                Box::new(ApproxBip::new(m, k, cap, 3, 64)),
+            ]
+        };
+        let mut compat = make();
+        let mut fast = make();
+        let mut arena = ScoreArena::new();
+        let mut buf = AssignmentBuf::new();
+        for inst in &insts {
+            for (a, b) in compat.iter_mut().zip(fast.iter_mut()) {
+                let want = a.route_batch(inst);
+                b.route_batch_into(inst, &mut arena, &mut buf);
+                assert_eq!(
+                    buf.to_routing().assignment,
+                    want.assignment,
+                    "{} diverged",
+                    a.name()
+                );
+                match (a.export_state(), b.export_state()) {
+                    (BalanceState::None, BalanceState::None) => {}
+                    (sa, sb) => {
+                        assert_eq!(sa.primary(), sb.primary(),
+                                   "{} state diverged", a.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_bip_strategy_reports_iteration_savings() {
+        let insts = batches(42, 6);
+        let mut adaptive = Bip::new(16);
+        adaptive.set_solver_tol(0.05);
+        assert!(adaptive.name().contains("tol=0.05"), "{}", adaptive.name());
+        assert!(adaptive.name().contains("T<=16"), "{}", adaptive.name());
+        let mut total = 0usize;
+        for inst in &insts {
+            adaptive.route_batch(inst);
+            assert!(adaptive.last_iters >= 1);
+            assert!(adaptive.last_iters <= 16);
+            total += adaptive.last_iters;
+        }
+        assert!(
+            total < 6 * 16,
+            "adaptive never early-exited ({total} iters)"
+        );
+        // fixed-T keeps the plain name and runs every iteration
+        let mut fixed = Bip::new(16);
+        fixed.route_batch(&insts[0]);
+        assert_eq!(fixed.last_iters, 16);
+        assert!(fixed.name().contains("T=16"));
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::bip::Instance;
 use crate::metrics::maxvio::BalanceTracker;
 use crate::parallel::placement::{greedy_placement, Placement};
 use crate::parallel::Mesh;
+use crate::perf::{AssignmentBuf, ScoreArena};
 use crate::routing::{
     ApproxBip, BalanceState, Bip, Greedy, LossFree, OnlineBip,
     PredictiveBip, RoutingStrategy,
@@ -120,6 +121,20 @@ pub struct RouterConfig {
     pub lpt_refresh: Option<u64>,
     /// Loss-Free bias step size
     pub lossfree_u: f32,
+    /// Convergence-adaptive Algorithm 1 tolerance (`--solver-tol`):
+    /// with `> 0`, the bip-batch/bip-predictive per-batch solve
+    /// early-exits once the duals go quiet and the routed MaxVio stops
+    /// improving (never more than `solver_tol` above the fixed-T
+    /// result on the paper's gate sizes — pinned by the dual tests).
+    /// 0 keeps the fixed-T solver bit-identically.
+    pub solver_tol: f64,
+    /// Iteration cap for the adaptive solver (`--solver-t-max`): the
+    /// Algorithm 1 T used by bip-batch/bip-predictive layers when
+    /// both it and `solver_tol` are `> 0`; otherwise `t_iters`
+    /// governs (the fixed-T path ignores this knob entirely).
+    /// Online/approx gates always use `t_iters` (their per-token
+    /// refinement has no batch fixpoint to detect).
+    pub solver_t_max: usize,
 }
 
 impl Default for RouterConfig {
@@ -135,12 +150,16 @@ impl Default for RouterConfig {
             n_devices: 4,
             lpt_refresh: None,
             lossfree_u: 1e-2,
+            solver_tol: 0.0,
+            solver_t_max: 0,
         }
     }
 }
 
-/// Per-batch routing outcome the simulator consumes.
-#[derive(Clone, Debug)]
+/// Per-batch routing outcome the simulator consumes. `Default` is the
+/// empty outcome callers reuse across batches
+/// ([`ServingRouter::route_batch_into`] refills every field).
+#[derive(Clone, Debug, Default)]
 pub struct BatchOutcome {
     /// row-major (n_layers, m) routed loads
     pub loads: Vec<f32>,
@@ -173,6 +192,12 @@ pub struct ServingRouter {
     /// collect per-token post-enforcement assignments into
     /// [`BatchOutcome::assignment`] (trace recording); off by default
     pub capture_assignments: bool,
+    /// one score-arena shared by every layer: the O(n·m) solver
+    /// scratch exists once per router, and the steady-state hot path
+    /// allocates nothing (`perf::arena` ownership rules)
+    arena: ScoreArena,
+    /// reusable per-layer routing output (replaces per-token `Vec`s)
+    assignment: AssignmentBuf,
 }
 
 impl ServingRouter {
@@ -198,8 +223,23 @@ impl ServingRouter {
             cfg.lpt_refresh.map_or(true, |n| n > 0),
             "lpt_refresh must be >= 1 batch"
         );
+        assert!(
+            cfg.solver_tol.is_finite() && cfg.solver_tol >= 0.0,
+            "solver_tol must be finite and >= 0, got {}",
+            cfg.solver_tol
+        );
         let gate_cap =
             (cfg.expected_stream * cfg.k / cfg.m).max(1);
+        // the adaptive solver's iteration cap (bip-batch/predictive
+        // only); 0 follows the shared t_iters knob, and with the
+        // adaptive solver disabled (solver_tol = 0) the cap is
+        // ignored entirely — --t alone governs the fixed-T path
+        let bip_t = if cfg.solver_tol > 0.0 && cfg.solver_t_max > 0 {
+            cfg.solver_t_max
+        } else {
+            cfg.t_iters
+        };
+        let bip_tol = cfg.solver_tol as f32;
         let layers: Vec<Box<dyn RoutingStrategy>> = (0..cfg.n_layers)
             .map(|_| -> Box<dyn RoutingStrategy> {
                 match policy {
@@ -207,26 +247,32 @@ impl ServingRouter {
                     Policy::LossFree => {
                         Box::new(LossFree::new(cfg.m, cfg.lossfree_u))
                     }
-                    Policy::BipBatch => match &pool {
-                        Some(p) => Box::new(Bip::with_pool(
-                            cfg.t_iters,
-                            p.clone(),
-                        )),
-                        None => Box::new(Bip::new(cfg.t_iters)),
-                    },
+                    Policy::BipBatch => {
+                        let mut bip = match &pool {
+                            Some(p) => {
+                                Bip::with_pool(bip_t, p.clone())
+                            }
+                            None => Bip::new(bip_t),
+                        };
+                        bip.set_solver_tol(bip_tol);
+                        Box::new(bip)
+                    }
                     // constructed cold (empty seed, == BipBatch);
                     // `seed_layers` installs the forecast duals
-                    Policy::Predictive => match &pool {
-                        Some(p) => Box::new(PredictiveBip::with_pool(
-                            cfg.t_iters,
-                            Vec::new(),
-                            p.clone(),
-                        )),
-                        None => Box::new(PredictiveBip::new(
-                            cfg.t_iters,
-                            Vec::new(),
-                        )),
-                    },
+                    Policy::Predictive => {
+                        let mut pred = match &pool {
+                            Some(p) => PredictiveBip::with_pool(
+                                bip_t,
+                                Vec::new(),
+                                p.clone(),
+                            ),
+                            None => {
+                                PredictiveBip::new(bip_t, Vec::new())
+                            }
+                        };
+                        pred.set_solver_tol(bip_tol);
+                        Box::new(pred)
+                    }
                     Policy::Online => Box::new(OnlineBip::new(
                         cfg.m, cfg.k, gate_cap, cfg.t_iters,
                     )),
@@ -239,6 +285,9 @@ impl ServingRouter {
         let placement =
             Placement::block(&Mesh::new(cfg.n_devices, cfg.m));
         let balance = BalanceTracker::new(cfg.n_layers, 0, cfg.k);
+        let mut arena = ScoreArena::new();
+        arena.dev_loads.resize(cfg.n_devices, 0.0);
+        arena.occ.resize(cfg.m, 0);
         ServingRouter {
             cum_loads: vec![0.0; cfg.m],
             cfg,
@@ -251,6 +300,8 @@ impl ServingRouter {
             balance,
             imbalance: Summary::new(),
             capture_assignments: false,
+            arena,
+            assignment: AssignmentBuf::new(),
         }
     }
 
@@ -270,9 +321,14 @@ impl ServingRouter {
             .max(1.0) as usize
     }
 
-    /// Persistent balancing state across all layers, bytes.
+    /// Persistent balancing + routing-scratch state, bytes: every
+    /// layer's gate state, plus the shared score-arena and the
+    /// reusable assignment buffer (counted once per router — the
+    /// layers share them).
     pub fn state_bytes(&self) -> usize {
-        self.layers.iter().map(|l| l.state_bytes()).sum()
+        self.layers.iter().map(|l| l.state_bytes()).sum::<usize>()
+            + self.arena.state_bytes()
+            + self.assignment.state_bytes()
     }
 
     /// Micro-batches routed so far.
@@ -316,7 +372,25 @@ impl ServingRouter {
     }
 
     /// Route one micro-batch through every layer, enforcing capacity.
+    /// Allocating convenience over [`ServingRouter::route_batch_into`]
+    /// (the replicated engine and the trace tooling use it; the
+    /// single-server event loop and the benches reuse one outcome).
     pub fn route_batch(&mut self, batch: &[Request]) -> BatchOutcome {
+        let mut out = BatchOutcome::default();
+        self.route_batch_into(batch, &mut out);
+        out
+    }
+
+    /// The zero-allocation hot path: identical routing, enforcement
+    /// and accounting, written into a caller-reused outcome. In steady
+    /// state (warm arena, no LPT refresh due, capture off) this makes
+    /// no heap allocation — `bench_hotpath` and `integration_perf`
+    /// install a counting allocator and pin the zero for every policy.
+    pub fn route_batch_into(
+        &mut self,
+        batch: &[Request],
+        out: &mut BatchOutcome,
+    ) {
         let (m, k, n_layers) = (self.cfg.m, self.cfg.k, self.cfg.n_layers);
         let n = batch.len();
         assert!(n > 0);
@@ -335,77 +409,107 @@ impl ServingRouter {
             }
         }
         let cap = self.batch_cap(n);
-        let mut loads = vec![0.0f32; n_layers * m];
+        out.loads.clear();
+        out.loads.resize(n_layers * m, 0.0);
+        out.assignment = None;
         let mut overflow = 0u64;
         let mut degraded = 0u64;
         let mut imbalance_sum = 0.0;
-        let mut occ = vec![0u32; m];
-        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        self.arena.occ.resize(m, 0);
         let mut captured: Option<Vec<Vec<Vec<u16>>>> = self
             .capture_assignments
             .then(|| Vec::with_capacity(n_layers));
 
         for l in 0..n_layers {
-            let mut scores = Vec::with_capacity(n * m);
+            self.arena.scores.clear();
+            self.arena.scores.reserve(n * m);
             for r in batch {
-                scores.extend_from_slice(r.layer_scores(l, m));
+                self.arena
+                    .scores
+                    .extend_from_slice(r.layer_scores(l, m));
             }
-            let inst = Instance { n, m, k, cap, scores };
-            let routing = self.layers[l].route_batch(&inst);
+            // lend the arena's score buffer to the Instance for the
+            // duration of the strategy call (moved back below)
+            let inst = Instance {
+                n,
+                m,
+                k,
+                cap,
+                scores: std::mem::take(&mut self.arena.scores),
+            };
+            self.layers[l].route_batch_into(
+                &inst,
+                &mut self.arena,
+                &mut self.assignment,
+            );
 
-            occ.iter_mut().for_each(|o| *o = 0);
+            self.arena.occ.iter_mut().for_each(|o| *o = 0);
             let mut layer_cap: Option<Vec<Vec<u16>>> = captured
                 .is_some()
                 .then(|| Vec::with_capacity(n));
-            for (i, experts) in routing.assignment.iter().enumerate() {
-                chosen.clear();
-                for &e in experts.iter().take(k) {
-                    let e = e as usize;
-                    if occ[e] < cap as u32 && !chosen.contains(&e) {
-                        chosen.push(e);
-                        occ[e] += 1;
+            for i in 0..n {
+                self.arena.chosen.clear();
+                for &e in self.assignment.token(i).iter().take(k) {
+                    if self.arena.occ[e as usize] < cap as u32
+                        && !self.arena.chosen.contains(&e)
+                    {
+                        self.arena.chosen.push(e);
+                        self.arena.occ[e as usize] += 1;
                         continue;
                     }
                     // full (or duplicate): reroute to the best-scoring
                     // expert that still has room
                     overflow += 1;
                     let row = inst.row(i);
-                    let mut best: Option<usize> = None;
-                    for j in 0..m {
-                        if occ[j] < cap as u32
-                            && !chosen.contains(&j)
-                            && best.map_or(true, |b| row[j] > row[b])
+                    let mut best: Option<u32> = None;
+                    for j in 0..m as u32 {
+                        if self.arena.occ[j as usize] < cap as u32
+                            && !self.arena.chosen.contains(&j)
+                            && best.map_or(true, |b| {
+                                row[j as usize] > row[b as usize]
+                            })
                         {
                             best = Some(j);
                         }
                     }
                     match best {
                         Some(j) => {
-                            chosen.push(j);
-                            occ[j] += 1;
+                            self.arena.chosen.push(j);
+                            self.arena.occ[j as usize] += 1;
                         }
                         None => degraded += 1,
                     }
                 }
                 if let Some(lc) = layer_cap.as_mut() {
-                    lc.push(chosen.iter().map(|&e| e as u16).collect());
+                    lc.push(
+                        self.arena
+                            .chosen
+                            .iter()
+                            .map(|&e| e as u16)
+                            .collect(),
+                    );
                 }
-                let lrow = &mut loads[l * m..(l + 1) * m];
-                for &e in &chosen {
-                    lrow[e] += 1.0;
+                let lrow = &mut out.loads[l * m..(l + 1) * m];
+                for &e in &self.arena.chosen {
+                    lrow[e as usize] += 1.0;
                 }
             }
             if let Some(all) = captured.as_mut() {
                 all.push(layer_cap.take().expect("capture is on"));
             }
-            let lrow = &loads[l * m..(l + 1) * m];
-            imbalance_sum += self.placement.imbalance(lrow);
+            let lrow = &out.loads[l * m..(l + 1) * m];
+            imbalance_sum += self
+                .placement
+                .imbalance_into(lrow, &mut self.arena.dev_loads);
             for (j, &x) in lrow.iter().enumerate() {
                 self.cum_loads[j] += x as f64;
             }
+            // return the lent score buffer to the arena
+            let Instance { scores, .. } = inst;
+            self.arena.scores = scores;
         }
 
-        self.balance.push_batch_sized(&loads, m, n);
+        self.balance.push_batch_sized(&out.loads, m, n);
         let batch_vio = *self.balance.global_series.last().unwrap() as f64;
         let device_imbalance = imbalance_sum / n_layers as f64;
         self.imbalance.push(device_imbalance);
@@ -413,14 +517,11 @@ impl ServingRouter {
         self.degraded_total += degraded;
         self.batches += 1;
 
-        BatchOutcome {
-            loads,
-            batch_vio,
-            overflow,
-            degraded,
-            device_imbalance,
-            assignment: captured,
-        }
+        out.batch_vio = batch_vio;
+        out.overflow = overflow;
+        out.degraded = degraded;
+        out.device_imbalance = device_imbalance;
+        out.assignment = captured;
     }
 }
 
@@ -594,12 +695,80 @@ mod tests {
     }
 
     #[test]
-    fn state_bytes_sum_layers() {
+    fn state_bytes_sum_layers_plus_arena() {
         let mut r = router(Policy::Approx);
         assert!(r.state_bytes() > 0);
-        let reqs = requests(Scenario::Steady, 64, 7);
-        let before = r.state_bytes();
-        r.route_batch(&reqs);
-        assert_eq!(r.state_bytes(), before); // Alg 4: constant space
+        let reqs = requests(Scenario::Steady, 2 * 64, 7);
+        // the shared arena sizes itself to the first batch shape...
+        r.route_batch(&reqs[..64]);
+        let warm = r.state_bytes();
+        // ...then the footprint is constant batch over batch (Alg 4's
+        // gate state is constant-space, and the arena is warm)
+        r.route_batch(&reqs[64..]);
+        assert_eq!(r.state_bytes(), warm);
+    }
+
+    #[test]
+    fn route_batch_into_matches_route_batch() {
+        // the reusable-outcome hot path and the allocating convenience
+        // must agree on every policy, batch after batch — loads, vio,
+        // overflow accounting, the lot
+        let reqs = requests(Scenario::Adversarial, 3 * 64, 12);
+        for policy in Policy::all() {
+            let mut a = router(policy);
+            let mut b = router(policy);
+            let mut out = super::BatchOutcome::default();
+            for chunk in reqs.chunks(64) {
+                let want = a.route_batch(chunk);
+                b.route_batch_into(chunk, &mut out);
+                assert_eq!(out.loads, want.loads, "{policy:?}");
+                assert_eq!(out.batch_vio, want.batch_vio, "{policy:?}");
+                assert_eq!(out.overflow, want.overflow, "{policy:?}");
+                assert_eq!(out.degraded, want.degraded, "{policy:?}");
+                assert_eq!(
+                    out.device_imbalance, want.device_imbalance,
+                    "{policy:?}"
+                );
+                assert!(out.assignment.is_none());
+            }
+            assert_eq!(a.state_bytes(), b.state_bytes(), "{policy:?}");
+            assert_eq!(a.overflow_total, b.overflow_total);
+        }
+    }
+
+    #[test]
+    fn solver_tol_keeps_capacity_and_tracks_fixed_t_balance() {
+        // --solver-tol wiring: the adaptive bip-batch router stays
+        // capacity-feasible and lands within tol of the fixed-T
+        // balance on a skewed stream (the dual tests pin the tight
+        // margins; this is the serving-level integration)
+        let reqs = requests(Scenario::Steady, 8 * 64, 13);
+        let run = |tol: f64, t_max: usize| {
+            let mut r = ServingRouter::new(
+                Policy::BipBatch,
+                RouterConfig {
+                    // t_iters drives the fixed path (tol = 0);
+                    // solver_t_max caps the adaptive one (tol > 0)
+                    t_iters: t_max,
+                    solver_tol: tol,
+                    solver_t_max: t_max,
+                    ..Default::default()
+                },
+            );
+            for chunk in reqs.chunks(64) {
+                let out = r.route_batch(chunk);
+                let cap = r.batch_cap(64) as f32;
+                for &load in &out.loads {
+                    assert!(load <= cap, "load {load} > cap {cap}");
+                }
+            }
+            r.balance.avg_max_vio()
+        };
+        let fixed = run(0.0, 16);
+        let adaptive = run(0.1, 16);
+        assert!(
+            adaptive <= fixed + 0.1,
+            "adaptive {adaptive} fixed {fixed}"
+        );
     }
 }

@@ -153,6 +153,9 @@ pub(crate) fn run_scenario_hooked(
     let mut slo = SloTracker::new(cfg.traffic.slo_us);
     let mut completions = Vec::new();
     let mut first_batch_vio: Option<f64> = None;
+    // one outcome reused across the run: with no recorder attached the
+    // routing hot path makes zero steady-state heap allocations
+    let mut outcome = super::router::BatchOutcome::default();
 
     let mut now: u64 = 0;
     let mut server_free: u64 = 0;
@@ -185,7 +188,7 @@ pub(crate) fn run_scenario_hooked(
         if now >= server_free && batcher.ready(now) {
             let batch = batcher.take_batch(now);
             if !batch.is_empty() {
-                let mut outcome = router.route_batch(&batch);
+                router.route_batch_into(&batch, &mut outcome);
                 first_batch_vio.get_or_insert(outcome.batch_vio);
                 let service_us = serve_cost
                     .batch_us(

@@ -38,7 +38,12 @@ use crate::serve::{
 use crate::util::json::Json;
 
 pub const TRACE_MAGIC: [u8; 4] = *b"BIPT";
-pub const TRACE_VERSION: u32 = 1;
+/// v2 appends the adaptive-solver knobs (`solver_tol`,
+/// `solver_t_max`) to the router block of the meta header — they
+/// change routing, so a faithful replay must rebuild them. Readers
+/// still accept v1 (the knobs default to 0/0, which is exactly the
+/// fixed-T solver every v1 run used).
+pub const TRACE_VERSION: u32 = 2;
 
 /// Everything needed to re-drive the recorded run: the exact serving
 /// configuration (traffic, scheduler, router, policy) plus the replica
@@ -86,6 +91,10 @@ pub struct TraceFrame {
 /// the replica sync events, and the completion log.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Trace {
+    /// Format version this trace was read with (or [`TRACE_VERSION`]
+    /// for freshly recorded traces) — kept so JSON exports report the
+    /// on-disk version, not the reader's.
+    pub version: u32,
     pub meta: TraceMeta,
     pub arrivals: Vec<Request>,
     pub frames: Vec<TraceFrame>,
@@ -160,15 +169,15 @@ impl Trace {
             bail!("not a bip-moe trace (bad magic {:02x?})", magic);
         }
         let version = r.u32()?;
-        if version != TRACE_VERSION {
+        if version == 0 || version > TRACE_VERSION {
             bail!(
                 "unsupported trace version {version} (this build reads \
-                 version {TRACE_VERSION})"
+                 versions 1..={TRACE_VERSION})"
             );
         }
 
         let mut mb = r.block()?;
-        let meta = read_meta(&mut mb)?;
+        let meta = read_meta(&mut mb, version)?;
 
         let n = r.u64()? as usize;
         let mut arrivals = Vec::with_capacity(n.min(1 << 16));
@@ -224,7 +233,7 @@ impl Trace {
             });
         }
 
-        Ok(Trace { meta, arrivals, frames, syncs, completions })
+        Ok(Trace { version, meta, arrivals, frames, syncs, completions })
     }
 
     /// Number of bytes written.
@@ -249,7 +258,7 @@ impl Trace {
         let rc = &self.meta.replicas;
         Json::obj(vec![
             ("format", Json::Str("bip-moe-trace".into())),
-            ("version", Json::Num(TRACE_VERSION as f64)),
+            ("version", Json::Num(self.version as f64)),
             (
                 "meta",
                 Json::obj(vec![
@@ -478,6 +487,8 @@ fn write_meta(w: &mut ByteWriter, meta: &TraceMeta) {
     // 0 encodes None (Some(0) is rejected by the router's constructor)
     w.u64(r.lpt_refresh.unwrap_or(0));
     w.f32(r.lossfree_u);
+    w.f64(r.solver_tol);
+    w.u64(r.solver_t_max as u64);
 
     w.str(meta.serve.policy.name());
 
@@ -487,7 +498,7 @@ fn write_meta(w: &mut ByteWriter, meta: &TraceMeta) {
     w.u64(rc.sync_every);
 }
 
-fn read_meta(b: &mut ByteReader) -> Result<TraceMeta> {
+fn read_meta(b: &mut ByteReader, version: u32) -> Result<TraceMeta> {
     let scenario_name = b.str()?;
     let scenario = Scenario::parse(&scenario_name)
         .ok_or_else(|| anyhow!("unknown trace scenario {scenario_name}"))?;
@@ -524,6 +535,10 @@ fn read_meta(b: &mut ByteReader) -> Result<TraceMeta> {
             n => Some(n),
         },
         lossfree_u: b.f32()?,
+        // v1 predates the adaptive solver: every v1 run used the
+        // fixed-T path, which 0/0 rebuilds bit-faithfully
+        solver_tol: if version >= 2 { b.f64()? } else { 0.0 },
+        solver_t_max: if version >= 2 { b.u64()? as usize } else { 0 },
     };
     let policy_name = b.str()?;
     let policy = Policy::parse(&policy_name)
@@ -719,6 +734,8 @@ mod tests {
             RouterConfig {
                 lpt_refresh: Some(5),
                 capacity_factor: 1.5,
+                solver_tol: 0.0625,
+                solver_t_max: 24,
                 ..Default::default()
             },
             Policy::Approx,
@@ -729,9 +746,41 @@ mod tests {
         let mut w = ByteWriter::new();
         write_meta(&mut w, &meta);
         let mut r = ByteReader::new(&w.buf);
-        let back = read_meta(&mut r).unwrap();
+        let back = read_meta(&mut r, TRACE_VERSION).unwrap();
         assert_eq!(back, meta);
         assert!(back.is_replicated());
+    }
+
+    #[test]
+    fn v1_meta_without_solver_knobs_still_reads() {
+        // a v1 trace header ends at lossfree_u + policy + replicas;
+        // the reader must default the appended v2 solver knobs to the
+        // fixed-T configuration instead of rejecting the trace
+        let cfg = ServeConfig::new(
+            TrafficConfig::default(),
+            SchedulerConfig::default(),
+            RouterConfig { solver_tol: 0.5, solver_t_max: 9, ..Default::default() },
+            Policy::Online,
+        );
+        let rcfg = ReplicaConfig::default();
+        let meta = TraceMeta::new(&cfg, &rcfg);
+        let mut w = ByteWriter::new();
+        write_meta(&mut w, &meta);
+        // carve the v2 buffer into v1 shape by dropping the 16 solver
+        // bytes (f64 solver_tol + u64 solver_t_max), which sit between
+        // lossfree_u and the trailing policy string (u32 len + bytes)
+        // + replicas block (3 u64s = 24 bytes)
+        let tail = 24 + 4 + meta.serve.policy.name().len();
+        let cut = w.buf.len() - tail - 16;
+        let mut buf = w.buf[..cut].to_vec();
+        buf.extend_from_slice(&w.buf[w.buf.len() - tail..]);
+        let mut r = ByteReader::new(&buf);
+        let back = read_meta(&mut r, 1).unwrap();
+        assert_eq!(back.serve.router.solver_tol, 0.0);
+        assert_eq!(back.serve.router.solver_t_max, 0);
+        assert_eq!(back.serve.router.m, meta.serve.router.m);
+        assert_eq!(back.serve.policy, meta.serve.policy);
+        assert_eq!(back.replicas, meta.replicas);
     }
 
     #[test]

@@ -28,6 +28,7 @@ impl TraceRecorder {
         );
         TraceRecorder {
             trace: Trace {
+                version: super::format::TRACE_VERSION,
                 meta: TraceMeta::new(cfg, rcfg),
                 arrivals: Vec::new(),
                 frames: Vec::new(),

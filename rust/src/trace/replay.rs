@@ -378,6 +378,7 @@ mod tests {
             Policy::Online,
         );
         Trace {
+            version: crate::trace::format::TRACE_VERSION,
             meta: TraceMeta::new(&cfg, &ReplicaConfig::default()),
             arrivals: Vec::new(),
             frames: Vec::new(),

@@ -20,6 +20,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -316,6 +317,14 @@ impl Pool {
     /// drop-guards (panics included) and run under `catch_unwind`, so
     /// no unwind can escape a job while the erased borrow is live; the
     /// first panic is re-raised here once all jobs have settled.
+    ///
+    /// Dispatch is a broadcast: at most `min(n, threads)` jobs are
+    /// enqueued (one heap box each — the Algorithm 1 hot path calls
+    /// this 2T times per batch, so the old one-box-per-index scheme
+    /// was measurable churn), and the jobs pull indices from a shared
+    /// atomic cursor. A panicking index stops only its own puller; the
+    /// remaining jobs drain the rest of the index space, and the first
+    /// panic payload is re-raised here after the batch settles.
     pub fn scoped_run<F>(&self, n: usize, f: &F)
     where
         F: Fn(usize) + Sync,
@@ -326,19 +335,30 @@ impl Pool {
             _ => {}
         }
         let latch = Latch::new();
+        let next = AtomicUsize::new(0);
+        let jobs = n.min(self.threads);
         let fp = f as *const F as usize;
-        for i in 0..n {
+        let np = &next as *const AtomicUsize as usize;
+        for _ in 0..jobs {
             let latch = latch.clone();
             self.spawn_or_run(Box::new(move || {
                 run_counted(&latch, || {
-                    // SAFETY: `fp` outlives every job — scoped_run only
-                    // returns after the latch counts all n completions
+                    // SAFETY: `fp` and `np` outlive every job —
+                    // scoped_run only returns after the latch counts
+                    // all `jobs` completions
                     let f = unsafe { &*(fp as *const F) };
-                    f(i);
+                    let next = unsafe { &*(np as *const AtomicUsize) };
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        f(i);
+                    }
                 });
             }));
         }
-        self.wait(&latch, n);
+        self.wait(&latch, jobs);
         Self::rethrow(&latch);
     }
 
@@ -461,6 +481,23 @@ mod tests {
         pool.scoped_run(7, &f);
         let total: usize = partial.lock().unwrap().iter().sum();
         assert_eq!(total, 100 * 99 / 2);
+        pool.join();
+    }
+
+    #[test]
+    fn scoped_run_covers_every_index_exactly_once() {
+        // broadcast dispatch: min(n, threads) pullers must still visit
+        // the whole index space exactly once
+        let pool = Pool::new(2);
+        let hits: Vec<AtomicUsize> =
+            (0..100).map(|_| AtomicUsize::new(0)).collect();
+        let f = |i: usize| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        };
+        pool.scoped_run(100, &f);
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
         pool.join();
     }
 

@@ -120,6 +120,42 @@ pub fn kth_largest_keys(v: &mut [u32], k: usize) -> f32 {
     f32_from_order_key(*v.select_nth_unstable(idx).1)
 }
 
+/// Allocation-free [`topk_indices`]: writes the indices of the k
+/// largest values (descending, ties to the lower index) into
+/// `out[..k]` using `idx` as index scratch (`idx.len() == xs.len()`).
+/// Returns the number written (`k.min(xs.len())`). The comparator is a
+/// total order (ties broken by index), so the selected set — and after
+/// the final sort, the output — is the unique top-k: bit-identical to
+/// [`topk_indices`] by construction, which the tests pin.
+pub fn topk_into(
+    xs: &[f32],
+    k: usize,
+    idx: &mut [u32],
+    out: &mut [u32],
+) -> usize {
+    debug_assert_eq!(idx.len(), xs.len());
+    let k = k.min(xs.len());
+    if k == 0 {
+        return 0;
+    }
+    for (i, slot) in idx.iter_mut().enumerate() {
+        *slot = i as u32;
+    }
+    let cmp = |&a: &u32, &b: &u32| {
+        xs[b as usize]
+            .partial_cmp(&xs[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    };
+    idx.select_nth_unstable_by(k - 1, cmp);
+    let top = &mut idx[..k];
+    // total order => unstable sort yields the same output as a stable
+    // one, without sort_by's allocation
+    top.sort_unstable_by(cmp);
+    out[..k].copy_from_slice(top);
+    k
+}
+
 /// Indices of the k largest values, descending, ties broken by lower index
 /// (matches jax.lax.top_k / the L1 gate kernel).
 pub fn topk_indices(xs: &[f32], k: usize) -> Vec<usize> {
@@ -248,6 +284,27 @@ mod tests {
     fn topk_tie_break_lower_index() {
         let xs = [0.5f32, 0.9, 0.9, 0.1];
         assert_eq!(topk_indices(&xs, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn topk_into_is_bit_identical_to_topk_indices() {
+        let mut rng = Pcg64::new(17);
+        for _ in 0..200 {
+            let n = 1 + rng.below(40) as usize;
+            // duplicate-heavy values exercise the tie-break
+            let xs: Vec<f32> = (0..n)
+                .map(|_| (rng.below(8) as f32) / 8.0)
+                .collect();
+            let k = rng.below(n as u64 + 2) as usize; // includes 0, > n
+            let mut idx = vec![0u32; n];
+            let mut out = vec![u32::MAX; n.max(k)];
+            let wrote = topk_into(&xs, k, &mut idx, &mut out);
+            let want = topk_indices(&xs, k);
+            assert_eq!(wrote, want.len());
+            let got: Vec<usize> =
+                out[..wrote].iter().map(|&e| e as usize).collect();
+            assert_eq!(got, want, "xs {xs:?} k {k}");
+        }
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Zero-allocation hot-path integration (ISSUE 5).
+//!
+//! This test binary installs the counting global allocator
+//! (`perf::alloc::CountingAlloc` — thread-local tallies, so the
+//! harness's parallel test threads cannot pollute each other) and pins
+//! the tentpole claim end-to-end: after warm-up,
+//! `ServingRouter::route_batch_into` makes **zero heap allocations per
+//! micro-batch** for every policy, and the arena path takes decisions
+//! bit-identical to the allocating compatibility path.
+
+use bip_moe::perf::alloc::{
+    reset_thread_counts, thread_allocs, CountingAlloc,
+};
+use bip_moe::perf::{AssignmentBuf, ScoreArena};
+use bip_moe::serve::{
+    BatchOutcome, Policy, Request, RouterConfig, Scenario,
+    ServingRouter, TrafficConfig, TrafficGenerator,
+};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn requests(n: usize, seed: u64) -> Vec<Request> {
+    TrafficGenerator::new(TrafficConfig {
+        scenario: Scenario::Steady,
+        n_requests: n,
+        seed,
+        ..Default::default()
+    })
+    .collect()
+}
+
+#[test]
+fn steady_state_route_batch_is_zero_alloc_for_every_policy() {
+    let batch = requests(64, 3);
+    for policy in Policy::all() {
+        let mut router =
+            ServingRouter::new(policy, RouterConfig::default());
+        let mut out = BatchOutcome::default();
+        // warm-up: arena capacity + the balance tracker's series
+        // vectors settle (70 pushes => capacity 128, so the 40-call
+        // window below cannot trigger an amortized doubling)
+        for _ in 0..70 {
+            router.route_batch_into(&batch, &mut out);
+        }
+        reset_thread_counts();
+        for _ in 0..40 {
+            router.route_batch_into(&batch, &mut out);
+        }
+        let allocs = thread_allocs();
+        assert_eq!(
+            allocs, 0,
+            "{policy:?}: {allocs} steady-state allocations in 40 \
+             batches — the arena hot path must not touch the heap"
+        );
+    }
+}
+
+#[test]
+fn adaptive_solver_path_is_zero_alloc_too() {
+    let batch = requests(64, 5);
+    let mut router = ServingRouter::new(
+        Policy::BipBatch,
+        RouterConfig {
+            solver_tol: 0.05,
+            solver_t_max: 16,
+            ..Default::default()
+        },
+    );
+    let mut out = BatchOutcome::default();
+    for _ in 0..70 {
+        router.route_batch_into(&batch, &mut out);
+    }
+    reset_thread_counts();
+    for _ in 0..40 {
+        router.route_batch_into(&batch, &mut out);
+    }
+    assert_eq!(
+        thread_allocs(),
+        0,
+        "adaptive Algorithm 1 must stay allocation-free in steady state"
+    );
+}
+
+#[test]
+fn ragged_batches_stay_zero_alloc_once_the_largest_shape_is_warm() {
+    // micro-batches shrink under load spikes; a smaller batch must
+    // never re-allocate arena capacity sized by a larger one
+    let reqs = requests(256, 7);
+    let mut router =
+        ServingRouter::new(Policy::BipBatch, RouterConfig::default());
+    let mut out = BatchOutcome::default();
+    for _ in 0..70 {
+        router.route_batch_into(&reqs[..128], &mut out);
+    }
+    reset_thread_counts();
+    for &(a, b) in
+        &[(0usize, 128usize), (0, 17), (17, 20), (20, 148), (148, 212)]
+    {
+        router.route_batch_into(&reqs[a..b], &mut out);
+    }
+    assert_eq!(thread_allocs(), 0, "ragged steady state allocated");
+}
+
+#[test]
+fn arena_and_compat_paths_agree_end_to_end() {
+    let reqs = requests(4 * 64, 9);
+    for policy in Policy::all() {
+        let mut compat =
+            ServingRouter::new(policy, RouterConfig::default());
+        let mut arena =
+            ServingRouter::new(policy, RouterConfig::default());
+        let mut out = BatchOutcome::default();
+        for chunk in reqs.chunks(64) {
+            let want = compat.route_batch(chunk);
+            arena.route_batch_into(chunk, &mut out);
+            assert_eq!(out.loads, want.loads, "{policy:?}");
+            assert_eq!(out.batch_vio, want.batch_vio, "{policy:?}");
+            assert_eq!(out.overflow, want.overflow, "{policy:?}");
+        }
+        assert_eq!(
+            compat.balance.avg_max_vio(),
+            arena.balance.avg_max_vio(),
+            "{policy:?}"
+        );
+    }
+}
+
+#[test]
+fn solver_scratch_reuse_is_allocation_free_at_the_dual_level() {
+    use bip_moe::bip::dual::DualState;
+    use bip_moe::bip::Instance;
+    use bip_moe::util::rng::Pcg64;
+
+    let mut rng = Pcg64::new(11);
+    let insts: Vec<Instance> = (0..8)
+        .map(|_| Instance::synthetic(256, 16, 4, 2.0, 3.0, &mut rng))
+        .collect();
+    let mut state = DualState::new(16);
+    let mut arena = ScoreArena::new();
+    let mut buf = AssignmentBuf::new();
+    // warm
+    for inst in &insts[..4] {
+        state.update_in(inst, 4, &mut arena);
+        state.route_into(inst, &mut arena, &mut buf);
+    }
+    reset_thread_counts();
+    for inst in &insts[4..] {
+        state.update_in(inst, 4, &mut arena);
+        state.route_into(inst, &mut arena, &mut buf);
+    }
+    assert_eq!(thread_allocs(), 0, "dual update/route allocated");
+}
