@@ -19,13 +19,26 @@
 //!     `--solver-tol`-style adaptive Algorithm 1 vs the fixed-T solver
 //!     at equal t_max, quantifying iteration savings at equal balance;
 //!   * **replica scaling** — wall-clock micro-batch throughput of the
-//!     replicated engine at R ∈ {1, 2, 4} on the same arena path.
+//!     replicated engine at R ∈ {1, 2, 4} on the same arena path;
+//!   * **telemetry overhead** — route_batch with the global metrics
+//!     registry enabled vs disabled (the ISSUE-6 < 2% claim,
+//!     informational);
+//!   * **regression history** — before overwriting
+//!     reports/BENCH_hotpath.json, the previous record's per-row arena
+//!     tokens/sec are loaded and a delta table + geomean ratio is
+//!     printed; a geomean below 0.90 fails the bench (the CI perf
+//!     gate) unless the baseline is the committed seed placeholder
+//!     (`"seeded_placeholder": true`, warn-only) or
+//!     BIP_MOE_PERF_GATE=off|warn overrides it.
 //!
 //! BIP_MOE_FULL=1 widens the sweep.
+
+use std::collections::BTreeMap;
 
 use bip_moe::bench::{write_bench_json, Bencher};
 use bip_moe::bip::{dual::DualState, Instance};
 use bip_moe::metrics::maxvio::BalanceTracker;
+use bip_moe::metrics::TablePrinter;
 use bip_moe::parallel::placement::Placement;
 use bip_moe::parallel::Mesh;
 use bip_moe::perf::alloc::{
@@ -40,6 +53,7 @@ use bip_moe::serve::{
     SchedulerConfig, Scenario, ServeConfig, ServingRouter,
     TrafficConfig, TrafficGenerator,
 };
+use bip_moe::telemetry;
 use bip_moe::util::json::Json;
 use bip_moe::util::rng::Pcg64;
 
@@ -184,6 +198,49 @@ impl BaselineRouter {
     }
 }
 
+/// The previous BENCH_hotpath.json's arena tokens/sec per route row
+/// (keyed `"<policy> n=N m=M k=K"`), read BEFORE this run overwrites
+/// the record, plus whether that baseline is the committed seed
+/// placeholder (warn-only for the perf gate).
+fn load_prev_baseline() -> Option<(BTreeMap<String, f64>, bool)> {
+    let dir = std::env::var("BIP_MOE_REPORTS")
+        .unwrap_or_else(|_| "reports".into());
+    let path = std::path::Path::new(&dir).join("BENCH_hotpath.json");
+    let body = std::fs::read_to_string(&path).ok()?;
+    let doc = Json::parse(&body).ok()?;
+    let placeholder = doc
+        .path("seeded_placeholder")
+        .and_then(|j| j.as_bool())
+        .unwrap_or(false);
+    let mut rows = BTreeMap::new();
+    if let Some(sections) = doc.path("results").and_then(|j| j.as_arr()) {
+        for sec in sections {
+            let Some(rb) =
+                sec.path("route_batch").and_then(|j| j.as_arr())
+            else {
+                continue;
+            };
+            for row in rb {
+                let (Some(policy), Some(n), Some(m), Some(k), Some(tps)) = (
+                    row.path("policy").and_then(|j| j.as_str()),
+                    row.path("batch").and_then(|j| j.as_f64()),
+                    row.path("m").and_then(|j| j.as_f64()),
+                    row.path("k").and_then(|j| j.as_f64()),
+                    row.path("arena_tokens_per_sec")
+                        .and_then(|j| j.as_f64()),
+                ) else {
+                    continue;
+                };
+                rows.insert(
+                    format!("{policy} n={n} m={m} k={k}"),
+                    tps,
+                );
+            }
+        }
+    }
+    Some((rows, placeholder))
+}
+
 /// Allocations per call over a post-warm-up window. The warm-up is
 /// sized so the balance tracker's unbounded series (the one amortized
 /// grower on the path) cannot double inside the window.
@@ -204,6 +261,8 @@ fn allocs_per_batch(
 
 fn main() {
     let full = std::env::var("BIP_MOE_FULL").as_deref() == Ok("1");
+    // read the previous record before anything overwrites it
+    let prev = load_prev_baseline();
     let mut sections = Vec::new();
 
     // (batch tokens, experts, top-k) gate shapes
@@ -217,6 +276,7 @@ fn main() {
 
     println!("== route_batch: arena vs pre-PR baseline (steady/skewed) ==");
     let mut rows = Vec::new();
+    let mut cur_tps: Vec<(String, f64)> = Vec::new();
     let mut zero_alloc_ok = true;
     let mut speedup_product = 1.0f64;
     let mut speedup_count = 0u32;
@@ -268,6 +328,10 @@ fn main() {
             let speedup = base_us / arena_us;
             speedup_product *= speedup;
             speedup_count += 1;
+            cur_tps.push((
+                format!("{} n={n} m={m} k={k}", policy.name()),
+                n as f64 / (arena_us / 1e6),
+            ));
             println!(
                 "  {:<14} n={n:<5} m={m:<3} k={k}: {arena_us:>8.2} us \
                  vs {base_us:>8.2} us  ({speedup:.2}x, allocs/batch \
@@ -304,6 +368,140 @@ fn main() {
         ("zero_alloc_steady_state", Json::Bool(zero_alloc_ok)),
     ]));
     println!("  speedup geomean: {speedup_geomean:.2}x");
+
+    // Regression history: delta table vs the previous record, gated on
+    // geomean throughput ratio (BIP_MOE_PERF_GATE=off|warn overrides).
+    let gate_env =
+        std::env::var("BIP_MOE_PERF_GATE").unwrap_or_default();
+    let mut regression_failed = false;
+    match &prev {
+        None => println!(
+            "\nno previous BENCH_hotpath.json — recording the first \
+             baseline"
+        ),
+        Some(_) if gate_env == "off" => println!(
+            "\nperf gate: BIP_MOE_PERF_GATE=off — regression check \
+             skipped"
+        ),
+        Some((prev_rows, placeholder)) => {
+            let mut dt = TablePrinter::new(
+                "throughput vs previous BENCH_hotpath.json (arena \
+                 tokens/sec)",
+                &["Row", "Previous", "Current", "Delta"],
+            );
+            let mut ratio_product = 1.0f64;
+            let mut matched = 0u32;
+            for (key, cur) in &cur_tps {
+                let Some(prev_v) = prev_rows.get(key) else {
+                    continue;
+                };
+                let ratio = cur / prev_v;
+                ratio_product *= ratio;
+                matched += 1;
+                dt.row(vec![
+                    key.clone(),
+                    format!("{prev_v:.0}"),
+                    format!("{cur:.0}"),
+                    format!("{:+.1}%", (ratio - 1.0) * 100.0),
+                ]);
+            }
+            if matched == 0 {
+                println!(
+                    "\nprevious BENCH_hotpath.json has no comparable \
+                     route rows{} — gate skipped",
+                    if *placeholder { " (seeded placeholder)" } else { "" }
+                );
+            } else {
+                println!();
+                dt.print();
+                let geomean =
+                    ratio_product.powf(1.0 / matched as f64);
+                println!(
+                    "  geomean throughput ratio: {geomean:.3} over \
+                     {matched} row(s) (gate fails below 0.90)"
+                );
+                sections.push(Json::obj(vec![(
+                    "regression",
+                    Json::obj(vec![
+                        ("geomean_ratio", Json::Num(geomean)),
+                        ("rows_compared", Json::Num(matched as f64)),
+                        ("gate_threshold", Json::Num(0.90)),
+                        (
+                            "baseline_placeholder",
+                            Json::Bool(*placeholder),
+                        ),
+                    ]),
+                )]));
+                if geomean < 0.90 {
+                    if *placeholder {
+                        eprintln!(
+                            "perf gate WARNING: geomean {geomean:.3} < \
+                             0.90 vs the seeded placeholder baseline — \
+                             not failing"
+                        );
+                    } else if gate_env == "warn" {
+                        eprintln!(
+                            "perf gate WARNING: geomean {geomean:.3} < \
+                             0.90 (BIP_MOE_PERF_GATE=warn — not \
+                             failing)"
+                        );
+                    } else {
+                        eprintln!(
+                            "perf gate FAILED: geomean tokens/sec \
+                             ratio {geomean:.3} < 0.90 vs the previous \
+                             record"
+                        );
+                        regression_failed = true;
+                    }
+                }
+            }
+        }
+    }
+
+    // Telemetry overhead: the same arena route loop with the global
+    // registry live vs compiled to early returns (set_enabled(false)).
+    // Informational — ISSUE 6's acceptance asks for < 2%.
+    println!("\n== telemetry overhead: registry on vs off ==");
+    {
+        let (n, m, k) = (256usize, 16usize, 4usize);
+        let batch = batch_of(n, m, k, 17);
+        let mut bench = Bencher::default();
+        let mut r_on = ServingRouter::new(Policy::Online, router_cfg(m, k));
+        let mut out_on = bip_moe::serve::BatchOutcome::default();
+        telemetry::set_enabled(true);
+        let on_us = bench
+            .bench("route online n=256 [telemetry on]", || {
+                r_on.route_batch_into(&batch, &mut out_on);
+            })
+            .secs_per_iter
+            .mean
+            * 1e6;
+        let mut r_off =
+            ServingRouter::new(Policy::Online, router_cfg(m, k));
+        let mut out_off = bip_moe::serve::BatchOutcome::default();
+        telemetry::set_enabled(false);
+        let off_us = bench
+            .bench("route online n=256 [telemetry off]", || {
+                r_off.route_batch_into(&batch, &mut out_off);
+            })
+            .secs_per_iter
+            .mean
+            * 1e6;
+        telemetry::set_enabled(true);
+        let overhead_pct = (on_us / off_us - 1.0) * 100.0;
+        println!(
+            "  on {on_us:.2} us vs off {off_us:.2} us per batch \
+             ({overhead_pct:+.2}%)"
+        );
+        sections.push(Json::obj(vec![(
+            "telemetry_overhead",
+            Json::obj(vec![
+                ("on_us_per_batch", Json::Num(on_us)),
+                ("off_us_per_batch", Json::Num(off_us)),
+                ("overhead_pct", Json::Num(overhead_pct)),
+            ]),
+        )]));
+    }
 
     // Adaptive Algorithm 1: iteration savings at equal MaxVio. The
     // solver regime (tight cap = n*k/m) on a warm-started skewed
@@ -405,11 +603,19 @@ fn main() {
         }
     }
 
-    if !zero_alloc_ok {
-        eprintln!(
-            "bench_hotpath FAILED: steady-state allocations detected \
-             on the arena path"
-        );
+    if !zero_alloc_ok || regression_failed {
+        if !zero_alloc_ok {
+            eprintln!(
+                "bench_hotpath FAILED: steady-state allocations \
+                 detected on the arena path"
+            );
+        }
+        if regression_failed {
+            eprintln!(
+                "bench_hotpath FAILED: throughput regressed past the \
+                 10% geomean gate"
+            );
+        }
         std::process::exit(1);
     }
     println!("zero-alloc steady state: OK (every policy, every shape)");

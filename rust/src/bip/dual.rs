@@ -37,6 +37,7 @@
 
 use super::{Instance, Routing};
 use crate::perf::{AssignmentBuf, ScoreArena};
+use crate::telemetry;
 use crate::util::pool::Pool;
 use crate::util::stats::{
     f32_order_key, kth_largest_keys, topk_indices, topk_into,
@@ -385,6 +386,9 @@ impl DualState {
                 &mut arena.topk_out,
                 &mut arena.loads_scratch,
             );
+            // per-iteration MaxVio trajectory (preallocated atomics:
+            // the adaptive solve stays allocation-free)
+            telemetry::hist_observe(telemetry::Hist::SolverMaxVio, vio);
             if vio < best_vio {
                 best_vio = vio;
                 arena.best_q[..m].copy_from_slice(&self.q);
@@ -398,6 +402,18 @@ impl DualState {
         }
         if tol > 0.0 && best_vio.is_finite() {
             self.q.copy_from_slice(&arena.best_q[..m]);
+            telemetry::gauge_set(
+                telemetry::Gauge::SolverLastMaxVio,
+                best_vio,
+            );
+            let calm = arena.calm[..m]
+                .iter()
+                .filter(|&&c| c >= ADAPTIVE_CALM_NEED)
+                .count();
+            telemetry::counter_add(
+                telemetry::Counter::SolverCalmColumns,
+                calm as u64,
+            );
         }
         iters
     }

@@ -22,6 +22,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::metrics::maxvio::BalanceTracker;
+use crate::telemetry;
 use crate::trace::Trace;
 use crate::util::json::Json;
 
@@ -391,7 +392,7 @@ pub fn eval_model(
             fc.observe(&layer[t]);
         }
     }
-    let by_horizon = horizons
+    let by_horizon: Vec<HorizonError> = horizons
         .iter()
         .zip(&acc)
         .map(|(&h, &(ms, ns, n))| HorizonError {
@@ -401,6 +402,16 @@ pub fn eval_model(
             samples: n,
         })
         .collect();
+    for h in &by_horizon {
+        telemetry::counter_add(
+            telemetry::Counter::ForecastEvalSamples,
+            h.samples,
+        );
+        telemetry::hist_observe(telemetry::Hist::ForecastAbsErr, h.mae);
+    }
+    if let Some(h0) = by_horizon.first() {
+        telemetry::gauge_set(telemetry::Gauge::ForecastLastMae, h0.mae);
+    }
     Ok(FitReport { kind: model.kind, steps, holdout: steps, by_horizon })
 }
 

@@ -15,7 +15,9 @@
 //!   the `forecast/` subsystem (per-expert load forecasting, proactive
 //!   dual warm-start, predictive admission + autoscaling), and the
 //!   `perf/` subsystem (shared score-arena for the zero-allocation
-//!   serving hot path + counting allocator backing `bench_hotpath`).
+//!   serving hot path + counting allocator backing `bench_hotpath`),
+//!   and the `telemetry/` subsystem (static zero-allocation metrics
+//!   registry, RAII span profiling, Prometheus/JSON exposition).
 //!   Python never runs on the training or serving path.
 //! * **L2 (`python/compile/model.py`)** — Minimind-style MoE transformer
 //!   (fwd/bwd/AdamW) with the three routing modes (Loss-Controlled,
@@ -39,6 +41,7 @@ pub mod perf;
 pub mod routing;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod trace;
 pub mod train;
 pub mod util;

@@ -14,6 +14,10 @@
 //!   forecast fit a per-expert load forecaster from a recorded trace
 //!           (or a live run), evaluate it walk-forward, and serve with
 //!           a forecast warm start / predictive autoscaling
+//!   metrics attach to a serving run and print periodic counter
+//!           deltas from the live telemetry registry (--watch for a
+//!           per-tick summary table), or `metrics check` a written
+//!           snapshot's core series for CI
 //!   info    list artifact manifest contents and engine stats
 //!
 //! Examples:
@@ -28,6 +32,8 @@
 //!   bip-moe forecast fit --trace t.trace --kind holt --out model.json
 //!   bip-moe forecast eval --model model.json --trace t2.trace
 //!   bip-moe forecast serve --model model.json --scenario bursty
+//!   bip-moe metrics --scenario steady --watch --out snap.json
+//!   bip-moe metrics check --snapshot snap.json
 
 use std::path::{Path, PathBuf};
 
@@ -48,6 +54,7 @@ use bip_moe::serve::{
     ServeConfig, ServeReport, ServingRouter, TrafficConfig,
     TrafficGenerator,
 };
+use bip_moe::telemetry;
 use bip_moe::trace::{PolicyDiff, Trace, TraceRecorder};
 use bip_moe::train::TrainDriver;
 use bip_moe::util::rng::Pcg64;
@@ -95,6 +102,7 @@ fn run(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("trace") => cmd_trace(args),
         Some("forecast") => cmd_forecast(args),
+        Some("metrics") => cmd_metrics(args),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown subcommand {other}; see --help"),
         None => {
@@ -108,7 +116,7 @@ fn print_help() {
     println!(
         "bip-moe {} — BIP-Based Balancing for MoE pre-training + serving\n\n\
          usage: bip-moe <train|run|eval|solve|match|serve|trace|\
-         forecast|info> [--options]\n\n\
+         forecast|metrics|info> [--options]\n\n\
          train  --config <name> --mode <aux|lossfree|bip> [--bip-t N]\n\
                 [--steps N] [--seed N] [--eval-batches N]\n\
                 [--reports DIR] [--save CKPT] [--artifacts DIR]\n\
@@ -145,7 +153,19 @@ fn print_help() {
                  [--policy predictive] [--seed-gain G] [--autoscale]\n\
                  [--max-replicas R] [--scale-window-ms MS]\n\
                  [--replica-rps X] [--headroom H] [--json P]\n\
-         info   [--artifacts DIR]",
+         metrics [serve-style knobs for the driven run]\n\
+                 [--interval-ms MS] [--watch] [--out SNAP.json|.prom]\n\
+                 (drives one serving run on a background thread and\n\
+                 prints periodic counter deltas scraped from the live\n\
+                 registry; --watch prints a per-tick summary table)\n\
+                metrics check --snapshot PATH (assert the snapshot\n\
+                 parses and the core series are present and nonzero —\n\
+                 the CI smoke gate)\n\
+         info   [--artifacts DIR]\n\n\
+         serve also accepts --metrics-out PATH to write a telemetry\n\
+         snapshot (JSON, or Prometheus text for .prom/.txt) after the\n\
+         sweep; trace record embeds the same scrape into the trace\n\
+         (v3+) so trace replay can diff recorded-vs-replayed metrics.",
         bip_moe::VERSION
     );
 }
@@ -375,7 +395,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "batch", "queue", "max-wait-us", "slo-ms", "capacity-factor",
         "devices", "placement", "lpt-refresh", "seed", "replicas",
         "threads", "sync-every",
-        "json",
+        "json", "metrics-out",
     ])
     .map_err(anyhow::Error::msg)?;
 
@@ -528,6 +548,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::fs::write(path, doc.to_string())?;
         println!("report: {path}");
     }
+    if let Some(path) = args.get("metrics-out") {
+        telemetry::scrape(telemetry::global()).write(Path::new(path))?;
+        println!("metrics: {path}");
+    }
     Ok(())
 }
 
@@ -674,6 +698,7 @@ fn cmd_trace_record(args: &Args) -> Result<()> {
         )
         .report
     };
+    rec.capture_telemetry();
     let trace = rec.into_trace();
     let bytes = trace.save(Path::new(&out_path))?;
 
@@ -718,6 +743,37 @@ fn cmd_trace_replay(args: &Args) -> Result<()> {
             "replay diverged from the recording in {} place(s)",
             rep.mismatches.len()
         );
+    }
+    if trace.telemetry.is_empty() {
+        if trace.version < 3 {
+            println!(
+                "trace is v{} — no embedded telemetry to diff (v3+ \
+                 records a scrape)",
+                trace.version
+            );
+        }
+    } else {
+        // the replay just drove this process's global registry, so a
+        // fresh scrape IS the replayed side of the diff
+        let replayed: std::collections::BTreeMap<String, f64> =
+            telemetry::scrape_named().into_iter().collect();
+        let mut t = TablePrinter::new(
+            "telemetry — recorded vs replayed",
+            &["Series", "Recorded", "Replayed", "Delta"],
+        );
+        for (name, rec_v) in &trace.telemetry {
+            let rep_v = replayed.get(name).copied().unwrap_or(0.0);
+            if *rec_v == 0.0 && rep_v == 0.0 {
+                continue;
+            }
+            t.row(vec![
+                name.clone(),
+                format!("{rec_v}"),
+                format!("{rep_v}"),
+                format!("{:+}", rep_v - rec_v),
+            ]);
+        }
+        t.print();
     }
     println!(
         "replay OK: {} completions bit-identical to the recording",
@@ -1218,6 +1274,231 @@ fn forecast_autoscale(
         std::fs::write(path, format!("{doc}\n"))?;
         println!("report: {path}");
     }
+    Ok(())
+}
+
+/// Live metrics surface: drive one serving run on a background thread
+/// while the foreground attaches to the in-process global registry and
+/// prints periodic counter deltas (`--watch` renders each tick as a
+/// summary table instead); plus the CI mode `metrics check --snapshot`
+/// asserting a written snapshot parses and its core series moved.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    args.check_known(&[
+        // serve-pipeline knobs (shared with `serve` / `trace record`)
+        "scenario", "policy", "requests", "rate", "m", "k", "layers",
+        "tenants", "t", "solver-tol", "solver-t-max", "buckets",
+        "batch", "queue", "max-wait-us", "slo-ms", "capacity-factor",
+        "devices", "placement", "lpt-refresh", "seed", "replicas",
+        "threads", "sync-every",
+        // metrics-specific
+        "interval-ms", "watch", "out", "snapshot",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    match args.positional.first().map(String::as_str) {
+        Some("check") => cmd_metrics_check(args),
+        None => cmd_metrics_attach(args),
+        Some(other) => bail!("unknown metrics action {other}; see --help"),
+    }
+}
+
+fn cmd_metrics_attach(args: &Args) -> Result<()> {
+    let scenario_arg = args.str_or("scenario", "steady");
+    let scenario = Scenario::parse(&scenario_arg)
+        .ok_or_else(|| scenario_err(&scenario_arg))?;
+    if scenario == Scenario::Replayed {
+        bail!("metrics needs a generative scenario to drive");
+    }
+    let policy_arg = args.str_or("policy", "online");
+    let policy = Policy::parse(&policy_arg)
+        .ok_or_else(|| policy_err(&policy_arg))?;
+    let ServeKnobs { mut traffic, sched, router, replicas: rknobs } =
+        serve_knobs(args, 65_536)?;
+    traffic.scenario = scenario;
+    let cfg = ServeConfig::new(traffic, sched, router, policy);
+    let interval = std::time::Duration::from_millis(
+        args.u64_or("interval-ms", 250).max(10),
+    );
+    let watch = args.flag("watch");
+
+    println!(
+        "metrics: attached to {} / {} ({} requests, R={}), scraping \
+         every {}ms",
+        cfg.traffic.scenario.name(),
+        cfg.policy.name(),
+        cfg.traffic.n_requests,
+        rknobs.replicas,
+        interval.as_millis(),
+    );
+    let run_cfg = cfg.clone();
+    let handle = std::thread::spawn(move || {
+        if rknobs.replicas > 1 || rknobs.threads > 1 {
+            serve::run_replicated(&run_cfg, &rknobs).report
+        } else {
+            serve::run_scenario(&run_cfg).report
+        }
+    });
+
+    let mut prev = telemetry::scrape(telemetry::global());
+    while !handle.is_finished() {
+        std::thread::sleep(interval);
+        let cur = telemetry::scrape(telemetry::global());
+        print_metrics_tick(&cur, &prev, watch);
+        prev = cur;
+    }
+    let report = handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("serve thread panicked"))?;
+
+    let last = telemetry::scrape(telemetry::global());
+    print_metrics_summary(&last);
+    let mut table = TablePrinter::new(
+        &format!("served {} / {}", report.scenario, report.policy),
+        ServeReport::headers(),
+    );
+    table.row(report.table_row());
+    table.print();
+    if let Some(out) = args.get("out") {
+        last.write(Path::new(out))?;
+        println!("snapshot: {out}");
+    }
+    Ok(())
+}
+
+fn print_metrics_tick(
+    cur: &telemetry::Snapshot,
+    prev: &telemetry::Snapshot,
+    watch: bool,
+) {
+    if watch {
+        let mut table = TablePrinter::new(
+            &format!("metrics @ {:.1}s", cur.elapsed_secs),
+            &["Series", "Total", "Delta"],
+        );
+        let mut moved = false;
+        for c in telemetry::Counter::ALL {
+            let d = cur.counter(c).saturating_sub(prev.counter(c));
+            if d > 0 {
+                moved = true;
+                table.row(vec![
+                    c.name().into(),
+                    cur.counter(c).to_string(),
+                    format!("+{d}"),
+                ]);
+            }
+        }
+        if moved {
+            table.print();
+        } else {
+            println!("[{:.1}s] (idle)", cur.elapsed_secs);
+        }
+    } else {
+        let deltas = cur.counter_deltas(prev);
+        if deltas.is_empty() {
+            println!("[{:.1}s] (idle)", cur.elapsed_secs);
+        } else {
+            let line = deltas
+                .iter()
+                .map(|(n, d)| format!("{n} +{d}"))
+                .collect::<Vec<_>>()
+                .join("  ");
+            println!("[{:.1}s] {line}", cur.elapsed_secs);
+        }
+    }
+}
+
+fn print_metrics_summary(snap: &telemetry::Snapshot) {
+    let mut table = TablePrinter::new(
+        &format!("metrics summary @ {:.1}s", snap.elapsed_secs),
+        &["Series", "Value", "p50", "p99"],
+    );
+    for c in telemetry::Counter::ALL {
+        let v = snap.counter(c);
+        if v > 0 {
+            table.row(vec![
+                c.name().into(),
+                v.to_string(),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+    }
+    for g in telemetry::Gauge::ALL {
+        let v = snap.gauge(g);
+        if v != 0.0 {
+            table.row(vec![
+                g.name().into(),
+                format!("{v:.4}"),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+    }
+    for h in &snap.hists {
+        if h.count() > 0 {
+            table.row(vec![
+                h.name.into(),
+                format!("n={} mean={:.3e}", h.count(), h.mean()),
+                format!("{:.3e}", h.quantile(0.5)),
+                format!("{:.3e}", h.quantile(0.99)),
+            ]);
+        }
+    }
+    table.print();
+}
+
+/// The CI smoke gate: a serve run wrote `--metrics-out`; assert the
+/// snapshot parses and the core series are present and actually moved.
+fn cmd_metrics_check(args: &Args) -> Result<()> {
+    let path = args
+        .get("snapshot")
+        .ok_or_else(|| anyhow::anyhow!("--snapshot PATH required"))?;
+    let body = std::fs::read_to_string(path)?;
+    let doc = bip_moe::util::Json::parse(&body).map_err(|e| {
+        anyhow::anyhow!("metrics snapshot {path} does not parse: {e}")
+    })?;
+    let fmt = doc.path("format").and_then(|j| j.as_str());
+    if fmt != Some(telemetry::SNAPSHOT_FORMAT) {
+        bail!(
+            "snapshot {path} has format {fmt:?}, wanted {:?}",
+            telemetry::SNAPSHOT_FORMAT
+        );
+    }
+    let version =
+        doc.path("version").and_then(|j| j.as_f64()).unwrap_or(0.0);
+    if version < 1.0 {
+        bail!("snapshot {path} reports version {version}");
+    }
+    let core = [
+        "counters.router_batches_total",
+        "counters.router_tokens_total",
+        "counters.solver_solves_total",
+        "histograms.route_batch_seconds.count",
+        "gauges.router_experts",
+    ];
+    let mut failures = Vec::new();
+    for series in core {
+        match doc.path(series).and_then(|j| j.as_f64()) {
+            Some(v) if v > 0.0 => println!("  ok   {series} = {v}"),
+            Some(v) => {
+                failures.push(format!("{series} = {v} (must be > 0)"))
+            }
+            None => failures.push(format!("{series} missing")),
+        }
+    }
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("  FAIL {f}");
+        }
+        bail!(
+            "metrics snapshot {path} failed {} core-series check(s)",
+            failures.len()
+        );
+    }
+    println!(
+        "metrics snapshot {path}: core series present and live \
+         (v{version}, {:.1}s elapsed)",
+        doc.path("elapsed_secs").and_then(|j| j.as_f64()).unwrap_or(0.0)
+    );
     Ok(())
 }
 

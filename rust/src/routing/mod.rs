@@ -12,6 +12,7 @@ use crate::bip::dual::DualState;
 use crate::bip::online::OnlineGate;
 use crate::bip::{Instance, Routing};
 use crate::perf::{AssignmentBuf, ScoreArena};
+use crate::telemetry;
 use crate::util::pool::Pool;
 use crate::util::stats::{topk_indices, topk_into};
 
@@ -381,7 +382,10 @@ fn dispatch_solve(
     tol: f32,
     arena: &mut ScoreArena,
 ) -> usize {
-    match (pool, tol > 0.0) {
+    // the span and counters below are preallocated telemetry atomics;
+    // the solve stays allocation-free (integration_perf pins it)
+    let _span = telemetry::Span::enter(telemetry::SpanKind::SolverSolve);
+    let iters = match (pool, tol > 0.0) {
         (Some(pool), true) => {
             state.update_adaptive_parallel_in(inst, t, tol, pool, arena)
         }
@@ -394,7 +398,21 @@ fn dispatch_solve(
             state.update_in(inst, t, arena);
             t
         }
-    }
+    };
+    telemetry::counter_add(telemetry::Counter::SolverSolves, 1);
+    telemetry::counter_add(
+        telemetry::Counter::SolverIterations,
+        iters as u64,
+    );
+    telemetry::gauge_set(
+        telemetry::Gauge::SolverLastIters,
+        iters as f64,
+    );
+    telemetry::hist_observe(
+        telemetry::Hist::SolverItersPerSolve,
+        iters as f64,
+    );
+    iters
 }
 
 impl RoutingStrategy for Bip {

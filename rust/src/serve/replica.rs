@@ -31,6 +31,7 @@ use std::sync::Arc;
 
 use crate::forecast::{AutoScaler, ScaleEvent};
 use crate::routing::BalanceState;
+use crate::telemetry::{self, Counter, Gauge, Span, SpanKind};
 use crate::trace::TraceRecorder;
 use crate::util::pool::Pool;
 use crate::util::stats::Summary;
@@ -193,12 +194,20 @@ impl ReplicaSet {
             .collect();
         let cost = cost.clone();
         let routed = self.pool.map(items, move |(i, mut router, batch)| {
+            // per-replica dispatch latency, measured on the worker
+            // thread (exercises the registry's shard-per-thread path)
+            let span = Span::enter(SpanKind::ReplicaDispatch);
             let outcome = router.route_batch(&batch);
             let service_us = cost
                 .batch_us(&router.placement, &outcome.loads, m)
                 .max(1.0) as u64;
+            drop(span);
             (i, router, batch, outcome, service_us)
         });
+        telemetry::counter_add(
+            Counter::ReplicaDispatches,
+            routed.len() as u64,
+        );
         let mut out = Vec::with_capacity(routed.len());
         for (i, router, batch, outcome, service_us) in routed {
             self.routers[i] = Some(router);
@@ -245,6 +254,11 @@ impl ReplicaSet {
             state_div_before: div_before,
             state_div_after: state_divergence(&after),
         });
+        telemetry::counter_add(Counter::ReplicaSyncs, 1);
+        telemetry::gauge_set(
+            Gauge::ReplicaLastSyncDivergence,
+            div_before,
+        );
         for w in self.window.iter_mut() {
             *w = Summary::new();
         }
@@ -438,6 +452,12 @@ fn run_replicated_hooked(
         // only the autoscaler's active prefix when one drives the run
         let active =
             scaler.as_deref().map_or(r, |sc| sc.active().min(r));
+        if scaler.is_some() {
+            telemetry::gauge_set(
+                Gauge::AutoscaleReplicas,
+                active as f64,
+            );
+        }
         let mut dispatch: Vec<(usize, Vec<Request>)> = Vec::new();
         loop {
             if !batcher.ready(now) {

@@ -26,6 +26,7 @@ use crate::routing::{
     ApproxBip, BalanceState, Bip, Greedy, LossFree, OnlineBip,
     PredictiveBip, RoutingStrategy,
 };
+use crate::telemetry::{self, Counter, Gauge, Span, SpanKind};
 use crate::util::pool::Pool;
 use crate::util::stats::Summary;
 
@@ -285,6 +286,8 @@ impl ServingRouter {
         let placement =
             Placement::block(&Mesh::new(cfg.n_devices, cfg.m));
         let balance = BalanceTracker::new(cfg.n_layers, 0, cfg.k);
+        telemetry::gauge_set(Gauge::RouterLayers, cfg.n_layers as f64);
+        telemetry::gauge_set(Gauge::RouterExperts, cfg.m as f64);
         let mut arena = ScoreArena::new();
         arena.dev_loads.resize(cfg.n_devices, 0.0);
         arena.occ.resize(cfg.m, 0);
@@ -391,9 +394,17 @@ impl ServingRouter {
         batch: &[Request],
         out: &mut BatchOutcome,
     ) {
+        // span + counters below are preallocated atomics
+        // (`telemetry::registry`): the zero-alloc guarantee holds with
+        // telemetry enabled, which `integration_perf` pins
+        let _span = Span::enter(SpanKind::RouteBatch);
         let (m, k, n_layers) = (self.cfg.m, self.cfg.k, self.cfg.n_layers);
         let n = batch.len();
         assert!(n > 0);
+        // sampled top-K-vs-gate-argmax agreement: every 16th batch
+        let sampled = telemetry::enabled() && self.batches % 16 == 0;
+        let mut agree = 0u64;
+        let mut agree_n = 0u64;
         // refresh BEFORE routing: this batch must be accounted and priced
         // under the placement learned from *previous* batches, never one
         // computed with hindsight from its own loads
@@ -480,6 +491,26 @@ impl ServingRouter {
                         None => degraded += 1,
                     }
                 }
+                if sampled {
+                    // does the *enforced* top-K still contain the raw
+                    // gate's argmax expert?
+                    let row = inst.row(i);
+                    let mut arg = 0usize;
+                    for j in 1..m {
+                        if row[j] > row[arg] {
+                            arg = j;
+                        }
+                    }
+                    if self
+                        .arena
+                        .chosen
+                        .iter()
+                        .any(|&e| e as usize == arg)
+                    {
+                        agree += 1;
+                    }
+                    agree_n += 1;
+                }
                 if let Some(lc) = layer_cap.as_mut() {
                     lc.push(
                         self.arena
@@ -498,6 +529,7 @@ impl ServingRouter {
                 all.push(layer_cap.take().expect("capture is on"));
             }
             let lrow = &out.loads[l * m..(l + 1) * m];
+            telemetry::expert_tokens_add_f32(l, lrow);
             imbalance_sum += self
                 .placement
                 .imbalance_into(lrow, &mut self.arena.dev_loads);
@@ -522,6 +554,19 @@ impl ServingRouter {
         out.degraded = degraded;
         out.device_imbalance = device_imbalance;
         out.assignment = captured;
+
+        telemetry::counter_add(Counter::RouterBatches, 1);
+        telemetry::counter_add(Counter::RouterTokens, n as u64);
+        telemetry::counter_add(Counter::RouterOverflow, overflow);
+        telemetry::counter_add(Counter::RouterDegraded, degraded);
+        telemetry::gauge_set(Gauge::RouterLastBatchVio, batch_vio);
+        if sampled {
+            telemetry::counter_add(Counter::RouterTopkAgree, agree);
+            telemetry::counter_add(
+                Counter::RouterTopkSampled,
+                agree_n,
+            );
+        }
     }
 }
 

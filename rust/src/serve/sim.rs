@@ -13,6 +13,7 @@
 use crate::forecast::PredictiveAdmission;
 use crate::parallel::{DeviceProfile, Mesh, ModelCost, ServeCost};
 use crate::routing::BalanceState;
+use crate::telemetry::{self, Counter, Gauge};
 use crate::trace::TraceRecorder;
 
 use super::router::{Policy, RouterConfig, ServingRouter};
@@ -178,11 +179,16 @@ pub(crate) fn run_scenario_hooked(
                 .map_or(false, |a| !a.admit(req.arrival_us));
             if shed {
                 batcher.shed();
+                telemetry::counter_add(Counter::ServeShed, 1);
             } else {
                 batcher.offer(req);
             }
             next_arrival = gen.next();
         }
+        telemetry::gauge_set(
+            Gauge::ServeQueueDepth,
+            batcher.queue_len() as f64,
+        );
 
         // serve: the single model server closes a batch when idle
         if now >= server_free && batcher.ready(now) {

@@ -1,0 +1,631 @@
+//! Scrape-side telemetry: shard merging, snapshots, quantiles, and
+//! the Prometheus-text / JSON exposition writers.
+//!
+//! Everything in this module allocates freely — it runs when someone
+//! *reads* the metrics (CLI watcher, `--metrics-out`, trace capture),
+//! never on the serving hot path.
+
+use std::io;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+
+use super::registry::{self, Counter, Gauge, Hist, Registry};
+use super::span::{recent_spans, SpanRecord};
+use crate::util::json::Json;
+
+/// Exposition metric-name prefix.
+pub const PROM_PREFIX: &str = "bip_moe_";
+/// `format` tag stamped into JSON snapshots.
+pub const SNAPSHOT_FORMAT: &str = "bip-moe-metrics";
+/// Snapshot schema version (also the trace telemetry-section version).
+pub const SNAPSHOT_VERSION: u32 = 1;
+/// Spans included in a JSON snapshot.
+const SNAPSHOT_SPANS: usize = 32;
+
+/// One histogram, merged across shards.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub name: &'static str,
+    /// upper-inclusive bucket bounds; one implicit overflow bucket
+    pub bounds: Vec<f64>,
+    /// per-bucket counts, `bounds.len() + 1` entries
+    pub counts: Vec<u64>,
+    /// sum of observed values
+    pub sum: f64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.counts
+            .iter()
+            .fold(0u64, |acc, &c| acc.saturating_add(c))
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum / n as f64
+        }
+    }
+
+    /// Quantile estimate by linear interpolation inside the covering
+    /// bucket — exact to within that bucket's width (pinned by tests).
+    /// Values are assumed non-negative (every registry histogram is);
+    /// the overflow bucket clamps to the last bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 || self.bounds.is_empty() {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0.0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let c = c as f64;
+            if c > 0.0 && cum + c >= target {
+                if i >= self.bounds.len() {
+                    return self.bounds[self.bounds.len() - 1];
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let frac = ((target - cum) / c).clamp(0.0, 1.0);
+                return lo + (hi - lo) * frac;
+            }
+            cum += c;
+        }
+        self.bounds[self.bounds.len() - 1]
+    }
+
+    /// Elementwise (saturating) merge of a same-shaped histogram —
+    /// shard merging and snapshot aggregation both funnel here.
+    /// Associative and commutative (pinned by tests).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        assert_eq!(self.name, other.name, "merging unrelated hists");
+        assert_eq!(self.bounds, other.bounds);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a = a.saturating_add(*b);
+        }
+        self.sum += other.sum;
+    }
+}
+
+/// A point-in-time view of a [`Registry`], shards already merged.
+/// Indexing follows the enum discriminants (`snap.counters[c as
+/// usize]`); use [`Snapshot::counter`] etc. for readable access.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// seconds since the process's first telemetry event
+    pub elapsed_secs: f64,
+    pub counters: Vec<u64>,
+    pub gauges: Vec<f64>,
+    pub hists: Vec<HistSnapshot>,
+    /// cumulative routed tokens, `[layer][expert]`, trimmed to the
+    /// active extent
+    pub expert_tokens: Vec<Vec<u64>>,
+    /// recent spans (global registry scrapes only), newest first
+    pub spans: Vec<SpanRecord>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        self.gauges[g as usize]
+    }
+
+    pub fn hist(&self, h: Hist) -> &HistSnapshot {
+        &self.hists[h as usize]
+    }
+
+    /// Counters that advanced since `prev`, as `(name, delta)`.
+    pub fn counter_deltas(
+        &self,
+        prev: &Snapshot,
+    ) -> Vec<(&'static str, u64)> {
+        Counter::ALL
+            .iter()
+            .filter_map(|&c| {
+                let d = self
+                    .counter(c)
+                    .saturating_sub(prev.counter(c));
+                (d > 0).then(|| (c.name(), d))
+            })
+            .collect()
+    }
+
+    /// Fold `other` into `self`: counters/histograms/expert tokens
+    /// accumulate (saturating); gauges keep `self`'s last-write-wins
+    /// values; `elapsed_secs` takes the max. Associative and
+    /// commutative on the accumulated fields (pinned by tests).
+    pub fn merge(&mut self, other: &Snapshot) {
+        self.elapsed_secs = self.elapsed_secs.max(other.elapsed_secs);
+        for (a, b) in self.counters.iter_mut().zip(&other.counters) {
+            *a = a.saturating_add(*b);
+        }
+        for (h, o) in self.hists.iter_mut().zip(&other.hists) {
+            h.merge(o);
+        }
+        let layers = self.expert_tokens.len().max(other.expert_tokens.len());
+        let experts = self
+            .expert_tokens
+            .iter()
+            .chain(&other.expert_tokens)
+            .map(|r| r.len())
+            .max()
+            .unwrap_or(0);
+        self.expert_tokens.resize(layers, Vec::new());
+        for row in &mut self.expert_tokens {
+            row.resize(experts, 0);
+        }
+        for (l, row) in other.expert_tokens.iter().enumerate() {
+            for (e, &v) in row.iter().enumerate() {
+                let cell = &mut self.expert_tokens[l][e];
+                *cell = cell.saturating_add(v);
+            }
+        }
+    }
+
+    /// Prometheus text exposition (counters, gauges, labelled
+    /// per-expert token counters, cumulative-`le` histograms).
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(4096);
+        for c in Counter::ALL {
+            let name = c.name();
+            let _ = writeln!(
+                out,
+                "# HELP {PROM_PREFIX}{name} {}",
+                c.help()
+            );
+            let _ = writeln!(out, "# TYPE {PROM_PREFIX}{name} counter");
+            let _ = writeln!(
+                out,
+                "{PROM_PREFIX}{name} {}",
+                self.counter(c)
+            );
+        }
+        for g in Gauge::ALL {
+            let name = g.name();
+            let _ = writeln!(
+                out,
+                "# HELP {PROM_PREFIX}{name} {}",
+                g.help()
+            );
+            let _ = writeln!(out, "# TYPE {PROM_PREFIX}{name} gauge");
+            let _ =
+                writeln!(out, "{PROM_PREFIX}{name} {}", self.gauge(g));
+        }
+        if !self.expert_tokens.is_empty() {
+            let name = "router_expert_tokens_total";
+            let _ = writeln!(
+                out,
+                "# HELP {PROM_PREFIX}{name} tokens routed per (layer, \
+                 expert)"
+            );
+            let _ = writeln!(out, "# TYPE {PROM_PREFIX}{name} counter");
+            for (l, row) in self.expert_tokens.iter().enumerate() {
+                for (e, &v) in row.iter().enumerate() {
+                    let _ = writeln!(
+                        out,
+                        "{PROM_PREFIX}{name}{{layer=\"{l}\",\
+                         expert=\"{e}\"}} {v}"
+                    );
+                }
+            }
+        }
+        for h in &self.hists {
+            let name = h.name;
+            let _ = writeln!(
+                out,
+                "# TYPE {PROM_PREFIX}{name} histogram"
+            );
+            let mut cum = 0u64;
+            for (i, &le) in h.bounds.iter().enumerate() {
+                cum = cum.saturating_add(h.counts[i]);
+                let _ = writeln!(
+                    out,
+                    "{PROM_PREFIX}{name}_bucket{{le=\"{le}\"}} {cum}"
+                );
+            }
+            let _ = writeln!(
+                out,
+                "{PROM_PREFIX}{name}_bucket{{le=\"+Inf\"}} {}",
+                h.count()
+            );
+            let _ = writeln!(
+                out,
+                "{PROM_PREFIX}{name}_sum {}",
+                h.sum
+            );
+            let _ = writeln!(
+                out,
+                "{PROM_PREFIX}{name}_count {}",
+                h.count()
+            );
+        }
+        out
+    }
+
+    /// JSON snapshot (the `--metrics-out` / `metrics check` format).
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            Counter::ALL
+                .iter()
+                .map(|&c| {
+                    (
+                        c.name().to_string(),
+                        Json::Num(self.counter(c) as f64),
+                    )
+                })
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            Gauge::ALL
+                .iter()
+                .map(|&g| {
+                    (g.name().to_string(), Json::Num(self.gauge(g)))
+                })
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|h| {
+                    (
+                        h.name.to_string(),
+                        Json::obj(vec![
+                            ("bounds", Json::from_f64s(&h.bounds)),
+                            (
+                                "counts",
+                                Json::Arr(
+                                    h.counts
+                                        .iter()
+                                        .map(|&c| Json::Num(c as f64))
+                                        .collect(),
+                                ),
+                            ),
+                            ("sum", Json::Num(h.sum)),
+                            ("count", Json::Num(h.count() as f64)),
+                            ("p50", Json::Num(h.quantile(0.5))),
+                            ("p99", Json::Num(h.quantile(0.99))),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let expert_tokens = Json::Arr(
+            self.expert_tokens
+                .iter()
+                .map(|row| {
+                    Json::Arr(
+                        row.iter()
+                            .map(|&v| Json::Num(v as f64))
+                            .collect(),
+                    )
+                })
+                .collect(),
+        );
+        let spans = Json::Arr(
+            self.spans
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("kind", Json::Str(s.kind.name().into())),
+                        ("secs", Json::Num(s.secs)),
+                        ("at_secs", Json::Num(s.at_secs)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("format", Json::Str(SNAPSHOT_FORMAT.into())),
+            ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+            ("crate_version", Json::Str(crate::VERSION.into())),
+            ("elapsed_secs", Json::Num(self.elapsed_secs)),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+            ("expert_tokens", expert_tokens),
+            ("spans", spans),
+        ])
+    }
+
+    /// Write this snapshot to `path`: Prometheus text when the
+    /// extension is `.prom`/`.txt`, JSON otherwise.
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        let prom = matches!(
+            path.extension().and_then(|e| e.to_str()),
+            Some("prom") | Some("txt")
+        );
+        let body = if prom {
+            self.to_prometheus()
+        } else {
+            self.to_json().to_string()
+        };
+        std::fs::write(path, body)
+    }
+}
+
+/// Merge a registry's shards into a [`Snapshot`]. Recent spans ride
+/// along only when scraping the process-global registry (the span
+/// ring is global; attaching it to a private test registry would
+/// leak cross-test noise).
+pub fn scrape(reg: &Registry) -> Snapshot {
+    let mut counters = vec![0u64; Counter::ALL.len()];
+    let mut hists: Vec<HistSnapshot> = Hist::ALL
+        .iter()
+        .map(|&h| HistSnapshot {
+            name: h.name(),
+            bounds: h.bounds().to_vec(),
+            counts: vec![0u64; h.bounds().len() + 1],
+            sum: 0.0,
+        })
+        .collect();
+    for shard in &reg.shards {
+        for (i, cell) in shard.counters.iter().enumerate() {
+            counters[i] = counters[i]
+                .saturating_add(cell.load(Ordering::Relaxed));
+        }
+        for (hi, h) in hists.iter_mut().enumerate() {
+            for (b, cell) in h
+                .counts
+                .iter_mut()
+                .zip(shard.hist_counts[hi].iter())
+            {
+                *b = b.saturating_add(cell.load(Ordering::Relaxed));
+            }
+            h.sum += f64::from_bits(
+                shard.hist_sum_bits[hi].load(Ordering::Relaxed),
+            );
+        }
+    }
+    let gauges: Vec<f64> = reg
+        .gauges
+        .iter()
+        .map(|g| f64::from_bits(g.load(Ordering::Relaxed)))
+        .collect();
+    // trim the bounded (layer, expert) grid to its active extent
+    let mut layers = 0usize;
+    let mut experts = 0usize;
+    for (l, row) in reg.expert_tokens.iter().enumerate() {
+        for (e, cell) in row.iter().enumerate() {
+            if cell.load(Ordering::Relaxed) > 0 {
+                layers = layers.max(l + 1);
+                experts = experts.max(e + 1);
+            }
+        }
+    }
+    let expert_tokens: Vec<Vec<u64>> = reg.expert_tokens[..layers]
+        .iter()
+        .map(|row| {
+            row[..experts]
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect()
+        })
+        .collect();
+    let spans = if std::ptr::eq(reg, registry::global()) {
+        recent_spans(SNAPSHOT_SPANS)
+    } else {
+        Vec::new()
+    };
+    Snapshot {
+        elapsed_secs: super::span::elapsed_secs(),
+        counters,
+        gauges,
+        hists,
+        expert_tokens,
+        spans,
+    }
+}
+
+/// Scrape the global registry into flat `(name, value)` pairs —
+/// counters then gauges. This is the payload the trace recorder
+/// embeds (telemetry section) and replay diffs against.
+pub fn scrape_named() -> Vec<(String, f64)> {
+    let snap = scrape(registry::global());
+    Counter::ALL
+        .iter()
+        .map(|&c| (c.name().to_string(), snap.counter(c) as f64))
+        .chain(
+            Gauge::ALL
+                .iter()
+                .map(|&g| (g.name().to_string(), snap.gauge(g))),
+        )
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(counts: &[u64], sum: f64) -> HistSnapshot {
+        let bounds = Hist::SolverMaxVio.bounds().to_vec();
+        assert_eq!(counts.len(), bounds.len() + 1);
+        HistSnapshot {
+            name: Hist::SolverMaxVio.name(),
+            bounds,
+            counts: counts.to_vec(),
+            sum,
+        }
+    }
+
+    #[test]
+    fn quantiles_are_within_one_bucket_width() {
+        // 1000 uniform observations on (0, 1]: the estimate for any
+        // quantile must land within the width of the covering bucket
+        let reg = Registry::new();
+        for k in 1..=1000 {
+            reg.hist_observe(Hist::SolverMaxVio, k as f64 / 1000.0);
+        }
+        let snap = scrape(&reg);
+        let h = snap.hist(Hist::SolverMaxVio);
+        assert_eq!(h.count(), 1000);
+        for q in [0.05, 0.1, 0.25, 0.5, 0.9, 0.99] {
+            let truth = q; // uniform on (0, 1]
+            let est = h.quantile(q);
+            let bi = h
+                .bounds
+                .iter()
+                .position(|&b| truth <= b)
+                .unwrap();
+            let lo = if bi == 0 { 0.0 } else { h.bounds[bi - 1] };
+            let width = h.bounds[bi] - lo;
+            assert!(
+                (est - truth).abs() <= width + 1e-9,
+                "q={q}: est {est} vs {truth} (width {width})"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_handles_empty_and_overflow() {
+        let empty = filled(&[0; 10], 0.0);
+        assert_eq!(empty.quantile(0.5), 0.0);
+        // everything in the overflow bucket clamps to the last bound
+        let mut over = filled(&[0; 10], 0.0);
+        *over.counts.last_mut().unwrap() = 7;
+        assert_eq!(over.quantile(0.5), *over.bounds.last().unwrap());
+    }
+
+    #[test]
+    fn hist_merge_is_commutative_and_associative() {
+        // integer-valued sums keep f64 addition exact, so the merged
+        // snapshots compare bit-equal in every association order
+        let a = filled(&[1, 0, 3, 0, 0, 2, 0, 0, 0, 4], 9.0);
+        let b = filled(&[0, 5, 0, 0, 1, 0, 0, 2, 0, 0], 21.0);
+        let c = filled(&[2, 2, 2, 2, 2, 2, 2, 2, 2, 2], 14.0);
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge must commute");
+
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge must associate");
+    }
+
+    #[test]
+    fn hist_merge_saturates() {
+        let mut a = filled(&[u64::MAX - 1, 0, 0, 0, 0, 0, 0, 0, 0, 0], 1.0);
+        let b = filled(&[5, 0, 0, 0, 0, 0, 0, 0, 0, 0], 1.0);
+        a.merge(&b);
+        assert_eq!(a.counts[0], u64::MAX);
+        assert_eq!(a.count(), u64::MAX);
+    }
+
+    #[test]
+    fn snapshot_merge_accumulates_counters_and_experts() {
+        let r1 = Registry::new();
+        let r2 = Registry::new();
+        r1.counter_add(Counter::RouterBatches, 3);
+        r1.expert_tokens_add(0, &[1, 2]);
+        r2.counter_add(Counter::RouterBatches, 4);
+        r2.counter_add(Counter::SolverSolves, 1);
+        r2.expert_tokens_add(1, &[0, 0, 7]);
+        let mut s1 = scrape(&r1);
+        let s2 = scrape(&r2);
+        let mut s21 = s2.clone();
+        s1.merge(&s2);
+        s21.merge(&scrape(&r1));
+        assert_eq!(s1.counter(Counter::RouterBatches), 7);
+        assert_eq!(s1.counter(Counter::SolverSolves), 1);
+        assert_eq!(s1.expert_tokens[1][2], 7);
+        assert_eq!(s1.expert_tokens[0][1], 2);
+        assert_eq!(
+            s1.counters, s21.counters,
+            "snapshot merge must commute"
+        );
+        assert_eq!(s1.expert_tokens, s21.expert_tokens);
+    }
+
+    #[test]
+    fn counter_deltas_report_only_movement() {
+        let reg = Registry::new();
+        reg.counter_add(Counter::RouterBatches, 2);
+        let before = scrape(&reg);
+        reg.counter_add(Counter::RouterBatches, 3);
+        reg.counter_add(Counter::ServeShed, 1);
+        let after = scrape(&reg);
+        let deltas = after.counter_deltas(&before);
+        assert_eq!(
+            deltas,
+            vec![
+                (Counter::RouterBatches.name(), 3),
+                (Counter::ServeShed.name(), 1)
+            ]
+        );
+    }
+
+    #[test]
+    fn prometheus_text_has_the_expected_series() {
+        let reg = Registry::new();
+        reg.counter_add(Counter::RouterTokens, 640);
+        reg.gauge_set(Gauge::RouterExperts, 16.0);
+        reg.hist_observe(Hist::RouteBatchSeconds, 33e-6);
+        reg.expert_tokens_add(0, &[10, 0, 5]);
+        let text = scrape(&reg).to_prometheus();
+        assert!(text.contains("# TYPE bip_moe_router_tokens_total counter"));
+        assert!(text.contains("bip_moe_router_tokens_total 640"));
+        assert!(text.contains("bip_moe_router_experts 16"));
+        assert!(text.contains(
+            "bip_moe_router_expert_tokens_total{layer=\"0\",\
+             expert=\"2\"} 5"
+        ));
+        assert!(text.contains(
+            "bip_moe_route_batch_seconds_bucket{le=\"+Inf\"} 1"
+        ));
+        assert!(text.contains("bip_moe_route_batch_seconds_count 1"));
+    }
+
+    #[test]
+    fn json_snapshot_round_trips_through_the_parser() {
+        let reg = Registry::new();
+        reg.counter_add(Counter::RouterBatches, 12);
+        reg.counter_add(Counter::RouterTokens, 768);
+        reg.gauge_set(Gauge::RouterLayers, 4.0);
+        reg.hist_observe(Hist::SolverSolveSeconds, 1.5e-4);
+        let json = scrape(&reg).to_json().to_string();
+        let doc = Json::parse(&json).expect("snapshot must parse");
+        assert_eq!(
+            doc.path("format").and_then(|j| j.as_str()),
+            Some(SNAPSHOT_FORMAT)
+        );
+        assert_eq!(
+            doc.path("counters.router_batches_total")
+                .and_then(|j| j.as_f64()),
+            Some(12.0)
+        );
+        assert_eq!(
+            doc.path("gauges.router_layers").and_then(|j| j.as_f64()),
+            Some(4.0)
+        );
+        assert_eq!(
+            doc.path("histograms.solver_solve_seconds.count")
+                .and_then(|j| j.as_f64()),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn scrape_named_covers_every_counter_and_gauge() {
+        let named = scrape_named();
+        assert_eq!(
+            named.len(),
+            Counter::ALL.len() + Gauge::ALL.len()
+        );
+        assert!(named
+            .iter()
+            .any(|(n, _)| n == "router_batches_total"));
+        assert!(named.iter().any(|(n, _)| n == "solver_last_maxvio"));
+    }
+}

@@ -1,0 +1,43 @@
+//! Live observability for the whole stack (ISSUE 6).
+//!
+//! Three pieces:
+//!
+//! * [`registry`] — the static, fully preallocated metrics registry:
+//!   closed enums of counters/gauges/fixed-bucket histograms, written
+//!   through per-thread shards with relaxed (saturating) atomics. The
+//!   write path performs **zero heap allocations**, so the PR-5
+//!   steady-state gate (`tests/integration_perf.rs`) holds with
+//!   telemetry on.
+//! * [`span`] — RAII span timers ([`Span::enter`] … drop) feeding the
+//!   matching histogram plus a bounded global ring of recent spans.
+//! * [`expose`] — scrape-side snapshots: shard merging, bucket
+//!   quantiles, and Prometheus-text / JSON writers. Only scrapes
+//!   allocate.
+//!
+//! The instrumented sites (see DESIGN.md for the full map):
+//! `serve::router` (batches, tokens, overflow, batch MaxVio, routed
+//! tokens per (layer, expert), sampled top-K-vs-argmax agreement),
+//! `serve::sim` (queue depth, shed), `serve::replica` (dispatch spans,
+//! merge-sync counts and divergence), `routing`/`bip::dual` (solve
+//! spans, iteration counts, MaxVio and calm-column trajectories),
+//! `forecast` (eval samples, MAE), and `train` (step spans, MaxVio).
+//!
+//! Read it back out with `bip-moe metrics` (attach + periodic deltas),
+//! `bip-moe serve --metrics-out snap.json`, or programmatically via
+//! [`scrape`]`(`[`global`]`())`. Traces (v3+) embed a scrape so replay
+//! can diff recorded-vs-replayed metrics.
+
+pub mod expose;
+pub mod registry;
+pub mod span;
+
+pub use expose::{
+    scrape, scrape_named, HistSnapshot, Snapshot, PROM_PREFIX,
+    SNAPSHOT_FORMAT, SNAPSHOT_VERSION,
+};
+pub use registry::{
+    counter_add, enabled, expert_tokens_add, expert_tokens_add_f32,
+    gauge_set, global, hist_observe, set_enabled, Counter, Gauge,
+    Hist, Registry,
+};
+pub use span::{elapsed_secs, recent_spans, Span, SpanKind, SpanRecord};

@@ -1,0 +1,636 @@
+//! The static metrics registry: counters, gauges and fixed-bucket
+//! histograms with fully preallocated storage.
+//!
+//! Ownership rules (the reason the PR-5 zero-allocation gate keeps
+//! passing with telemetry on):
+//!
+//! * every metric is a member of a closed enum ([`Counter`], [`Gauge`],
+//!   [`Hist`]) with a compile-time index — registration is the enum
+//!   definition, so the write path never touches a map or a string;
+//! * all storage lives in one `static` [`Registry`] built by a `const
+//!   fn` — no lazy heap, no `OnceLock<Box<_>>`, nothing to allocate at
+//!   first use;
+//! * counters and histogram cells are sharded over [`N_SHARDS`]
+//!   preallocated shards; a writer thread picks its shard once through
+//!   a const-initialized `thread_local!` cell (no TLS destructor, no
+//!   lazy allocation) and every write is a relaxed atomic RMW on its
+//!   own shard — scrapes merge the shards off the hot path;
+//! * gauges are last-write-wins `f64`-bit stores and live un-sharded;
+//! * counter and histogram adds *saturate* at `u64::MAX` instead of
+//!   wrapping or panicking (pinned by tests) — a telemetry cell must
+//!   never be able to take the serving loop down;
+//! * everything early-returns when the registry is disabled
+//!   ([`set_enabled`]) — the compiled-out baseline `bench_hotpath`
+//!   prices the registry against.
+//!
+//! Per-layer per-expert routed-token counters get dedicated bounded
+//! storage (`MAX_LAYERS` x `MAX_EXPERTS`); layers or experts beyond the
+//! bound are silently not tracked rather than allocated for.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Counter shards merged on scrape. 16 is comfortably above the
+/// serving pool sizes the repo runs (`--threads` defaults to 1-4).
+pub const N_SHARDS: usize = 16;
+/// Histogram storage slots per shard: max bucket-bound count + 1
+/// overflow bucket (asserted against every [`Hist::bounds`] by tests).
+pub const HIST_SLOTS: usize = 12;
+/// Per-layer per-expert token counters exist for this many layers ...
+pub const MAX_LAYERS: usize = 8;
+/// ... and this many experts per layer.
+pub const MAX_EXPERTS: usize = 64;
+
+/// Monotonic event counters. `*Total` naming follows the Prometheus
+/// convention; [`Counter::name`] is the exposition name (exported with
+/// a `bip_moe_` prefix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// micro-batches routed (`ServingRouter`, both routing paths)
+    RouterBatches = 0,
+    /// tokens routed
+    RouterTokens = 1,
+    /// capacity-overflow reroutes
+    RouterOverflow = 2,
+    /// degraded slots (no expert had room)
+    RouterDegraded = 3,
+    /// sampled (token, layer) pairs whose enforced top-K kept the
+    /// gate's argmax expert
+    RouterTopkAgree = 4,
+    /// sampled (token, layer) pairs (the agreement denominator)
+    RouterTopkSampled = 5,
+    /// Algorithm 1 per-batch solves
+    SolverSolves = 6,
+    /// dual iterations actually run (fixed-T or adaptive)
+    SolverIterations = 7,
+    /// expert columns calm (lazily re-evaluated) at adaptive-solve end
+    SolverCalmColumns = 8,
+    /// offered requests shed upstream of the queue (predictive gate)
+    ServeShed = 9,
+    /// micro-batches dispatched to replicas
+    ReplicaDispatches = 10,
+    /// replica merge-syncs fired
+    ReplicaSyncs = 11,
+    /// walk-forward forecast samples scored by `forecast eval`
+    ForecastEvalSamples = 12,
+    /// training steps driven
+    TrainSteps = 13,
+}
+
+const N_COUNTERS: usize = 14;
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::RouterBatches,
+        Counter::RouterTokens,
+        Counter::RouterOverflow,
+        Counter::RouterDegraded,
+        Counter::RouterTopkAgree,
+        Counter::RouterTopkSampled,
+        Counter::SolverSolves,
+        Counter::SolverIterations,
+        Counter::SolverCalmColumns,
+        Counter::ServeShed,
+        Counter::ReplicaDispatches,
+        Counter::ReplicaSyncs,
+        Counter::ForecastEvalSamples,
+        Counter::TrainSteps,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::RouterBatches => "router_batches_total",
+            Counter::RouterTokens => "router_tokens_total",
+            Counter::RouterOverflow => "router_overflow_total",
+            Counter::RouterDegraded => "router_degraded_total",
+            Counter::RouterTopkAgree => "router_topk_agree_total",
+            Counter::RouterTopkSampled => "router_topk_sampled_total",
+            Counter::SolverSolves => "solver_solves_total",
+            Counter::SolverIterations => "solver_iterations_total",
+            Counter::SolverCalmColumns => "solver_calm_columns_total",
+            Counter::ServeShed => "serve_shed_total",
+            Counter::ReplicaDispatches => "replica_dispatches_total",
+            Counter::ReplicaSyncs => "replica_syncs_total",
+            Counter::ForecastEvalSamples => {
+                "forecast_eval_samples_total"
+            }
+            Counter::TrainSteps => "train_steps_total",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Counter::RouterBatches => "micro-batches routed",
+            Counter::RouterTokens => "tokens routed",
+            Counter::RouterOverflow => "capacity-overflow reroutes",
+            Counter::RouterDegraded => {
+                "token slots degraded (no expert had room)"
+            }
+            Counter::RouterTopkAgree => {
+                "sampled slots whose enforced top-K kept the gate argmax"
+            }
+            Counter::RouterTopkSampled => {
+                "slots sampled for top-K agreement"
+            }
+            Counter::SolverSolves => "Algorithm 1 per-batch solves",
+            Counter::SolverIterations => "dual iterations run",
+            Counter::SolverCalmColumns => {
+                "calm (lazily re-evaluated) columns at solve end"
+            }
+            Counter::ServeShed => {
+                "requests shed upstream of the admission queue"
+            }
+            Counter::ReplicaDispatches => {
+                "micro-batches dispatched to replicas"
+            }
+            Counter::ReplicaSyncs => "replica merge-syncs",
+            Counter::ForecastEvalSamples => {
+                "walk-forward forecast samples scored"
+            }
+            Counter::TrainSteps => "training steps driven",
+        }
+    }
+}
+
+/// Last-write-wins instantaneous values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// the last routed batch's layer-mean MaxVio
+    RouterLastBatchVio = 0,
+    /// best primal MaxVio of the last adaptive solve
+    SolverLastMaxVio = 1,
+    /// iterations the last solve ran
+    SolverLastIters = 2,
+    /// admission queue depth after the last ingest sweep
+    ServeQueueDepth = 3,
+    /// mean-abs dual/bias divergence entering the last merge-sync
+    ReplicaLastSyncDivergence = 4,
+    /// pooled MAE of the last `forecast eval` (shortest horizon)
+    ForecastLastMae = 5,
+    /// router gate depth (layers), set at router construction
+    RouterLayers = 6,
+    /// router gate width (experts), set at router construction
+    RouterExperts = 7,
+    /// autoscaler's active replica count after the last decision
+    AutoscaleReplicas = 8,
+    /// last training step's global MaxVio
+    TrainLastMaxVio = 9,
+}
+
+const N_GAUGES: usize = 10;
+
+impl Gauge {
+    pub const ALL: [Gauge; N_GAUGES] = [
+        Gauge::RouterLastBatchVio,
+        Gauge::SolverLastMaxVio,
+        Gauge::SolverLastIters,
+        Gauge::ServeQueueDepth,
+        Gauge::ReplicaLastSyncDivergence,
+        Gauge::ForecastLastMae,
+        Gauge::RouterLayers,
+        Gauge::RouterExperts,
+        Gauge::AutoscaleReplicas,
+        Gauge::TrainLastMaxVio,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::RouterLastBatchVio => "router_last_batch_vio",
+            Gauge::SolverLastMaxVio => "solver_last_maxvio",
+            Gauge::SolverLastIters => "solver_last_iters",
+            Gauge::ServeQueueDepth => "serve_queue_depth",
+            Gauge::ReplicaLastSyncDivergence => {
+                "replica_last_sync_divergence"
+            }
+            Gauge::ForecastLastMae => "forecast_last_mae",
+            Gauge::RouterLayers => "router_layers",
+            Gauge::RouterExperts => "router_experts",
+            Gauge::AutoscaleReplicas => "autoscale_active_replicas",
+            Gauge::TrainLastMaxVio => "train_last_maxvio",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Gauge::RouterLastBatchVio => {
+                "layer-mean MaxVio of the last routed batch"
+            }
+            Gauge::SolverLastMaxVio => {
+                "best primal MaxVio of the last adaptive solve"
+            }
+            Gauge::SolverLastIters => "iterations the last solve ran",
+            Gauge::ServeQueueDepth => "admission queue depth",
+            Gauge::ReplicaLastSyncDivergence => {
+                "state divergence entering the last merge-sync"
+            }
+            Gauge::ForecastLastMae => "last forecast-eval pooled MAE",
+            Gauge::RouterLayers => "router gate depth (layers)",
+            Gauge::RouterExperts => "router gate width (experts)",
+            Gauge::AutoscaleReplicas => "active replicas",
+            Gauge::TrainLastMaxVio => "last training-step MaxVio",
+        }
+    }
+}
+
+/// Exponential-ish wall-time buckets, 1µs .. 1s (seconds).
+pub const TIME_BUCKETS: [f64; 11] = [
+    1e-6, 4e-6, 16e-6, 64e-6, 256e-6, 1e-3, 4e-3, 16e-3, 64e-3, 0.25,
+    1.0,
+];
+/// Power-of-two iteration-count buckets.
+pub const ITER_BUCKETS: [f64; 8] =
+    [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+/// MaxVio buckets spanning balanced (0.01) to pathological (5.0).
+pub const VIO_BUCKETS: [f64; 9] =
+    [0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0];
+/// Forecast absolute-error buckets (load fractions).
+pub const ERR_BUCKETS: [f64; 9] =
+    [1e-4, 3e-4, 1e-3, 3e-3, 0.01, 0.03, 0.1, 0.3, 1.0];
+
+/// Fixed-bucket histograms. Bounds are upper-inclusive per bucket with
+/// one implicit overflow bucket — standard Prometheus `le` semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hist {
+    /// `ServingRouter::route_batch_into` wall time (span-fed)
+    RouteBatchSeconds = 0,
+    /// Algorithm 1 per-batch solve wall time (span-fed)
+    SolverSolveSeconds = 1,
+    /// per-replica dispatch (route job) wall time (span-fed)
+    ReplicaDispatchSeconds = 2,
+    /// dual iterations per solve
+    SolverItersPerSolve = 3,
+    /// best primal MaxVio per adaptive solve
+    SolverMaxVio = 4,
+    /// forecast absolute error per eval sample batch
+    ForecastAbsErr = 5,
+    /// training step wall time
+    TrainStepSeconds = 6,
+}
+
+const N_HISTS: usize = 7;
+
+impl Hist {
+    pub const ALL: [Hist; N_HISTS] = [
+        Hist::RouteBatchSeconds,
+        Hist::SolverSolveSeconds,
+        Hist::ReplicaDispatchSeconds,
+        Hist::SolverItersPerSolve,
+        Hist::SolverMaxVio,
+        Hist::ForecastAbsErr,
+        Hist::TrainStepSeconds,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::RouteBatchSeconds => "route_batch_seconds",
+            Hist::SolverSolveSeconds => "solver_solve_seconds",
+            Hist::ReplicaDispatchSeconds => {
+                "replica_dispatch_seconds"
+            }
+            Hist::SolverItersPerSolve => "solver_iters_per_solve",
+            Hist::SolverMaxVio => "solver_maxvio",
+            Hist::ForecastAbsErr => "forecast_abs_err",
+            Hist::TrainStepSeconds => "train_step_seconds",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Hist::RouteBatchSeconds => {
+                "route_batch_into wall time per micro-batch"
+            }
+            Hist::SolverSolveSeconds => {
+                "Algorithm 1 solve wall time per batch"
+            }
+            Hist::ReplicaDispatchSeconds => {
+                "per-replica dispatch wall time"
+            }
+            Hist::SolverItersPerSolve => "dual iterations per solve",
+            Hist::SolverMaxVio => "best MaxVio per adaptive solve",
+            Hist::ForecastAbsErr => "forecast absolute error",
+            Hist::TrainStepSeconds => "training step wall time",
+        }
+    }
+
+    pub fn bounds(self) -> &'static [f64] {
+        match self {
+            Hist::RouteBatchSeconds
+            | Hist::SolverSolveSeconds
+            | Hist::ReplicaDispatchSeconds
+            | Hist::TrainStepSeconds => &TIME_BUCKETS,
+            Hist::SolverItersPerSolve => &ITER_BUCKETS,
+            Hist::SolverMaxVio => &VIO_BUCKETS,
+            Hist::ForecastAbsErr => &ERR_BUCKETS,
+        }
+    }
+}
+
+/// One write shard: counters plus histogram cells.
+pub(crate) struct Shard {
+    pub(crate) counters: [AtomicU64; N_COUNTERS],
+    pub(crate) hist_counts: [[AtomicU64; HIST_SLOTS]; N_HISTS],
+    /// histogram value sums as `f64` bit patterns (CAS-added)
+    pub(crate) hist_sum_bits: [AtomicU64; N_HISTS],
+}
+
+impl Shard {
+    const fn new() -> Shard {
+        const Z: AtomicU64 = AtomicU64::new(0);
+        const ROW: [AtomicU64; HIST_SLOTS] = [Z; HIST_SLOTS];
+        Shard {
+            counters: [Z; N_COUNTERS],
+            hist_counts: [ROW; N_HISTS],
+            hist_sum_bits: [Z; N_HISTS],
+        }
+    }
+}
+
+/// The registry. One `static` instance ([`global`]) backs the whole
+/// crate; tests build private instances to avoid cross-test bleed.
+pub struct Registry {
+    enabled: AtomicBool,
+    pub(crate) shards: [Shard; N_SHARDS],
+    /// `f64` bit patterns, last write wins
+    pub(crate) gauges: [AtomicU64; N_GAUGES],
+    /// cumulative routed tokens per (layer, expert), bounded
+    pub(crate) expert_tokens: [[AtomicU64; MAX_EXPERTS]; MAX_LAYERS],
+}
+
+impl Registry {
+    pub const fn new() -> Registry {
+        const S: Shard = Shard::new();
+        const Z: AtomicU64 = AtomicU64::new(0);
+        const EROW: [AtomicU64; MAX_EXPERTS] = [Z; MAX_EXPERTS];
+        Registry {
+            enabled: AtomicBool::new(true),
+            shards: [S; N_SHARDS],
+            gauges: [Z; N_GAUGES],
+            expert_tokens: [EROW; MAX_LAYERS],
+        }
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Saturating counter increment on this thread's shard.
+    pub fn counter_add(&self, c: Counter, n: u64) {
+        if !self.is_enabled() || n == 0 {
+            return;
+        }
+        saturating_add(
+            &self.shards[shard_index()].counters[c as usize],
+            n,
+        );
+    }
+
+    /// Last-write-wins gauge store.
+    pub fn gauge_set(&self, g: Gauge, v: f64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.gauges[g as usize].store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// One histogram observation: linear scan over <= [`HIST_SLOTS`]
+    /// bounds (cheaper than a branchy binary search at these sizes),
+    /// saturating bucket increment, CAS-added sum.
+    pub fn hist_observe(&self, h: Hist, v: f64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let bounds = h.bounds();
+        let mut i = 0usize;
+        while i < bounds.len() && v > bounds[i] {
+            i += 1;
+        }
+        let shard = &self.shards[shard_index()];
+        saturating_add(&shard.hist_counts[h as usize][i], 1);
+        f64_add(&shard.hist_sum_bits[h as usize], v);
+    }
+
+    /// Accumulate one layer's per-expert batch loads into the bounded
+    /// (layer, expert) token counters; out-of-bound layers/experts are
+    /// silently not tracked (never allocated for).
+    pub fn expert_tokens_add(&self, layer: usize, loads: &[u32]) {
+        if !self.is_enabled() || layer >= MAX_LAYERS {
+            return;
+        }
+        let row = &self.expert_tokens[layer];
+        for (e, &c) in loads.iter().take(MAX_EXPERTS).enumerate() {
+            if c > 0 {
+                saturating_add(&row[e], c as u64);
+            }
+        }
+    }
+
+    /// As [`Registry::expert_tokens_add`], for the router's native
+    /// `f32` load rows (integral counts stored as floats).
+    pub fn expert_tokens_add_f32(&self, layer: usize, loads: &[f32]) {
+        if !self.is_enabled() || layer >= MAX_LAYERS {
+            return;
+        }
+        let row = &self.expert_tokens[layer];
+        for (e, &c) in loads.iter().take(MAX_EXPERTS).enumerate() {
+            if c > 0.0 {
+                saturating_add(&row[e], c as u64);
+            }
+        }
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// Saturating atomic add: sticks at `u64::MAX`, never wraps or panics.
+fn saturating_add(cell: &AtomicU64, n: u64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_add(n);
+        if next == cur {
+            return; // already saturated
+        }
+        match cell.compare_exchange_weak(
+            cur,
+            next,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// CAS-loop `f64` accumulate over a bit-pattern cell.
+fn f64_add(bits: &AtomicU64, v: f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match bits.compare_exchange_weak(
+            cur,
+            next,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+static GLOBAL: Registry = Registry::new();
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// This thread's shard index; const-initialized (no lazy heap, no
+    /// TLS destructor) and assigned round-robin on first use.
+    static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+pub(crate) fn shard_index() -> usize {
+    SHARD.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % N_SHARDS;
+        s.set(v);
+        v
+    })
+}
+
+/// The process-wide registry every instrumentation site writes to.
+pub fn global() -> &'static Registry {
+    &GLOBAL
+}
+
+/// Enable/disable the global registry at runtime (the
+/// `bench_hotpath` telemetry-overhead section toggles this).
+pub fn set_enabled(on: bool) {
+    GLOBAL.set_enabled(on);
+}
+
+pub fn enabled() -> bool {
+    GLOBAL.is_enabled()
+}
+
+/// [`Registry::counter_add`] on the global registry.
+pub fn counter_add(c: Counter, n: u64) {
+    GLOBAL.counter_add(c, n);
+}
+
+/// [`Registry::gauge_set`] on the global registry.
+pub fn gauge_set(g: Gauge, v: f64) {
+    GLOBAL.gauge_set(g, v);
+}
+
+/// [`Registry::hist_observe`] on the global registry.
+pub fn hist_observe(h: Hist, v: f64) {
+    GLOBAL.hist_observe(h, v);
+}
+
+/// [`Registry::expert_tokens_add`] on the global registry.
+pub fn expert_tokens_add(layer: usize, loads: &[u32]) {
+    GLOBAL.expert_tokens_add(layer, loads);
+}
+
+/// [`Registry::expert_tokens_add_f32`] on the global registry.
+pub fn expert_tokens_add_f32(layer: usize, loads: &[f32]) {
+    GLOBAL.expert_tokens_add_f32(layer, loads);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_histogram_fits_the_preallocated_slots() {
+        for h in Hist::ALL {
+            assert!(
+                h.bounds().len() + 1 <= HIST_SLOTS,
+                "{}: {} bounds need {} slots, have {HIST_SLOTS}",
+                h.name(),
+                h.bounds().len(),
+                h.bounds().len() + 1
+            );
+            assert!(
+                h.bounds().windows(2).all(|w| w[0] < w[1]),
+                "{}: bounds must strictly increase",
+                h.name()
+            );
+        }
+    }
+
+    #[test]
+    fn metric_names_are_unique() {
+        let mut names: Vec<&str> = Counter::ALL
+            .iter()
+            .map(|c| c.name())
+            .chain(Gauge::ALL.iter().map(|g| g.name()))
+            .chain(Hist::ALL.iter().map(|h| h.name()))
+            .collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate metric name");
+    }
+
+    #[test]
+    fn enum_discriminants_are_dense_and_ordered() {
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            assert_eq!(*c as usize, i);
+        }
+        for (i, g) in Gauge::ALL.iter().enumerate() {
+            assert_eq!(*g as usize, i);
+        }
+        for (i, h) in Hist::ALL.iter().enumerate() {
+            assert_eq!(*h as usize, i);
+        }
+    }
+
+    #[test]
+    fn counters_saturate_at_u64_max_instead_of_panicking() {
+        let cell = AtomicU64::new(u64::MAX - 3);
+        saturating_add(&cell, 2);
+        assert_eq!(cell.load(Ordering::Relaxed), u64::MAX - 1);
+        saturating_add(&cell, 10);
+        assert_eq!(cell.load(Ordering::Relaxed), u64::MAX);
+        saturating_add(&cell, u64::MAX);
+        assert_eq!(cell.load(Ordering::Relaxed), u64::MAX);
+    }
+
+    #[test]
+    fn disabled_registry_drops_every_write() {
+        let reg = Registry::new();
+        reg.set_enabled(false);
+        reg.counter_add(Counter::RouterBatches, 5);
+        reg.gauge_set(Gauge::RouterLayers, 4.0);
+        reg.hist_observe(Hist::SolverMaxVio, 0.1);
+        reg.expert_tokens_add(0, &[1, 2, 3]);
+        reg.set_enabled(true);
+        let snap = crate::telemetry::scrape(&reg);
+        assert_eq!(snap.counters[Counter::RouterBatches as usize], 0);
+        assert_eq!(snap.gauges[Gauge::RouterLayers as usize], 0.0);
+        assert_eq!(snap.hists[Hist::SolverMaxVio as usize].count(), 0);
+    }
+
+    #[test]
+    fn out_of_bound_layers_and_experts_are_ignored() {
+        let reg = Registry::new();
+        reg.expert_tokens_add(MAX_LAYERS, &[7; 4]); // layer too deep
+        let wide = vec![1u32; MAX_EXPERTS + 16]; // wider than tracked
+        reg.expert_tokens_add(0, &wide);
+        let snap = crate::telemetry::scrape(&reg);
+        let total: u64 =
+            snap.expert_tokens.iter().flatten().copied().sum();
+        assert_eq!(total, MAX_EXPERTS as u64);
+    }
+}

@@ -1,0 +1,201 @@
+//! RAII span timers and the bounded recent-span ring.
+//!
+//! A [`Span`] is constructed at the top of an instrumented scope and,
+//! on drop, feeds its wall time into the matching registry histogram
+//! and into a fixed global ring of the most recent [`RING_SLOTS`]
+//! spans. Nothing on this path allocates: `Instant::now` is a clock
+//! read, the histogram write is a sharded atomic RMW
+//! ([`crate::telemetry::registry`]), and each ring slot is a pair of
+//! pre-existing atomics written with relaxed stores. The ring is
+//! intentionally lossy under contention (a reader can observe a slot
+//! mid-overwrite); it exists for "what just happened" debugging in
+//! snapshots and the `bip-moe metrics` watcher, not for accounting —
+//! the histograms are the accounting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use super::registry::{self, Hist};
+
+/// Capacity of the recent-span ring.
+pub const RING_SLOTS: usize = 256;
+
+/// The instrumented scopes. The discriminant is packed into ring
+/// slots, so keep it within `u8`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// `ServingRouter::route_batch[_into]` — one micro-batch
+    RouteBatch = 0,
+    /// one Algorithm 1 per-batch solve (`routing::Bip`)
+    SolverSolve = 1,
+    /// one replica's route job inside `ReplicaSet::route_parallel`
+    ReplicaDispatch = 2,
+    /// one training step (`train::TrainDriver`)
+    TrainStep = 3,
+}
+
+const N_KINDS: usize = 4;
+
+impl SpanKind {
+    pub const ALL: [SpanKind; N_KINDS] = [
+        SpanKind::RouteBatch,
+        SpanKind::SolverSolve,
+        SpanKind::ReplicaDispatch,
+        SpanKind::TrainStep,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::RouteBatch => "route_batch",
+            SpanKind::SolverSolve => "solver_solve",
+            SpanKind::ReplicaDispatch => "replica_dispatch",
+            SpanKind::TrainStep => "train_step",
+        }
+    }
+
+    /// The registry histogram this span's duration feeds.
+    pub fn hist(self) -> Hist {
+        match self {
+            SpanKind::RouteBatch => Hist::RouteBatchSeconds,
+            SpanKind::SolverSolve => Hist::SolverSolveSeconds,
+            SpanKind::ReplicaDispatch => Hist::ReplicaDispatchSeconds,
+            SpanKind::TrainStep => Hist::TrainStepSeconds,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<SpanKind> {
+        Self::ALL.into_iter().find(|k| *k as u8 == v)
+    }
+}
+
+/// RAII timer: created with [`Span::enter`], records on drop. Bind it
+/// (`let _span = Span::enter(..)`) so it lives to the end of scope.
+pub struct Span {
+    kind: SpanKind,
+    start: Instant,
+    live: bool,
+}
+
+impl Span {
+    pub fn enter(kind: SpanKind) -> Span {
+        Span { kind, start: Instant::now(), live: registry::enabled() }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let d = self.start.elapsed();
+        registry::hist_observe(self.kind.hist(), d.as_secs_f64());
+        ring_record(self.kind, d);
+    }
+}
+
+/// One completed span as read back out of the ring.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    pub kind: SpanKind,
+    pub secs: f64,
+    /// process-monotonic end time, seconds since [`epoch`]
+    pub at_secs: f64,
+}
+
+// Ring storage: `kind_dur[i]` packs the span kind into the top 8 bits
+// and the duration (ns, clamped to 2^56-1) below; `at[i]` is the end
+// time in ns since the telemetry epoch. Slot 0 of `at` doubles as the
+// "never written" sentinel via the parallel head counter.
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static RING_KIND_DUR: [AtomicU64; RING_SLOTS] = [ZERO; RING_SLOTS];
+static RING_AT: [AtomicU64; RING_SLOTS] = [ZERO; RING_SLOTS];
+static RING_HEAD: AtomicU64 = AtomicU64::new(0);
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Seconds since the first telemetry event of the process.
+pub fn elapsed_secs() -> f64 {
+    epoch().elapsed().as_secs_f64()
+}
+
+const DUR_MASK: u64 = (1 << 56) - 1;
+
+fn ring_record(kind: SpanKind, dur: Duration) {
+    let slot =
+        (RING_HEAD.fetch_add(1, Ordering::Relaxed) as usize) % RING_SLOTS;
+    let ns = (dur.as_nanos() as u64).min(DUR_MASK);
+    let at = (epoch().elapsed().as_nanos() as u64).min(DUR_MASK);
+    RING_KIND_DUR[slot]
+        .store(((kind as u64) << 56) | ns, Ordering::Relaxed);
+    RING_AT[slot].store(at, Ordering::Relaxed);
+}
+
+/// The most recent `max` completed spans, newest first. Allocates (it
+/// is a scrape-side call) and tolerates torn slots under concurrency.
+pub fn recent_spans(max: usize) -> Vec<SpanRecord> {
+    let head = RING_HEAD.load(Ordering::Relaxed);
+    let filled = (head as usize).min(RING_SLOTS);
+    let take = max.min(filled);
+    let mut out = Vec::with_capacity(take);
+    for back in 1..=take {
+        let slot = ((head as usize) + RING_SLOTS - back) % RING_SLOTS;
+        let packed = RING_KIND_DUR[slot].load(Ordering::Relaxed);
+        let Some(kind) = SpanKind::from_u8((packed >> 56) as u8) else {
+            continue;
+        };
+        out.push(SpanRecord {
+            kind,
+            secs: (packed & DUR_MASK) as f64 * 1e-9,
+            at_secs: RING_AT[slot].load(Ordering::Relaxed) as f64
+                * 1e-9,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_kinds_pack_into_a_byte_and_back() {
+        for k in SpanKind::ALL {
+            assert_eq!(SpanKind::from_u8(k as u8), Some(k));
+        }
+        assert_eq!(SpanKind::from_u8(200), None);
+    }
+
+    #[test]
+    fn dropped_spans_land_in_the_ring_newest_first() {
+        {
+            let _a = Span::enter(SpanKind::TrainStep);
+        }
+        {
+            let _b = Span::enter(SpanKind::SolverSolve);
+        }
+        let recent = recent_spans(RING_SLOTS);
+        // other tests run concurrently against the same global ring,
+        // so only assert our two spans both exist somewhere recent
+        assert!(recent
+            .iter()
+            .any(|s| s.kind == SpanKind::SolverSolve));
+        assert!(recent.iter().any(|s| s.kind == SpanKind::TrainStep));
+        for s in &recent {
+            assert!(s.secs >= 0.0 && s.at_secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn ring_read_is_bounded_by_both_max_and_capacity() {
+        for _ in 0..4 {
+            let _s = Span::enter(SpanKind::RouteBatch);
+        }
+        assert!(recent_spans(2).len() <= 2);
+        assert!(recent_spans(10_000).len() <= RING_SLOTS);
+    }
+}

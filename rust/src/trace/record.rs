@@ -34,9 +34,18 @@ impl TraceRecorder {
                 frames: Vec::new(),
                 syncs: Vec::new(),
                 completions: Vec::new(),
+                telemetry: Vec::new(),
             },
             next_seq: 0,
         }
+    }
+
+    /// Embed the process's current counter/gauge scrape
+    /// (`telemetry::scrape_named`) into the trace header (v3+), so a
+    /// later replay can diff recorded-vs-replayed metrics. Call once,
+    /// after the serving run finishes and before saving.
+    pub fn capture_telemetry(&mut self) {
+        self.trace.telemetry = crate::telemetry::scrape_named();
     }
 
     /// Record one offered request (admitted *or* rejected — admission

@@ -384,6 +384,7 @@ mod tests {
             frames: Vec::new(),
             syncs: Vec::new(),
             completions: Vec::new(),
+            telemetry: Vec::new(),
         }
     }
 

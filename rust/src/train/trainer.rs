@@ -13,6 +13,7 @@ use crate::data::{Corpus, CorpusSpec, Loader, Split};
 use crate::metrics::{Perplexity, RunRecorder};
 use crate::parallel::{ClusterSim, DeviceProfile, Mesh, ModelCost};
 use crate::runtime::{Engine, Tensor};
+use crate::telemetry;
 use crate::train::state::TrainState;
 use crate::util::json::Json;
 
@@ -171,6 +172,8 @@ impl TrainDriver {
                 &[cfg.batch_size, cfg.seq_len + 1],
                 batch.tokens.clone(),
             );
+            let step_span =
+                telemetry::Span::enter(telemetry::SpanKind::TrainStep);
             let t0 = Instant::now();
             let outputs = engine
                 .run(&train_art, &state.as_inputs(tokens))
@@ -184,6 +187,14 @@ impl TrainDriver {
                 drops.iter().sum::<f32>() / drops.len().max(1) as f32;
             sim.push_step(loads, m);
             rec.push_step(loads, m, nll / n_tok, mean_drop, wall);
+            drop(step_span);
+            telemetry::counter_add(telemetry::Counter::TrainSteps, 1);
+            if let Some(&v) = rec.balance.global_series.last() {
+                telemetry::gauge_set(
+                    telemetry::Gauge::TrainLastMaxVio,
+                    v as f64,
+                );
+            }
             if batch.index % 20 == 0 {
                 crate::info!(
                     "{} step {:>4} loss {:.4} maxvio {:.4} drop {:.4}",

@@ -1,5 +1,9 @@
-//! Leveled stderr logging with elapsed-time prefix. `BIP_MOE_LOG`
-//! env var selects the level (error|warn|info|debug|trace), default info.
+//! Leveled stderr logging with a monotonic elapsed-time prefix.
+//! `BIP_MOE_LOG` selects the level (error|warn|info|debug|trace,
+//! default info); `BIP_LOG_FORMAT=json` switches to JSON-lines output
+//! (`{"t":…,"level":"…","msg":"…"}`) so log lines can be joined with
+//! telemetry snapshots on the shared `elapsed_secs` clock. Plain text
+//! stays the default.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -14,7 +18,29 @@ pub enum Level {
     Trace = 4,
 }
 
+impl Level {
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// Output shape for log lines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// `[    0.123s INFO ] message`
+    Plain = 0,
+    /// one JSON object per line, keys `t` / `level` / `msg`
+    Json = 1,
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(2);
+static FORMAT: AtomicU8 = AtomicU8::new(0);
 static START: OnceLock<Instant> = OnceLock::new();
 
 pub fn init_from_env() {
@@ -26,6 +52,9 @@ pub fn init_from_env() {
         _ => Level::Info,
     };
     set_level(lvl);
+    if std::env::var("BIP_LOG_FORMAT").as_deref() == Ok("json") {
+        set_format(Format::Json);
+    }
     let _ = START.set(Instant::now());
 }
 
@@ -33,23 +62,55 @@ pub fn set_level(lvl: Level) {
     LEVEL.store(lvl as u8, Ordering::Relaxed);
 }
 
+pub fn set_format(fmt: Format) {
+    FORMAT.store(fmt as u8, Ordering::Relaxed);
+}
+
+pub fn format() -> Format {
+    if FORMAT.load(Ordering::Relaxed) == Format::Json as u8 {
+        Format::Json
+    } else {
+        Format::Plain
+    }
+}
+
 pub fn enabled(lvl: Level) -> bool {
     (lvl as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Monotonic seconds since logging started (process-relative; the
+/// same clock telemetry snapshot timestamps are correlated against).
+pub fn elapsed_secs() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 pub fn log(lvl: Level, msg: std::fmt::Arguments) {
     if !enabled(lvl) {
         return;
     }
-    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
-    let tag = match lvl {
-        Level::Error => "ERROR",
-        Level::Warn => "WARN ",
-        Level::Info => "INFO ",
-        Level::Debug => "DEBUG",
-        Level::Trace => "TRACE",
-    };
-    eprintln!("[{t:9.3}s {tag}] {msg}");
+    let t = elapsed_secs();
+    match format() {
+        Format::Plain => {
+            let tag = match lvl {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{t:9.3}s {tag}] {msg}");
+        }
+        Format::Json => {
+            // logging is off the hot path, so rendering through the
+            // JSON escaper (allocates) is fine here
+            let body =
+                crate::util::json::Json::Str(msg.to_string());
+            eprintln!(
+                "{{\"t\":{t:.6},\"level\":\"{}\",\"msg\":{body}}}",
+                lvl.name()
+            );
+        }
+    }
 }
 
 #[macro_export]
@@ -89,5 +150,44 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn format_toggles_and_defaults_to_plain() {
+        assert_eq!(format(), Format::Plain);
+        set_format(Format::Json);
+        assert_eq!(format(), Format::Json);
+        set_format(Format::Plain);
+        assert_eq!(format(), Format::Plain);
+    }
+
+    #[test]
+    fn elapsed_is_monotonic() {
+        let a = elapsed_secs();
+        let b = elapsed_secs();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn json_lines_are_valid_json() {
+        // render the same payload `log` emits in JSON mode and make
+        // sure tricky messages survive the escaper
+        for msg in ["plain", "with \"quotes\"", "tab\tand\nnewline"] {
+            let body = crate::util::json::Json::Str(msg.to_string());
+            let line = format!(
+                "{{\"t\":{:.6},\"level\":\"info\",\"msg\":{body}}}",
+                0.25f64
+            );
+            let doc =
+                crate::util::json::Json::parse(&line).expect(msg);
+            assert_eq!(
+                doc.path("msg").and_then(|j| j.as_str()),
+                Some(msg)
+            );
+            assert_eq!(
+                doc.path("level").and_then(|j| j.as_str()),
+                Some("info")
+            );
+        }
     }
 }

@@ -37,9 +37,9 @@ impl Stopwatch {
     pub fn report(&self) -> String {
         let mut s = String::new();
         for (name, d) in &self.laps {
-            s.push_str(&format!("{name}: {:.3}s  ", d.as_secs_f64()));
+            s.push_str(&format!("{name}: {}  ", human_duration(*d)));
         }
-        s.push_str(&format!("total: {:.3}s", self.total().as_secs_f64()));
+        s.push_str(&format!("total: {}", human_duration(self.total())));
         s
     }
 }
@@ -65,19 +65,26 @@ pub fn bench_loop(min_time: Duration, mut f: impl FnMut()) -> (u64, f64) {
     (iters, t0.elapsed().as_secs_f64() / iters as f64)
 }
 
+/// Render a duration with a unit that keeps 3-5 significant digits.
+///
+/// The unit is chosen by what the *rounded* value needs, so boundary
+/// durations never render as e.g. `999.996ns -> "1000.00ns"`; they
+/// promote to `"1.00µs"` (pinned by the round-trip test below).
 pub fn human_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
-    if s < 1e-6 {
-        format!("{:.1}ns", s * 1e9)
-    } else if s < 1e-3 {
-        format!("{:.2}µs", s * 1e6)
-    } else if s < 1.0 {
-        format!("{:.2}ms", s * 1e3)
-    } else if s < 120.0 {
-        format!("{s:.2}s")
-    } else {
-        format!("{:.1}min", s / 60.0)
+    if s >= 120.0 {
+        return format!("{:.1}min", s / 60.0);
     }
+    let mut v = s * 1e9;
+    for unit in ["ns", "µs", "ms"] {
+        // two decimals are printed, so promote once round(v * 100)
+        // would need four integer digits
+        if (v * 100.0).round() < 100_000.0 {
+            return format!("{v:.2}{unit}");
+        }
+        v /= 1000.0;
+    }
+    format!("{v:.2}s")
 }
 
 #[cfg(test)]
@@ -113,5 +120,63 @@ mod tests {
         assert!(human_duration(Duration::from_millis(50)).ends_with("ms"));
         assert!(human_duration(Duration::from_secs(5)).ends_with('s'));
         assert!(human_duration(Duration::from_secs(300)).ends_with("min"));
+    }
+
+    #[test]
+    fn human_duration_round_trips_across_unit_boundaries() {
+        // (duration, exact rendering) spanning ns/µs/ms/s/min,
+        // including the promote-at-the-boundary cases that used to
+        // render as "1000.00ns" / "0.0ns"
+        let cases: &[(Duration, &str)] = &[
+            (Duration::from_nanos(0), "0.00ns"),
+            (Duration::from_nanos(1), "1.00ns"),
+            (Duration::from_nanos(999), "999.00ns"),
+            (Duration::from_nanos(1_000), "1.00µs"),
+            (Duration::from_nanos(999_996), "1.00ms"),
+            (Duration::from_micros(1), "1.00µs"),
+            (Duration::from_micros(1_500), "1.50ms"),
+            (Duration::from_millis(999), "999.00ms"),
+            (Duration::from_millis(1_000), "1.00s"),
+            (Duration::from_secs_f64(1.234), "1.23s"),
+            (Duration::from_secs(119), "119.00s"),
+            (Duration::from_secs(120), "2.0min"),
+            (Duration::from_secs(300), "5.0min"),
+        ];
+        for (d, want) in cases {
+            assert_eq!(&human_duration(*d), want, "{d:?}");
+        }
+        // parse back numeric prefix: value must match the duration to
+        // within rendering precision (0.5% at 3 significant digits)
+        for (d, _) in cases {
+            let text = human_duration(*d);
+            let unit_at = text
+                .find(|c: char| c != '.' && !c.is_ascii_digit())
+                .unwrap();
+            let num: f64 = text[..unit_at].parse().unwrap();
+            let scale = match &text[unit_at..] {
+                "ns" => 1e-9,
+                "µs" => 1e-6,
+                "ms" => 1e-3,
+                "s" => 1.0,
+                "min" => 60.0,
+                u => panic!("unexpected unit {u:?}"),
+            };
+            let secs = d.as_secs_f64();
+            assert!(
+                (num * scale - secs).abs() <= secs * 0.005 + 1e-11,
+                "{text} does not round-trip to {secs}s"
+            );
+        }
+    }
+
+    #[test]
+    fn report_uses_human_units() {
+        let mut sw = Stopwatch::new();
+        sw.laps.push(("fast".into(), Duration::from_nanos(250)));
+        sw.laps.push(("slow".into(), Duration::from_millis(12)));
+        let r = sw.report();
+        assert!(r.contains("fast: 250.00ns"), "{r}");
+        assert!(r.contains("slow: 12.00ms"), "{r}");
+        assert!(r.contains("total:"), "{r}");
     }
 }

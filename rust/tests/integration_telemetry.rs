@@ -1,0 +1,133 @@
+//! End-to-end telemetry (ISSUE 6): a real serving run must light up
+//! the global registry's core series, the exposition surfaces must
+//! agree with it, and a v3 trace must carry the scrape through a
+//! byte round trip.
+//!
+//! Every assertion on the global registry is a *delta* (after >=
+//! before) or an existence check — the tests in this binary run in
+//! parallel and all feed the same process-wide registry.
+
+use bip_moe::serve::{
+    self, Policy, RouterConfig, Scenario, SchedulerConfig, ServeConfig,
+    TrafficConfig, TrafficGenerator,
+};
+use bip_moe::telemetry::{self, Counter, Gauge, Hist};
+use bip_moe::trace::{Trace, TraceRecorder};
+
+fn small_cfg(policy: Policy, seed: u64) -> ServeConfig {
+    ServeConfig::new(
+        TrafficConfig {
+            scenario: Scenario::Steady,
+            n_requests: 512,
+            seed,
+            ..Default::default()
+        },
+        SchedulerConfig::default(),
+        RouterConfig::default(),
+        policy,
+    )
+}
+
+#[test]
+fn serve_run_lights_up_the_core_series() {
+    let before = telemetry::scrape(telemetry::global());
+    let cfg = small_cfg(Policy::Online, 11);
+    let out = serve::run_scenario(&cfg);
+    assert!(out.report.completed > 0, "scenario must actually serve");
+    let after = telemetry::scrape(telemetry::global());
+
+    for c in [
+        Counter::RouterBatches,
+        Counter::RouterTokens,
+        Counter::SolverSolves,
+        Counter::SolverIterations,
+    ] {
+        assert!(
+            after.counter(c) > before.counter(c),
+            "{} must advance across a served run",
+            c.name()
+        );
+    }
+    assert!(
+        after.hist(Hist::RouteBatchSeconds).count()
+            > before.hist(Hist::RouteBatchSeconds).count(),
+        "route spans must land in the route_batch_seconds histogram"
+    );
+    assert!(
+        after.gauge(Gauge::RouterExperts) > 0.0,
+        "router construction must publish the expert count"
+    );
+    assert!(
+        !after.expert_tokens.is_empty()
+            && after.expert_tokens.iter().flatten().any(|&v| v > 0),
+        "per-(layer, expert) token counters must accumulate"
+    );
+}
+
+#[test]
+fn exposition_surfaces_agree_with_the_registry() {
+    // drive at least one batch so the scrape is non-trivial even if
+    // this test runs first
+    let cfg = small_cfg(Policy::Greedy, 23);
+    serve::run_scenario(&cfg);
+    let snap = telemetry::scrape(telemetry::global());
+
+    let text = snap.to_prometheus();
+    assert!(text.contains("# TYPE bip_moe_router_batches_total counter"));
+    assert!(text.contains("bip_moe_route_batch_seconds_bucket"));
+
+    let json = snap.to_json().to_string();
+    let doc = bip_moe::util::Json::parse(&json)
+        .expect("snapshot JSON must parse");
+    assert_eq!(
+        doc.path("format").and_then(|j| j.as_str()),
+        Some(telemetry::SNAPSHOT_FORMAT)
+    );
+    let batches = doc
+        .path("counters.router_batches_total")
+        .and_then(|j| j.as_f64())
+        .expect("counters must expose router_batches_total");
+    assert_eq!(batches, snap.counter(Counter::RouterBatches) as f64);
+
+    // file writer: extension picks the format
+    let dir = std::env::temp_dir();
+    let jpath = dir.join("bip_moe_itest_metrics.json");
+    let ppath = dir.join("bip_moe_itest_metrics.prom");
+    snap.write(&jpath).unwrap();
+    snap.write(&ppath).unwrap();
+    let jbody = std::fs::read_to_string(&jpath).unwrap();
+    assert!(bip_moe::util::Json::parse(&jbody).is_ok());
+    let pbody = std::fs::read_to_string(&ppath).unwrap();
+    assert!(pbody.starts_with("# HELP bip_moe_"));
+    let _ = std::fs::remove_file(&jpath);
+    let _ = std::fs::remove_file(&ppath);
+}
+
+#[test]
+fn recorded_trace_carries_telemetry_through_bytes() {
+    let cfg = small_cfg(Policy::Online, 37);
+    let rcfg = serve::ReplicaConfig::default();
+    let mut rec = TraceRecorder::new(&cfg, &rcfg);
+    serve::run_scenario_with(
+        &cfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        Some(&mut rec),
+    );
+    rec.capture_telemetry();
+    let trace = rec.into_trace();
+    assert!(
+        !trace.telemetry.is_empty(),
+        "capture_telemetry must embed the scrape"
+    );
+    let batches = trace
+        .telemetry
+        .iter()
+        .find(|(n, _)| n == "router_batches_total")
+        .map(|&(_, v)| v)
+        .expect("scrape must include router_batches_total");
+    assert!(batches > 0.0);
+
+    let back = Trace::from_bytes(&trace.to_bytes()).unwrap();
+    assert_eq!(back.telemetry, trace.telemetry);
+    assert_eq!(back.version, bip_moe::trace::TRACE_VERSION);
+}
