@@ -1,0 +1,452 @@
+//! Hand-rolled Rust lexer for the self-hosted lint suite.
+//!
+//! Deliberately dependency-free (the build is fully offline): a single
+//! forward pass over the source chars producing line-stamped tokens.
+//! It is NOT a full Rust lexer — it only has to be exact about the
+//! places where a naive scanner mis-tokenizes real code in this repo:
+//!
+//! * nested block comments (`/* /* */ */` — Rust nests, C does not);
+//! * raw strings `r"…"` / `r#"…"#` with arbitrary hash counts, and raw
+//!   identifiers `r#ident`;
+//! * byte strings `b"…"` and byte chars `b'x'`;
+//! * char literal vs lifetime (`'a'` is a char, `'a` in `&'a T` is a
+//!   lifetime; `'\n'` and `'\''` are escaped chars);
+//! * numeric literals with underscores, base prefixes, exponents, and
+//!   type suffixes, without eating the `.` of `0..n` or `1.max(x)`.
+//!
+//! Everything else is an identifier or a one-char punct token, which
+//! is all the downstream [`super::model`] layer needs.
+
+/// Token classes. Comments are kept (the lint layer reads `// SAFETY:`
+/// and `// LINT-ALLOW` annotations); whitespace is dropped.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    Comment,
+    Ident,
+    Lifetime,
+    Char,
+    Num,
+    Str,
+    Punct,
+}
+
+/// One token with its 1-based starting line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// Lex failure (unterminated literal/comment); carries the line where
+/// scanning stopped.
+#[derive(Clone, Debug)]
+pub struct LexError {
+    pub line: u32,
+    pub msg: &'static str,
+}
+
+impl std::fmt::Display for LexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+/// Tokenize `src`. Non-ASCII chars outside strings/comments come out
+/// as single punct tokens (fine: they only occur in doc prose here).
+pub fn lex(src: &str) -> Result<Vec<Tok>, LexError> {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let text = |a: usize, b: usize| -> String { s[a..b].iter().collect() };
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Comment, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        // block comment — Rust block comments NEST
+        if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let (start, startline) = (i, line);
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if s[i] == '/' && i + 1 < n && s[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if s[i] == '*' && i + 1 < n && s[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if s[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            if depth != 0 {
+                return Err(LexError { line, msg: "unterminated block comment" });
+            }
+            toks.push(Tok {
+                kind: TokKind::Comment,
+                text: text(start, i),
+                line: startline,
+            });
+            continue;
+        }
+        // raw strings / raw idents / byte literals: r"", r#""#, br"", b"", b''
+        if (c == 'r' || c == 'b') && i + 1 < n {
+            let mut j = i;
+            let mut saw_b = false;
+            if s[j] == 'b' {
+                saw_b = true;
+                j += 1;
+            }
+            let mut saw_r = false;
+            if j < n && s[j] == 'r' {
+                saw_r = true;
+                j += 1;
+            }
+            if saw_r {
+                let mut hashes = 0usize;
+                while j < n && s[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && s[j] == '"' {
+                    // raw (byte) string: closes at `"` + `hashes` hashes
+                    let mut k = j + 1;
+                    let mut end = None;
+                    while k < n {
+                        if s[k] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && k + 1 + h < n && s[k + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                end = Some(k);
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    let Some(k) = end else {
+                        return Err(LexError { line, msg: "unterminated raw string" });
+                    };
+                    let t = text(i, k + 1 + hashes);
+                    let startline = line;
+                    line += t.chars().filter(|&ch| ch == '\n').count() as u32;
+                    toks.push(Tok { kind: TokKind::Str, text: t, line: startline });
+                    i = k + 1 + hashes;
+                    continue;
+                }
+                if hashes == 1 && j < n && is_ident_start(s[j]) {
+                    // raw identifier r#ident
+                    let mut k = j;
+                    while k < n && is_ident_cont(s[k]) {
+                        k += 1;
+                    }
+                    toks.push(Tok { kind: TokKind::Ident, text: text(i, k), line });
+                    i = k;
+                    continue;
+                }
+                // plain ident starting with r/b falls through below
+            }
+            if saw_b && j < n && (s[j] == '"' || s[j] == '\'') {
+                let quote = s[j];
+                let mut k = j + 1;
+                let mut terminated = false;
+                while k < n {
+                    if s[k] == '\\' {
+                        k += 2;
+                        continue;
+                    }
+                    if s[k] == quote {
+                        terminated = true;
+                        break;
+                    }
+                    if s[k] == '\n' {
+                        line += 1;
+                    }
+                    k += 1;
+                }
+                if !terminated {
+                    return Err(LexError { line, msg: "unterminated byte literal" });
+                }
+                let kind = if quote == '"' { TokKind::Str } else { TokKind::Char };
+                toks.push(Tok { kind, text: text(i, k + 1), line });
+                i = k + 1;
+                continue;
+            }
+        }
+        // regular string
+        if c == '"' {
+            let startline = line;
+            let mut k = i + 1;
+            let mut terminated = false;
+            while k < n {
+                if s[k] == '\\' {
+                    if k + 1 < n && s[k + 1] == '\n' {
+                        line += 1;
+                    }
+                    k += 2;
+                    continue;
+                }
+                if s[k] == '"' {
+                    terminated = true;
+                    break;
+                }
+                if s[k] == '\n' {
+                    line += 1;
+                }
+                k += 1;
+            }
+            if !terminated {
+                return Err(LexError { line, msg: "unterminated string" });
+            }
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: text(i, k + 1),
+                line: startline,
+            });
+            i = k + 1;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < n && s[i + 1] == '\\' {
+                // escaped char: skip the escaped character, then scan
+                // to the closing quote (covers '\n', '\\', '\'', '\u{…}')
+                let mut k = i + 3;
+                while k < n && s[k] != '\'' {
+                    k += 1;
+                }
+                if k >= n {
+                    return Err(LexError { line, msg: "unterminated char literal" });
+                }
+                toks.push(Tok { kind: TokKind::Char, text: text(i, k + 1), line });
+                i = k + 1;
+                continue;
+            }
+            // one char then a closing quote => char literal, else lifetime
+            if i + 2 < n && s[i + 2] == '\'' && s[i + 1] != '\'' {
+                toks.push(Tok { kind: TokKind::Char, text: text(i, i + 3), line });
+                i += 3;
+                continue;
+            }
+            let mut k = i + 1;
+            while k < n && is_ident_cont(s[k]) {
+                k += 1;
+            }
+            if k == i + 1 {
+                return Err(LexError { line, msg: "stray single quote" });
+            }
+            toks.push(Tok { kind: TokKind::Lifetime, text: text(i, k), line });
+            i = k;
+            continue;
+        }
+        // number: base prefixes, underscores, float part only when a
+        // digit follows the dot (so `0..n` and `1.max(x)` lex right),
+        // exponent, then any type suffix
+        if c.is_ascii_digit() {
+            let mut k = i;
+            let nxt = if i + 1 < n { s[i + 1] } else { '\0' };
+            if c == '0' && (nxt == 'x' || nxt == 'o' || nxt == 'b') {
+                k = i + 2;
+                while k < n && is_ident_cont(s[k]) {
+                    k += 1;
+                }
+            } else {
+                while k < n && (s[k].is_ascii_digit() || s[k] == '_') {
+                    k += 1;
+                }
+                if k < n && s[k] == '.' && k + 1 < n && s[k + 1].is_ascii_digit() {
+                    k += 1;
+                    while k < n && (s[k].is_ascii_digit() || s[k] == '_') {
+                        k += 1;
+                    }
+                }
+                if k < n && (s[k] == 'e' || s[k] == 'E') {
+                    let plain = k + 1 < n && s[k + 1].is_ascii_digit();
+                    let signed = k + 2 < n
+                        && (s[k + 1] == '+' || s[k + 1] == '-')
+                        && s[k + 2].is_ascii_digit();
+                    if plain || signed {
+                        k += if signed { 2 } else { 1 };
+                        while k < n && (s[k].is_ascii_digit() || s[k] == '_') {
+                            k += 1;
+                        }
+                    }
+                }
+                // type suffix (u32, f64, usize, …)
+                while k < n && is_ident_cont(s[k]) {
+                    k += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num, text: text(i, k), line });
+            i = k;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut k = i;
+            while k < n && is_ident_cont(s[k]) {
+                k += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: text(i, k), line });
+            i = k;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src)
+            .expect("fixture must lex")
+            .into_iter()
+            .map(|t| (t.kind, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let toks = kinds(r####"let s = r#"quote " inside"#;"####);
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Str && t == r###"r#"quote " inside"#"###));
+        // two hashes, with a `"#` inside that must NOT close it
+        let toks = kinds("let s = r##\"one \"# two\"##;");
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Str && t == "r##\"one \"# two\"##"));
+        // raw ident is one Ident token
+        let toks = kinds("let r#fn = 1;");
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Ident && t == "r#fn"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = kinds("a /* outer /* inner */ still comment */ b");
+        let comments: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokKind::Comment).collect();
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].1, "/* outer /* inner */ still comment */");
+        let idents: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(idents, vec!["a", "b"]);
+        assert!(lex("/* never closed /* */").is_err());
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = kinds("fn f<'a>(x: &'a str) -> char { 'a' }");
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Lifetime && t == "'a"));
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Char && t == "'a'"));
+        // escaped chars, including the escaped quote
+        for lit in ["'\\n'", "'\\''", "'\\\\'", "'\\u{1F600}'"] {
+            let src = format!("let c = {lit};");
+            let toks = kinds(&src);
+            assert!(
+                toks.iter().any(|(k, t)| *k == TokKind::Char && t == lit),
+                "missing char token {lit} in {src}"
+            );
+        }
+        // byte char and byte string
+        let toks = kinds("let b = b'x'; let s = b\"bytes\";");
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Char && t == "b'x'"));
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Str && t == "b\"bytes\""));
+    }
+
+    #[test]
+    fn numeric_literals() {
+        let toks = kinds("let x = 1_000_000u64 + 0xFF_u8 + 2.5e-4f64 + 0b1010;");
+        let nums: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1_000_000u64", "0xFF_u8", "2.5e-4f64", "0b1010"]);
+        // range and method-on-int must not eat the dot
+        let toks = kinds("for i in 0..n { 1.max(i); }");
+        let nums: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(nums, vec!["0", "1"]);
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_tokens() {
+        let src = "a\n\"two\nline\"\nb /* c\nd */ e";
+        let toks = lex(src).expect("fixture must lex");
+        let find = |txt: &str| {
+            toks.iter()
+                .find(|t| t.text.starts_with(txt))
+                .map(|t| t.line)
+                .unwrap_or(0)
+        };
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("\"two"), 2);
+        assert_eq!(find("b"), 4);
+        assert_eq!(find("/*"), 4);
+        assert_eq!(find("e"), 5);
+    }
+
+    #[test]
+    fn round_trip_preserves_non_whitespace() {
+        let src = r#"
+            // comment with "a string"
+            fn f<'a>(x: &'a [u8]) -> Vec<u8> {
+                let s = r#ident; /* nested /* deep */ ok */
+                x.iter().map(|b| b + 1_u8).collect()
+            }
+        "#;
+        let toks = lex(src).expect("fixture must lex");
+        let got: String = toks
+            .iter()
+            .flat_map(|t| t.text.chars())
+            .filter(|c| !c.is_whitespace())
+            .collect();
+        let want: String = src.chars().filter(|c| !c.is_whitespace()).collect();
+        assert_eq!(got, want);
+    }
+}

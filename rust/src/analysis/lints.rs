@@ -1,0 +1,544 @@
+//! The lint passes. Each pass reads the per-file [`Model`]s and pushes
+//! [`Finding`]s; policy (which constructs count as allocating, which
+//! files are hot scope, which dirs must not panic) lives in the
+//! constant tables at the top so a reviewer can audit the whole
+//! contract in one screen.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::TokKind;
+use super::model::{FnItem, Model};
+use super::report::Finding;
+
+/// Methods that allocate on every call.
+const ALLOC_METHODS: &[&str] =
+    &["to_vec", "collect", "to_string", "to_owned", "clone"];
+/// Owner types whose constructors allocate.
+const ALLOC_TYPES: &[&str] =
+    &["Vec", "Box", "String", "VecDeque", "BTreeMap", "HashMap"];
+const ALLOC_TYPE_FNS: &[&str] = &["new", "from", "with_capacity", "from_iter"];
+const ALLOC_MACROS: &[&str] = &["vec", "format"];
+
+/// Roots of the serving/solver hot path: the per-batch routing entry,
+/// the Algorithm-1 dual updates, and the telemetry write seams.
+const HOT_ROOTS: &[&str] = &[
+    "route_batch_into",
+    "update_in",
+    "update_parallel_in",
+    "update_adaptive_in",
+    "update_adaptive_parallel_in",
+    "counter_add",
+    "gauge_set",
+    "hist_observe",
+    "ring_record",
+    "expert_tokens_add",
+    "expert_tokens_add_f32",
+];
+
+/// Files the hot-path closure is resolved within. `src/util/pool.rs`
+/// is deliberately absent: the pool is the documented parallelism
+/// boundary (it boxes jobs) and the parallel solver variants are
+/// benched separately from the zero-alloc serial contract.
+const HOT_SCOPE: &[&str] = &[
+    "src/serve/router.rs",
+    "src/routing/mod.rs",
+    "src/bip/dual.rs",
+    "src/bip/mod.rs",
+    "src/bip/online.rs",
+    "src/bip/approx.rs",
+    "src/perf/arena.rs",
+    "src/util/stats.rs",
+    "src/telemetry/registry.rs",
+    "src/telemetry/span.rs",
+];
+
+/// Directories where panicking constructs need a `// LINT-ALLOW(panic)`.
+const PANIC_DIRS: &[&str] =
+    &["src/serve/", "src/routing/", "src/bip/", "src/telemetry/"];
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
+
+const PANIC_ALLOW: &str = "LINT-ALLOW(panic)";
+
+fn finding(out: &mut Vec<Finding>, lint: &str, path: &str, line: u32, msg: String) {
+    out.push(Finding {
+        lint: lint.to_string(),
+        path: path.to_string(),
+        line,
+        msg,
+    });
+}
+
+/// A call site edge, pre-resolution.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord)]
+enum Edge {
+    /// `.f(…)` — resolves to any in-scope method named f
+    Method(String),
+    /// `X::f(…)` — resolves within impl blocks of X (or free fns for
+    /// module-qualified calls like `registry::counter_add`)
+    Qualified(String, String),
+    /// `f(…)` — resolves to free functions only
+    Bare(String),
+}
+
+fn call_edges(m: &Model, f: &FnItem) -> BTreeSet<Edge> {
+    let toks = m.body_tokens(f);
+    let mut out = BTreeSet::new();
+    for x in 0..toks.len() {
+        let t = &toks[x];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let nxt = if x + 1 < toks.len() { toks[x + 1].text.as_str() } else { "" };
+        let prev = if x > 0 { toks[x - 1].text.as_str() } else { "" };
+        if nxt != "(" || prev == "fn" {
+            continue;
+        }
+        if prev == "." {
+            out.insert(Edge::Method(t.text.clone()));
+        } else if prev == ":"
+            && x > 2
+            && toks[x - 2].text == ":"
+            && toks[x - 3].kind == TokKind::Ident
+        {
+            out.insert(Edge::Qualified(toks[x - 3].text.clone(), t.text.clone()));
+        } else if prev != "!" {
+            out.insert(Edge::Bare(t.text.clone()));
+        }
+    }
+    out
+}
+
+/// `(line, construct)` for every allocating construct in `f`'s body.
+fn alloc_sites(m: &Model, f: &FnItem) -> Vec<(u32, String)> {
+    let toks = m.body_tokens(f);
+    let mut out = Vec::new();
+    for x in 0..toks.len() {
+        let t = &toks[x];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let nxt = if x + 1 < toks.len() { toks[x + 1].text.as_str() } else { "" };
+        let prev = if x > 0 { toks[x - 1].text.as_str() } else { "" };
+        let prev2 = if x > 1 { toks[x - 2].text.as_str() } else { "" };
+        if ALLOC_MACROS.contains(&t.text.as_str()) && nxt == "!" {
+            out.push((t.line, format!("{}!", t.text)));
+        } else if ALLOC_TYPE_FNS.contains(&t.text.as_str())
+            && nxt == "("
+            && prev == ":"
+            && prev2 == ":"
+            && x > 2
+            && ALLOC_TYPES.contains(&toks[x - 3].text.as_str())
+        {
+            out.push((t.line, format!("{}::{}", toks[x - 3].text, t.text)));
+        } else if ALLOC_METHODS.contains(&t.text.as_str())
+            && nxt == "("
+            && prev == "."
+        {
+            out.push((t.line, format!(".{}()", t.text)));
+        }
+    }
+    out
+}
+
+/// hot-path-alloc: no allocating construct may be reachable from the
+/// serving/solver hot roots. Reachability is a BFS over resolved call
+/// edges within [`HOT_SCOPE`], stopping at `// COLD`-marked fns (the
+/// documented allocating compat seams).
+pub fn hot_path_alloc(models: &BTreeMap<String, Model>, out: &mut Vec<Finding>) {
+    // name -> [(path, fn index)] over hot-scope fns with bodies
+    let mut defs: BTreeMap<&str, Vec<(&str, usize)>> = BTreeMap::new();
+    for rel in HOT_SCOPE {
+        let Some(m) = models.get(*rel) else { continue };
+        for (fi, f) in m.fns.iter().enumerate() {
+            if f.in_test || f.body.is_none() {
+                continue;
+            }
+            defs.entry(f.name.as_str()).or_default().push((rel, fi));
+        }
+    }
+    let resolve = |caller: &FnItem, edge: &Edge| -> Vec<(String, usize)> {
+        let (name, want_type): (&str, Option<Option<&str>>) = match edge {
+            Edge::Method(n) => (n.as_str(), None),
+            Edge::Qualified(q, n) => {
+                let q = if q == "Self" {
+                    caller.impl_type.as_deref().unwrap_or("Self")
+                } else {
+                    q.as_str()
+                };
+                (n.as_str(), Some(Some(q)))
+            }
+            Edge::Bare(n) => (n.as_str(), Some(None)),
+        };
+        let cands = defs.get(name).map(|v| v.as_slice()).unwrap_or(&[]);
+        let pick = |keep: &dyn Fn(&FnItem) -> bool| -> Vec<(String, usize)> {
+            cands
+                .iter()
+                .filter(|(r, fi)| keep(&models[*r].fns[*fi]))
+                .map(|(r, fi)| (r.to_string(), *fi))
+                .collect()
+        };
+        match want_type {
+            // method call: any impl fn with that name
+            None => pick(&|f| f.impl_type.is_some()),
+            // qualified: impls of that type, falling back to free fns
+            // (module-qualified calls like `registry::counter_add`)
+            Some(Some(q)) => {
+                let typed = pick(&|f| f.impl_type.as_deref() == Some(q));
+                if typed.is_empty() {
+                    pick(&|f| f.impl_type.is_none())
+                } else {
+                    typed
+                }
+            }
+            // bare call: free functions only
+            Some(None) => pick(&|f| f.impl_type.is_none()),
+        }
+    };
+    let mut reached: BTreeSet<(String, u32)> = BTreeSet::new();
+    let mut queue: Vec<(String, usize)> = Vec::new();
+    for name in HOT_ROOTS {
+        for (rel, fi) in defs.get(*name).map(|v| v.as_slice()).unwrap_or(&[]) {
+            let key = (rel.to_string(), models[*rel].fns[*fi].line);
+            if reached.insert(key) {
+                queue.push((rel.to_string(), *fi));
+            }
+        }
+    }
+    while let Some((rel, fi)) = queue.pop() {
+        let m = &models[rel.as_str()];
+        let f = &m.fns[fi];
+        for edge in call_edges(m, f) {
+            for (crel, cfi) in resolve(f, &edge) {
+                let cf = &models[crel.as_str()].fns[cfi];
+                if cf.cold {
+                    continue;
+                }
+                if reached.insert((crel.clone(), cf.line)) {
+                    queue.push((crel, cfi));
+                }
+            }
+        }
+    }
+    for (rel, m) in models {
+        for f in &m.fns {
+            if !reached.contains(&(rel.clone(), f.line)) {
+                continue;
+            }
+            for (line, what) in alloc_sites(m, f) {
+                finding(
+                    out,
+                    "hot-path-alloc",
+                    rel,
+                    line,
+                    format!(
+                        "allocating construct `{what}` in `{}` (reachable \
+                         from the serving hot path)",
+                        f.name
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// unsafe-audit: every `unsafe` needs an attached `// SAFETY:` comment,
+/// and the per-file unsafe census must match the checked-in inventory
+/// in both directions (so new unsafe code forces a reviewed update).
+pub fn unsafe_audit(
+    models: &BTreeMap<String, Model>,
+    inventory: &str,
+    out: &mut Vec<Finding>,
+) {
+    const INV: &str = "analysis/unsafe_inventory.txt";
+    let mut actual: BTreeMap<&str, (usize, u32)> = BTreeMap::new();
+    for (rel, m) in models {
+        if let Some(first) = m.unsafes.first() {
+            actual.insert(rel.as_str(), (m.unsafes.len(), first.line));
+        }
+        for u in &m.unsafes {
+            if !u.has_safety {
+                finding(
+                    out,
+                    "unsafe-audit",
+                    rel,
+                    u.line,
+                    format!(
+                        "`unsafe` {} without a `// SAFETY:` comment",
+                        u.kind.label()
+                    ),
+                );
+            }
+        }
+    }
+    let mut listed: BTreeMap<&str, usize> = BTreeMap::new();
+    for (ln0, raw) in inventory.lines().enumerate() {
+        let line = ln0 as u32 + 1;
+        let s = raw.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let mut parts = s.split_whitespace();
+        let entry = (parts.next(), parts.next().and_then(|c| c.parse().ok()));
+        let (Some(path), Some(count)) = entry else {
+            finding(
+                out,
+                "unsafe-audit",
+                INV,
+                line,
+                format!("malformed inventory line `{s}` (want `<path> <count>`)"),
+            );
+            continue;
+        };
+        listed.insert(path, count);
+        match actual.get(path) {
+            None => finding(
+                out,
+                "unsafe-audit",
+                INV,
+                line,
+                format!("inventory lists `{path}` but the file has no unsafe code"),
+            ),
+            Some(&(have, first_line)) => {
+                if have != count {
+                    finding(
+                        out,
+                        "unsafe-audit",
+                        path,
+                        first_line,
+                        format!(
+                            "file has {have} unsafe items but the inventory \
+                             says {count} (update {INV})"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    for (path, &(have, first_line)) in &actual {
+        if !listed.contains_key(path) {
+            finding(
+                out,
+                "unsafe-audit",
+                path,
+                first_line,
+                format!("file has {have} unsafe items but no entry in {INV}"),
+            );
+        }
+    }
+}
+
+/// panic-path: no unwrap/expect/panic-family macro/indexing-with-a-
+/// literal in the serving modules outside test code, unless annotated
+/// `// LINT-ALLOW(panic): <reason>`.
+pub fn panic_path(models: &BTreeMap<String, Model>, out: &mut Vec<Finding>) {
+    for (rel, m) in models {
+        if !PANIC_DIRS.iter().any(|d| rel.starts_with(d)) {
+            continue;
+        }
+        let c = &m.code;
+        for x in 0..c.len() {
+            let t = &c[x];
+            if m.in_test(t.line) {
+                continue;
+            }
+            let nxt = if x + 1 < c.len() { c[x + 1].text.as_str() } else { "" };
+            let prev = if x > 0 { c[x - 1].text.as_str() } else { "" };
+            let hit: Option<String> = if t.kind == TokKind::Ident
+                && PANIC_METHODS.contains(&t.text.as_str())
+                && prev == "."
+                && nxt == "("
+            {
+                Some(format!(".{}()", t.text))
+            } else if t.kind == TokKind::Ident
+                && PANIC_MACROS.contains(&t.text.as_str())
+                && nxt == "!"
+            {
+                Some(format!("{}!", t.text))
+            } else if t.kind == TokKind::Punct
+                && t.text == "["
+                && x > 0
+                && (c[x - 1].kind == TokKind::Ident
+                    || prev == ")"
+                    || prev == "]")
+                && x + 2 < c.len()
+                && c[x + 1].kind == TokKind::Num
+                && c[x + 2].text == "]"
+            {
+                Some(format!("indexing with literal `[{}]`", c[x + 1].text))
+            } else {
+                None
+            };
+            let Some(hit) = hit else { continue };
+            if m.comment_above_matches(t.line, |txt| txt.contains(PANIC_ALLOW)) {
+                continue;
+            }
+            finding(
+                out,
+                "panic-path",
+                rel,
+                t.line,
+                format!("panicking construct {hit} on a serving module"),
+            );
+        }
+    }
+}
+
+/// telemetry-naming: every metric name in the registry must match
+/// `bip_moe_[a-z0-9_]+` (the `bip_moe_` prefix is prepended at
+/// exposition), be unique, and pair with non-empty help text.
+pub fn telemetry_naming(models: &BTreeMap<String, Model>, out: &mut Vec<Finding>) {
+    const REG: &str = "src/telemetry/registry.rs";
+    let Some(m) = models.get(REG) else { return };
+    let mut names: Vec<(u32, String)> = Vec::new();
+    let mut helps: Vec<(u32, String)> = Vec::new();
+    for f in &m.fns {
+        if f.in_test || f.body.is_none() {
+            continue;
+        }
+        let dst = match f.name.as_str() {
+            "name" => &mut names,
+            "help" => &mut helps,
+            _ => continue,
+        };
+        for t in m.body_tokens(f) {
+            if t.kind == TokKind::Str {
+                dst.push((t.line, t.text.trim_matches('"').to_string()));
+            }
+        }
+    }
+    let mut seen: BTreeMap<&str, u32> = BTreeMap::new();
+    for (line, val) in &names {
+        let ok = !val.is_empty()
+            && val.chars().all(|ch| {
+                ch.is_ascii_lowercase() || ch.is_ascii_digit() || ch == '_'
+            });
+        if !ok {
+            finding(
+                out,
+                "telemetry-naming",
+                REG,
+                *line,
+                format!("metric name `bip_moe_{val}` violates bip_moe_[a-z0-9_]+"),
+            );
+        }
+        if let Some(first) = seen.get(val.as_str()) {
+            finding(
+                out,
+                "telemetry-naming",
+                REG,
+                *line,
+                format!("duplicate metric name `{val}` (first at line {first})"),
+            );
+        } else {
+            seen.insert(val.as_str(), *line);
+        }
+    }
+    for (line, val) in &helps {
+        if val.trim().is_empty() {
+            finding(out, "telemetry-naming", REG, *line, "empty help text".into());
+        }
+    }
+    if names.len() != helps.len() {
+        finding(
+            out,
+            "telemetry-naming",
+            REG,
+            1,
+            format!("{} metric names but {} help strings", names.len(), helps.len()),
+        );
+    }
+}
+
+/// lock-discipline: fns marked `// HOT` may not name `Mutex`/`RwLock`
+/// or call `.lock()` — the hot path is sharded atomics only.
+pub fn lock_discipline(models: &BTreeMap<String, Model>, out: &mut Vec<Finding>) {
+    for (rel, m) in models {
+        for f in &m.fns {
+            if !f.hot || f.body.is_none() {
+                continue;
+            }
+            let toks = m.body_tokens(f);
+            for x in 0..toks.len() {
+                let t = &toks[x];
+                if t.kind != TokKind::Ident {
+                    continue;
+                }
+                let prev = if x > 0 { toks[x - 1].text.as_str() } else { "" };
+                let nxt =
+                    if x + 1 < toks.len() { toks[x + 1].text.as_str() } else { "" };
+                if t.text == "Mutex"
+                    || t.text == "RwLock"
+                    || (t.text == "lock" && prev == "." && nxt == "(")
+                {
+                    finding(
+                        out,
+                        "lock-discipline",
+                        rel,
+                        t.line,
+                        format!("lock use `{}` inside `// HOT` fn `{}`", t.text, f.name),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// bench-honesty: a fn that writes a BENCH_*.json record (has a
+/// `BENCH_` string literal and calls a `write`) must stamp
+/// `schema_version` into the payload, so cross-PR perf consumers can
+/// detect shape drift instead of silently comparing unlike records.
+pub fn bench_honesty(models: &BTreeMap<String, Model>, out: &mut Vec<Finding>) {
+    for (rel, m) in models {
+        for f in &m.fns {
+            if f.in_test || f.body.is_none() {
+                continue;
+            }
+            let toks = m.body_tokens(f);
+            let has_bench_lit = toks
+                .iter()
+                .any(|t| t.kind == TokKind::Str && t.text.contains("BENCH_"));
+            if !has_bench_lit {
+                continue;
+            }
+            let is_writer = call_edges(m, f).iter().any(|e| {
+                matches!(
+                    e,
+                    Edge::Method(n) | Edge::Qualified(_, n) | Edge::Bare(n)
+                        if n == "write"
+                )
+            });
+            let has_schema = toks.iter().any(|t| {
+                t.kind == TokKind::Str && t.text.contains("schema_version")
+            });
+            if is_writer && !has_schema {
+                finding(
+                    out,
+                    "bench-honesty",
+                    rel,
+                    f.line,
+                    format!(
+                        "`{}` writes a BENCH_*.json record without declaring \
+                         schema_version",
+                        f.name
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Run every pass over `models`.
+pub fn run_all(
+    models: &BTreeMap<String, Model>,
+    inventory: &str,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    hot_path_alloc(models, &mut out);
+    unsafe_audit(models, inventory, &mut out);
+    panic_path(models, &mut out);
+    telemetry_naming(models, &mut out);
+    lock_discipline(models, &mut out);
+    bench_honesty(models, &mut out);
+    out
+}

@@ -1,0 +1,203 @@
+//! # analysis/ — self-hosted static lint suite
+//!
+//! Parses this repository's own Rust sources (no rustc, no external
+//! crates — a hand-rolled [`lexer`] and a brace-matching syntactic
+//! [`model`]) and proves the invariants the rest of the codebase
+//! claims in prose, at CI time:
+//!
+//! * **hot-path-alloc** — nothing reachable from the serving/solver
+//!   hot roots allocates (the §3 "very small time costs" claim);
+//! * **unsafe-audit** — every `unsafe` carries a `// SAFETY:` comment
+//!   and matches the checked-in `analysis/unsafe_inventory.txt`;
+//! * **panic-path** — no unwrap/expect/panic-family/literal-indexing
+//!   in the serving modules without a `// LINT-ALLOW(panic): reason`;
+//! * **telemetry-naming** — metric names are `bip_moe_[a-z0-9_]+`,
+//!   unique, with non-empty help;
+//! * **lock-discipline** — `// HOT` fns never touch Mutex/RwLock;
+//! * **bench-honesty** — every BENCH_*.json writer stamps a
+//!   schema_version.
+//!
+//! Findings can be waived per line via `analysis/waivers.txt`
+//! (mandatory reasons; unused waivers are themselves findings, so a
+//! waiver cannot outlive the code it excuses). The CLI surface is
+//! `bip-moe lint [--deny] [--json PATH] [--filter LINT] [--root DIR]`.
+
+pub mod lexer;
+pub mod lints;
+pub mod model;
+pub mod report;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use model::Model;
+pub use report::{render_json, render_text, Finding};
+
+const WAIVERS_PATH: &str = "analysis/waivers.txt";
+
+/// The input to a lint run: `(crate-relative path, source)` pairs plus
+/// the waiver and unsafe-inventory files. Tests build one from fixture
+/// strings; the CLI loads one from disk with [`SourceSet::from_root`].
+pub struct SourceSet {
+    pub files: Vec<(String, String)>,
+    pub waivers: String,
+    pub inventory: String,
+}
+
+impl SourceSet {
+    /// Load `src/` and `benches/` (recursively, sorted) plus the
+    /// `analysis/` policy files from a crate root. Missing policy
+    /// files read as empty, which the lints then report against.
+    pub fn from_root(root: &Path) -> std::io::Result<SourceSet> {
+        let mut files = Vec::new();
+        for sub in ["src", "benches"] {
+            collect_rs(&root.join(sub), root, &mut files)?;
+        }
+        let read_opt = |rel: &str| -> String {
+            std::fs::read_to_string(root.join(rel)).unwrap_or_default()
+        };
+        Ok(SourceSet {
+            files,
+            waivers: read_opt(WAIVERS_PATH),
+            inventory: read_opt("analysis/unsafe_inventory.txt"),
+        })
+    }
+}
+
+fn collect_rs(
+    dir: &Path,
+    root: &Path,
+    out: &mut Vec<(String, String)>,
+) -> std::io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?
+        .collect::<Result<Vec<_>, _>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, root, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, std::fs::read_to_string(&path)?));
+        }
+    }
+    Ok(())
+}
+
+/// One parsed waiver line: `<lint> <path>:<line> <reason…>`.
+struct Waiver {
+    lint: String,
+    path: String,
+    line: u32,
+    /// line number inside waivers.txt (for stale-waiver reporting)
+    file_line: u32,
+}
+
+fn parse_waivers(text: &str, out: &mut Vec<Finding>) -> Vec<Waiver> {
+    let mut waivers = Vec::new();
+    for (ln0, raw) in text.lines().enumerate() {
+        let file_line = ln0 as u32 + 1;
+        let s = raw.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let mut parts = s.splitn(3, char::is_whitespace);
+        let lint = parts.next().unwrap_or("");
+        let key = parts.next().unwrap_or("");
+        let reason = parts.next().unwrap_or("").trim();
+        let parsed = key
+            .rsplit_once(':')
+            .and_then(|(p, l)| l.parse::<u32>().ok().map(|l| (p, l)));
+        let Some((path, line)) = parsed else {
+            out.push(Finding {
+                lint: "waiver-syntax".into(),
+                path: WAIVERS_PATH.into(),
+                line: file_line,
+                msg: format!(
+                    "malformed waiver `{s}` (want `<lint> <path>:<line> <reason>`)"
+                ),
+            });
+            continue;
+        };
+        if reason.is_empty() {
+            out.push(Finding {
+                lint: "waiver-syntax".into(),
+                path: WAIVERS_PATH.into(),
+                line: file_line,
+                msg: format!("waiver `{lint} {key}` has no reason — reasons are mandatory"),
+            });
+            continue;
+        }
+        waivers.push(Waiver {
+            lint: lint.to_string(),
+            path: path.to_string(),
+            line,
+            file_line,
+        });
+    }
+    waivers
+}
+
+/// Lint a [`SourceSet`]: lex + model every file, run all passes, apply
+/// waivers (reporting stale ones), then sort and optionally filter to
+/// one lint name. This is the single entry point the CLI and the
+/// integration tests share.
+pub fn run(set: &SourceSet, filter: Option<&str>) -> Vec<Finding> {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut models: BTreeMap<String, Model> = BTreeMap::new();
+    for (rel, src) in &set.files {
+        match lexer::lex(src) {
+            Ok(toks) => {
+                models.insert(rel.clone(), Model::new(rel, toks));
+            }
+            Err(e) => findings.push(Finding {
+                lint: "lex-error".into(),
+                path: rel.clone(),
+                line: e.line,
+                msg: e.msg.to_string(),
+            }),
+        }
+    }
+    findings.extend(lints::run_all(&models, &set.inventory));
+
+    // waivers: drop matching findings, then report unused entries
+    let waivers = parse_waivers(&set.waivers, &mut findings);
+    let mut used = vec![false; waivers.len()];
+    findings.retain(|f| {
+        for (i, w) in waivers.iter().enumerate() {
+            if w.lint == f.lint && w.path == f.path && w.line == f.line {
+                used[i] = true;
+                return false;
+            }
+        }
+        true
+    });
+    for (w, was_used) in waivers.iter().zip(&used) {
+        if !was_used {
+            findings.push(Finding {
+                lint: "stale-waiver".into(),
+                path: WAIVERS_PATH.into(),
+                line: w.file_line,
+                msg: format!(
+                    "waiver `{} {}:{}` matches no finding — remove it",
+                    w.lint, w.path, w.line
+                ),
+            });
+        }
+    }
+
+    if let Some(name) = filter {
+        findings.retain(|f| f.lint == name);
+    }
+    findings.sort();
+    findings
+}

@@ -1,0 +1,513 @@
+//! Syntactic model over the token stream: items the lints reason
+//! about — functions (with spans, enclosing impl type, attached
+//! comments, `#[cfg(test)]` coverage) and `unsafe` occurrences.
+//!
+//! This is deliberately NOT an AST. The lints only need four
+//! structural facts: where each fn's body starts and ends (brace
+//! matching over the comment-stripped token stream), which impl block
+//! it sits in (for `X::f` call resolution), which comment text is
+//! attached to it (for `// HOT` / `// COLD` / `// SAFETY:` markers),
+//! and whether a given line is inside test-gated code.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{Tok, TokKind};
+
+/// One `fn` item.
+#[derive(Clone, Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// line of the `fn` keyword
+    pub line: u32,
+    /// code-token index range of the body `{ … }` (None for trait
+    /// method declarations without a default body)
+    pub body: Option<(usize, usize)>,
+    /// enclosing `impl` block's type name (None for free functions)
+    pub impl_type: Option<String>,
+    pub in_test: bool,
+    /// attached comment carries a `// HOT` marker (lock-discipline scope)
+    pub hot: bool,
+    /// attached comment carries a `// COLD` marker (hot-path BFS stops)
+    pub cold: bool,
+    pub is_unsafe: bool,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum UnsafeKind {
+    Block,
+    Impl,
+    Fn,
+    Trait,
+}
+
+impl UnsafeKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            UnsafeKind::Block => "block",
+            UnsafeKind::Impl => "impl",
+            UnsafeKind::Fn => "fn",
+            UnsafeKind::Trait => "trait",
+        }
+    }
+}
+
+/// One `unsafe` block/impl/fn/trait occurrence.
+#[derive(Clone, Debug)]
+pub struct UnsafeItem {
+    pub line: u32,
+    pub kind: UnsafeKind,
+    /// a `// SAFETY:` comment is attached (same line or the contiguous
+    /// comment block directly above)
+    pub has_safety: bool,
+}
+
+/// Per-file syntactic model.
+pub struct Model {
+    pub path: String,
+    /// token stream with comments stripped (brace matching and call
+    /// scanning operate on this)
+    pub code: Vec<Tok>,
+    /// line -> concatenated text of every comment token covering it
+    comment_lines: BTreeMap<u32, String>,
+    /// lines that carry at least one non-comment token
+    noncomment_lines: BTreeSet<u32>,
+    /// line ranges covered by `#[cfg(test)]` / `#[test]` items
+    pub test_ranges: Vec<(u32, u32)>,
+    pub fns: Vec<FnItem>,
+    pub unsafes: Vec<UnsafeItem>,
+}
+
+impl Model {
+    pub fn new(path: &str, toks: Vec<Tok>) -> Model {
+        let mut comment_lines: BTreeMap<u32, String> = BTreeMap::new();
+        let mut noncomment_lines: BTreeSet<u32> = BTreeSet::new();
+        for t in &toks {
+            if t.kind == TokKind::Comment {
+                // a multi-line comment covers every line it spans; each
+                // covered line maps to the full comment text so marker
+                // searches see the whole annotation
+                for (off, _) in t.text.split('\n').enumerate() {
+                    let l = t.line + off as u32;
+                    comment_lines.entry(l).or_default().push_str(&t.text);
+                }
+            } else {
+                noncomment_lines.insert(t.line);
+            }
+        }
+        let code: Vec<Tok> = toks
+            .into_iter()
+            .filter(|t| t.kind != TokKind::Comment)
+            .collect();
+        let mut m = Model {
+            path: path.to_string(),
+            code,
+            comment_lines,
+            noncomment_lines,
+            test_ranges: Vec::new(),
+            fns: Vec::new(),
+            unsafes: Vec::new(),
+        };
+        m.test_ranges = m.find_test_ranges();
+        m.fns = m.find_fns();
+        m.unsafes = m.find_unsafes();
+        m
+    }
+
+    fn tok_text(&self, i: usize) -> &str {
+        if i < self.code.len() {
+            &self.code[i].text
+        } else {
+            ""
+        }
+    }
+
+    /// Code index of `{` -> code index of the matching `}`.
+    fn match_brace(&self, ci: usize) -> usize {
+        let mut depth = 0i64;
+        for j in ci..self.code.len() {
+            let t = &self.code[j];
+            if t.kind == TokKind::Punct && t.text == "{" {
+                depth += 1;
+            } else if t.kind == TokKind::Punct && t.text == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+        }
+        self.code.len().saturating_sub(1)
+    }
+
+    /// Line ranges covered by `#[cfg(test)]` / `#[test]` items.
+    fn find_test_ranges(&self) -> Vec<(u32, u32)> {
+        let c = &self.code;
+        let mut out = Vec::new();
+        for j in 0..c.len() {
+            if !(c[j].kind == TokKind::Punct && c[j].text == "#") {
+                continue;
+            }
+            if self.tok_text(j + 1) != "[" {
+                continue;
+            }
+            // collect attr idents until the matching ]
+            let mut depth = 0i64;
+            let mut k = j + 1;
+            let mut words: Vec<&str> = Vec::new();
+            while k < c.len() {
+                let t = &c[k];
+                if t.text == "[" {
+                    depth += 1;
+                } else if t.text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.kind == TokKind::Ident {
+                    words.push(&t.text);
+                }
+                k += 1;
+            }
+            let is_test = words.contains(&"test")
+                && matches!(words.first(), Some(&"cfg") | Some(&"test"));
+            if !is_test {
+                continue;
+            }
+            // body of the following item
+            let mut m = k;
+            while m < c.len()
+                && !(c[m].kind == TokKind::Punct
+                    && (c[m].text == "{" || c[m].text == ";"))
+            {
+                m += 1;
+            }
+            if m < c.len() && c[m].text == "{" {
+                let e = self.match_brace(m);
+                out.push((c[j].line, c[e].line));
+            }
+        }
+        out
+    }
+
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    pub fn comment_on(&self, line: u32) -> &str {
+        self.comment_lines.get(&line).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// True if `line` (or the contiguous comment-only block directly
+    /// above it) has a comment for which `pred` holds. This is the
+    /// shared attachment rule for `// SAFETY:` and `// LINT-ALLOW`.
+    pub fn comment_above_matches<F: Fn(&str) -> bool>(
+        &self,
+        line: u32,
+        pred: F,
+    ) -> bool {
+        if pred(self.comment_on(line)) {
+            return true;
+        }
+        let mut l = line.saturating_sub(1);
+        while l > 0
+            && self.comment_lines.contains_key(&l)
+            && !self.noncomment_lines.contains(&l)
+        {
+            if pred(self.comment_on(l)) {
+                return true;
+            }
+            l -= 1;
+        }
+        false
+    }
+
+    /// Comment text attached above code token `ci` (contiguous
+    /// comment-only lines directly above, plus the same line).
+    fn attached_comment(&self, ci: usize) -> String {
+        let ln = self.code[ci].line;
+        let mut texts: Vec<&str> = Vec::new();
+        if let Some(t) = self.comment_lines.get(&ln) {
+            texts.push(t);
+        }
+        let mut l = ln.saturating_sub(1);
+        while l > 0
+            && self.comment_lines.contains_key(&l)
+            && !self.noncomment_lines.contains(&l)
+        {
+            if let Some(t) = self.comment_lines.get(&l) {
+                texts.push(t);
+            }
+            l -= 1;
+        }
+        texts.join("\n")
+    }
+
+    fn find_fns(&self) -> Vec<FnItem> {
+        let c = &self.code;
+        let mut out = Vec::new();
+        // impl blocks: (body start, body end, type name). The type is
+        // the last depth-0 ident before `{`, with `for` resetting it so
+        // `impl Trait for Type` yields Type.
+        let mut impl_ranges: Vec<(usize, usize, Option<String>)> = Vec::new();
+        for j in 0..c.len() {
+            if !(c[j].kind == TokKind::Ident && c[j].text == "impl") {
+                continue;
+            }
+            let mut k = j + 1;
+            let mut last: Option<&str> = None;
+            let mut depth = 0i64;
+            while k < c.len() {
+                let t = &c[k];
+                if t.text == "<" {
+                    depth += 1;
+                } else if t.text == ">" {
+                    depth -= 1;
+                } else if t.kind == TokKind::Ident && depth == 0 {
+                    if t.text == "for" {
+                        last = None;
+                    } else if t.text != "where" {
+                        last = Some(&t.text);
+                    }
+                }
+                if t.text == "{" && depth <= 0 {
+                    break;
+                }
+                k += 1;
+            }
+            if k < c.len() {
+                let e = self.match_brace(k);
+                impl_ranges.push((k, e, last.map(|s| s.to_string())));
+            }
+        }
+        let impl_of = |j: usize| -> Option<String> {
+            impl_ranges
+                .iter()
+                .find(|&&(a, b, _)| a <= j && j <= b)
+                .and_then(|(_, _, name)| name.clone())
+        };
+        for j in 0..c.len() {
+            if !(c[j].kind == TokKind::Ident && c[j].text == "fn") {
+                continue;
+            }
+            if j + 1 >= c.len() || c[j + 1].kind != TokKind::Ident {
+                continue;
+            }
+            let name = c[j + 1].text.clone();
+            // walk to the body `{` (or the decl-ending `;`)
+            let mut k = j + 2;
+            let mut pdepth = 0i64;
+            let mut body = None;
+            while k < c.len() {
+                let txt = c[k].text.as_str();
+                if txt == "(" || txt == "<" || txt == "[" {
+                    pdepth += 1;
+                } else if txt == ")" || txt == ">" || txt == "]" {
+                    pdepth -= 1;
+                } else if txt == "-" && self.tok_text(k + 1) == ">" {
+                    k += 2;
+                    continue;
+                } else if txt == "{" && pdepth <= 0 {
+                    body = Some((k, self.match_brace(k)));
+                    break;
+                } else if txt == ";" && pdepth <= 0 {
+                    break;
+                }
+                k += 1;
+            }
+            // walk back over modifiers (pub, const, unsafe, extern,
+            // async, pub(crate), extern "C") and #[attr] groups to the
+            // item start, so attached comments above attributes attach
+            let mut is_unsafe = false;
+            let mut b = j as i64 - 1;
+            while b >= 0 {
+                let t = &c[b as usize];
+                let modifier = t.kind == TokKind::Ident
+                    && matches!(
+                        t.text.as_str(),
+                        "pub" | "const" | "unsafe" | "extern" | "async"
+                            | "crate" | "in" | "super" | "self"
+                    );
+                if modifier
+                    || (t.kind == TokKind::Punct
+                        && (t.text == "(" || t.text == ")"))
+                    || t.kind == TokKind::Str
+                {
+                    if modifier && t.text == "unsafe" {
+                        is_unsafe = true;
+                    }
+                    b -= 1;
+                } else if t.kind == TokKind::Punct && t.text == "]" {
+                    let mut depth = 0i64;
+                    while b >= 0 {
+                        let u = &c[b as usize];
+                        if u.text == "]" {
+                            depth += 1;
+                        } else if u.text == "[" {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        b -= 1;
+                    }
+                    b -= 1;
+                    if b >= 0 && c[b as usize].text == "#" {
+                        b -= 1;
+                    }
+                } else {
+                    break;
+                }
+            }
+            let attach_idx = (b + 1) as usize;
+            let comment = self.attached_comment(attach_idx);
+            out.push(FnItem {
+                name,
+                line: c[j].line,
+                body,
+                impl_type: impl_of(j),
+                in_test: self.in_test(c[j].line),
+                hot: comment_has_marker(&comment, "HOT"),
+                cold: comment_has_marker(&comment, "COLD"),
+                is_unsafe,
+            });
+        }
+        out
+    }
+
+    fn find_unsafes(&self) -> Vec<UnsafeItem> {
+        let c = &self.code;
+        let mut out = Vec::new();
+        for j in 0..c.len() {
+            if !(c[j].kind == TokKind::Ident && c[j].text == "unsafe") {
+                continue;
+            }
+            let kind = match self.tok_text(j + 1) {
+                "{" => UnsafeKind::Block,
+                "impl" => UnsafeKind::Impl,
+                "fn" => UnsafeKind::Fn,
+                "trait" => UnsafeKind::Trait,
+                _ => continue,
+            };
+            let ln = c[j].line;
+            let has_safety =
+                self.comment_above_matches(ln, |t| t.contains("SAFETY"));
+            out.push(UnsafeItem { line: ln, kind, has_safety });
+        }
+        out
+    }
+
+    /// Body token slice for a fn (empty for bodiless declarations).
+    pub fn body_tokens(&self, f: &FnItem) -> &[Tok] {
+        match f.body {
+            Some((a, b)) => &self.code[a..=b.min(self.code.len() - 1)],
+            None => &[],
+        }
+    }
+}
+
+/// True if `text` contains a `// <MARKER>` comment — slashes, optional
+/// whitespace, then the marker at a word boundary (so `// HOT: …` and
+/// `/// HOT` match but `// SHOTGUN` and `// HOTEL` do not).
+pub fn comment_has_marker(text: &str, marker: &str) -> bool {
+    let mut rest = text;
+    while let Some(pos) = rest.find("//") {
+        let after = rest[pos + 2..].trim_start_matches(['/', ' ', '\t']);
+        if let Some(tail) = after.strip_prefix(marker) {
+            let boundary = tail
+                .chars()
+                .next()
+                .map(|ch| !(ch.is_ascii_alphanumeric() || ch == '_'))
+                .unwrap_or(true);
+            if boundary {
+                return true;
+            }
+        }
+        rest = &rest[pos + 2..];
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn model(src: &str) -> Model {
+        Model::new("src/test_fixture.rs", lex(src).expect("fixture lexes"))
+    }
+
+    #[test]
+    fn fn_extraction_with_impl_and_markers() {
+        let m = model(
+            "struct S;\n\
+             impl S {\n\
+                 // HOT: per-batch\n\
+                 #[inline]\n\
+                 pub fn go(&self) -> usize { self.len() }\n\
+             }\n\
+             // COLD: compat seam\n\
+             pub fn free() {}\n",
+        );
+        let go = m.fns.iter().find(|f| f.name == "go").expect("go found");
+        assert_eq!(go.impl_type.as_deref(), Some("S"));
+        assert!(go.hot && !go.cold);
+        let free = m.fns.iter().find(|f| f.name == "free").expect("free found");
+        assert!(free.impl_type.is_none());
+        assert!(free.cold && !free.hot);
+    }
+
+    #[test]
+    fn trait_impl_resolves_to_type() {
+        let m = model(
+            "impl Router for BipRouter {\n\
+                 fn route(&mut self) {}\n\
+             }\n",
+        );
+        let f = &m.fns[0];
+        assert_eq!(f.impl_type.as_deref(), Some("BipRouter"));
+    }
+
+    #[test]
+    fn test_ranges_cover_cfg_test_modules() {
+        let m = model(
+            "fn live() {}\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 #[test]\n\
+                 fn t() { live(); }\n\
+             }\n",
+        );
+        assert!(!m.in_test(1));
+        assert!(m.in_test(4));
+        assert!(m.in_test(5));
+        let t = m.fns.iter().find(|f| f.name == "t").expect("t found");
+        assert!(t.in_test);
+    }
+
+    #[test]
+    fn unsafe_detection_and_safety_attachment() {
+        let m = model(
+            "fn a() {\n\
+                 // SAFETY: justified\n\
+                 let x = unsafe { core::ptr::read(p) };\n\
+                 let y = unsafe { core::ptr::read(q) };\n\
+                 let _ = (x, y);\n\
+             }\n\
+             // SAFETY: delegated\n\
+             unsafe impl Send for W {}\n",
+        );
+        assert_eq!(m.unsafes.len(), 3);
+        assert!(m.unsafes[0].has_safety);
+        assert!(!m.unsafes[1].has_safety);
+        assert_eq!(m.unsafes[2].kind, UnsafeKind::Impl);
+        assert!(m.unsafes[2].has_safety);
+    }
+
+    #[test]
+    fn marker_word_boundary() {
+        assert!(comment_has_marker("// HOT: x", "HOT"));
+        assert!(comment_has_marker("/// HOT", "HOT"));
+        assert!(!comment_has_marker("// HOTEL", "HOT"));
+        assert!(!comment_has_marker("// SHOTGUN", "HOT"));
+        assert!(!comment_has_marker("no comment HOT", "HOT"));
+    }
+}

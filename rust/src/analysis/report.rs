@@ -1,0 +1,102 @@
+//! Finding type and the two output formats: rustc-style text lines
+//! (`file:line: lint-name: message`) for humans and a JSON document
+//! for the CI artifact.
+
+use crate::util::json::Json;
+
+/// One lint finding. Ordering is (lint, path, line, msg) so reports
+/// group by lint and read top-to-bottom within a file.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub lint: String,
+    pub path: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.path, self.line, self.lint, self.msg)
+    }
+}
+
+/// Render findings as rustc-style lines plus a trailing count.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&f.to_string());
+        out.push('\n');
+    }
+    out.push_str(&format!("{} findings\n", findings.len()));
+    out
+}
+
+/// Render findings as the CI artifact document.
+pub fn render_json(findings: &[Finding]) -> Json {
+    Json::obj(vec![
+        ("schema_version", Json::Num(1.0)),
+        ("count", Json::Num(findings.len() as f64)),
+        (
+            "findings",
+            Json::Arr(
+                findings
+                    .iter()
+                    .map(|f| {
+                        Json::obj(vec![
+                            ("lint", Json::Str(f.lint.clone())),
+                            ("path", Json::Str(f.path.clone())),
+                            ("line", Json::Num(f.line as f64)),
+                            ("msg", Json::Str(f.msg.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Finding> {
+        vec![
+            Finding {
+                lint: "panic-path".into(),
+                path: "src/serve/x.rs".into(),
+                line: 7,
+                msg: "panicking construct .unwrap() on a serving module".into(),
+            },
+            Finding {
+                lint: "hot-path-alloc".into(),
+                path: "src/bip/dual.rs".into(),
+                line: 3,
+                msg: "allocating construct `vec!` in `f`".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn text_format_is_rustc_style() {
+        let mut fs = sample();
+        fs.sort();
+        let text = render_text(&fs);
+        assert!(text.starts_with(
+            "src/bip/dual.rs:3: hot-path-alloc: allocating construct"
+        ));
+        assert!(text.contains("src/serve/x.rs:7: panic-path:"));
+        assert!(text.ends_with("2 findings\n"));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let doc = render_json(&sample()).to_string();
+        let parsed = Json::parse(&doc).expect("emitted JSON parses");
+        assert_eq!(parsed.path("count"), Some(&Json::Num(2.0)));
+        assert_eq!(parsed.path("schema_version"), Some(&Json::Num(1.0)));
+        match parsed.path("findings") {
+            Some(Json::Arr(items)) => assert_eq!(items.len(), 2),
+            other => panic!("findings not an array: {other:?}"),
+        }
+    }
+}

@@ -100,9 +100,14 @@ impl Measurement {
     }
 }
 
+/// Schema version stamped into every `BENCH_*.json` record; bump when
+/// the payload shape changes so cross-PR consumers can detect drift
+/// (the `bench-honesty` lint requires every writer to stamp it).
+pub const BENCH_SCHEMA_VERSION: u32 = 1;
+
 /// Write a `BENCH_<name>.json` perf record under `reports/` (or
 /// `$BIP_MOE_REPORTS`) so the perf trajectory is tracked across PRs.
-/// The payload is wrapped with the crate version.
+/// The payload is wrapped with the crate version and schema version.
 pub fn write_bench_json(name: &str, results: Json) -> std::io::Result<PathBuf> {
     let dir = PathBuf::from(
         std::env::var("BIP_MOE_REPORTS").unwrap_or_else(|_| "reports".into()),
@@ -111,6 +116,7 @@ pub fn write_bench_json(name: &str, results: Json) -> std::io::Result<PathBuf> {
     let path = dir.join(format!("BENCH_{name}.json"));
     let doc = Json::obj(vec![
         ("bench", Json::Str(name.to_string())),
+        ("schema_version", Json::Num(BENCH_SCHEMA_VERSION as f64)),
         ("version", Json::Str(crate::VERSION.to_string())),
         ("results", results),
     ]);

@@ -156,6 +156,8 @@ impl ApproxGate {
         }
     }
 
+    // COLD: allocating compat seam — serving routes through
+    // `route_token_into`; the static hot-path lint stops here
     pub fn route_token(&mut self, scores: &[f32]) -> Vec<u32> {
         assert_eq!(scores.len(), self.m);
         for j in 0..self.m {

@@ -63,7 +63,12 @@ const ADAPTIVE_RECHECK: usize = 2;
 #[derive(Clone, Copy)]
 struct SendPtr<T>(*mut T);
 
+// SAFETY: a SendPtr is only dereferenced inside pool jobs that write
+// pre-partitioned disjoint ranges; the pointee is owned by the caller
+// of `scoped_run`, which blocks until every job has finished
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: shared references to a SendPtr only copy the raw pointer;
+// all writes through it target disjoint per-chunk ranges (see Send)
 unsafe impl<T> Sync for SendPtr<T> {}
 
 /// Reusable solver state: the warm-started dual vector q (Alg. 1 line 2
@@ -80,6 +85,8 @@ pub struct DualState {
 }
 
 impl DualState {
+    // COLD: cold-start construction (once per gate, never per batch);
+    // the static hot-path lint stops here
     pub fn new(m: usize) -> Self {
         DualState {
             q: vec![0.0; m],
@@ -109,6 +116,7 @@ impl DualState {
 
     /// [`DualState::update`] against a caller-owned arena — the serving
     /// stack's zero-allocation seam.
+    // HOT: per-batch solver entry; no locks, no allocation
     pub fn update_in(
         &mut self,
         inst: &Instance,
@@ -238,6 +246,7 @@ impl DualState {
     }
 
     /// [`DualState::update_adaptive`] against a caller-owned arena.
+    // HOT: per-batch adaptive solver entry; no locks, no allocation
     pub fn update_adaptive_in(
         &mut self,
         inst: &Instance,
@@ -430,6 +439,8 @@ impl DualState {
 
     /// Route with the current duals: Topk(s_i - q, k) per token, gate
     /// weight = original score (Alg. 1 line 13).
+    // COLD: allocating compat seam — serving routes through
+    // `route_into`; the static hot-path lint stops here
     pub fn route(&self, inst: &Instance) -> Routing {
         let mut biased = vec![0.0f32; inst.m];
         let assignment = (0..inst.n)
@@ -450,6 +461,7 @@ impl DualState {
     /// Allocation-free [`DualState::route`]: same decisions (the
     /// biased-score top-k has a total order), written into the reusable
     /// assignment buffer via arena scratch.
+    // HOT: per-batch routing; no locks, no allocation
     pub fn route_into(
         &self,
         inst: &Instance,
@@ -477,6 +489,7 @@ impl DualState {
 /// Primal pricing of a dual vector: MaxVio of Topk(s - q) routing,
 /// entirely on arena scratch (the adaptive solver calls this once per
 /// iteration).
+// HOT: runs once per adaptive iteration; no locks, no allocation
 fn eval_max_vio(
     inst: &Instance,
     q: &[f32],
@@ -539,6 +552,7 @@ fn transpose_parallel(
     pool.scoped_run(chunks, &job);
 }
 
+// HOT: per-iteration token pricing; no locks, no allocation
 fn p_phase_serial(
     inst: &Instance,
     q: &[f32],
@@ -581,6 +595,8 @@ fn p_phase_parallel(
             for j in 0..m {
                 krow[j] = f32_order_key(row[j] - q[j]);
             }
+            // SAFETY: p[i] is written by exactly one chunk (the one
+            // owning row i) and p outlives scoped_run
             unsafe {
                 *p_ptr.0.add(i) = kth_largest_keys(krow, kk).max(0.0)
             };
@@ -601,6 +617,7 @@ fn column_is_lazy(calm: Option<&[u32]>, j: usize, t: usize) -> bool {
     }
 }
 
+// HOT: per-iteration expert pricing; no locks, no allocation
 #[allow(clippy::too_many_arguments)]
 fn q_phase_serial(
     n: usize,
@@ -656,6 +673,8 @@ fn q_phase_parallel(
             for i in 0..n {
                 kcol[i] = f32_order_key(col[i] - p[i]);
             }
+            // SAFETY: q[j] is written by exactly one chunk (the one
+            // owning column j) and q outlives scoped_run
             unsafe {
                 *q_ptr.0.add(j) = kth_largest_keys(kcol, cc).max(0.0)
             };

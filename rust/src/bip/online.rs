@@ -46,7 +46,9 @@ impl TopHeap {
     pub fn second_min(&self) -> Option<f32> {
         match self.heap.len() {
             0 | 1 => None,
+            // LINT-ALLOW(panic): the match arm proves len == 2
             2 => Some(self.heap[1]),
+            // LINT-ALLOW(panic): the match arm proves len >= 3
             _ => Some(self.heap[1].min(self.heap[2])),
         }
     }
@@ -61,6 +63,8 @@ impl TopHeap {
             // exactly bound values: the bound-th largest is the minimum
             return Some(self.min().map_or(x, |m| m.min(x)));
         }
+        // LINT-ALLOW(panic): len + 1 > bound >= 1 here, so the heap
+        // is non-empty
         let m = self.min().unwrap();
         if x <= m {
             Some(m)
@@ -85,7 +89,12 @@ impl TopHeap {
         if self.heap.len() < self.bound {
             self.heap.push(x);
             self.sift_up(self.heap.len() - 1);
-        } else if x > self.heap[0] {
+            return;
+        }
+        // LINT-ALLOW(panic): bound >= 1 and the heap is full here, so
+        // heap[0] (the current minimum) exists
+        if x > self.heap[0] {
+            // LINT-ALLOW(panic): full heap, see the guard above
             self.heap[0] = x;
             self.sift_down(0);
         }
@@ -150,6 +159,8 @@ impl OnlineGate {
     /// Process one arriving token: route it (Topk of s - q), then run the
     /// T-iteration refinement and absorb the reduced scores into Q.
     /// Returns the chosen expert ids.
+    // COLD: allocating compat seam — serving routes through
+    // `route_token_into`; the static hot-path lint stops here
     pub fn route_token(&mut self, scores: &[f32]) -> Vec<u32> {
         assert_eq!(scores.len(), self.m);
         for j in 0..self.m {

@@ -17,7 +17,10 @@
 //!   `perf/` subsystem (shared score-arena for the zero-allocation
 //!   serving hot path + counting allocator backing `bench_hotpath`),
 //!   and the `telemetry/` subsystem (static zero-allocation metrics
-//!   registry, RAII span profiling, Prometheus/JSON exposition).
+//!   registry, RAII span profiling, Prometheus/JSON exposition), and
+//!   the `analysis/` subsystem (self-hosted static lint suite proving
+//!   the hot-path/unsafe/telemetry invariants at CI time via
+//!   `bip-moe lint --deny`).
 //!   Python never runs on the training or serving path.
 //! * **L2 (`python/compile/model.py`)** — Minimind-style MoE transformer
 //!   (fwd/bwd/AdamW) with the three routing modes (Loss-Controlled,
@@ -29,6 +32,7 @@
 //! See DESIGN.md for the full system inventory and the per-experiment
 //! index (every table and figure of the paper mapped to a bench target).
 
+pub mod analysis;
 pub mod bench;
 pub mod bip;
 pub mod config;

@@ -18,6 +18,10 @@
 //!           deltas from the live telemetry registry (--watch for a
 //!           per-tick summary table), or `metrics check` a written
 //!           snapshot's core series for CI
+//!   lint    run the self-hosted static lint suite over this crate's
+//!           own sources (hot-path-alloc, unsafe-audit, panic-path,
+//!           telemetry-naming, lock-discipline, bench-honesty);
+//!           --deny turns findings into a nonzero exit for CI
 //!   info    list artifact manifest contents and engine stats
 //!
 //! Examples:
@@ -34,6 +38,7 @@
 //!   bip-moe forecast serve --model model.json --scenario bursty
 //!   bip-moe metrics --scenario steady --watch --out snap.json
 //!   bip-moe metrics check --snapshot snap.json
+//!   bip-moe lint --deny --json reports/lint.json
 
 use std::path::{Path, PathBuf};
 
@@ -103,6 +108,7 @@ fn run(args: &Args) -> Result<()> {
         Some("trace") => cmd_trace(args),
         Some("forecast") => cmd_forecast(args),
         Some("metrics") => cmd_metrics(args),
+        Some("lint") => cmd_lint(args),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown subcommand {other}; see --help"),
         None => {
@@ -116,7 +122,7 @@ fn print_help() {
     println!(
         "bip-moe {} — BIP-Based Balancing for MoE pre-training + serving\n\n\
          usage: bip-moe <train|run|eval|solve|match|serve|trace|\
-         forecast|metrics|info> [--options]\n\n\
+         forecast|metrics|lint|info> [--options]\n\n\
          train  --config <name> --mode <aux|lossfree|bip> [--bip-t N]\n\
                 [--steps N] [--seed N] [--eval-batches N]\n\
                 [--reports DIR] [--save CKPT] [--artifacts DIR]\n\
@@ -161,6 +167,11 @@ fn print_help() {
                 metrics check --snapshot PATH (assert the snapshot\n\
                  parses and the core series are present and nonzero —\n\
                  the CI smoke gate)\n\
+         lint   [--deny] [--json PATH] [--filter LINT] [--root DIR]\n\
+                 (self-hosted static lints over src/ and benches/:\n\
+                 hot-path-alloc, unsafe-audit, panic-path,\n\
+                 telemetry-naming, lock-discipline, bench-honesty;\n\
+                 --deny exits nonzero on any finding — the CI gate)\n\
          info   [--artifacts DIR]\n\n\
          serve also accepts --metrics-out PATH to write a telemetry\n\
          snapshot (JSON, or Prometheus text for .prom/.txt) after the\n\
@@ -181,13 +192,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut driver = TrainDriver::new(
         &args.str_or("config", "tiny"),
         &args.str_or("mode", "bip"),
-        args.usize_or("bip-t", 4),
-        args.u64_or("steps", 50),
+        args.usize_or("bip-t", 4)?,
+        args.u64_or("steps", 50)?,
     );
-    driver.seed = args.usize_or("seed", 0) as i32;
-    driver.eval_batches = args.u64_or("eval-batches", 8);
-    driver.sim_devices = args.usize_or("sim-devices", 4);
-    driver.data_seed = args.u64_or("data-seed", 20240601);
+    driver.seed = args.usize_or("seed", 0)? as i32;
+    driver.eval_batches = args.u64_or("eval-batches", 8)?;
+    driver.sim_devices = args.usize_or("sim-devices", 4)?;
+    driver.data_seed = args.u64_or("data-seed", 20240601)?;
     driver.warm_start_trace =
         args.get("warm-start-trace").map(PathBuf::from);
 
@@ -268,7 +279,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let corpus = std::sync::Arc::new(bip_moe::data::Corpus::build(
         bip_moe::data::CorpusSpec {
             vocab_size: cfg.vocab_size,
-            seed: args.u64_or("data-seed", 20240601),
+            seed: args.u64_or("data-seed", 20240601)?,
             ..Default::default()
         },
     ));
@@ -276,7 +287,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         corpus, cfg.batch_size, cfg.seq_len,
         bip_moe::data::Split::Test);
     let mut ppl = bip_moe::metrics::Perplexity::default();
-    for i in 0..args.u64_or("eval-batches", 16) {
+    for i in 0..args.u64_or("eval-batches", 16)? {
         let batch = loader.batch(i);
         let tokens = bip_moe::runtime::Tensor::from_i32(
             &[cfg.batch_size, cfg.seq_len + 1],
@@ -301,15 +312,15 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_solve(args: &Args) -> Result<()> {
     args.check_known(&["n", "m", "k", "skew", "temp", "t", "seed", "exact"])
         .map_err(anyhow::Error::msg)?;
-    let n = args.usize_or("n", 1024);
-    let m = args.usize_or("m", 16);
-    let k = args.usize_or("k", 4);
-    let t = args.usize_or("t", 4);
-    let mut rng = Pcg64::new(args.u64_or("seed", 0));
+    let n = args.usize_or("n", 1024)?;
+    let m = args.usize_or("m", 16)?;
+    let k = args.usize_or("k", 4)?;
+    let t = args.usize_or("t", 4)?;
+    let mut rng = Pcg64::new(args.u64_or("seed", 0)?);
     let inst = Instance::synthetic(
         n, m, k,
-        args.f64_or("temp", 2.0),
-        args.f64_or("skew", 3.0),
+        args.f64_or("temp", 2.0)?,
+        args.f64_or("skew", 3.0)?,
         &mut rng,
     );
 
@@ -357,14 +368,14 @@ fn cmd_match(args: &Args) -> Result<()> {
     args.check_known(&["flows", "ads", "slots", "t", "buckets", "seed"])
         .map_err(anyhow::Error::msg)?;
     let w = Workload::synthetic(
-        args.usize_or("flows", 4096),
-        args.usize_or("ads", 32),
-        args.usize_or("slots", 2),
-        args.u64_or("seed", 42),
+        args.usize_or("flows", 4096)?,
+        args.usize_or("ads", 32)?,
+        args.usize_or("slots", 2)?,
+        args.u64_or("seed", 42)?,
     );
     let reports =
-        compare_policies(&w, args.usize_or("t", 4),
-                         args.usize_or("buckets", 128));
+        compare_policies(&w, args.usize_or("t", 4)?,
+                         args.usize_or("buckets", 128)?);
     let mut table = TablePrinter::new(
         &format!(
             "online ad matching: {} flows x {} ads, {} slots, cap {}",
@@ -567,14 +578,14 @@ struct ServeKnobs {
 }
 
 fn serve_knobs(args: &Args, default_requests: usize) -> Result<ServeKnobs> {
-    let m = args.usize_or("m", 16);
-    let n_devices = args.usize_or("devices", 4);
+    let m = args.usize_or("m", 16)?;
+    let n_devices = args.usize_or("devices", 4)?;
     if n_devices == 0 || m % n_devices != 0 {
         bail!("--m {m} must be divisible by --devices {n_devices} (>= 1)");
     }
     let lpt = match args.str_or("placement", "block").as_str() {
         "block" => None,
-        "lpt" => match args.u64_or("lpt-refresh", 8) {
+        "lpt" => match args.u64_or("lpt-refresh", 8)? {
             0 => bail!("--lpt-refresh must be >= 1 batches"),
             n => Some(n),
         },
@@ -582,23 +593,23 @@ fn serve_knobs(args: &Args, default_requests: usize) -> Result<ServeKnobs> {
     };
     let traffic = TrafficConfig {
         scenario: Scenario::Steady, // overwritten by the caller
-        n_requests: args.usize_or("requests", default_requests),
-        rate_per_s: args.f64_or("rate", 100_000.0),
-        n_layers: args.usize_or("layers", 4),
+        n_requests: args.usize_or("requests", default_requests)?,
+        rate_per_s: args.f64_or("rate", 100_000.0)?,
+        n_layers: args.usize_or("layers", 4)?,
         m,
-        k: args.usize_or("k", 4),
-        n_tenants: args.usize_or("tenants", 4),
-        slo_us: (args.f64_or("slo-ms", 20.0) * 1e3) as u64,
-        seed: args.u64_or("seed", 1),
+        k: args.usize_or("k", 4)?,
+        n_tenants: args.usize_or("tenants", 4)?,
+        slo_us: (args.f64_or("slo-ms", 20.0)? * 1e3) as u64,
+        seed: args.u64_or("seed", 1)?,
         ..Default::default()
     };
     let sched = SchedulerConfig {
-        queue_cap: args.usize_or("queue", 512),
-        batch_max: args.usize_or("batch", 64),
-        max_wait_us: args.u64_or("max-wait-us", 2_000),
+        queue_cap: args.usize_or("queue", 512)?,
+        batch_max: args.usize_or("batch", 64)?,
+        max_wait_us: args.u64_or("max-wait-us", 2_000)?,
         drop_expired: true,
     };
-    let solver_tol = args.f64_or("solver-tol", 0.0);
+    let solver_tol = args.f64_or("solver-tol", 0.0)?;
     if !solver_tol.is_finite() || solver_tol < 0.0 {
         bail!(
             "--solver-tol must be a finite value >= 0 (got \
@@ -608,21 +619,21 @@ fn serve_knobs(args: &Args, default_requests: usize) -> Result<ServeKnobs> {
         );
     }
     let router = RouterConfig {
-        t_iters: args.usize_or("t", 4),
-        buckets: args.usize_or("buckets", 128),
-        capacity_factor: args.f64_or("capacity-factor", 2.0),
+        t_iters: args.usize_or("t", 4)?,
+        buckets: args.usize_or("buckets", 128)?,
+        capacity_factor: args.f64_or("capacity-factor", 2.0)?,
         n_devices,
         lpt_refresh: lpt,
         solver_tol,
         // 0 follows --t; the adaptive solver typically wants a higher
         // cap (it early-exits once converged)
-        solver_t_max: args.usize_or("solver-t-max", 0),
+        solver_t_max: args.usize_or("solver-t-max", 0)?,
         ..Default::default()
     };
     let replicas = ReplicaConfig {
-        replicas: args.usize_or("replicas", 1),
-        threads: args.usize_or("threads", 1),
-        sync_every: args.u64_or("sync-every", 16),
+        replicas: args.usize_or("replicas", 1)?,
+        threads: args.usize_or("threads", 1)?,
+        sync_every: args.u64_or("sync-every", 16)?,
     };
     if replicas.replicas == 0 {
         bail!("--replicas must be >= 1");
@@ -903,15 +914,15 @@ fn cmd_forecast(args: &Args) -> Result<()> {
     }
 }
 
-fn forecast_cfg(args: &Args) -> ForecastConfig {
+fn forecast_cfg(args: &Args) -> Result<ForecastConfig> {
     let d = ForecastConfig::default();
-    ForecastConfig {
-        alpha: args.f64_or("alpha", d.alpha),
-        beta: args.f64_or("beta", d.beta),
-        gamma: args.f64_or("gamma", d.gamma),
-        period: args.usize_or("period", d.period),
-        window: args.usize_or("window", d.window),
-    }
+    Ok(ForecastConfig {
+        alpha: args.f64_or("alpha", d.alpha)?,
+        beta: args.f64_or("beta", d.beta)?,
+        gamma: args.f64_or("gamma", d.gamma)?,
+        period: args.usize_or("period", d.period)?,
+        window: args.usize_or("window", d.window)?,
+    })
 }
 
 fn forecast_kind(args: &Args) -> Result<ForecasterKind> {
@@ -985,12 +996,12 @@ fn forecast_series(args: &Args) -> Result<(LoadSeries, String)> {
 fn cmd_forecast_fit(args: &Args) -> Result<()> {
     let kind = forecast_kind(args)?;
     let horizons = parse_horizons(args)?;
-    let holdout = args.f64_or("holdout", 0.25);
+    let holdout = args.f64_or("holdout", 0.25)?;
     if !(holdout > 0.0 && holdout < 1.0) {
         bail!("--holdout must be a fraction in (0, 1)");
     }
     let (series, label) = forecast_series(args)?;
-    let fcfg = forecast_cfg(args);
+    let fcfg = forecast_cfg(args)?;
     let (model, report) =
         fit_model(kind, &fcfg, &series, &horizons, holdout)?;
     let mut table = TablePrinter::new(
@@ -1077,7 +1088,7 @@ fn cmd_forecast_serve(args: &Args) -> Result<()> {
             traffic.m
         );
     }
-    let gain = args.f64_or("seed-gain", DEFAULT_SEED_GAIN);
+    let gain = args.f64_or("seed-gain", DEFAULT_SEED_GAIN)?;
     let seeds = seed_states(&model, traffic.n_layers, traffic.k, gain);
     // the cold baseline runs the identical pipeline unseeded (for the
     // predictive policy that IS cold-start Bip)
@@ -1192,7 +1203,7 @@ fn forecast_autoscale(
     seeds: &[BalanceState],
 ) -> Result<()> {
     let max_replicas =
-        args.usize_or("max-replicas", rknobs.replicas.max(4));
+        args.usize_or("max-replicas", rknobs.replicas.max(4))?;
     let rcfg = ReplicaConfig {
         replicas: max_replicas,
         threads: rknobs.threads,
@@ -1201,7 +1212,7 @@ fn forecast_autoscale(
     // per-replica serviceable rate: given, or calibrated from a cold
     // single-server run's measured throughput
     let replica_rps = match args.get("replica-rps") {
-        Some(_) => args.f64_or("replica-rps", 0.0),
+        Some(_) => args.f64_or("replica-rps", 0.0)?,
         None => serve::run_scenario(cold_cfg)
             .report
             .throughput_rps
@@ -1210,11 +1221,11 @@ fn forecast_autoscale(
     if replica_rps <= 0.0 {
         bail!("--replica-rps must be > 0");
     }
-    let window_us = (args.f64_or("scale-window-ms", 2.0) * 1e3) as u64;
+    let window_us = (args.f64_or("scale-window-ms", 2.0)? * 1e3) as u64;
     if window_us == 0 {
         bail!("--scale-window-ms must be > 0");
     }
-    let headroom = args.f64_or("headroom", 0.8);
+    let headroom = args.f64_or("headroom", 0.8)?;
     let mut table = TablePrinter::new(
         &format!(
             "autoscaled {} / {} — <= {max_replicas} replicas @ \
@@ -1316,7 +1327,7 @@ fn cmd_metrics_attach(args: &Args) -> Result<()> {
     traffic.scenario = scenario;
     let cfg = ServeConfig::new(traffic, sched, router, policy);
     let interval = std::time::Duration::from_millis(
-        args.u64_or("interval-ms", 250).max(10),
+        args.u64_or("interval-ms", 250)?.max(10),
     );
     let watch = args.flag("watch");
 
@@ -1499,6 +1510,35 @@ fn cmd_metrics_check(args: &Args) -> Result<()> {
          (v{version}, {:.1}s elapsed)",
         doc.path("elapsed_secs").and_then(|j| j.as_f64()).unwrap_or(0.0)
     );
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    args.check_known(&["deny", "json", "filter", "root"])
+        .map_err(anyhow::Error::msg)?;
+    let root = args.str_or("root", env!("CARGO_MANIFEST_DIR"));
+    let set = bip_moe::analysis::SourceSet::from_root(Path::new(&root))?;
+    let findings = bip_moe::analysis::run(&set, args.get("filter"));
+    print!("{}", bip_moe::analysis::render_text(&findings));
+    if let Some(out) = args.get("json") {
+        if let Some(dir) = Path::new(out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(
+            out,
+            bip_moe::analysis::render_json(&findings).to_string(),
+        )?;
+        println!("wrote {out}");
+    }
+    if args.flag("deny") && !findings.is_empty() {
+        bail!(
+            "lint --deny: {} finding(s) over {} files",
+            findings.len(),
+            set.files.len()
+        );
+    }
     Ok(())
 }
 

@@ -34,18 +34,25 @@ fn bump(cell: &'static std::thread::LocalKey<Cell<u64>>, by: u64) {
     let _ = cell.try_with(|c| c.set(c.get() + by));
 }
 
+// SAFETY: every method forwards its arguments unchanged to
+// `std::alloc::System`, so the GlobalAlloc contract (layout validity,
+// pointer provenance, no unwinding) is exactly the system allocator's;
+// the only added work is an infallible thread-local counter bump
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: delegates to System.alloc with the caller's layout
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         bump(&ALLOCS, 1);
         bump(&BYTES, layout.size() as u64);
         System.alloc(layout)
     }
 
+    // SAFETY: delegates to System.dealloc with the caller's ptr/layout
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         bump(&FREES, 1);
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: delegates to System.realloc with the caller's arguments
     unsafe fn realloc(
         &self,
         ptr: *mut u8,
@@ -58,6 +65,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: delegates to System.alloc_zeroed with the caller's layout
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         bump(&ALLOCS, 1);
         bump(&BYTES, layout.size() as u64);

@@ -53,6 +53,7 @@ impl BalanceState {
 /// the f32 summation order — hence the result — is deterministic).
 fn mean_vec(vecs: &[&[f32]]) -> Vec<f32> {
     let r = vecs.len() as f32;
+    // LINT-ALLOW(panic): both callers check `vecs` is non-empty first
     let mut out = vec![0.0f32; vecs[0].len()];
     for v in vecs {
         for (o, x) in out.iter_mut().zip(v.iter()) {
@@ -126,6 +127,8 @@ impl RoutingStrategy for Greedy {
         "greedy".into()
     }
 
+    // COLD: allocating compat seam — serving drives route_batch_into;
+    // the static hot-path lint stops here
     fn route_batch(&mut self, inst: &Instance) -> Routing {
         crate::bip::greedy_topk(inst)
     }
@@ -170,6 +173,8 @@ impl RoutingStrategy for AuxLoss {
         format!("aux(alpha={})", self.alpha)
     }
 
+    // COLD: allocating compat seam — serving drives route_batch_into;
+    // the static hot-path lint stops here
     fn route_batch(&mut self, inst: &Instance) -> Routing {
         let routing = crate::bip::greedy_topk(inst);
         let loads = routing.loads(inst.m);
@@ -220,6 +225,8 @@ impl RoutingStrategy for LossFree {
         format!("lossfree(u={})", self.u)
     }
 
+    // COLD: allocating compat seam — serving drives route_batch_into;
+    // the static hot-path lint stops here
     fn route_batch(&mut self, inst: &Instance) -> Routing {
         let mut biased = vec![0.0f32; inst.m];
         let assignment: Vec<Vec<u32>> = (0..inst.n)
@@ -297,6 +304,8 @@ impl RoutingStrategy for LossFree {
         }
     }
 
+    // COLD: sync/warm-start seam (replica merge, forecast seeding) —
+    // outside the steady-state zero-alloc contract
     fn seed_state(&mut self, state: &BalanceState) {
         match state {
             BalanceState::Bias(b) if b.len() == self.bias.len() => {
@@ -424,6 +433,8 @@ impl RoutingStrategy for Bip {
         }
     }
 
+    // COLD: allocating compat seam — serving drives route_batch_into;
+    // the static hot-path lint stops here
     fn route_batch(&mut self, inst: &Instance) -> Routing {
         let t = self.t_iters;
         let tol = self.tol;
@@ -446,6 +457,7 @@ impl RoutingStrategy for Bip {
         self.solve_batch(inst, arena);
         self.state
             .as_ref()
+            // LINT-ALLOW(panic): solve_batch always populates state
             .expect("solved above")
             .route_into(inst, arena, out);
     }
@@ -480,6 +492,8 @@ impl RoutingStrategy for Bip {
         if qs.is_empty() {
             return;
         }
+        // LINT-ALLOW(panic): the is_empty early-return above proves
+        // qs[0] exists
         let m = qs[0].len();
         if qs.iter().any(|q| q.len() != m) {
             return;
@@ -492,6 +506,8 @@ impl RoutingStrategy for Bip {
         }
     }
 
+    // COLD: sync/warm-start seam (replica merge, forecast seeding) —
+    // outside the steady-state zero-alloc contract
     fn seed_state(&mut self, state: &BalanceState) {
         if let BalanceState::Dual(q) = state {
             match &mut self.state {
@@ -560,6 +576,8 @@ impl RoutingStrategy for PredictiveBip {
         format!("bip-predictive(T={})", self.inner.t_iters)
     }
 
+    // COLD: allocating compat seam — serving drives route_batch_into;
+    // the static hot-path lint stops here
     fn route_batch(&mut self, inst: &Instance) -> Routing {
         self.consume_seed(inst.m);
         self.inner.route_batch(inst)
@@ -587,6 +605,8 @@ impl RoutingStrategy for PredictiveBip {
         self.inner.merge_state(states);
     }
 
+    // COLD: sync/warm-start seam (replica merge, forecast seeding) —
+    // outside the steady-state zero-alloc contract
     fn seed_state(&mut self, state: &BalanceState) {
         // an explicit seed supersedes whatever the constructor carried
         self.seed.clear();
@@ -614,6 +634,8 @@ impl RoutingStrategy for OnlineBip {
         format!("bip-online(T={})", self.gate.t_iters)
     }
 
+    // COLD: allocating compat seam — serving drives route_batch_into;
+    // the static hot-path lint stops here
     fn route_batch(&mut self, inst: &Instance) -> Routing {
         let assignment = (0..inst.n)
             .map(|i| self.gate.route_token(inst.row(i)))
@@ -680,6 +702,8 @@ impl RoutingStrategy for OnlineBip {
         }
         let r = qs.len();
         for u in unions.iter_mut() {
+            // LINT-ALLOW(panic): heap values are finite gate scores
+            // (never NaN), so partial_cmp always succeeds
             u.sort_by(|a, b| b.partial_cmp(a).unwrap());
             let thinned: Vec<f32> =
                 u.iter().copied().step_by(r).collect();
@@ -693,6 +717,8 @@ impl RoutingStrategy for OnlineBip {
     /// rebuilt through the bounded push (seeding cannot over-grow the
     /// sketch). A bare [`BalanceState::Dual`] seed (forecast-derived)
     /// warm-starts the duals alone.
+    // COLD: sync/warm-start seam (replica merge, forecast seeding) —
+    // outside the steady-state zero-alloc contract
     fn seed_state(&mut self, state: &BalanceState) {
         match state {
             BalanceState::Online { q, heaps }
@@ -737,6 +763,8 @@ impl RoutingStrategy for ApproxBip {
         format!("bip-approx(T={},b={})", self.gate.t_iters, self.buckets)
     }
 
+    // COLD: allocating compat seam — serving drives route_batch_into;
+    // the static hot-path lint stops here
     fn route_batch(&mut self, inst: &Instance) -> Routing {
         let assignment = (0..inst.n)
             .map(|i| self.gate.route_token(inst.row(i)))
@@ -818,6 +846,8 @@ impl RoutingStrategy for ApproxBip {
 
     /// Adopt a snapshot wholesale: duals + histogram counts. A bare
     /// [`BalanceState::Dual`] seed warm-starts the duals alone.
+    // COLD: sync/warm-start seam (replica merge, forecast seeding) —
+    // outside the steady-state zero-alloc contract
     fn seed_state(&mut self, state: &BalanceState) {
         match state {
             BalanceState::Approx { q, hists }

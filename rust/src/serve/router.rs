@@ -313,6 +313,7 @@ impl ServingRouter {
     }
 
     pub fn policy_label(&self) -> String {
+        // LINT-ALLOW(panic): constructors reject n_layers == 0
         self.layers[0].name()
     }
 
@@ -378,6 +379,8 @@ impl ServingRouter {
     /// Allocating convenience over [`ServingRouter::route_batch_into`]
     /// (the replicated engine and the trace tooling use it; the
     /// single-server event loop and the benches reuse one outcome).
+    // COLD: allocating convenience seam over route_batch_into; the
+    // static hot-path lint stops here
     pub fn route_batch(&mut self, batch: &[Request]) -> BatchOutcome {
         let mut out = BatchOutcome::default();
         self.route_batch_into(batch, &mut out);
@@ -389,6 +392,8 @@ impl ServingRouter {
     /// state (warm arena, no LPT refresh due, capture off) this makes
     /// no heap allocation — `bench_hotpath` and `integration_perf`
     /// install a counting allocator and pin the zero for every policy.
+    // HOT: the serving hot path — no locks; allocations only on the
+    // waived cold branches (capture, LPT refresh; see analysis/waivers.txt)
     pub fn route_batch_into(
         &mut self,
         batch: &[Request],
@@ -526,6 +531,8 @@ impl ServingRouter {
                 }
             }
             if let Some(all) = captured.as_mut() {
+                // LINT-ALLOW(panic): layer_cap is set at the top of
+                // every layer iteration when capture is enabled
                 all.push(layer_cap.take().expect("capture is on"));
             }
             let lrow = &out.loads[l * m..(l + 1) * m];
@@ -542,6 +549,7 @@ impl ServingRouter {
         }
 
         self.balance.push_batch_sized(&out.loads, m, n);
+        // LINT-ALLOW(panic): push_batch_sized just appended a value
         let batch_vio = *self.balance.global_series.last().unwrap() as f64;
         let device_imbalance = imbalance_sum / n_layers as f64;
         self.imbalance.push(device_imbalance);

@@ -168,6 +168,8 @@ pub(crate) fn run_scenario_hooked(
             .as_ref()
             .map_or(false, |r| r.arrival_us <= now)
         {
+            // LINT-ALLOW(panic): the loop condition just observed
+            // Some(..)
             let req = next_arrival.take().unwrap();
             if let Some(rec) = recorder.as_deref_mut() {
                 rec.record_arrival(&req);

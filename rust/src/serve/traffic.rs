@@ -192,6 +192,7 @@ impl TrafficGenerator {
                     }
                 }
             }
+            // LINT-ALLOW(panic): Replayed is rejected before dispatch
             Scenario::Replayed => unreachable!("rejected above"),
         }
         let tenant_w: Vec<f64> =
@@ -236,6 +237,7 @@ impl TrafficGenerator {
                 exp_sample(&mut self.rng) * base / mult
             }
             Scenario::MultiTenant => exp_sample(&mut self.rng) * base,
+            // LINT-ALLOW(panic): Replayed is rejected at construction
             Scenario::Replayed => unreachable!("rejected at construction"),
         }
     }

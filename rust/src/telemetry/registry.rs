@@ -377,6 +377,8 @@ impl Registry {
         self.enabled.load(Ordering::Relaxed)
     }
 
+    // HOT: called from the serving/solver hot path — sharded atomics
+    // only, no locks
     /// Saturating counter increment on this thread's shard.
     pub fn counter_add(&self, c: Counter, n: u64) {
         if !self.is_enabled() || n == 0 {
@@ -388,6 +390,7 @@ impl Registry {
         );
     }
 
+    // HOT: called from the serving/solver hot path — one relaxed store
     /// Last-write-wins gauge store.
     pub fn gauge_set(&self, g: Gauge, v: f64) {
         if !self.is_enabled() {
@@ -396,6 +399,7 @@ impl Registry {
         self.gauges[g as usize].store(v.to_bits(), Ordering::Relaxed);
     }
 
+    // HOT: span-exit path — bounded scan plus sharded atomics, no locks
     /// One histogram observation: linear scan over <= [`HIST_SLOTS`]
     /// bounds (cheaper than a branchy binary search at these sizes),
     /// saturating bucket increment, CAS-added sum.
@@ -522,16 +526,19 @@ pub fn enabled() -> bool {
     GLOBAL.is_enabled()
 }
 
+// HOT: hot-path entry point for counters (lint root)
 /// [`Registry::counter_add`] on the global registry.
 pub fn counter_add(c: Counter, n: u64) {
     GLOBAL.counter_add(c, n);
 }
 
+// HOT: hot-path entry point for gauges (lint root)
 /// [`Registry::gauge_set`] on the global registry.
 pub fn gauge_set(g: Gauge, v: f64) {
     GLOBAL.gauge_set(g, v);
 }
 
+// HOT: hot-path entry point for histograms (lint root)
 /// [`Registry::hist_observe`] on the global registry.
 pub fn hist_observe(h: Hist, v: f64) {
     GLOBAL.hist_observe(h, v);

@@ -1,8 +1,44 @@
 //! Tiny CLI argument parser (no clap offline): subcommand + `--key value`
 //! / `--key=value` / boolean `--flag` options, with typed accessors and an
 //! unknown-option check so typos fail loudly.
+//!
+//! Typed accessors return [`ArgError`] instead of panicking: a user
+//! typo on the command line must come back as an `error:` line naming
+//! the offending flag and what it wants, never a panic backtrace.
 
 use std::collections::BTreeMap;
+
+/// A malformed option value: names the flag, the rejected value, and
+/// what the flag wants, in the same listing style as the unknown
+/// scenario/policy errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArgError {
+    pub flag: String,
+    pub value: String,
+    pub wants: &'static str,
+}
+
+impl ArgError {
+    fn new(flag: &str, value: &str, wants: &'static str) -> ArgError {
+        ArgError {
+            flag: flag.to_string(),
+            value: value.to_string(),
+            wants,
+        }
+    }
+}
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "invalid value '{}' for --{}; wants {}",
+            self.value, self.flag, self.wants
+        )
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -23,12 +59,9 @@ impl Args {
             if let Some(stripped) = item.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
+                } else if let Some(v) = iter
+                    .next_if(|n| !n.starts_with("--"))
                 {
-                    let v = iter.next().unwrap();
                     out.options.insert(stripped.to_string(), v);
                 } else {
                     out.options.insert(stripped.to_string(), "true".into());
@@ -50,24 +83,31 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants int")))
-            .unwrap_or(default)
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::new(key, v, "an unsigned integer")),
+        }
     }
 
-    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants int")))
-            .unwrap_or(default)
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::new(key, v, "an unsigned integer")),
+        }
     }
 
-    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .map(|v| {
-                v.parse().unwrap_or_else(|_| panic!("--{key} wants float"))
-            })
-            .unwrap_or(default)
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| ArgError::new(key, v, "a number"))
+            }
+        }
     }
 
     pub fn flag(&self, key: &str) -> bool {
@@ -101,7 +141,7 @@ mod tests {
         let a = parse("train --config moe16 --steps 100 --verbose");
         assert_eq!(a.subcommand.as_deref(), Some("train"));
         assert_eq!(a.get("config"), Some("moe16"));
-        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
     }
@@ -110,9 +150,9 @@ mod tests {
     fn equals_form_and_defaults() {
         let a = parse("bench --mode=bip --t=4 --lr=2.5e-4");
         assert_eq!(a.get("mode"), Some("bip"));
-        assert_eq!(a.usize_or("t", 0), 4);
-        assert!((a.f64_or("lr", 0.0) - 2.5e-4).abs() < 1e-12);
-        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.usize_or("t", 0).unwrap(), 4);
+        assert!((a.f64_or("lr", 0.0).unwrap() - 2.5e-4).abs() < 1e-12);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
     }
 
     #[test]
@@ -139,6 +179,19 @@ mod tests {
     fn negative_number_value() {
         let a = parse("x --bias -0.5");
         // "-0.5" does not start with --, so it is consumed as the value
-        assert!((a.f64_or("bias", 0.0) + 0.5).abs() < 1e-12);
+        assert!((a.f64_or("bias", 0.0).unwrap() + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn malformed_value_names_the_flag() {
+        let a = parse("train --steps banana --lr fast");
+        let err = a.usize_or("steps", 0).expect_err("banana is not a usize");
+        let msg = err.to_string();
+        assert!(msg.contains("--steps"), "flag missing from: {msg}");
+        assert!(msg.contains("banana"), "value missing from: {msg}");
+        assert!(msg.contains("unsigned integer"), "wants missing from: {msg}");
+        let err = a.f64_or("lr", 0.0).expect_err("fast is not a float");
+        assert!(err.to_string().contains("--lr"));
+        assert_eq!(a.u64_or("steps", 0).expect_err("still bad").flag, "steps");
     }
 }

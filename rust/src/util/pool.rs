@@ -343,10 +343,13 @@ impl Pool {
             let latch = latch.clone();
             self.spawn_or_run(Box::new(move || {
                 run_counted(&latch, || {
-                    // SAFETY: `fp` and `np` outlive every job —
-                    // scoped_run only returns after the latch counts
-                    // all `jobs` completions
+                    // SAFETY: `fp` points at the caller's `f`, which
+                    // outlives every job — scoped_run only returns
+                    // after the latch counts all `jobs` completions
                     let f = unsafe { &*(fp as *const F) };
+                    // SAFETY: `np` points at `next` on scoped_run's
+                    // stack frame, alive for the same latch-bounded
+                    // extent as `fp` above
                     let next = unsafe { &*(np as *const AtomicUsize) };
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);

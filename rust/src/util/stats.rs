@@ -156,6 +156,8 @@ pub fn topk_into(
     k
 }
 
+// COLD: allocating convenience wrapper — the serving hot path uses
+// `topk_indices_into`; the static hot-path lint stops here
 /// Indices of the k largest values, descending, ties broken by lower index
 /// (matches jax.lax.top_k / the L1 gate kernel).
 pub fn topk_indices(xs: &[f32], k: usize) -> Vec<usize> {

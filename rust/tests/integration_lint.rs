@@ -1,0 +1,287 @@
+//! Self-test for the `analysis/` static lint suite (ISSUE 7).
+//!
+//! Two halves:
+//! 1. **Fixtures** — every lint is proven *live* by an in-memory
+//!    [`SourceSet`] whose planted violation it must catch (and whose
+//!    annotated twin it must pass). A lint that silently stops firing
+//!    fails here, not in some future regression.
+//! 2. **The tree itself** — the whole crate (`src/` + `benches/`)
+//!    lexes, models, and lints clean under the checked-in waivers and
+//!    unsafe inventory. This is the same run CI gates merges on via
+//!    `bip-moe lint --deny`.
+
+use std::path::Path;
+
+use bip_moe::analysis::{run, SourceSet};
+
+/// Build a SourceSet from fixture files with empty policy files.
+fn set(files: &[(&str, &str)]) -> SourceSet {
+    SourceSet {
+        files: files
+            .iter()
+            .map(|(p, s)| (p.to_string(), s.to_string()))
+            .collect(),
+        waivers: String::new(),
+        inventory: String::new(),
+    }
+}
+
+fn lints_of(findings: &[bip_moe::analysis::Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.lint.as_str()).collect()
+}
+
+// ---------------------------------------------------------------- tree
+
+#[test]
+fn whole_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let srcs = SourceSet::from_root(root).expect("crate sources readable");
+    assert!(
+        srcs.files.len() > 30,
+        "expected the whole crate, got {} files",
+        srcs.files.len()
+    );
+    let findings = run(&srcs, None);
+    assert!(
+        findings.is_empty(),
+        "tree must lint clean under checked-in waivers; got:\n{}",
+        bip_moe::analysis::render_text(&findings)
+    );
+}
+
+#[test]
+fn whole_tree_lexes_and_round_trips() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let srcs = SourceSet::from_root(root).expect("crate sources readable");
+    for (rel, src) in &srcs.files {
+        let toks = match bip_moe::analysis::lexer::lex(src) {
+            Ok(t) => t,
+            Err(e) => panic!("{rel}: {e}"),
+        };
+        // round-trip: the lexer must neither drop nor duplicate any
+        // non-whitespace char anywhere in the crate
+        let got: String = toks
+            .iter()
+            .flat_map(|t| t.text.chars())
+            .filter(|c| !c.is_whitespace())
+            .collect();
+        let want: String =
+            src.chars().filter(|c| !c.is_whitespace()).collect();
+        assert_eq!(got, want, "{rel}: lexer round-trip drift");
+    }
+}
+
+// ------------------------------------------------------------ fixtures
+
+#[test]
+fn fires_hot_path_alloc() {
+    // route_batch_into is a hot root; the vec! must be flagged, both
+    // directly and transitively through a helper call
+    let dirty = set(&[(
+        "src/serve/router.rs",
+        "pub fn route_batch_into(n: usize) -> usize { helper(n) }\n\
+         fn helper(n: usize) -> usize { let v = vec![0u32; n]; v.len() }\n",
+    )]);
+    let f = run(&dirty, None);
+    assert_eq!(lints_of(&f), vec!["hot-path-alloc"], "{f:?}");
+    assert_eq!(f[0].line, 2);
+    assert!(f[0].msg.contains("vec!"), "{}", f[0].msg);
+
+    // a `// COLD` marker stops the walk at the documented seam
+    let cold = set(&[(
+        "src/serve/router.rs",
+        "pub fn route_batch_into(n: usize) -> usize { n }\n\
+         // COLD: allocating compat seam\n\
+         fn helper(n: usize) -> usize { let v = vec![0u32; n]; v.len() }\n",
+    )]);
+    assert!(run(&cold, None).is_empty());
+}
+
+#[test]
+fn fires_unsafe_audit() {
+    let dirty = set(&[(
+        "src/util/x.rs",
+        "pub fn f(p: *const u8) -> u8 { unsafe { *p } }\n",
+    )]);
+    let f = run(&dirty, None);
+    // missing SAFETY comment + missing inventory entry
+    assert_eq!(lints_of(&f), vec!["unsafe-audit", "unsafe-audit"], "{f:?}");
+    assert!(f[0].msg.contains("SAFETY"), "{}", f[0].msg);
+    assert!(f[1].msg.contains("inventory"), "{}", f[1].msg);
+
+    let mut clean = set(&[(
+        "src/util/x.rs",
+        "pub fn f(p: *const u8) -> u8 {\n\
+             // SAFETY: caller guarantees p is valid\n\
+             unsafe { *p }\n\
+         }\n",
+    )]);
+    clean.inventory = "src/util/x.rs 1\n".to_string();
+    assert!(run(&clean, None).is_empty());
+
+    // census drift in the other direction: listed but unsafe-free
+    let mut stale = set(&[("src/util/x.rs", "pub fn f() {}\n")]);
+    stale.inventory = "src/util/x.rs 1\n".to_string();
+    let f = run(&stale, None);
+    assert_eq!(lints_of(&f), vec!["unsafe-audit"], "{f:?}");
+    assert!(f[0].msg.contains("no unsafe code"), "{}", f[0].msg);
+}
+
+#[test]
+fn fires_panic_path() {
+    let dirty = set(&[(
+        "src/bip/x.rs",
+        "pub fn f(v: &[u32]) -> u32 { v.first().copied().unwrap() }\n\
+         pub fn g(v: &[u32]) -> u32 { v[0] }\n\
+         pub fn h() { unreachable!(\"nope\") }\n",
+    )]);
+    let f = run(&dirty, None);
+    assert_eq!(
+        lints_of(&f),
+        vec!["panic-path", "panic-path", "panic-path"],
+        "{f:?}"
+    );
+
+    // LINT-ALLOW and #[cfg(test)] both suppress
+    let clean = set(&[(
+        "src/bip/x.rs",
+        "pub fn f(v: &[u32]) -> u32 {\n\
+             // LINT-ALLOW(panic): caller checks non-empty\n\
+             v.first().copied().unwrap()\n\
+         }\n\
+         #[cfg(test)]\n\
+         mod tests {\n\
+             fn t(v: &[u32]) -> u32 { v[0] }\n\
+         }\n",
+    )]);
+    assert!(run(&clean, None).is_empty());
+
+    // outside the serving dirs the same code is not in scope
+    let out_of_scope = set(&[(
+        "src/util/x.rs",
+        "pub fn f(v: &[u32]) -> u32 { v[0] }\n",
+    )]);
+    assert!(run(&out_of_scope, None).is_empty());
+}
+
+#[test]
+fn fires_telemetry_naming() {
+    let dirty = set(&[(
+        "src/telemetry/registry.rs",
+        "impl Counter {\n\
+             pub fn name(self) -> &'static str {\n\
+                 match self {\n\
+                     Counter::A => \"requests_total\",\n\
+                     Counter::B => \"requests_total\",\n\
+                     Counter::C => \"Bad-Name\",\n\
+                 }\n\
+             }\n\
+             pub fn help(self) -> &'static str {\n\
+                 match self {\n\
+                     Counter::A => \"requests\",\n\
+                     Counter::B => \"\",\n\
+                 }\n\
+             }\n\
+         }\n",
+    )]);
+    let f = run(&dirty, None);
+    let lints = lints_of(&f);
+    // duplicate name + bad charset + empty help + count mismatch
+    assert_eq!(lints.len(), 4, "{f:?}");
+    assert!(lints.iter().all(|l| *l == "telemetry-naming"), "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("duplicate")), "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("Bad-Name")), "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("empty help")), "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("3 metric names")), "{f:?}");
+}
+
+#[test]
+fn fires_lock_discipline() {
+    let dirty = set(&[(
+        "src/util/x.rs",
+        "// HOT: per-batch\n\
+         pub fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n",
+    )]);
+    let f = run(&dirty, None);
+    // the `.lock()` call in the body fires; the Mutex in the signature
+    // is outside the body span and intentionally does not
+    assert_eq!(lints_of(&f), vec!["lock-discipline"], "{f:?}");
+
+    // same body without the HOT marker is out of contract
+    let unmarked = set(&[(
+        "src/util/x.rs",
+        "pub fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n",
+    )]);
+    assert!(run(&unmarked, None).is_empty());
+}
+
+#[test]
+fn fires_bench_honesty() {
+    let dirty = set(&[(
+        "src/bench/x.rs",
+        "pub fn dump(doc: &str) {\n\
+             let path = format!(\"BENCH_{}.json\", \"x\");\n\
+             std::fs::write(path, doc).ok();\n\
+         }\n",
+    )]);
+    let f = run(&dirty, None);
+    assert_eq!(lints_of(&f), vec!["bench-honesty"], "{f:?}");
+    assert!(f[0].msg.contains("schema_version"), "{}", f[0].msg);
+
+    let clean = set(&[(
+        "src/bench/x.rs",
+        "pub fn dump(doc: &str) {\n\
+             let path = format!(\"BENCH_{}.json\", \"x\");\n\
+             let doc = format!(\"{{\\\"schema_version\\\":1,{doc}}}\");\n\
+             std::fs::write(path, doc).ok();\n\
+         }\n",
+    )]);
+    assert!(run(&clean, None).is_empty());
+}
+
+// ------------------------------------------------------------- waivers
+
+#[test]
+fn waivers_suppress_and_go_stale() {
+    let dirty_src = (
+        "src/bip/x.rs",
+        "pub fn f(v: &[u32]) -> u32 { v[0] }\n",
+    );
+    // keyed waiver with a reason suppresses the finding
+    let mut s = set(&[dirty_src]);
+    s.waivers = "panic-path src/bip/x.rs:1 bounds proven by caller\n".into();
+    assert!(run(&s, None).is_empty());
+
+    // a waiver with no reason is rejected (and suppresses nothing)
+    let mut s = set(&[dirty_src]);
+    s.waivers = "panic-path src/bip/x.rs:1\n".into();
+    let f = run(&s, None);
+    assert_eq!(lints_of(&f), vec!["panic-path", "waiver-syntax"], "{f:?}");
+    assert!(f[1].msg.contains("reason"), "{}", f[1].msg);
+
+    // a waiver whose line no longer matches is reported as stale
+    let mut s = set(&[dirty_src]);
+    s.waivers =
+        "panic-path src/bip/x.rs:1 bounds proven by caller\n\
+         panic-path src/bip/x.rs:99 drifted line key\n"
+            .into();
+    let f = run(&s, None);
+    assert_eq!(lints_of(&f), vec!["stale-waiver"], "{f:?}");
+    assert_eq!(f[0].line, 2, "stale report keys the waiver file line");
+}
+
+#[test]
+fn filter_restricts_to_one_lint() {
+    let s = set(&[(
+        "src/bip/x.rs",
+        "// HOT: marked\n\
+         pub fn f(v: &[u32], m: &std::sync::Mutex<u32>) -> u32 {\n\
+             let _ = m.lock();\n\
+             v[0]\n\
+         }\n",
+    )]);
+    let all = run(&s, None);
+    assert_eq!(lints_of(&all), vec!["lock-discipline", "panic-path"], "{all:?}");
+    let only = run(&s, Some("panic-path"));
+    assert_eq!(lints_of(&only), vec!["panic-path"], "{only:?}");
+}
