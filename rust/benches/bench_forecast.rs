@@ -16,6 +16,16 @@
 //!     deltas and hindsight-oracle match rates.
 //!
 //! BIP_MOE_FULL=1 runs the full-scale sweep.
+//!
+//! The record is regression-gated: before overwriting
+//! reports/BENCH_forecast.json, the previous run's per-(scenario,
+//! kind, horizon) MAE rows are loaded and compared; a geomean
+//! accuracy ratio (previous MAE / current MAE) below 0.90 fails the
+//! bench unless the baseline is the committed seed placeholder
+//! (`"seeded_placeholder": true`, warn-only) or BIP_MOE_PERF_GATE is
+//! set to off|warn.
+
+use std::collections::BTreeMap;
 
 use bip_moe::bench::write_bench_json;
 use bip_moe::bip::Instance;
@@ -85,15 +95,156 @@ fn layer_instance(
     Instance { n, m, k, cap: (n * k / m).max(1), scores }
 }
 
+/// The previous BENCH_forecast.json's MAE per (scenario, kind,
+/// horizon) row, read BEFORE this run overwrites the record, plus
+/// whether that baseline is the committed seed placeholder.
+fn load_prev_baseline() -> Option<(BTreeMap<String, f64>, bool)> {
+    let dir = std::env::var("BIP_MOE_REPORTS")
+        .unwrap_or_else(|_| "reports".into());
+    let path = std::path::Path::new(&dir).join("BENCH_forecast.json");
+    let body = std::fs::read_to_string(&path).ok()?;
+    let doc = Json::parse(&body).ok()?;
+    let placeholder = doc
+        .path("seeded_placeholder")
+        .and_then(|j| j.as_bool())
+        .unwrap_or(false);
+    let mut rows = BTreeMap::new();
+    if let Some(sections) = doc.path("results").and_then(|j| j.as_arr())
+    {
+        for sec in sections {
+            let Some(errs) =
+                sec.path("forecast_error").and_then(|j| j.as_arr())
+            else {
+                continue;
+            };
+            for row in errs {
+                let (Some(sc), Some(kind), Some(h), Some(mae)) = (
+                    row.path("scenario").and_then(|j| j.as_str()),
+                    row.path("kind").and_then(|j| j.as_str()),
+                    row.path("horizon").and_then(|j| j.as_f64()),
+                    row.path("mae").and_then(|j| j.as_f64()),
+                ) else {
+                    continue;
+                };
+                rows.insert(format!("{sc} {kind} h={h}"), mae);
+            }
+        }
+    }
+    Some((rows, placeholder))
+}
+
+/// Accuracy gate: geomean of (previous MAE / current MAE) over the
+/// matching rows — below 0.90 means forecasts got ~11% worse. Returns
+/// the regression JSON section and whether the gate failed hard.
+fn regression_gate(
+    prev: &Option<(BTreeMap<String, f64>, bool)>,
+    cur: &[(String, f64)],
+) -> (Option<Json>, bool) {
+    let gate_env =
+        std::env::var("BIP_MOE_PERF_GATE").unwrap_or_default();
+    match prev {
+        None => {
+            println!(
+                "no previous BENCH_forecast.json — recording the \
+                 first baseline"
+            );
+            (None, false)
+        }
+        Some(_) if gate_env == "off" => {
+            println!(
+                "accuracy gate: BIP_MOE_PERF_GATE=off — regression \
+                 check skipped"
+            );
+            (None, false)
+        }
+        Some((prev_rows, placeholder)) => {
+            // denominator floor keeps near-zero MAEs from exploding
+            // the ratio either way
+            const EPS: f64 = 1e-6;
+            let mut ratio_product = 1.0f64;
+            let mut matched = 0u32;
+            let mut worst: Option<(String, f64)> = None;
+            for (key, cur_v) in cur {
+                let Some(prev_v) = prev_rows.get(key) else {
+                    continue;
+                };
+                let ratio = (prev_v + EPS) / (cur_v + EPS);
+                ratio_product *= ratio;
+                matched += 1;
+                if worst.as_ref().map_or(true, |(_, w)| ratio < *w) {
+                    worst = Some((key.clone(), ratio));
+                }
+            }
+            if matched == 0 {
+                println!(
+                    "previous BENCH_forecast.json has no comparable \
+                     MAE rows{} — gate skipped",
+                    if *placeholder {
+                        " (seeded placeholder)"
+                    } else {
+                        ""
+                    }
+                );
+                return (None, false);
+            }
+            let geomean = ratio_product.powf(1.0 / matched as f64);
+            println!(
+                "accuracy vs previous BENCH_forecast.json: geomean \
+                 prev/cur MAE ratio {geomean:.3} over {matched} \
+                 row(s) (gate fails below 0.90)"
+            );
+            if let Some((key, ratio)) = &worst {
+                println!("  worst row: {key} at {ratio:.3}");
+            }
+            let section = Json::obj(vec![(
+                "regression",
+                Json::obj(vec![
+                    ("geomean_ratio", Json::Num(geomean)),
+                    ("rows_compared", Json::Num(matched as f64)),
+                    ("gate_threshold", Json::Num(0.90)),
+                    ("baseline_placeholder", Json::Bool(*placeholder)),
+                ]),
+            )]);
+            let mut failed = false;
+            if geomean < 0.90 {
+                if *placeholder {
+                    eprintln!(
+                        "accuracy gate WARNING: geomean {geomean:.3} \
+                         < 0.90 vs the seeded placeholder baseline — \
+                         not failing"
+                    );
+                } else if gate_env == "warn" {
+                    eprintln!(
+                        "accuracy gate WARNING: geomean {geomean:.3} \
+                         < 0.90 (BIP_MOE_PERF_GATE=warn — not \
+                         failing)"
+                    );
+                } else {
+                    eprintln!(
+                        "accuracy gate FAILED: geomean prev/cur MAE \
+                         ratio {geomean:.3} < 0.90 vs the previous \
+                         record"
+                    );
+                    failed = true;
+                }
+            }
+            (Some(section), failed)
+        }
+    }
+}
+
 fn main() {
     let full = std::env::var("BIP_MOE_FULL").as_deref() == Ok("1");
     let n_requests = if full { 16_384 } else { 4_096 };
     let horizons = [1usize, 4, 16];
     let (m, k, n_layers) = (16usize, 4usize, 4usize);
+    // read the previous record before anything overwrites it
+    let prev = load_prev_baseline();
     let mut json_results = Vec::new();
 
     // ---- forecast error by horizon + warm-start sweep, per scenario --
     let mut err_rows = Vec::new();
+    let mut cur_mae: Vec<(String, f64)> = Vec::new();
     let mut warm_rows = Vec::new();
     let mut wins_by_t = vec![0usize; T_SWEEP.len()];
     for scenario in Scenario::all() {
@@ -121,6 +272,15 @@ fn main() {
                 table.row(row);
             }
             for h in &report.by_horizon {
+                cur_mae.push((
+                    format!(
+                        "{} {} h={}",
+                        scenario.name(),
+                        kind.name(),
+                        h.horizon
+                    ),
+                    h.mae,
+                ));
                 err_rows.push(Json::obj(vec![
                     ("scenario", Json::Str(scenario.name().into())),
                     ("kind", Json::Str(kind.name().into())),
@@ -404,10 +564,24 @@ fn main() {
         Json::Arr(scale_rows),
     )]));
 
+    let (section, regression_failed) =
+        regression_gate(&prev, &cur_mae);
+    if let Some(s) = section {
+        json_results.push(s);
+    }
+
     match write_bench_json("forecast", Json::Arr(json_results)) {
         Ok(path) => println!("perf record: {}", path.display()),
         Err(e) => {
             eprintln!("warning: BENCH_forecast.json not written: {e}")
         }
+    }
+
+    if regression_failed {
+        eprintln!(
+            "bench_forecast FAILED: forecast accuracy regressed past \
+             the 10% geomean gate"
+        );
+        std::process::exit(1);
     }
 }

@@ -10,7 +10,14 @@
 //!
 //! Results land in reports/BENCH_serving.json (see
 //! `bip_moe::bench::write_bench_json`) so the perf trajectory is tracked
-//! across PRs. BIP_MOE_FULL=1 runs the full-scale sweep.
+//! across PRs — and gated: before overwriting the record, the previous
+//! run's replica-sweep batches/vsec rows are loaded and compared; a
+//! geomean throughput ratio below 0.90 fails the bench (the CI perf
+//! gate) unless the baseline is the committed seed placeholder
+//! (`"seeded_placeholder": true`, warn-only) or BIP_MOE_PERF_GATE is
+//! set to off|warn. BIP_MOE_FULL=1 runs the full-scale sweep.
+
+use std::collections::BTreeMap;
 
 use bip_moe::bench::{write_bench_json, Bencher};
 use bip_moe::metrics::TablePrinter;
@@ -31,9 +38,151 @@ fn batch_of(scenario: Scenario, n: usize, seed: u64) -> Vec<Request> {
     .collect()
 }
 
+/// The previous BENCH_serving.json's replica-sweep batches/vsec per
+/// row (keyed `"<policy> R=<replicas>"`), read BEFORE this run
+/// overwrites the record, plus whether that baseline is the committed
+/// seed placeholder (warn-only for the perf gate).
+fn load_prev_baseline() -> Option<(BTreeMap<String, f64>, bool)> {
+    let dir = std::env::var("BIP_MOE_REPORTS")
+        .unwrap_or_else(|_| "reports".into());
+    let path = std::path::Path::new(&dir).join("BENCH_serving.json");
+    let body = std::fs::read_to_string(&path).ok()?;
+    let doc = Json::parse(&body).ok()?;
+    let placeholder = doc
+        .path("seeded_placeholder")
+        .and_then(|j| j.as_bool())
+        .unwrap_or(false);
+    let mut rows = BTreeMap::new();
+    if let Some(sections) = doc.path("results").and_then(|j| j.as_arr())
+    {
+        for sec in sections {
+            let Some(sweep) =
+                sec.path("replica_sweep").and_then(|j| j.as_arr())
+            else {
+                continue;
+            };
+            for row in sweep {
+                let (Some(policy), Some(r), Some(bvs)) = (
+                    row.path("policy").and_then(|j| j.as_str()),
+                    row.path("replicas").and_then(|j| j.as_f64()),
+                    row.path("batches_per_vsec").and_then(|j| j.as_f64()),
+                ) else {
+                    continue;
+                };
+                if bvs > 0.0 {
+                    rows.insert(format!("{policy} R={r}"), bvs);
+                }
+            }
+        }
+    }
+    Some((rows, placeholder))
+}
+
+/// Compare this run's replica-sweep throughput against the previous
+/// record; returns the regression JSON section and whether the gate
+/// failed hard.
+fn regression_gate(
+    prev: &Option<(BTreeMap<String, f64>, bool)>,
+    cur: &[(String, f64)],
+    bench: &str,
+) -> (Option<Json>, bool) {
+    let gate_env =
+        std::env::var("BIP_MOE_PERF_GATE").unwrap_or_default();
+    match prev {
+        None => {
+            println!(
+                "\nno previous {bench} record — recording the first \
+                 baseline"
+            );
+            (None, false)
+        }
+        Some(_) if gate_env == "off" => {
+            println!(
+                "\nperf gate: BIP_MOE_PERF_GATE=off — regression \
+                 check skipped"
+            );
+            (None, false)
+        }
+        Some((prev_rows, placeholder)) => {
+            let mut dt = TablePrinter::new(
+                &format!("throughput vs previous {bench} record"),
+                &["Row", "Previous", "Current", "Delta"],
+            );
+            let mut ratio_product = 1.0f64;
+            let mut matched = 0u32;
+            for (key, cur_v) in cur {
+                let Some(prev_v) = prev_rows.get(key) else {
+                    continue;
+                };
+                let ratio = cur_v / prev_v;
+                ratio_product *= ratio;
+                matched += 1;
+                dt.row(vec![
+                    key.clone(),
+                    format!("{prev_v:.2}"),
+                    format!("{cur_v:.2}"),
+                    format!("{:+.1}%", (ratio - 1.0) * 100.0),
+                ]);
+            }
+            if matched == 0 {
+                println!(
+                    "\nprevious {bench} record has no comparable \
+                     rows{} — gate skipped",
+                    if *placeholder {
+                        " (seeded placeholder)"
+                    } else {
+                        ""
+                    }
+                );
+                return (None, false);
+            }
+            println!();
+            dt.print();
+            let geomean = ratio_product.powf(1.0 / matched as f64);
+            println!(
+                "  geomean throughput ratio: {geomean:.3} over \
+                 {matched} row(s) (gate fails below 0.90)"
+            );
+            let section = Json::obj(vec![(
+                "regression",
+                Json::obj(vec![
+                    ("geomean_ratio", Json::Num(geomean)),
+                    ("rows_compared", Json::Num(matched as f64)),
+                    ("gate_threshold", Json::Num(0.90)),
+                    ("baseline_placeholder", Json::Bool(*placeholder)),
+                ]),
+            )]);
+            let mut failed = false;
+            if geomean < 0.90 {
+                if *placeholder {
+                    eprintln!(
+                        "perf gate WARNING: geomean {geomean:.3} < \
+                         0.90 vs the seeded placeholder baseline — \
+                         not failing"
+                    );
+                } else if gate_env == "warn" {
+                    eprintln!(
+                        "perf gate WARNING: geomean {geomean:.3} < \
+                         0.90 (BIP_MOE_PERF_GATE=warn — not failing)"
+                    );
+                } else {
+                    eprintln!(
+                        "perf gate FAILED: geomean ratio \
+                         {geomean:.3} < 0.90 vs the previous record"
+                    );
+                    failed = true;
+                }
+            }
+            (Some(section), failed)
+        }
+    }
+}
+
 fn main() {
     let full = std::env::var("BIP_MOE_FULL").as_deref() == Ok("1");
     let n_requests = if full { 65_536 } else { 8_192 };
+    // read the previous record before anything overwrites it
+    let prev = load_prev_baseline();
     let mut json_results = Vec::new();
 
     println!("== route_batch hot path (batch=64, m=16, k=4, L=4) ==");
@@ -102,6 +251,7 @@ fn main() {
     // ordering needs enough batches per replica to be stable
     let sweep_requests = if full { 65_536 } else { 16_384 };
     let mut replica_rows = Vec::new();
+    let mut cur_bvs: Vec<(String, f64)> = Vec::new();
     for &r in &[1usize, 2, 4] {
         let mut table = TablePrinter::new(
             &format!("replicas={r} threads=4 sync_every=8"),
@@ -135,6 +285,10 @@ fn main() {
             } else {
                 0.0
             };
+            cur_bvs.push((
+                format!("{} R={r}", out.report.policy),
+                batches_per_vs,
+            ));
             table.row(vec![
                 out.report.policy.clone(),
                 format!("{}", out.batches),
@@ -177,8 +331,22 @@ fn main() {
         Json::Arr(replica_rows),
     )]));
 
+    let (section, regression_failed) =
+        regression_gate(&prev, &cur_bvs, "BENCH_serving.json");
+    if let Some(s) = section {
+        json_results.push(s);
+    }
+
     match write_bench_json("serving", Json::Arr(json_results)) {
         Ok(path) => println!("perf record: {}", path.display()),
         Err(e) => eprintln!("warning: BENCH_serving.json not written: {e}"),
+    }
+
+    if regression_failed {
+        eprintln!(
+            "bench_serving FAILED: replica-sweep throughput regressed \
+             past the 10% geomean gate"
+        );
+        std::process::exit(1);
     }
 }

@@ -33,6 +33,10 @@ const HOT_ROOTS: &[&str] = &[
     "ring_record",
     "expert_tokens_add",
     "expert_tokens_add_f32",
+    "record_event",
+    "begin_batch",
+    "set_layer_ctx",
+    "set_replica_ctx",
 ];
 
 /// Files the hot-path closure is resolved within. `src/util/pool.rs`
@@ -50,11 +54,17 @@ const HOT_SCOPE: &[&str] = &[
     "src/util/stats.rs",
     "src/telemetry/registry.rs",
     "src/telemetry/span.rs",
+    "src/obs/event.rs",
 ];
 
 /// Directories where panicking constructs need a `// LINT-ALLOW(panic)`.
-const PANIC_DIRS: &[&str] =
-    &["src/serve/", "src/routing/", "src/bip/", "src/telemetry/"];
+const PANIC_DIRS: &[&str] = &[
+    "src/serve/",
+    "src/routing/",
+    "src/bip/",
+    "src/telemetry/",
+    "src/obs/",
+];
 const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
 const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
 

@@ -36,6 +36,7 @@
 //!     bit-identical to the fixed-T path (serial and parallel).
 
 use super::{Instance, Routing};
+use crate::obs::event::{self, EventKind};
 use crate::perf::{AssignmentBuf, ScoreArena};
 use crate::telemetry;
 use crate::util::pool::Pool;
@@ -315,6 +316,7 @@ impl DualState {
         let mut stale = 0u32;
         arena.best_q[..m].copy_from_slice(&self.q);
         let mut iters = 0usize;
+        let mut exit_reason = event::DUAL_EXIT_CAPPED;
         for t in 0..t_max {
             iters += 1;
             arena.prev_q[..m].copy_from_slice(&self.q);
@@ -383,6 +385,7 @@ impl DualState {
                 // exact fixpoint: every further iteration is a no-op,
                 // so stopping here is bit-identical to running them
                 if max_delta == 0.0 {
+                    exit_reason = event::DUAL_EXIT_FIXPOINT;
                     break;
                 }
                 continue;
@@ -406,9 +409,14 @@ impl DualState {
                 stale += 1;
             }
             if stale >= ADAPTIVE_PATIENCE && max_delta <= eps {
+                exit_reason = event::DUAL_EXIT_CONVERGED;
                 break;
             }
         }
+        event::record_ctx_event(
+            EventKind::DualExit,
+            event::dual_exit_payload(exit_reason, iters),
+        );
         if tol > 0.0 && best_vio.is_finite() {
             self.q.copy_from_slice(&arena.best_q[..m]);
             telemetry::gauge_set(

@@ -20,7 +20,9 @@
 //!   registry, RAII span profiling, Prometheus/JSON exposition), and
 //!   the `analysis/` subsystem (self-hosted static lint suite proving
 //!   the hot-path/unsafe/telemetry invariants at CI time via
-//!   `bip-moe lint --deny`).
+//!   `bip-moe lint --deny`), and the `obs/` subsystem (causal event
+//!   tracing, incident flight recorder, online routing-collapse
+//!   anomaly detection, and the `bip-moe top` dashboard).
 //!   Python never runs on the training or serving path.
 //! * **L2 (`python/compile/model.py`)** — Minimind-style MoE transformer
 //!   (fwd/bwd/AdamW) with the three routing modes (Loss-Controlled,
@@ -40,6 +42,7 @@ pub mod data;
 pub mod forecast;
 pub mod matching;
 pub mod metrics;
+pub mod obs;
 pub mod parallel;
 pub mod perf;
 pub mod routing;

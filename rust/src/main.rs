@@ -18,6 +18,13 @@
 //!           deltas from the live telemetry registry (--watch for a
 //!           per-tick summary table), or `metrics check` a written
 //!           snapshot's core series for CI
+//!   top     live dashboard over a driven serving run: per-layer
+//!           expert-load heat rows, MaxVio sparkline, collapse score,
+//!           and the online anomaly-detector alert feed
+//!   incidents inspect a "BIPI" incident flight-recorder dump (walks
+//!           the causal chain of the last routed batch back through
+//!           admission, per-layer routing, and solver exit) or
+//!           export it as JSON
 //!   lint    run the self-hosted static lint suite over this crate's
 //!           own sources (hot-path-alloc, unsafe-audit, panic-path,
 //!           telemetry-naming, lock-discipline, bench-honesty);
@@ -38,6 +45,10 @@
 //!   bip-moe forecast serve --model model.json --scenario bursty
 //!   bip-moe metrics --scenario steady --watch --out snap.json
 //!   bip-moe metrics check --snapshot snap.json
+//!   bip-moe serve --scenario degraded --policy bip --t 0 \
+//!           --obs-incidents reports/incidents
+//!   bip-moe top --scenario degraded --policy bip --plain
+//!   bip-moe incidents inspect --file reports/incidents/incident-*.bipi
 //!   bip-moe lint --deny --json reports/lint.json
 
 use std::path::{Path, PathBuf};
@@ -52,6 +63,10 @@ use bip_moe::forecast::{
 };
 use bip_moe::matching::simulator::{compare_policies, Workload};
 use bip_moe::metrics::TablePrinter;
+use bip_moe::obs::{
+    event, Detector, DetectorConfig, EventKind, Incident, ObsConfig,
+    ObsController, RecorderConfig, TopState,
+};
 use bip_moe::routing::BalanceState;
 use bip_moe::runtime::Engine;
 use bip_moe::serve::{
@@ -108,6 +123,8 @@ fn run(args: &Args) -> Result<()> {
         Some("trace") => cmd_trace(args),
         Some("forecast") => cmd_forecast(args),
         Some("metrics") => cmd_metrics(args),
+        Some("top") => cmd_top(args),
+        Some("incidents") => cmd_incidents(args),
         Some("lint") => cmd_lint(args),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown subcommand {other}; see --help"),
@@ -122,7 +139,7 @@ fn print_help() {
     println!(
         "bip-moe {} — BIP-Based Balancing for MoE pre-training + serving\n\n\
          usage: bip-moe <train|run|eval|solve|match|serve|trace|\
-         forecast|metrics|lint|info> [--options]\n\n\
+         forecast|metrics|top|incidents|lint|info> [--options]\n\n\
          train  --config <name> --mode <aux|lossfree|bip> [--bip-t N]\n\
                 [--steps N] [--seed N] [--eval-batches N]\n\
                 [--reports DIR] [--save CKPT] [--artifacts DIR]\n\
@@ -132,7 +149,8 @@ fn print_help() {
          solve  [--n N] [--m M] [--k K] [--skew S] [--t T] [--exact]\n\
          match  [--flows N] [--ads M] [--slots K] [--t T] [--buckets B]\n\
          serve  [--scenario steady|bursty|diurnal|adversarial|\n\
-                 multitenant|all] [--policy greedy|lossfree|bip|online|\n\
+                 multitenant|degraded|flashcrowd|all] [--policy\n\
+                 greedy|lossfree|bip|online|\n\
                  approx|all] [--requests N] [--rate R/s] [--m M] [--k K]\n\
                  [--layers L] [--tenants T] [--t ITERS] [--buckets B]\n\
                  [--batch N] [--queue N] [--max-wait-us U] [--slo-ms MS]\n\
@@ -143,6 +161,11 @@ fn print_help() {
                  TOL, iteration cap N; TOL 0 = fixed-T)\n\
                  [--replicas R] [--threads T] [--sync-every BATCHES]\n\
                  [--json PATH]\n\
+                 [--obs-incidents DIR] (enable the observability\n\
+                 controller: anomaly detection each --obs-tick batches\n\
+                 (default 32), incident flight-recorder dumps to DIR;\n\
+                 --obs-vio V adds a batch-MaxVio dump trigger at V;\n\
+                 single-replica runs only)\n\
          trace  record --out PATH [--scenario S] [--policy P]\n\
                  [--requests N] [serve-style knobs incl. --replicas]\n\
                 trace replay --trace PATH (asserts bit-identical\n\
@@ -165,8 +188,17 @@ fn print_help() {
                  prints periodic counter deltas scraped from the live\n\
                  registry; --watch prints a per-tick summary table)\n\
                 metrics check --snapshot PATH (assert the snapshot\n\
-                 parses and the core series are present and nonzero —\n\
-                 the CI smoke gate)\n\
+                 parses and the core series — telemetry and the obs\n\
+                 event ring — are present and nonzero: the CI smoke\n\
+                 gate)\n\
+         top    [serve-style knobs for the driven run]\n\
+                 [--interval-ms MS] [--plain] (live dashboard: expert\n\
+                 heat rows, MaxVio sparkline, collapse score, alert\n\
+                 feed; --plain renders ASCII without ANSI clearing)\n\
+         incidents inspect --file PATH.bipi [--events N] (print the\n\
+                 header, alert feed, scrape history tail, and the\n\
+                 causal chain of the last routed batch)\n\
+                incidents export --file PATH.bipi [--out PATH.json]\n\
          lint   [--deny] [--json PATH] [--filter LINT] [--root DIR]\n\
                  (self-hosted static lints over src/ and benches/:\n\
                  hot-path-alloc, unsafe-audit, panic-path,\n\
@@ -407,6 +439,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "devices", "placement", "lpt-refresh", "seed", "replicas",
         "threads", "sync-every",
         "json", "metrics-out",
+        "obs-incidents", "obs-tick", "obs-vio",
     ])
     .map_err(anyhow::Error::msg)?;
 
@@ -440,8 +473,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         serve_knobs(args, 8192)?;
     let (replicas, threads, sync_every) =
         (rknobs.replicas, rknobs.threads, rknobs.sync_every);
+    let obs_dir = args.get("obs-incidents").map(PathBuf::from);
+    if obs_dir.is_some() && (replicas > 1 || threads > 1) {
+        bail!(
+            "--obs-incidents drives the single-replica observed loop; \
+             drop --replicas/--threads (or leave them at 1)"
+        );
+    }
 
     let mut json_rows = Vec::new();
+    let mut obs_summaries = Vec::new();
     for &scenario in &scenarios {
         let mut table = TablePrinter::new(
             &format!(
@@ -539,6 +580,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     }
                 }
                 json_rows.push(row);
+            } else if let Some(dir) = &obs_dir {
+                let mut obs =
+                    obs_controller(args, dir, scenario, policy)?;
+                let outcome =
+                    serve::run_scenario_observed(&cfg, &mut obs);
+                table.row(outcome.report.table_row());
+                json_rows.push(outcome.report.to_json());
+                obs_summaries.push(obs_summary(
+                    scenario, policy, &obs,
+                ));
             } else {
                 let outcome = serve::run_scenario(&cfg);
                 table.row(outcome.report.table_row());
@@ -549,6 +600,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         for t in replica_tables {
             t.print();
         }
+    }
+    for s in &obs_summaries {
+        print!("{s}");
     }
 
     if let Some(path) = args.get("json") {
@@ -639,6 +693,63 @@ fn serve_knobs(args: &Args, default_requests: usize) -> Result<ServeKnobs> {
         bail!("--replicas must be >= 1");
     }
     Ok(ServeKnobs { traffic, sched, router, replicas })
+}
+
+/// Build the serve-loop observability controller from `--obs-*` knobs
+/// for one (scenario, policy) cell of the sweep.
+fn obs_controller(
+    args: &Args,
+    dir: &Path,
+    scenario: Scenario,
+    policy: Policy,
+) -> Result<ObsController> {
+    let vio_threshold = args.f64_or("obs-vio", 0.0)?;
+    if !vio_threshold.is_finite() || vio_threshold < 0.0 {
+        bail!(
+            "--obs-vio must be a finite value >= 0 (got \
+             {vio_threshold}); 0 disables the MaxVio dump trigger"
+        );
+    }
+    let cfg = ObsConfig {
+        tick_every: args.u64_or("obs-tick", 32)?.max(1),
+        detector: DetectorConfig::default(),
+        recorder: RecorderConfig {
+            out_dir: dir.to_path_buf(),
+            scenario: scenario.name().to_string(),
+            policy: policy.name().to_string(),
+            vio_threshold,
+            ..RecorderConfig::default()
+        },
+    };
+    Ok(ObsController::new(cfg))
+}
+
+/// Per-cell observability verdict printed after the sweep tables.
+fn obs_summary(
+    scenario: Scenario,
+    policy: Policy,
+    obs: &ObsController,
+) -> String {
+    let mut out = format!(
+        "obs {} / {}: {} tick(s), {} alert(s), {} incident(s)\n",
+        scenario.name(),
+        policy.name(),
+        obs.ticks(),
+        obs.alerts.len(),
+        obs.incidents.len(),
+    );
+    for a in &obs.alerts {
+        out.push_str(&format!(
+            "  [t{:>4}] {:<16} {}\n",
+            a.tick,
+            a.kind.name(),
+            a.detail
+        ));
+    }
+    for p in &obs.incidents {
+        out.push_str(&format!("  incident: {}\n", p.display()));
+    }
+    out
 }
 
 /// Routing-trace tooling: record a serving run to a versioned binary
@@ -1485,6 +1596,10 @@ fn cmd_metrics_check(args: &Args) -> Result<()> {
         "counters.solver_solves_total",
         "histograms.route_batch_seconds.count",
         "gauges.router_experts",
+        // the causal event ring rides every routed batch, so a live
+        // serve snapshot must show it recording and occupied
+        "counters.obs_events_total",
+        "gauges.obs_event_ring_occupancy",
     ];
     let mut failures = Vec::new();
     for series in core {
@@ -1493,6 +1608,18 @@ fn cmd_metrics_check(args: &Args) -> Result<()> {
             Some(v) => {
                 failures.push(format!("{series} = {v} (must be > 0)"))
             }
+            None => failures.push(format!("{series} missing")),
+        }
+    }
+    // alert/incident volume depends on the scenario — these only have
+    // to exist (zero is the healthy steady-state)
+    let present = [
+        "counters.obs_alerts_total",
+        "counters.obs_incidents_total",
+    ];
+    for series in present {
+        match doc.path(series).and_then(|j| j.as_f64()) {
+            Some(v) => println!("  ok   {series} = {v} (present)"),
             None => failures.push(format!("{series} missing")),
         }
     }
@@ -1509,6 +1636,274 @@ fn cmd_metrics_check(args: &Args) -> Result<()> {
         "metrics snapshot {path}: core series present and live \
          (v{version}, {:.1}s elapsed)",
         doc.path("elapsed_secs").and_then(|j| j.as_f64()).unwrap_or(0.0)
+    );
+    Ok(())
+}
+
+/// Live dashboard: drive one serving run on a background thread, and
+/// each interval scrape the global registry, run one anomaly-detector
+/// tick, and render the `obs::TopState` frame (heat rows, MaxVio
+/// sparkline, collapse score, alert feed).
+fn cmd_top(args: &Args) -> Result<()> {
+    args.check_known(&[
+        // serve-pipeline knobs (shared with `serve` / `metrics`)
+        "scenario", "policy", "requests", "rate", "m", "k", "layers",
+        "tenants", "t", "solver-tol", "solver-t-max", "buckets",
+        "batch", "queue", "max-wait-us", "slo-ms", "capacity-factor",
+        "devices", "placement", "lpt-refresh", "seed", "replicas",
+        "threads", "sync-every",
+        // top-specific
+        "interval-ms", "plain",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    let scenario_arg = args.str_or("scenario", "steady");
+    let scenario = Scenario::parse(&scenario_arg)
+        .ok_or_else(|| scenario_err(&scenario_arg))?;
+    if scenario == Scenario::Replayed {
+        bail!("top needs a generative scenario to drive");
+    }
+    let policy_arg = args.str_or("policy", "online");
+    let policy = Policy::parse(&policy_arg)
+        .ok_or_else(|| policy_err(&policy_arg))?;
+    let ServeKnobs { mut traffic, sched, router, replicas: rknobs } =
+        serve_knobs(args, 65_536)?;
+    traffic.scenario = scenario;
+    let cfg = ServeConfig::new(traffic, sched, router, policy);
+    let interval = std::time::Duration::from_millis(
+        args.u64_or("interval-ms", 250)?.max(10),
+    );
+    let plain = args.flag("plain");
+
+    let run_cfg = cfg.clone();
+    let handle = std::thread::spawn(move || {
+        if rknobs.replicas > 1 || rknobs.threads > 1 {
+            serve::run_replicated(&run_cfg, &rknobs).report
+        } else {
+            serve::run_scenario(&run_cfg).report
+        }
+    });
+
+    let mut detector = Detector::new(DetectorConfig::default());
+    let mut state = TopState::new();
+    while !handle.is_finished() {
+        std::thread::sleep(interval);
+        let snap = telemetry::scrape(telemetry::global());
+        let alerts = detector.tick(&snap);
+        state.update(&snap, &alerts);
+        print!("{}", state.render(&snap, plain));
+    }
+    let report = handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("serve thread panicked"))?;
+
+    // final frame always in plain mode, so the run's last state stays
+    // in the scrollback instead of being cleared away
+    let snap = telemetry::scrape(telemetry::global());
+    let alerts = detector.tick(&snap);
+    state.update(&snap, &alerts);
+    print!("{}", state.render(&snap, true));
+    println!(
+        "done: {} / {} — {} detector tick(s), {} alert(s)",
+        report.scenario,
+        report.policy,
+        detector.ticks(),
+        detector.total_alerts,
+    );
+    Ok(())
+}
+
+/// Inspect / export "BIPI" incident flight-recorder dumps.
+fn cmd_incidents(args: &Args) -> Result<()> {
+    args.check_known(&["file", "out", "events"])
+        .map_err(anyhow::Error::msg)?;
+    match args.positional.first().map(String::as_str) {
+        Some("inspect") => cmd_incidents_inspect(args),
+        Some("export") => cmd_incidents_export(args),
+        Some(other) => {
+            bail!("unknown incidents action {other}; see --help")
+        }
+        None => {
+            bail!("usage: bip-moe incidents <inspect|export> --file P")
+        }
+    }
+}
+
+fn incident_arg(args: &Args) -> Result<(PathBuf, Incident)> {
+    let path = PathBuf::from(
+        args.get("file")
+            .ok_or_else(|| anyhow::anyhow!("--file PATH required"))?,
+    );
+    let inc = Incident::load(&path)?;
+    Ok((path, inc))
+}
+
+fn solver_mode_name(mode: u8) -> &'static str {
+    match mode {
+        0 => "fixed-serial",
+        1 => "fixed-parallel",
+        2 => "adaptive-serial",
+        3 => "adaptive-parallel",
+        _ => "unknown",
+    }
+}
+
+fn cmd_incidents_inspect(args: &Args) -> Result<()> {
+    let (path, inc) = incident_arg(args)?;
+    let h = &inc.header;
+    println!("incident {}", path.display());
+    println!(
+        "  {} / {} (crate {}), v{}",
+        h.scenario, h.policy, h.crate_version, h.version
+    );
+    println!(
+        "  trigger: {} at tick {} — {} (value {:.4}, threshold {:.4})",
+        h.trigger.name(),
+        h.tick,
+        h.reason,
+        h.value,
+        h.threshold
+    );
+    if !h.trace_path.is_empty() {
+        println!("  trace:   {} (replay link)", h.trace_path);
+    }
+    println!(
+        "  {} event(s), {} scrape(s), {} alert(s)",
+        inc.events.len(),
+        inc.scrapes.len(),
+        inc.alerts.len()
+    );
+
+    if !inc.alerts.is_empty() {
+        println!("alerts:");
+        for a in &inc.alerts {
+            println!(
+                "  [t{:>4}] {:<16} L{:<2} score {:.3} value {:.3} — {}",
+                a.tick,
+                a.kind.name(),
+                a.layer,
+                a.score,
+                a.value,
+                a.detail
+            );
+        }
+    }
+
+    if let Some((tick, series)) = inc.scrapes.last() {
+        println!("last scrape (tick {tick}):");
+        for (name, value) in series {
+            if *value != 0.0 {
+                println!("  {name:<32} {value:.4}");
+            }
+        }
+    }
+
+    print_causal_chain(&inc);
+
+    if let Some(n) = args.get("events") {
+        let n: usize = n.parse().unwrap_or(16);
+        println!("last {} event(s):", n.min(inc.events.len()));
+        let skip = inc.events.len().saturating_sub(n);
+        for e in &inc.events[skip..] {
+            println!(
+                "  #{:<6} {:<12} L{:<2} R{:<2} id {:<8} payload {:#x}",
+                e.seq,
+                e.kind.name(),
+                e.layer,
+                e.replica,
+                e.id,
+                e.payload
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Walk the last routed batch in the dump back through its causal
+/// chain: BatchDone -> BatchStart (first request, size) -> per-layer
+/// LayerRoute / SolverExit / DualExit -> replica Dispatch. Everything
+/// keys on the batch ordinal the event ring stamped into `id`.
+fn print_causal_chain(inc: &Incident) {
+    let Some(done) = inc
+        .events
+        .iter()
+        .rev()
+        .find(|e| e.kind == EventKind::BatchDone)
+    else {
+        println!("causal chain: no completed batch in the event ring");
+        return;
+    };
+    let batch = done.id;
+    println!(
+        "causal chain for batch {batch} (replica {}):",
+        done.replica
+    );
+    for e in inc.events.iter().filter(|e| e.id == batch) {
+        match e.kind {
+            EventKind::BatchStart => {
+                let (first_req, n_tokens) =
+                    event::batch_start_fields(e.payload);
+                println!(
+                    "  batch start    first request {first_req}, \
+                     {n_tokens} token(s)"
+                );
+            }
+            EventKind::LayerRoute => {
+                println!("  layer {:<2} route", e.layer);
+            }
+            EventKind::SolverExit => {
+                let (mode, capped, iters) =
+                    event::solver_exit_fields(e.payload);
+                println!(
+                    "  layer {:<2} solver {} — {} iteration(s){}",
+                    e.layer,
+                    solver_mode_name(mode),
+                    iters,
+                    if capped { " (hit the cap)" } else { "" }
+                );
+            }
+            EventKind::DualExit => {
+                let (reason, iters) =
+                    event::dual_exit_fields(e.payload);
+                println!(
+                    "  layer {:<2} dual ascent exit: {} after {} \
+                     iteration(s)",
+                    e.layer,
+                    event::dual_exit_reason_name(reason),
+                    iters
+                );
+            }
+            EventKind::Dispatch => {
+                println!(
+                    "  dispatch       replica {} served in {}us",
+                    e.replica, e.payload
+                );
+            }
+            EventKind::BatchDone => {
+                println!(
+                    "  batch done     MaxVio {:.4}",
+                    f64::from_bits(e.payload)
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+fn cmd_incidents_export(args: &Args) -> Result<()> {
+    let (path, inc) = incident_arg(args)?;
+    let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
+        let mut p = path.clone().into_os_string();
+        p.push(".json");
+        PathBuf::from(p)
+    });
+    std::fs::write(&out, inc.to_json().to_string())?;
+    println!(
+        "exported {} ({} events, {} scrapes, {} alerts) -> {}",
+        path.display(),
+        inc.events.len(),
+        inc.scrapes.len(),
+        inc.alerts.len(),
+        out.display()
     );
     Ok(())
 }

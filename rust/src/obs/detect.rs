@@ -1,0 +1,545 @@
+//! Online anomaly detection over telemetry snapshots (ISSUE 8
+//! tentpole, part 3).
+//!
+//! The detector consumes successive registry [`Snapshot`]s (one per
+//! observation "tick") and scores a handful of series the way an SRE
+//! would eyeball them:
+//!
+//! * **per-layer expert token shares** — deltas of the cumulative
+//!   `[layer][expert]` grid, with an [`Ewma`] forecaster (the same
+//!   baseline predictor `forecast/` ships, per "Prediction Is All MoE
+//!   Needs") as the expected-share baseline. The **routing-collapse
+//!   early warning** fires when the hottest `hot_k` experts of a
+//!   layer hold more than `share_threshold` of that layer's tokens
+//!   for `sustain_ticks` consecutive ticks *and* the batch-MaxVio
+//!   trajectory is rising (short EWMA above long EWMA by
+//!   `vio_margin`) — sustained concentration plus rising violation is
+//!   the §1 routing-collapse signature, caught while it is still a
+//!   drift.
+//! * **scalar series** (batch MaxVio, queue depth, solver iterations,
+//!   shed rate, replica sync divergence) — prequential robust-z
+//!   against an EWMA mean/variance; a z above `z_threshold` after
+//!   warmup raises the matching typed alert.
+//!
+//! Alerts are deduplicated with a per-(kind, layer) cooldown, counted
+//! into `obs_alerts_total`, and dropped into the causal event ring so
+//! an incident dump interleaves them with the routing events that
+//! triggered them.
+
+use crate::forecast::model::{Ewma, LoadForecaster};
+use crate::obs::event::{self, EventKind};
+use crate::telemetry::registry::{Counter, Gauge};
+use crate::telemetry::{self, Snapshot};
+
+/// Typed anomalies. Discriminants ride in event payloads and incident
+/// files; keep them within `u8` and never reuse a retired value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlertKind {
+    /// sustained top-K concentration + rising MaxVio (paper §1)
+    RoutingCollapse = 1,
+    /// batch MaxVio robust-z spike
+    MaxVioSpike = 2,
+    /// solver iterations-per-solve robust-z spike
+    SolverStall = 3,
+    /// queue depth robust-z spike
+    QueueSurge = 4,
+    /// shed-rate robust-z spike
+    ShedStorm = 5,
+    /// replica merge-sync divergence robust-z spike
+    SyncDivergence = 6,
+}
+
+const N_ALERT_KINDS: usize = 6;
+
+impl AlertKind {
+    pub const ALL: [AlertKind; N_ALERT_KINDS] = [
+        AlertKind::RoutingCollapse,
+        AlertKind::MaxVioSpike,
+        AlertKind::SolverStall,
+        AlertKind::QueueSurge,
+        AlertKind::ShedStorm,
+        AlertKind::SyncDivergence,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertKind::RoutingCollapse => "routing_collapse",
+            AlertKind::MaxVioSpike => "maxvio_spike",
+            AlertKind::SolverStall => "solver_stall",
+            AlertKind::QueueSurge => "queue_surge",
+            AlertKind::ShedStorm => "shed_storm",
+            AlertKind::SyncDivergence => "sync_divergence",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<AlertKind> {
+        Self::ALL.into_iter().find(|k| *k as u8 == v)
+    }
+}
+
+/// One raised anomaly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Alert {
+    pub kind: AlertKind,
+    /// detector tick (1-based) at which the alert fired
+    pub tick: u64,
+    /// MoE layer the alert is about (collapse only; 0 otherwise)
+    pub layer: u16,
+    /// the score that crossed (robust-z, or top-K share for collapse)
+    pub score: f64,
+    /// raw series value behind the score
+    pub value: f64,
+    /// the threshold that was crossed
+    pub threshold: f64,
+    pub detail: String,
+}
+
+/// Detector thresholds. Defaults are sized for the serving sims: at
+/// `m = 16`, `cf = 2.0`, uniform top-2 share is 0.125 and the
+/// capacity-bounded collapsed top-2 share is 0.25, so 0.2 splits the
+/// two regimes with margin on both sides.
+#[derive(Clone, Debug)]
+pub struct DetectorConfig {
+    /// ticks before any alert may fire (baselines are still learning)
+    pub warmup_ticks: u64,
+    /// consecutive over-threshold ticks before collapse fires
+    pub sustain_ticks: u64,
+    /// hot-set size for the concentration score; 0 = `max(1, m/8)`
+    pub hot_k: usize,
+    /// top-`hot_k` share above which a layer counts as concentrated
+    pub share_threshold: f64,
+    /// short-EWMA MaxVio must exceed long-EWMA by this to call
+    /// the trajectory "rising"
+    pub vio_margin: f64,
+    /// robust-z threshold for the scalar series
+    pub z_threshold: f64,
+    /// ticks a fired (kind, layer) stays silent before re-raising
+    pub cooldown_ticks: u64,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> Self {
+        DetectorConfig {
+            warmup_ticks: 3,
+            sustain_ticks: 2,
+            hot_k: 0,
+            share_threshold: 0.2,
+            vio_margin: 0.08,
+            z_threshold: 4.0,
+            cooldown_ticks: 8,
+        }
+    }
+}
+
+/// Prequential EWMA mean/variance for a scalar series; `z` is scored
+/// against the state *before* the update (so a spike cannot mask
+/// itself).
+#[derive(Clone, Debug)]
+struct EwmaStat {
+    alpha: f64,
+    mean: f64,
+    var: f64,
+    n: u64,
+}
+
+impl EwmaStat {
+    fn new(alpha: f64) -> EwmaStat {
+        EwmaStat { alpha, mean: 0.0, var: 0.0, n: 0 }
+    }
+
+    /// Robust-z of `x` against the running baseline, then fold `x` in.
+    fn score_and_update(&mut self, x: f64) -> f64 {
+        let z = if self.n < 2 {
+            0.0
+        } else {
+            (x - self.mean) / (self.var.sqrt() + 1e-9)
+        };
+        let d = x - self.mean;
+        self.mean += self.alpha * d;
+        self.var =
+            (1.0 - self.alpha) * (self.var + self.alpha * d * d);
+        self.n += 1;
+        z
+    }
+}
+
+/// Per-layer collapse tracking state.
+struct LayerState {
+    /// EWMA share baseline (the `forecast/` predictor)
+    baseline: Ewma,
+    /// consecutive ticks over the concentration threshold
+    streak: u64,
+    /// scratch for this tick's share vector
+    shares: Vec<f64>,
+}
+
+/// The online detector. Feed it one [`Snapshot`] per tick via
+/// [`Detector::tick`]; it returns the alerts raised at that tick.
+pub struct Detector {
+    cfg: DetectorConfig,
+    tick: u64,
+    /// previous cumulative `[layer][expert]` token grid
+    prev_tokens: Vec<Vec<u64>>,
+    layers: Vec<LayerState>,
+    vio_short: f64,
+    vio_long: f64,
+    vio_n: u64,
+    vio_z: EwmaStat,
+    queue_z: EwmaStat,
+    iters_z: EwmaStat,
+    shed_z: EwmaStat,
+    sync_z: EwmaStat,
+    prev_shed: u64,
+    /// tick at which (kind, layer) last fired, for cooldown
+    fired: Vec<(AlertKind, u16, u64)>,
+    /// total alerts raised over the detector's lifetime
+    pub total_alerts: u64,
+}
+
+impl Detector {
+    pub fn new(cfg: DetectorConfig) -> Detector {
+        let alpha = 0.15;
+        Detector {
+            cfg,
+            tick: 0,
+            prev_tokens: Vec::new(),
+            layers: Vec::new(),
+            vio_short: 0.0,
+            vio_long: 0.0,
+            vio_n: 0,
+            vio_z: EwmaStat::new(alpha),
+            queue_z: EwmaStat::new(alpha),
+            iters_z: EwmaStat::new(alpha),
+            shed_z: EwmaStat::new(alpha),
+            sync_z: EwmaStat::new(alpha),
+            prev_shed: 0,
+            fired: Vec::new(),
+            total_alerts: 0,
+        }
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.tick
+    }
+
+    fn on_cooldown(&self, kind: AlertKind, layer: u16) -> bool {
+        self.fired.iter().any(|&(k, l, at)| {
+            k == kind
+                && l == layer
+                && self.tick.saturating_sub(at) < self.cfg.cooldown_ticks
+        })
+    }
+
+    fn raise(
+        &mut self,
+        out: &mut Vec<Alert>,
+        kind: AlertKind,
+        layer: u16,
+        score: f64,
+        value: f64,
+        threshold: f64,
+        detail: String,
+    ) {
+        if self.tick <= self.cfg.warmup_ticks
+            || self.on_cooldown(kind, layer)
+        {
+            return;
+        }
+        self.fired.retain(|&(k, l, _)| !(k == kind && l == layer));
+        self.fired.push((kind, layer, self.tick));
+        self.total_alerts += 1;
+        telemetry::counter_add(Counter::ObsAlerts, 1);
+        event::record_event(
+            EventKind::Alert,
+            self.tick,
+            ((kind as u64) << 56) | ((layer as u64) << 40),
+        );
+        out.push(Alert {
+            kind,
+            tick: self.tick,
+            layer,
+            score,
+            value,
+            threshold,
+            detail,
+        });
+    }
+
+    /// Digest one snapshot; returns the alerts raised this tick.
+    pub fn tick(&mut self, snap: &Snapshot) -> Vec<Alert> {
+        self.tick += 1;
+        let mut out = Vec::new();
+        self.score_collapse(snap, &mut out);
+        self.score_scalars(snap, &mut out);
+        out
+    }
+
+    /// Concentration score of the hottest `hot_k` experts in a share
+    /// vector (sum of the top-k fractions).
+    fn top_k_share(shares: &[f64], k: usize) -> f64 {
+        let mut top = vec![0.0f64; k];
+        for &s in shares {
+            let mut cand = s;
+            for slot in top.iter_mut() {
+                if cand > *slot {
+                    std::mem::swap(&mut cand, slot);
+                }
+            }
+        }
+        top.iter().sum()
+    }
+
+    fn score_collapse(&mut self, snap: &Snapshot, out: &mut Vec<Alert>) {
+        // MaxVio trajectory: short vs long EWMA of the batch gauge.
+        let vio = snap.gauge(Gauge::RouterLastBatchVio);
+        if self.vio_n == 0 {
+            self.vio_short = vio;
+            self.vio_long = vio;
+        } else {
+            self.vio_short += 0.4 * (vio - self.vio_short);
+            self.vio_long += 0.05 * (vio - self.vio_long);
+        }
+        self.vio_n += 1;
+        let vio_rising =
+            self.vio_short > self.vio_long + self.cfg.vio_margin;
+
+        let grid = &snap.expert_tokens;
+        let mut worst_share = 0.0f64;
+        for (l, row) in grid.iter().enumerate() {
+            if l >= self.layers.len() {
+                self.layers.push(LayerState {
+                    baseline: Ewma::new(row.len().max(1), 0.3),
+                    streak: 0,
+                    shares: Vec::new(),
+                });
+            }
+            let Some(st) = self.layers.get_mut(l) else { continue };
+            let prev = self.prev_tokens.get(l);
+            st.shares.clear();
+            let mut total = 0u64;
+            for (e, &cum) in row.iter().enumerate() {
+                let before =
+                    prev.and_then(|p| p.get(e)).copied().unwrap_or(0);
+                let d = cum.saturating_sub(before);
+                st.shares.push(d as f64);
+                total += d;
+            }
+            if total == 0 {
+                st.streak = 0;
+                continue;
+            }
+            for s in st.shares.iter_mut() {
+                *s /= total as f64;
+            }
+            let k = if self.cfg.hot_k == 0 {
+                (st.shares.len() / 8).max(1)
+            } else {
+                self.cfg.hot_k
+            };
+            let obs = Self::top_k_share(&st.shares, k);
+            let pred =
+                Self::top_k_share(&st.baseline.forecast(1), k);
+            st.baseline.observe(&st.shares);
+            worst_share = worst_share.max(obs);
+            let concentrated = obs > self.cfg.share_threshold
+                && obs > pred * 1.05;
+            if concentrated {
+                st.streak += 1;
+            } else {
+                st.streak = 0;
+            }
+            if st.streak >= self.cfg.sustain_ticks && vio_rising {
+                let detail = format!(
+                    "layer {l}: top-{k} share {obs:.3} \
+                     (baseline {pred:.3}) for {} ticks, \
+                     MaxVio ewma {:.3} > {:.3}",
+                    st.streak, self.vio_short, self.vio_long
+                );
+                self.raise(
+                    out,
+                    AlertKind::RoutingCollapse,
+                    l.min(u16::MAX as usize) as u16,
+                    obs,
+                    vio,
+                    self.cfg.share_threshold,
+                    detail,
+                );
+            }
+        }
+        telemetry::gauge_set(Gauge::ObsCollapseScore, worst_share);
+        self.prev_tokens.clear();
+        self.prev_tokens.extend(grid.iter().cloned());
+    }
+
+    fn score_scalars(&mut self, snap: &Snapshot, out: &mut Vec<Alert>) {
+        let zt = self.cfg.z_threshold;
+        let vio = snap.gauge(Gauge::RouterLastBatchVio);
+        let z = self.vio_z.score_and_update(vio);
+        if z > zt && vio > 0.05 {
+            self.raise(
+                out,
+                AlertKind::MaxVioSpike,
+                0,
+                z,
+                vio,
+                zt,
+                format!("batch MaxVio {vio:.3} at z {z:.1}"),
+            );
+        }
+        let depth = snap.gauge(Gauge::ServeQueueDepth);
+        let z = self.queue_z.score_and_update(depth);
+        if z > zt && depth >= 4.0 {
+            self.raise(
+                out,
+                AlertKind::QueueSurge,
+                0,
+                z,
+                depth,
+                zt,
+                format!("queue depth {depth:.0} at z {z:.1}"),
+            );
+        }
+        let iters = snap.gauge(Gauge::SolverLastIters);
+        let z = self.iters_z.score_and_update(iters);
+        if z > zt && iters >= 1.0 {
+            self.raise(
+                out,
+                AlertKind::SolverStall,
+                0,
+                z,
+                iters,
+                zt,
+                format!("solver iterations {iters:.0} at z {z:.1}"),
+            );
+        }
+        let shed = snap.counter(Counter::ServeShed);
+        let shed_d = shed.saturating_sub(self.prev_shed) as f64;
+        self.prev_shed = shed;
+        let z = self.shed_z.score_and_update(shed_d);
+        if z > zt && shed_d >= 2.0 {
+            self.raise(
+                out,
+                AlertKind::ShedStorm,
+                0,
+                z,
+                shed_d,
+                zt,
+                format!("{shed_d:.0} sheds this tick at z {z:.1}"),
+            );
+        }
+        let div = snap.gauge(Gauge::ReplicaLastSyncDivergence);
+        let z = self.sync_z.score_and_update(div);
+        if z > zt && div > 0.05 {
+            self.raise(
+                out,
+                AlertKind::SyncDivergence,
+                0,
+                z,
+                div,
+                zt,
+                format!("sync divergence {div:.3} at z {z:.1}"),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::Registry;
+    use crate::telemetry::scrape;
+
+    fn snap_with(reg: &Registry, vio: f64, loads: &[u32]) -> Snapshot {
+        reg.gauge_set(Gauge::RouterLastBatchVio, vio);
+        reg.expert_tokens_add(0, loads);
+        scrape(reg)
+    }
+
+    #[test]
+    fn alert_kinds_pack_into_a_byte_and_back() {
+        for k in AlertKind::ALL {
+            assert_eq!(AlertKind::from_u8(k as u8), Some(k));
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(AlertKind::from_u8(0), None);
+    }
+
+    #[test]
+    fn top_k_share_sums_the_hottest() {
+        let shares = [0.1, 0.4, 0.05, 0.3, 0.15];
+        assert!((Detector::top_k_share(&shares, 2) - 0.7).abs() < 1e-12);
+        assert!((Detector::top_k_share(&shares, 1) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balanced_shares_never_alert() {
+        let reg = Registry::new();
+        reg.set_enabled(true);
+        let mut det = Detector::new(DetectorConfig::default());
+        for _ in 0..20 {
+            let s = snap_with(&reg, 0.01, &[100u32; 8]);
+            assert!(det.tick(&s).is_empty());
+        }
+        assert_eq!(det.total_alerts, 0);
+    }
+
+    #[test]
+    fn planted_concentration_with_rising_vio_fires_collapse() {
+        let reg = Registry::new();
+        reg.set_enabled(true);
+        let mut det = Detector::new(DetectorConfig::default());
+        // balanced warmup
+        for _ in 0..6 {
+            det.tick(&snap_with(&reg, 0.02, &[100u32; 8]));
+        }
+        // collapse: one expert swallows most of the layer, MaxVio climbs
+        let mut fired = Vec::new();
+        for t in 0..8 {
+            let mut loads = [30u32; 8];
+            loads[0] = 700;
+            fired.extend(
+                det.tick(&snap_with(&reg, 0.5 + 0.05 * t as f64, &loads)),
+            );
+        }
+        assert!(
+            fired.iter().any(|a| a.kind == AlertKind::RoutingCollapse),
+            "collapse alert fired: {fired:?}"
+        );
+        let a = fired
+            .iter()
+            .find(|a| a.kind == AlertKind::RoutingCollapse)
+            .expect("collapse alert");
+        assert_eq!(a.layer, 0);
+        assert!(a.score > 0.2);
+    }
+
+    #[test]
+    fn cooldown_suppresses_rapid_refires() {
+        let mut det = Detector::new(DetectorConfig {
+            warmup_ticks: 0,
+            cooldown_ticks: 100,
+            ..DetectorConfig::default()
+        });
+        det.tick = 5;
+        let mut out = Vec::new();
+        det.raise(
+            &mut out,
+            AlertKind::QueueSurge,
+            0,
+            9.0,
+            50.0,
+            4.0,
+            "t".into(),
+        );
+        det.raise(
+            &mut out,
+            AlertKind::QueueSurge,
+            0,
+            9.0,
+            50.0,
+            4.0,
+            "t".into(),
+        );
+        assert_eq!(out.len(), 1);
+    }
+}

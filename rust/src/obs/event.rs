@@ -1,0 +1,383 @@
+//! Zero-alloc causal event ring (ISSUE 8 tentpole, part 1).
+//!
+//! Every step of a request's life — admission, shed, per-batch
+//! routing, per-layer dispatch, solver exit, replica sync — drops one
+//! fixed-size record into a sharded global ring: four `AtomicU64`
+//! words (`stamp`, `meta`, `id`, `payload`) written with a seqlock
+//! stamp so a concurrent scrape can *lose* records under pressure but
+//! can never observe a torn one. Nothing on the write path allocates
+//! or locks: the shard index reuses the telemetry registry's
+//! thread-affine hash, causal context (current batch / layer /
+//! replica) lives in `thread_local!` `Cell`s, and the sequence number
+//! is one relaxed `fetch_add`. This is what lets a MaxVio sample be
+//! walked back to the batch, replica, and solver exit reason that
+//! produced it (see DESIGN.md `obs/`).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::telemetry::registry::{self, Counter, Gauge};
+
+/// Shards of the event ring (matches the registry's shard count so
+/// [`registry::shard_index`] keeps writers thread-affine).
+pub const EVENT_SHARDS: usize = 16;
+/// Slots per shard; total capacity is `EVENT_SHARDS * SHARD_SLOTS`.
+pub const SHARD_SLOTS: usize = 256;
+/// Total ring capacity in records.
+pub const EVENT_SLOTS: usize = EVENT_SHARDS * SHARD_SLOTS;
+
+/// The event vocabulary. Discriminants are packed into the top byte
+/// of the `meta` word (and into incident files), so keep them within
+/// `u8` and never reuse a retired value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// request admitted by the scheduler (`id` = request id)
+    Admit = 1,
+    /// request rejected at admission (`id` = request id)
+    Reject = 2,
+    /// request shed by the micro-batcher (`id` = request id)
+    Shed = 3,
+    /// batch entered routing (`id` = batch ordinal, `payload` packs
+    /// first request id and token count — see [`batch_start_payload`])
+    BatchStart = 4,
+    /// one MoE layer routed within the current batch (`meta` carries
+    /// the layer, `id` = batch ordinal)
+    LayerRoute = 5,
+    /// per-batch solve returned (`payload` packs mode/capped/iters —
+    /// see [`solver_exit_payload`])
+    SolverExit = 6,
+    /// Algorithm-1 adaptive loop exited (`payload` packs the exit
+    /// reason and iteration count — see [`dual_exit_payload`])
+    DualExit = 7,
+    /// batch finished routing (`payload` = `f64::to_bits(batch_vio)`)
+    BatchDone = 8,
+    /// one replica's dispatch job finished (`payload` = service us)
+    Dispatch = 9,
+    /// replica merge-sync (`id` = sync ordinal, `payload` =
+    /// `f64::to_bits(divergence_before)`)
+    Sync = 10,
+    /// anomaly detector raised an alert (`payload` = alert kind)
+    Alert = 11,
+}
+
+const N_EVENT_KINDS: usize = 11;
+
+impl EventKind {
+    pub const ALL: [EventKind; N_EVENT_KINDS] = [
+        EventKind::Admit,
+        EventKind::Reject,
+        EventKind::Shed,
+        EventKind::BatchStart,
+        EventKind::LayerRoute,
+        EventKind::SolverExit,
+        EventKind::DualExit,
+        EventKind::BatchDone,
+        EventKind::Dispatch,
+        EventKind::Sync,
+        EventKind::Alert,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::Reject => "reject",
+            EventKind::Shed => "shed",
+            EventKind::BatchStart => "batch_start",
+            EventKind::LayerRoute => "layer_route",
+            EventKind::SolverExit => "solver_exit",
+            EventKind::DualExit => "dual_exit",
+            EventKind::BatchDone => "batch_done",
+            EventKind::Dispatch => "dispatch",
+            EventKind::Sync => "sync",
+            EventKind::Alert => "alert",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        Self::ALL.into_iter().find(|k| *k as u8 == v)
+    }
+}
+
+// Ring storage. Four parallel word arrays instead of a struct array
+// so each field is one naturally aligned atomic. `stamp` is the
+// seqlock word: 0 = unwritten or mid-write, otherwise the global
+// sequence number of the record occupying the slot.
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static STAMP: [AtomicU64; EVENT_SLOTS] = [ZERO; EVENT_SLOTS];
+static META: [AtomicU64; EVENT_SLOTS] = [ZERO; EVENT_SLOTS];
+static ID: [AtomicU64; EVENT_SLOTS] = [ZERO; EVENT_SLOTS];
+static PAYLOAD: [AtomicU64; EVENT_SLOTS] = [ZERO; EVENT_SLOTS];
+static HEADS: [AtomicU64; EVENT_SHARDS] = [ZERO; EVENT_SHARDS];
+static EVENT_SEQ: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static CTX_BATCH: Cell<u64> = const { Cell::new(0) };
+    static CTX_LAYER: Cell<u16> = const { Cell::new(0) };
+    static CTX_REPLICA: Cell<u16> = const { Cell::new(0) };
+}
+
+const META_KIND_SHIFT: u32 = 56;
+const META_LAYER_SHIFT: u32 = 40;
+const META_REPLICA_SHIFT: u32 = 24;
+
+// HOT: per-event encode — TLS reads plus relaxed/seqlock atomic
+// stores into preallocated slots; no locks, no allocation.
+pub fn record_event(kind: EventKind, id: u64, payload: u64) {
+    if !registry::enabled() {
+        return;
+    }
+    let seq = EVENT_SEQ.fetch_add(1, Ordering::Relaxed) + 1;
+    let shard = registry::shard_index() % EVENT_SHARDS;
+    let slot = (HEADS[shard].fetch_add(1, Ordering::Relaxed) as usize)
+        % SHARD_SLOTS;
+    let at = shard * SHARD_SLOTS + slot;
+    let layer = CTX_LAYER.with(|c| c.get());
+    let replica = CTX_REPLICA.with(|c| c.get());
+    let meta = ((kind as u64) << META_KIND_SHIFT)
+        | ((layer as u64) << META_LAYER_SHIFT)
+        | ((replica as u64) << META_REPLICA_SHIFT);
+    // seqlock write: invalidate, fill, publish. A reader that races
+    // us sees stamp 0 (skip) or a stamp change (discard) — never a
+    // mix of old and new fields.
+    STAMP[at].store(0, Ordering::Release);
+    META[at].store(meta, Ordering::Relaxed);
+    ID[at].store(id, Ordering::Relaxed);
+    PAYLOAD[at].store(payload, Ordering::Relaxed);
+    STAMP[at].store(seq, Ordering::Release);
+    registry::counter_add(Counter::ObsEvents, 1);
+    registry::gauge_set(
+        Gauge::ObsEventRingOccupancy,
+        seq.min(EVENT_SLOTS as u64) as f64,
+    );
+}
+
+// HOT: per-event encode of a batch-scoped event — the current batch
+// ordinal (TLS) becomes the causal id; no locks, no allocation.
+pub fn record_ctx_event(kind: EventKind, payload: u64) {
+    record_event(kind, CTX_BATCH.with(|c| c.get()), payload);
+}
+
+// HOT: per-batch causal-context open — two TLS stores plus one
+// BatchStart record; no locks, no allocation.
+pub fn begin_batch(batch_id: u64, first_req: u64, n_tokens: usize) {
+    if !registry::enabled() {
+        return;
+    }
+    CTX_BATCH.with(|c| c.set(batch_id));
+    CTX_LAYER.with(|c| c.set(0));
+    record_event(
+        EventKind::BatchStart,
+        batch_id,
+        batch_start_payload(first_req, n_tokens),
+    );
+}
+
+// HOT: per-layer causal-context update — one TLS store plus one
+// LayerRoute record; no locks, no allocation.
+pub fn set_layer_ctx(layer: usize) {
+    if !registry::enabled() {
+        return;
+    }
+    let l = layer.min(u16::MAX as usize) as u16;
+    CTX_LAYER.with(|c| c.set(l));
+    record_ctx_event(EventKind::LayerRoute, l as u64);
+}
+
+// HOT: per-dispatch causal-context update — one TLS store; no locks,
+// no allocation. Sticky for the worker thread until set again.
+pub fn set_replica_ctx(replica: usize) {
+    CTX_REPLICA
+        .with(|c| c.set(replica.min(u16::MAX as usize) as u16));
+}
+
+/// The batch ordinal currently open on this thread (0 before any
+/// [`begin_batch`]).
+pub fn batch_ctx() -> u64 {
+    CTX_BATCH.with(|c| c.get())
+}
+
+/// Pack a BatchStart payload: first admitted request id in the high
+/// bits, token count (clamped to u16) in the low 16.
+pub fn batch_start_payload(first_req: u64, n_tokens: usize) -> u64 {
+    (first_req << 16) | n_tokens.min(u16::MAX as usize) as u64
+}
+
+/// Unpack [`batch_start_payload`] → `(first_req, n_tokens)`.
+pub fn batch_start_fields(payload: u64) -> (u64, usize) {
+    (payload >> 16, (payload & u16::MAX as u64) as usize)
+}
+
+/// Pack a SolverExit payload: solve mode (0 fixed-serial, 1
+/// fixed-parallel, 2 adaptive-serial, 3 adaptive-parallel), whether
+/// the adaptive loop hit its iteration cap, and the iteration count.
+pub fn solver_exit_payload(mode: u8, capped: bool, iters: usize) -> u64 {
+    ((mode as u64) << 56)
+        | ((capped as u64) << 48)
+        | (iters as u64 & ((1u64 << 48) - 1))
+}
+
+/// Unpack [`solver_exit_payload`] → `(mode, capped, iters)`.
+pub fn solver_exit_fields(payload: u64) -> (u8, bool, usize) {
+    (
+        (payload >> 56) as u8,
+        (payload >> 48) & 1 == 1,
+        (payload & ((1u64 << 48) - 1)) as usize,
+    )
+}
+
+/// Adaptive-loop exit reasons packed into [`dual_exit_payload`].
+pub const DUAL_EXIT_CAPPED: u8 = 0;
+pub const DUAL_EXIT_FIXPOINT: u8 = 1;
+pub const DUAL_EXIT_CONVERGED: u8 = 2;
+
+/// Pack a DualExit payload: exit reason in the top byte, iteration
+/// count below.
+pub fn dual_exit_payload(reason: u8, iters: usize) -> u64 {
+    ((reason as u64) << 56) | (iters as u64 & ((1u64 << 56) - 1))
+}
+
+/// Unpack [`dual_exit_payload`] → `(reason, iters)`.
+pub fn dual_exit_fields(payload: u64) -> (u8, usize) {
+    ((payload >> 56) as u8, (payload & ((1u64 << 56) - 1)) as usize)
+}
+
+/// Human name for a DualExit reason code.
+pub fn dual_exit_reason_name(reason: u8) -> &'static str {
+    match reason {
+        DUAL_EXIT_FIXPOINT => "fixpoint",
+        DUAL_EXIT_CONVERGED => "converged",
+        _ => "capped",
+    }
+}
+
+/// One decoded event as read back out of the ring.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EventRecord {
+    /// global sequence number (1-based, monotone across shards)
+    pub seq: u64,
+    pub kind: EventKind,
+    /// MoE layer context at record time (0 outside routing)
+    pub layer: u16,
+    /// replica context at record time (0 in single-replica serving)
+    pub replica: u16,
+    /// causal id: request id for admission events, batch ordinal for
+    /// routing/solver events, sync ordinal for Sync
+    pub id: u64,
+    pub payload: u64,
+}
+
+fn read_slot(at: usize) -> Option<EventRecord> {
+    let s1 = STAMP[at].load(Ordering::Acquire);
+    if s1 == 0 {
+        return None;
+    }
+    let meta = META[at].load(Ordering::Relaxed);
+    let id = ID[at].load(Ordering::Relaxed);
+    let payload = PAYLOAD[at].load(Ordering::Relaxed);
+    let s2 = STAMP[at].load(Ordering::Acquire);
+    if s1 != s2 {
+        return None; // torn by a concurrent writer — drop, don't lie
+    }
+    let kind = EventKind::from_u8((meta >> META_KIND_SHIFT) as u8)?;
+    Some(EventRecord {
+        seq: s1,
+        kind,
+        layer: ((meta >> META_LAYER_SHIFT) & 0xffff) as u16,
+        replica: ((meta >> META_REPLICA_SHIFT) & 0xffff) as u16,
+        id,
+        payload,
+    })
+}
+
+/// The most recent `max` events across every shard, oldest first (so
+/// a causal chain reads top to bottom). Allocates — scrape-side only
+/// — and is loss-bounded under concurrent writes: records may be
+/// missing, never torn.
+pub fn recent_events(max: usize) -> Vec<EventRecord> {
+    let mut out = Vec::with_capacity(EVENT_SLOTS.min(max));
+    for at in 0..EVENT_SLOTS {
+        if let Some(r) = read_slot(at) {
+            out.push(r);
+        }
+    }
+    out.sort_by_key(|r| r.seq);
+    if out.len() > max {
+        out.drain(..out.len() - max);
+    }
+    out
+}
+
+/// Total events ever recorded (monotone; survives ring wrap).
+pub fn events_recorded() -> u64 {
+    EVENT_SEQ.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_pack_into_a_byte_and_back() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::from_u8(k as u8), Some(k));
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(EventKind::from_u8(0), None);
+        assert_eq!(EventKind::from_u8(200), None);
+    }
+
+    #[test]
+    fn payload_packers_round_trip() {
+        assert_eq!(batch_start_fields(batch_start_payload(7, 33)), (7, 33));
+        assert_eq!(
+            solver_exit_fields(solver_exit_payload(3, true, 41)),
+            (3, true, 41)
+        );
+        assert_eq!(
+            dual_exit_fields(dual_exit_payload(DUAL_EXIT_CONVERGED, 9)),
+            (DUAL_EXIT_CONVERGED, 9)
+        );
+        assert_eq!(dual_exit_reason_name(DUAL_EXIT_FIXPOINT), "fixpoint");
+    }
+
+    #[test]
+    fn recorded_events_carry_causal_context() {
+        crate::telemetry::set_enabled(true);
+        set_replica_ctx(3);
+        begin_batch(42, 9000, 17);
+        set_layer_ctx(5);
+        record_ctx_event(EventKind::BatchDone, f64::to_bits(0.25));
+        set_replica_ctx(0);
+        let recent = recent_events(EVENT_SLOTS);
+        let done = recent
+            .iter()
+            .rev()
+            .find(|r| {
+                r.kind == EventKind::BatchDone && r.id == 42 && r.replica == 3
+            })
+            .expect("our BatchDone is in the ring");
+        assert_eq!(done.layer, 5);
+        assert_eq!(f64::from_bits(done.payload), 0.25);
+        let start = recent
+            .iter()
+            .find(|r| r.kind == EventKind::BatchStart && r.id == 42)
+            .expect("our BatchStart is in the ring");
+        assert!(start.seq < done.seq, "causal order preserved");
+        assert_eq!(batch_start_fields(start.payload), (9000, 17));
+    }
+
+    #[test]
+    fn ring_read_is_bounded_and_ordered() {
+        crate::telemetry::set_enabled(true);
+        for i in 0..10 {
+            record_event(EventKind::Admit, i, 0);
+        }
+        let few = recent_events(4);
+        assert!(few.len() <= 4);
+        for w in few.windows(2) {
+            assert!(w[0].seq < w[1].seq, "oldest first");
+        }
+        assert!(recent_events(usize::MAX).len() <= EVENT_SLOTS);
+        assert!(events_recorded() >= 10);
+    }
+}

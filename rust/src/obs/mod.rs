@@ -1,0 +1,111 @@
+//! Observability layer (ISSUE 8): causal event tracing, incident
+//! flight recording, online anomaly detection, and the `bip-moe top`
+//! dashboard — built on the `telemetry/` registry.
+//!
+//! * [`event`] — the zero-alloc causal event ring. Admission, shed,
+//!   batch, per-layer routing, solver exit, replica dispatch and sync
+//!   each drop a fixed-size record with request/batch/sync causal
+//!   ids, so a MaxVio sample walks back to the decisions behind it.
+//! * [`detect`] — EWMA/robust-z scoring over registry series with the
+//!   routing-collapse early-warning rule (sustained top-K
+//!   concentration + rising MaxVio, the paper-§1 failure signature).
+//! * [`recorder`] — bounded event+scrape history dumped to a
+//!   versioned "BIPI" incident file when a trigger fires; incidents
+//!   link to the trace recorded alongside them for replay.
+//! * [`top`] — the in-terminal dashboard renderer.
+//!
+//! [`ObsController`] wires the pieces into the serving loop: every
+//! `tick_every` routed batches it scrapes the global registry, runs
+//! one detector tick, and lets the flight recorder decide whether to
+//! dump. `serve::run_scenario_observed` accepts one; `bip-moe serve
+//! --obs-incidents DIR` builds one from the CLI.
+
+pub mod detect;
+pub mod event;
+pub mod recorder;
+pub mod top;
+
+use std::path::PathBuf;
+
+pub use detect::{Alert, AlertKind, Detector, DetectorConfig};
+pub use event::{recent_events, EventKind, EventRecord};
+pub use recorder::{
+    FlightRecorder, Incident, IncidentHeader, RecorderConfig, Trigger,
+    INCIDENT_MAGIC, INCIDENT_VERSION,
+};
+pub use top::TopState;
+
+use crate::telemetry;
+
+/// Controller knobs: how often to tick, and the detector/recorder
+/// configuration underneath.
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// routed batches per detector tick
+    pub tick_every: u64,
+    pub detector: DetectorConfig,
+    pub recorder: RecorderConfig,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            tick_every: 32,
+            detector: DetectorConfig::default(),
+            recorder: RecorderConfig::default(),
+        }
+    }
+}
+
+/// The serve-loop hook: scrape → detect → maybe dump, once every
+/// `tick_every` batches.
+pub struct ObsController {
+    tick_every: u64,
+    detector: Detector,
+    recorder: FlightRecorder,
+    batches: u64,
+    /// every alert raised over the run, in tick order
+    pub alerts: Vec<Alert>,
+    /// every incident file dumped over the run
+    pub incidents: Vec<PathBuf>,
+}
+
+impl ObsController {
+    pub fn new(cfg: ObsConfig) -> ObsController {
+        ObsController {
+            tick_every: cfg.tick_every.max(1),
+            detector: Detector::new(cfg.detector),
+            recorder: FlightRecorder::new(cfg.recorder),
+            batches: 0,
+            alerts: Vec::new(),
+            incidents: Vec::new(),
+        }
+    }
+
+    /// Count one routed batch; runs a detector tick every
+    /// `tick_every` calls.
+    pub fn on_batch(&mut self) {
+        self.batches += 1;
+        if self.batches % self.tick_every != 0 {
+            return;
+        }
+        self.force_tick();
+    }
+
+    /// Run one detector tick now (the serve loop calls this once more
+    /// at drain so short runs still get a final verdict).
+    pub fn force_tick(&mut self) {
+        let snap = telemetry::scrape(telemetry::global());
+        let alerts = self.detector.tick(&snap);
+        if let Some(p) =
+            self.recorder.observe(self.detector.ticks(), &snap, &alerts)
+        {
+            self.incidents.push(p);
+        }
+        self.alerts.extend(alerts);
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.detector.ticks()
+    }
+}

@@ -1,0 +1,734 @@
+//! Incident flight recorder (ISSUE 8 tentpole, part 2).
+//!
+//! The recorder keeps a bounded history of telemetry scrapes and, when
+//! a trigger fires — batch MaxVio over a configured ceiling, a
+//! detector alert (shed storm and sync-divergence alerts map to their
+//! own trigger codes), an explicit request, or a panic — dumps a
+//! versioned **incident file**: a "BIPI" container in the same
+//! length-prefixed little-endian conventions as the "BIPT" trace
+//! format, holding the run identity, the causal event ring contents,
+//! the scrape history, and the alert feed. An incident can name the
+//! trace file recorded alongside it (`trace_path`), making the dump
+//! replay-linkable: `bip-moe replay` the trace, `bip-moe incidents
+//! inspect` the dump, and the batch ordinals line up.
+//!
+//! Read one back with [`Incident::load`]; `bip-moe incidents
+//! inspect|export` wrap that for the terminal.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::detect::{Alert, AlertKind};
+use crate::obs::event::{self, EventRecord};
+use crate::telemetry::registry::{Counter, Gauge};
+use crate::telemetry::{self, Snapshot};
+use crate::trace::format::{ByteReader, ByteWriter};
+use crate::util::json::Json;
+
+pub const INCIDENT_MAGIC: [u8; 4] = *b"BIPI";
+/// v1: header, events, scrapes, alerts — all length-prefixed blocks.
+pub const INCIDENT_VERSION: u32 = 1;
+
+/// Why an incident was dumped. Discriminants are written to disk;
+/// never reuse a retired value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trigger {
+    /// batch MaxVio crossed the recorder's ceiling
+    MaxVio = 1,
+    /// SLO attainment burn (reserved for the serving SLO watcher)
+    SloBurn = 2,
+    /// replica sync divergence jumped (detector sync alert)
+    DualDivergence = 3,
+    /// shed rate spiked (detector shed alert)
+    ShedStorm = 4,
+    /// any other detector alert (routing collapse included)
+    Alert = 5,
+    /// explicit dump request (CLI / tests)
+    Manual = 6,
+    /// process panicked with the hook installed
+    Panic = 7,
+}
+
+const N_TRIGGERS: usize = 7;
+
+impl Trigger {
+    pub const ALL: [Trigger; N_TRIGGERS] = [
+        Trigger::MaxVio,
+        Trigger::SloBurn,
+        Trigger::DualDivergence,
+        Trigger::ShedStorm,
+        Trigger::Alert,
+        Trigger::Manual,
+        Trigger::Panic,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Trigger::MaxVio => "maxvio",
+            Trigger::SloBurn => "slo_burn",
+            Trigger::DualDivergence => "dual_divergence",
+            Trigger::ShedStorm => "shed_storm",
+            Trigger::Alert => "alert",
+            Trigger::Manual => "manual",
+            Trigger::Panic => "panic",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Trigger> {
+        Self::ALL.into_iter().find(|t| *t as u8 == v)
+    }
+}
+
+/// Run identity and trigger context at dump time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IncidentHeader {
+    /// on-disk format version the file was read with
+    pub version: u32,
+    pub crate_version: String,
+    pub scenario: String,
+    pub policy: String,
+    /// detector tick at which the trigger fired
+    pub tick: u64,
+    pub trigger: Trigger,
+    pub reason: String,
+    /// raw value behind the trigger (e.g. the MaxVio sample)
+    pub value: f64,
+    pub threshold: f64,
+    /// trace file recorded alongside this run ("" when none) — the
+    /// replay link
+    pub trace_path: String,
+}
+
+/// A full incident dump: identity + events + scrapes + alerts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Incident {
+    pub header: IncidentHeader,
+    /// causal event ring contents at dump time, oldest first
+    pub events: Vec<EventRecord>,
+    /// bounded scrape history: (tick, named series)
+    pub scrapes: Vec<(u64, Vec<(String, f64)>)>,
+    pub alerts: Vec<Alert>,
+}
+
+impl Incident {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.raw(&INCIDENT_MAGIC);
+        w.u32(INCIDENT_VERSION);
+
+        let h = &self.header;
+        let start = w.begin_block();
+        w.str(&h.crate_version);
+        w.str(&h.scenario);
+        w.str(&h.policy);
+        w.u64(h.tick);
+        w.u8(h.trigger as u8);
+        w.str(&h.reason);
+        w.f64(h.value);
+        w.f64(h.threshold);
+        w.str(&h.trace_path);
+        w.end_block(start);
+
+        w.u64(self.events.len() as u64);
+        for e in &self.events {
+            let start = w.begin_block();
+            w.u64(e.seq);
+            w.u8(e.kind as u8);
+            w.u16(e.layer);
+            w.u16(e.replica);
+            w.u64(e.id);
+            w.u64(e.payload);
+            w.end_block(start);
+        }
+
+        w.u64(self.scrapes.len() as u64);
+        for (tick, series) in &self.scrapes {
+            let start = w.begin_block();
+            w.u64(*tick);
+            w.u32(series.len() as u32);
+            for (name, value) in series {
+                w.str(name);
+                w.f64(*value);
+            }
+            w.end_block(start);
+        }
+
+        w.u64(self.alerts.len() as u64);
+        for a in &self.alerts {
+            let start = w.begin_block();
+            w.u8(a.kind as u8);
+            w.u64(a.tick);
+            w.u16(a.layer);
+            w.f64(a.score);
+            w.f64(a.value);
+            w.f64(a.threshold);
+            w.str(&a.detail);
+            w.end_block(start);
+        }
+
+        w.buf
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Incident> {
+        let mut r = ByteReader::new(bytes);
+        let magic = {
+            let mut m = [0u8; 4];
+            for slot in m.iter_mut() {
+                *slot = r.u8()?;
+            }
+            m
+        };
+        if magic != INCIDENT_MAGIC {
+            bail!("not a bip-moe incident (bad magic {magic:02x?})");
+        }
+        let version = r.u32()?;
+        if version == 0 || version > INCIDENT_VERSION {
+            bail!(
+                "unsupported incident version {version} (this build \
+                 reads versions 1..={INCIDENT_VERSION})"
+            );
+        }
+
+        let mut hb = r.block()?;
+        let crate_version = hb.str()?;
+        let scenario = hb.str()?;
+        let policy = hb.str()?;
+        let tick = hb.u64()?;
+        let trigger_code = hb.u8()?;
+        let Some(trigger) = Trigger::from_u8(trigger_code) else {
+            bail!("unknown incident trigger code {trigger_code}");
+        };
+        let header = IncidentHeader {
+            version,
+            crate_version,
+            scenario,
+            policy,
+            tick,
+            trigger,
+            reason: hb.str()?,
+            value: hb.f64()?,
+            threshold: hb.f64()?,
+            trace_path: hb.str()?,
+        };
+
+        let n = r.u64()? as usize;
+        let mut events = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let mut b = r.block()?;
+            let seq = b.u64()?;
+            let kind_code = b.u8()?;
+            let Some(kind) = event::EventKind::from_u8(kind_code) else {
+                bail!("unknown incident event kind {kind_code}");
+            };
+            events.push(EventRecord {
+                seq,
+                kind,
+                layer: b.u16()?,
+                replica: b.u16()?,
+                id: b.u64()?,
+                payload: b.u64()?,
+            });
+        }
+
+        let n = r.u64()? as usize;
+        let mut scrapes = Vec::with_capacity(n.min(1 << 10));
+        for _ in 0..n {
+            let mut b = r.block()?;
+            let tick = b.u64()?;
+            let ns = b.u32()? as usize;
+            let mut series = Vec::with_capacity(ns.min(1 << 10));
+            for _ in 0..ns {
+                let name = b.str()?;
+                let value = b.f64()?;
+                series.push((name, value));
+            }
+            scrapes.push((tick, series));
+        }
+
+        let n = r.u64()? as usize;
+        let mut alerts = Vec::with_capacity(n.min(1 << 10));
+        for _ in 0..n {
+            let mut b = r.block()?;
+            let kind_code = b.u8()?;
+            let Some(kind) = AlertKind::from_u8(kind_code) else {
+                bail!("unknown incident alert kind {kind_code}");
+            };
+            alerts.push(Alert {
+                kind,
+                tick: b.u64()?,
+                layer: b.u16()?,
+                score: b.f64()?,
+                value: b.f64()?,
+                threshold: b.f64()?,
+                detail: b.str()?,
+            });
+        }
+
+        Ok(Incident { header, events, scrapes, alerts })
+    }
+
+    /// Number of bytes written.
+    pub fn save(&self, path: &Path) -> Result<usize> {
+        let bytes = self.to_bytes();
+        std::fs::write(path, &bytes).with_context(|| {
+            format!("writing incident {}", path.display())
+        })?;
+        Ok(bytes.len())
+    }
+
+    pub fn load(path: &Path) -> Result<Incident> {
+        let bytes = std::fs::read(path).with_context(|| {
+            format!("reading incident {}", path.display())
+        })?;
+        Incident::from_bytes(&bytes).with_context(|| {
+            format!("parsing incident {}", path.display())
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let h = &self.header;
+        Json::obj(vec![
+            ("format", Json::Str("bip-moe-incident".into())),
+            ("version", Json::Num(h.version as f64)),
+            (
+                "header",
+                Json::obj(vec![
+                    (
+                        "crate_version",
+                        Json::Str(h.crate_version.clone()),
+                    ),
+                    ("scenario", Json::Str(h.scenario.clone())),
+                    ("policy", Json::Str(h.policy.clone())),
+                    ("tick", Json::Num(h.tick as f64)),
+                    ("trigger", Json::Str(h.trigger.name().into())),
+                    ("reason", Json::Str(h.reason.clone())),
+                    ("value", Json::Num(h.value)),
+                    ("threshold", Json::Num(h.threshold)),
+                    ("trace_path", Json::Str(h.trace_path.clone())),
+                ]),
+            ),
+            (
+                "events",
+                Json::Arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("seq", Json::Num(e.seq as f64)),
+                                ("kind", Json::Str(e.kind.name().into())),
+                                ("layer", Json::Num(e.layer as f64)),
+                                (
+                                    "replica",
+                                    Json::Num(e.replica as f64),
+                                ),
+                                ("id", Json::Num(e.id as f64)),
+                                ("payload", Json::Num(e.payload as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "scrapes",
+                Json::Arr(
+                    self.scrapes
+                        .iter()
+                        .map(|(tick, series)| {
+                            Json::obj(vec![
+                                ("tick", Json::Num(*tick as f64)),
+                                (
+                                    "series",
+                                    Json::Obj(
+                                        series
+                                            .iter()
+                                            .map(|(k, v)| {
+                                                (
+                                                    k.clone(),
+                                                    Json::Num(*v),
+                                                )
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "alerts",
+                Json::Arr(
+                    self.alerts
+                        .iter()
+                        .map(|a| {
+                            Json::obj(vec![
+                                ("kind", Json::Str(a.kind.name().into())),
+                                ("tick", Json::Num(a.tick as f64)),
+                                ("layer", Json::Num(a.layer as f64)),
+                                ("score", Json::Num(a.score)),
+                                ("value", Json::Num(a.value)),
+                                ("threshold", Json::Num(a.threshold)),
+                                ("detail", Json::Str(a.detail.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Named counter/gauge series out of a [`Snapshot`] — same names the
+/// Prometheus exposition uses, flat (name, value) pairs.
+pub fn named_series(snap: &Snapshot) -> Vec<(String, f64)> {
+    let mut out = Vec::with_capacity(
+        Counter::ALL.len() + Gauge::ALL.len() + 1,
+    );
+    out.push(("elapsed_secs".to_string(), snap.elapsed_secs));
+    for (c, v) in Counter::ALL.iter().zip(&snap.counters) {
+        out.push((c.name().to_string(), *v as f64));
+    }
+    for (g, v) in Gauge::ALL.iter().zip(&snap.gauges) {
+        out.push((g.name().to_string(), *v));
+    }
+    out
+}
+
+/// Flight-recorder knobs. `vio_threshold <= 0` disables the MaxVio
+/// trigger; alerts always trigger.
+#[derive(Clone, Debug)]
+pub struct RecorderConfig {
+    /// scrapes kept in the rolling history
+    pub history: usize,
+    /// batch-MaxVio ceiling; a gauge sample at or above it dumps
+    pub vio_threshold: f64,
+    /// most recent events included in a dump
+    pub max_events: usize,
+    /// dumps after which the recorder goes quiet (bounds disk use)
+    pub max_incidents: usize,
+    pub out_dir: PathBuf,
+    pub scenario: String,
+    pub policy: String,
+    /// trace recorded alongside this run ("" when none)
+    pub trace_path: String,
+}
+
+impl Default for RecorderConfig {
+    fn default() -> Self {
+        RecorderConfig {
+            history: 32,
+            vio_threshold: 0.0,
+            max_events: event::EVENT_SLOTS,
+            max_incidents: 4,
+            out_dir: PathBuf::from("."),
+            scenario: String::new(),
+            policy: String::new(),
+            trace_path: String::new(),
+        }
+    }
+}
+
+/// The live recorder: feed it one `(snapshot, alerts)` pair per
+/// detector tick; it returns the path of any incident it dumped.
+pub struct FlightRecorder {
+    cfg: RecorderConfig,
+    history: VecDeque<(u64, Vec<(String, f64)>)>,
+    alerts: Vec<Alert>,
+    dumped: Vec<PathBuf>,
+}
+
+const MAX_KEPT_ALERTS: usize = 64;
+
+impl FlightRecorder {
+    pub fn new(cfg: RecorderConfig) -> FlightRecorder {
+        FlightRecorder {
+            cfg,
+            history: VecDeque::new(),
+            alerts: Vec::new(),
+            dumped: Vec::new(),
+        }
+    }
+
+    pub fn dumped(&self) -> &[PathBuf] {
+        &self.dumped
+    }
+
+    /// Record one tick; dump and return the incident path if a
+    /// trigger fired (and the dump budget allows).
+    pub fn observe(
+        &mut self,
+        tick: u64,
+        snap: &Snapshot,
+        alerts: &[Alert],
+    ) -> Option<PathBuf> {
+        self.history.push_back((tick, named_series(snap)));
+        while self.history.len() > self.cfg.history.max(1) {
+            self.history.pop_front();
+        }
+        for a in alerts {
+            if self.alerts.len() < MAX_KEPT_ALERTS {
+                self.alerts.push(a.clone());
+            }
+        }
+        let vio = snap.gauge(Gauge::RouterLastBatchVio);
+        if self.cfg.vio_threshold > 0.0 && vio >= self.cfg.vio_threshold
+        {
+            let reason = format!(
+                "batch MaxVio {vio:.3} >= {:.3}",
+                self.cfg.vio_threshold
+            );
+            return self.dump(
+                tick,
+                Trigger::MaxVio,
+                reason,
+                vio,
+                self.cfg.vio_threshold,
+            );
+        }
+        if let Some(a) = alerts.first() {
+            let trigger = match a.kind {
+                AlertKind::ShedStorm => Trigger::ShedStorm,
+                AlertKind::SyncDivergence => Trigger::DualDivergence,
+                _ => Trigger::Alert,
+            };
+            let reason =
+                format!("{} alert: {}", a.kind.name(), a.detail);
+            return self.dump(tick, trigger, reason, a.value, a.threshold);
+        }
+        None
+    }
+
+    /// Explicit dump, trigger [`Trigger::Manual`].
+    pub fn dump_manual(&mut self, tick: u64) -> Option<PathBuf> {
+        self.dump(
+            tick,
+            Trigger::Manual,
+            "manual dump".to_string(),
+            0.0,
+            0.0,
+        )
+    }
+
+    fn dump(
+        &mut self,
+        tick: u64,
+        trigger: Trigger,
+        reason: String,
+        value: f64,
+        threshold: f64,
+    ) -> Option<PathBuf> {
+        if self.dumped.len() >= self.cfg.max_incidents {
+            return None;
+        }
+        let inc = Incident {
+            header: IncidentHeader {
+                version: INCIDENT_VERSION,
+                crate_version: env!("CARGO_PKG_VERSION").to_string(),
+                scenario: self.cfg.scenario.clone(),
+                policy: self.cfg.policy.clone(),
+                tick,
+                trigger,
+                reason,
+                value,
+                threshold,
+                trace_path: self.cfg.trace_path.clone(),
+            },
+            events: event::recent_events(self.cfg.max_events),
+            scrapes: self.history.iter().cloned().collect(),
+            alerts: self.alerts.clone(),
+        };
+        let name = format!(
+            "incident-{}-{}-t{tick}.bipi",
+            safe_name(&self.cfg.scenario),
+            safe_name(&self.cfg.policy)
+        );
+        let path = self.cfg.out_dir.join(name);
+        if std::fs::create_dir_all(&self.cfg.out_dir).is_err() {
+            return None;
+        }
+        if inc.save(&path).is_err() {
+            return None;
+        }
+        telemetry::counter_add(Counter::ObsIncidents, 1);
+        self.dumped.push(path.clone());
+        Some(path)
+    }
+}
+
+fn safe_name(s: &str) -> String {
+    let cleaned: String = s
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    if cleaned.is_empty() {
+        "unknown".to_string()
+    } else {
+        cleaned
+    }
+}
+
+static PANIC_DIR: OnceLock<PathBuf> = OnceLock::new();
+
+/// Install a panic hook that dumps a best-effort incident (ring
+/// contents + a final scrape of the global registry) before the
+/// default hook runs. Idempotent on the directory: the first caller
+/// wins.
+pub fn install_panic_hook(out_dir: &Path, scenario: &str, policy: &str) {
+    let _ = PANIC_DIR.set(out_dir.to_path_buf());
+    let scenario = safe_name(scenario);
+    let policy = safe_name(policy);
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        if let Some(dir) = PANIC_DIR.get() {
+            let snap = telemetry::scrape(telemetry::global());
+            let inc = Incident {
+                header: IncidentHeader {
+                    version: INCIDENT_VERSION,
+                    crate_version: env!("CARGO_PKG_VERSION")
+                        .to_string(),
+                    scenario: scenario.clone(),
+                    policy: policy.clone(),
+                    tick: 0,
+                    trigger: Trigger::Panic,
+                    reason: format!("{info}"),
+                    value: 0.0,
+                    threshold: 0.0,
+                    trace_path: String::new(),
+                },
+                events: event::recent_events(event::EVENT_SLOTS),
+                scrapes: vec![(0, named_series(&snap))],
+                alerts: Vec::new(),
+            };
+            let _ = std::fs::create_dir_all(dir);
+            let _ = inc.save(&dir.join(format!(
+                "incident-panic-{scenario}-{policy}.bipi"
+            )));
+        }
+        prev(info);
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::EventKind;
+
+    fn sample_incident() -> Incident {
+        Incident {
+            header: IncidentHeader {
+                version: INCIDENT_VERSION,
+                crate_version: "0.1.0".into(),
+                scenario: "degraded".into(),
+                policy: "bip".into(),
+                tick: 7,
+                trigger: Trigger::Alert,
+                reason: "routing_collapse alert".into(),
+                value: 0.31,
+                threshold: 0.2,
+                trace_path: "run.bipt".into(),
+            },
+            events: vec![
+                EventRecord {
+                    seq: 1,
+                    kind: EventKind::Admit,
+                    layer: 0,
+                    replica: 0,
+                    id: 11,
+                    payload: 0,
+                },
+                EventRecord {
+                    seq: 2,
+                    kind: EventKind::BatchDone,
+                    layer: 3,
+                    replica: 1,
+                    id: 4,
+                    payload: f64::to_bits(0.5),
+                },
+            ],
+            scrapes: vec![(
+                6,
+                vec![
+                    ("router_batches_total".into(), 12.0),
+                    ("router_last_batch_maxvio".into(), 0.5),
+                ],
+            )],
+            alerts: vec![Alert {
+                kind: AlertKind::RoutingCollapse,
+                tick: 7,
+                layer: 3,
+                score: 0.31,
+                value: 0.5,
+                threshold: 0.2,
+                detail: "layer 3 concentrated".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn incident_round_trips_bit_exactly() {
+        let inc = sample_incident();
+        let back = Incident::from_bytes(&inc.to_bytes()).unwrap();
+        assert_eq!(back.header, inc.header);
+        assert_eq!(back.events, inc.events);
+        assert_eq!(back.scrapes, inc.scrapes);
+        assert_eq!(back.alerts.len(), inc.alerts.len());
+        assert_eq!(back.alerts[0].detail, inc.alerts[0].detail);
+        let json = format!("{}", back.to_json());
+        assert!(json.contains("bip-moe-incident"), "{json}");
+        assert!(json.contains("routing_collapse"), "{json}");
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        assert!(Incident::from_bytes(b"nope").is_err());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&INCIDENT_MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        let err = Incident::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+    }
+
+    #[test]
+    fn triggers_pack_into_a_byte_and_back() {
+        for t in Trigger::ALL {
+            assert_eq!(Trigger::from_u8(t as u8), Some(t));
+            assert!(!t.name().is_empty());
+        }
+        assert_eq!(Trigger::from_u8(0), None);
+    }
+
+    #[test]
+    fn recorder_dumps_on_maxvio_and_respects_budget() {
+        let dir = std::env::temp_dir().join(format!(
+            "bip_moe_obs_rec_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = crate::telemetry::registry::Registry::new();
+        reg.set_enabled(true);
+        let mut rec = FlightRecorder::new(RecorderConfig {
+            vio_threshold: 0.5,
+            max_incidents: 1,
+            out_dir: dir.clone(),
+            scenario: "steady".into(),
+            policy: "bip".into(),
+            ..RecorderConfig::default()
+        });
+        reg.gauge_set(Gauge::RouterLastBatchVio, 0.1);
+        let calm = telemetry::scrape(&reg);
+        assert!(rec.observe(1, &calm, &[]).is_none());
+        reg.gauge_set(Gauge::RouterLastBatchVio, 0.9);
+        let hot = telemetry::scrape(&reg);
+        let path = rec.observe(2, &hot, &[]).expect("dump fired");
+        let inc = Incident::load(&path).unwrap();
+        assert_eq!(inc.header.trigger, Trigger::MaxVio);
+        assert_eq!(inc.header.tick, 2);
+        assert_eq!(inc.scrapes.len(), 2, "history retained");
+        // budget: a second trigger stays quiet
+        assert!(rec.observe(3, &hot, &[]).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,298 @@
+//! The `bip-moe top` dashboard renderer (ISSUE 8 tentpole, part 4).
+//!
+//! Pure string rendering over telemetry snapshots: the CLI loop
+//! scrapes, feeds [`TopState::update`], and prints
+//! [`TopState::render`]. Keeping the renderer side-effect free makes
+//! the dashboard testable (the CI smoke asserts on the rendered text)
+//! and keeps every terminal concern — ANSI clearing, unicode vs
+//! `--plain` glyphs — in one place.
+//!
+//! Layout, top to bottom: run header (tick, elapsed, batch/token
+//! rates), per-layer expert-load heat rows (one glyph per expert,
+//! scaled by that layer's share spread this tick), the batch-MaxVio
+//! sparkline with the collapse score, the live series table, and the
+//! alert feed.
+
+use std::collections::VecDeque;
+
+use crate::obs::detect::Alert;
+use crate::telemetry::registry::{Counter, Gauge};
+use crate::telemetry::Snapshot;
+
+/// Heat glyphs, cold to hot (`--plain` ASCII ramp).
+const HEAT_PLAIN: &[char] =
+    &[' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+/// Sparkline glyphs, low to high.
+const SPARK: &[char] = &['\u{2581}', '\u{2582}', '\u{2583}', '\u{2584}',
+    '\u{2585}', '\u{2586}', '\u{2587}', '\u{2588}'];
+const SPARK_PLAIN: &[char] = &['.', ':', '-', '=', '+', '*', '#', '@'];
+
+/// How many MaxVio samples the sparkline keeps.
+pub const SPARK_WIDTH: usize = 48;
+/// How many alerts the feed shows.
+pub const FEED_LEN: usize = 6;
+
+fn ramp(glyphs: &[char], frac: f64) -> char {
+    let f = frac.clamp(0.0, 1.0);
+    let i = (f * (glyphs.len() - 1) as f64).round() as usize;
+    glyphs.get(i).copied().unwrap_or(' ')
+}
+
+/// Rolling dashboard state between scrapes.
+pub struct TopState {
+    tick: u64,
+    vio_history: VecDeque<f64>,
+    feed: VecDeque<Alert>,
+    prev: Option<Snapshot>,
+}
+
+impl Default for TopState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TopState {
+    pub fn new() -> TopState {
+        TopState {
+            tick: 0,
+            vio_history: VecDeque::new(),
+            feed: VecDeque::new(),
+            prev: None,
+        }
+    }
+
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// Fold in one scrape and the alerts its detector tick raised.
+    pub fn update(&mut self, snap: &Snapshot, alerts: &[Alert]) {
+        self.tick += 1;
+        self.vio_history
+            .push_back(snap.gauge(Gauge::RouterLastBatchVio));
+        while self.vio_history.len() > SPARK_WIDTH {
+            self.vio_history.pop_front();
+        }
+        for a in alerts {
+            self.feed.push_back(a.clone());
+            while self.feed.len() > FEED_LEN {
+                self.feed.pop_front();
+            }
+        }
+        self.prev = Some(snap.clone());
+    }
+
+    /// Render the dashboard against `snap` (the scrape most recently
+    /// passed to [`TopState::update`]). `plain` swaps ANSI clearing
+    /// and unicode glyphs for pipe-safe ASCII.
+    pub fn render(&self, snap: &Snapshot, plain: bool) -> String {
+        let mut out = String::new();
+        if !plain {
+            out.push_str("\x1b[2J\x1b[H");
+        }
+        let batches = snap.counter(Counter::RouterBatches);
+        let tokens = snap.counter(Counter::RouterTokens);
+        out.push_str(&format!(
+            "bip-moe top | tick {} | {:.1}s | {} batches | {} tokens \
+             | queue {:.0} | replicas {:.0}\n",
+            self.tick,
+            snap.elapsed_secs,
+            batches,
+            tokens,
+            snap.gauge(Gauge::ServeQueueDepth),
+            snap.gauge(Gauge::AutoscaleReplicas).max(1.0),
+        ));
+
+        self.render_heat(snap, &mut out);
+        self.render_spark(snap, plain, &mut out);
+        self.render_series(snap, &mut out);
+        self.render_feed(&mut out);
+        out
+    }
+
+    /// Per-layer expert-load heat rows over this tick's token deltas
+    /// (cumulative grid minus the previous scrape's). The ramp is
+    /// ASCII in both modes — it reads fine in pipes and terminals.
+    fn render_heat(&self, snap: &Snapshot, out: &mut String) {
+        let glyphs = HEAT_PLAIN;
+        let empty: Vec<Vec<u64>> = Vec::new();
+        let prev_grid = self
+            .prev
+            .as_ref()
+            .map(|p| &p.expert_tokens)
+            .unwrap_or(&empty);
+        if snap.expert_tokens.is_empty() {
+            out.push_str("experts: (no routed tokens yet)\n");
+            return;
+        }
+        out.push_str("expert load by layer (this tick):\n");
+        for (l, row) in snap.expert_tokens.iter().enumerate() {
+            let prev_row = prev_grid.get(l);
+            let mut deltas: Vec<u64> = Vec::with_capacity(row.len());
+            for (e, &cum) in row.iter().enumerate() {
+                let before = prev_row
+                    .and_then(|p| p.get(e))
+                    .copied()
+                    .unwrap_or(0);
+                deltas.push(cum.saturating_sub(before));
+            }
+            let total: u64 = deltas.iter().sum();
+            let peak = deltas.iter().copied().max().unwrap_or(0);
+            out.push_str(&format!("  L{l:<2} "));
+            for &d in &deltas {
+                let frac = if peak == 0 {
+                    0.0
+                } else {
+                    d as f64 / peak as f64
+                };
+                out.push(ramp(glyphs, frac));
+            }
+            let (hot_e, hot_share) = deltas
+                .iter()
+                .enumerate()
+                .max_by_key(|&(_, &d)| d)
+                .map(|(e, &d)| {
+                    let share = if total == 0 {
+                        0.0
+                    } else {
+                        d as f64 / total as f64
+                    };
+                    (e, share)
+                })
+                .unwrap_or((0, 0.0));
+            out.push_str(&format!(
+                "  hot e{hot_e} {:.0}%\n",
+                hot_share * 100.0
+            ));
+        }
+    }
+
+    fn render_spark(
+        &self,
+        snap: &Snapshot,
+        plain: bool,
+        out: &mut String,
+    ) {
+        let glyphs = if plain { SPARK_PLAIN } else { SPARK };
+        let peak = self
+            .vio_history
+            .iter()
+            .copied()
+            .fold(0.0f64, f64::max)
+            .max(1e-9);
+        out.push_str(&format!(
+            "maxvio {:>7.3} |",
+            snap.gauge(Gauge::RouterLastBatchVio)
+        ));
+        for &v in &self.vio_history {
+            out.push(ramp(glyphs, v / peak));
+        }
+        out.push_str(&format!(
+            "| peak {peak:.3} | collapse score {:.3}\n",
+            snap.gauge(Gauge::ObsCollapseScore)
+        ));
+    }
+
+    fn render_series(&self, snap: &Snapshot, out: &mut String) {
+        let d = |c: Counter| -> u64 {
+            let now = snap.counter(c);
+            let before =
+                self.prev.as_ref().map(|p| p.counter(c)).unwrap_or(0);
+            now.saturating_sub(before)
+        };
+        out.push_str(&format!(
+            "solver: {:.0} iters/solve | sheds +{} | overflow +{} | \
+             sync div {:.3} | events {} | alerts {} | incidents {}\n",
+            snap.gauge(Gauge::SolverLastIters),
+            d(Counter::ServeShed),
+            d(Counter::RouterOverflow),
+            snap.gauge(Gauge::ReplicaLastSyncDivergence),
+            snap.counter(Counter::ObsEvents),
+            snap.counter(Counter::ObsAlerts),
+            snap.counter(Counter::ObsIncidents),
+        ));
+    }
+
+    fn render_feed(&self, out: &mut String) {
+        if self.feed.is_empty() {
+            out.push_str("alerts: none\n");
+            return;
+        }
+        out.push_str("alerts:\n");
+        for a in self.feed.iter().rev() {
+            out.push_str(&format!(
+                "  [t{:>4}] {:<16} {}\n",
+                a.tick,
+                a.kind.name(),
+                a.detail
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::detect::AlertKind;
+    use crate::telemetry::registry::Registry;
+    use crate::telemetry::scrape;
+
+    #[test]
+    fn render_covers_every_section_and_is_plain_safe() {
+        let reg = Registry::new();
+        reg.set_enabled(true);
+        reg.counter_add(Counter::RouterBatches, 3);
+        reg.counter_add(Counter::RouterTokens, 96);
+        reg.expert_tokens_add(0, &[10, 2, 2, 2]);
+        reg.gauge_set(Gauge::RouterLastBatchVio, 0.4);
+        let snap = scrape(&reg);
+        let mut st = TopState::new();
+        st.update(
+            &snap,
+            &[Alert {
+                kind: AlertKind::RoutingCollapse,
+                tick: 1,
+                layer: 0,
+                score: 0.5,
+                value: 0.4,
+                threshold: 0.2,
+                detail: "layer 0 hot".into(),
+            }],
+        );
+        let text = st.render(&snap, true);
+        assert!(text.contains("bip-moe top"), "{text}");
+        assert!(text.contains("expert load by layer"), "{text}");
+        assert!(text.contains("maxvio"), "{text}");
+        assert!(text.contains("routing_collapse"), "{text}");
+        assert!(text.contains("hot e0"), "{text}");
+        assert!(
+            !text.contains('\u{1b}'),
+            "plain output must not emit ANSI"
+        );
+    }
+
+    #[test]
+    fn empty_state_renders_placeholders() {
+        let reg = Registry::new();
+        reg.set_enabled(true);
+        let snap = scrape(&reg);
+        let st = TopState::new();
+        let text = st.render(&snap, true);
+        assert!(text.contains("no routed tokens"), "{text}");
+        assert!(text.contains("alerts: none"), "{text}");
+    }
+
+    #[test]
+    fn sparkline_is_bounded() {
+        let reg = Registry::new();
+        reg.set_enabled(true);
+        let mut st = TopState::new();
+        for i in 0..(SPARK_WIDTH + 20) {
+            reg.gauge_set(Gauge::RouterLastBatchVio, i as f64 * 0.01);
+            st.update(&scrape(&reg), &[]);
+        }
+        assert_eq!(st.vio_history.len(), SPARK_WIDTH);
+        assert_eq!(st.tick(), (SPARK_WIDTH + 20) as u64);
+    }
+}

@@ -11,6 +11,7 @@ use crate::bip::approx::ApproxGate;
 use crate::bip::dual::DualState;
 use crate::bip::online::OnlineGate;
 use crate::bip::{Instance, Routing};
+use crate::obs::event::{self, EventKind};
 use crate::perf::{AssignmentBuf, ScoreArena};
 use crate::telemetry;
 use crate::util::pool::Pool;
@@ -394,20 +395,28 @@ fn dispatch_solve(
     // the span and counters below are preallocated telemetry atomics;
     // the solve stays allocation-free (integration_perf pins it)
     let _span = telemetry::Span::enter(telemetry::SpanKind::SolverSolve);
-    let iters = match (pool, tol > 0.0) {
-        (Some(pool), true) => {
-            state.update_adaptive_parallel_in(inst, t, tol, pool, arena)
-        }
+    let adaptive = tol > 0.0;
+    let (mode, iters) = match (pool, adaptive) {
+        (Some(pool), true) => (
+            3u8,
+            state.update_adaptive_parallel_in(inst, t, tol, pool, arena),
+        ),
         (Some(pool), false) => {
             state.update_parallel_in(inst, t, pool, arena);
-            t
+            (1u8, t)
         }
-        (None, true) => state.update_adaptive_in(inst, t, tol, arena),
+        (None, true) => {
+            (2u8, state.update_adaptive_in(inst, t, tol, arena))
+        }
         (None, false) => {
             state.update_in(inst, t, arena);
-            t
+            (0u8, t)
         }
     };
+    event::record_ctx_event(
+        EventKind::SolverExit,
+        event::solver_exit_payload(mode, adaptive && iters == t, iters),
+    );
     telemetry::counter_add(telemetry::Counter::SolverSolves, 1);
     telemetry::counter_add(
         telemetry::Counter::SolverIterations,

@@ -50,8 +50,9 @@ pub use replica::{
 pub use router::{BatchOutcome, Policy, RouterConfig, ServingRouter};
 pub use scheduler::{Admission, MicroBatcher, SchedulerConfig};
 pub use sim::{
-    run_scenario, run_scenario_predictive, run_scenario_seeded,
-    run_scenario_with, Completion, ServeConfig, ServeOutcome,
+    run_scenario, run_scenario_observed, run_scenario_predictive,
+    run_scenario_seeded, run_scenario_with, Completion, ServeConfig,
+    ServeOutcome,
 };
 pub use slo::{ReplicaSummary, ServeReport, SloTracker};
 pub use traffic::{Request, Scenario, TrafficConfig, TrafficGenerator};

@@ -30,6 +30,7 @@
 use std::sync::Arc;
 
 use crate::forecast::{AutoScaler, ScaleEvent};
+use crate::obs::event::{self, EventKind};
 use crate::routing::BalanceState;
 use crate::telemetry::{self, Counter, Gauge, Span, SpanKind};
 use crate::trace::TraceRecorder;
@@ -202,10 +203,14 @@ impl ReplicaSet {
             // per-replica dispatch latency, measured on the worker
             // thread (exercises the registry's shard-per-thread path)
             let span = Span::enter(SpanKind::ReplicaDispatch);
+            // tag the worker thread before routing so every event the
+            // batch drops (BatchStart .. BatchDone) carries replica i
+            event::set_replica_ctx(i);
             let outcome = router.route_batch(&batch);
             let service_us = cost
                 .batch_us(&router.placement, &outcome.loads, m)
                 .max(1.0) as u64;
+            event::record_ctx_event(EventKind::Dispatch, service_us);
             drop(span);
             (i, router, batch, outcome, service_us)
         });
@@ -246,6 +251,11 @@ impl ReplicaSet {
             .map(|r| r.as_ref().expect("checked in").export_states())
             .collect();
         let div_before = state_divergence(&states);
+        event::record_event(
+            EventKind::Sync,
+            self.syncs.len() as u64,
+            f64::to_bits(div_before),
+        );
         for r in self.routers.iter_mut() {
             // LINT-ALLOW(panic): same invariant as the export above
             r.as_mut().expect("checked in").merge_states(&states);

@@ -19,6 +19,7 @@ use std::sync::Arc;
 
 use crate::bip::Instance;
 use crate::metrics::maxvio::BalanceTracker;
+use crate::obs::event::{self, EventKind};
 use crate::parallel::placement::{greedy_placement, Placement};
 use crate::parallel::Mesh;
 use crate::perf::{AssignmentBuf, ScoreArena};
@@ -406,6 +407,13 @@ impl ServingRouter {
         let (m, k, n_layers) = (self.cfg.m, self.cfg.k, self.cfg.n_layers);
         let n = batch.len();
         assert!(n > 0);
+        // open the causal context: every event below (LayerRoute,
+        // SolverExit, DualExit, BatchDone) keys on this batch ordinal
+        event::begin_batch(
+            self.batches,
+            batch.first().map_or(0, |r| r.id),
+            n,
+        );
         // sampled top-K-vs-gate-argmax agreement: every 16th batch
         let sampled = telemetry::enabled() && self.batches % 16 == 0;
         let mut agree = 0u64;
@@ -437,6 +445,7 @@ impl ServingRouter {
             .then(|| Vec::with_capacity(n_layers));
 
         for l in 0..n_layers {
+            event::set_layer_ctx(l);
             self.arena.scores.clear();
             self.arena.scores.reserve(n * m);
             for r in batch {
@@ -563,6 +572,10 @@ impl ServingRouter {
         out.device_imbalance = device_imbalance;
         out.assignment = captured;
 
+        event::record_ctx_event(
+            EventKind::BatchDone,
+            f64::to_bits(batch_vio),
+        );
         telemetry::counter_add(Counter::RouterBatches, 1);
         telemetry::counter_add(Counter::RouterTokens, n as u64);
         telemetry::counter_add(Counter::RouterOverflow, overflow);

@@ -13,6 +13,8 @@
 
 use std::collections::VecDeque;
 
+use crate::obs::event::{self, EventKind};
+
 use super::traffic::Request;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -76,14 +78,21 @@ impl MicroBatcher {
         self.queue.len()
     }
 
-    /// Admission control: bounded queue, reject-on-full.
+    /// Admission control: bounded queue, reject-on-full. Each verdict
+    /// drops an Admit/Reject causal event keyed by the request id.
     pub fn offer(&mut self, req: Request) -> Admission {
         self.stats.offered += 1;
         if self.queue.len() >= self.cfg.queue_cap {
             self.stats.rejected += 1;
+            event::record_event(
+                EventKind::Reject,
+                req.id,
+                self.queue.len() as u64,
+            );
             return Admission::Rejected;
         }
         self.stats.admitted += 1;
+        event::record_event(EventKind::Admit, req.id, req.arrival_us);
         self.queue.push_back(req);
         Admission::Admitted
     }

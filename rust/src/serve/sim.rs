@@ -11,6 +11,8 @@
 //! the traffic seed.
 
 use crate::forecast::PredictiveAdmission;
+use crate::obs::event::{self, EventKind};
+use crate::obs::ObsController;
 use crate::parallel::{DeviceProfile, Mesh, ModelCost, ServeCost};
 use crate::routing::BalanceState;
 use crate::telemetry::{self, Counter, Gauge};
@@ -83,6 +85,25 @@ pub fn run_scenario(cfg: &ServeConfig) -> ServeOutcome {
         None,
         None,
         None,
+        None,
+    )
+}
+
+/// [`run_scenario`] with the observability controller attached: every
+/// `tick_every` routed batches the controller scrapes the registry,
+/// runs one anomaly-detector tick, and lets the flight recorder dump
+/// an incident if a trigger fires ([`crate::obs`]).
+pub fn run_scenario_observed(
+    cfg: &ServeConfig,
+    obs: &mut ObsController,
+) -> ServeOutcome {
+    run_scenario_hooked(
+        cfg,
+        TrafficGenerator::new(cfg.traffic.clone()),
+        None,
+        None,
+        None,
+        Some(obs),
     )
 }
 
@@ -99,7 +120,7 @@ pub fn run_scenario_with(
     source: impl Iterator<Item = Request>,
     recorder: Option<&mut TraceRecorder>,
 ) -> ServeOutcome {
-    run_scenario_hooked(cfg, source, recorder, None, None)
+    run_scenario_hooked(cfg, source, recorder, None, None, None)
 }
 
 /// [`run_scenario`] with every layer's balance state warm-started
@@ -114,6 +135,7 @@ pub fn run_scenario_seeded(
         TrafficGenerator::new(cfg.traffic.clone()),
         None,
         Some(seeds),
+        None,
         None,
     )
 }
@@ -131,6 +153,7 @@ pub fn run_scenario_predictive(
         None,
         seeds,
         Some(admission),
+        None,
     )
 }
 
@@ -142,6 +165,7 @@ pub(crate) fn run_scenario_hooked(
     mut recorder: Option<&mut TraceRecorder>,
     seeds: Option<&[BalanceState]>,
     mut admission: Option<&mut PredictiveAdmission>,
+    mut obs: Option<&mut ObsController>,
 ) -> ServeOutcome {
     let mut gen = source;
     let mut batcher = MicroBatcher::new(cfg.sched.clone());
@@ -182,6 +206,7 @@ pub(crate) fn run_scenario_hooked(
             if shed {
                 batcher.shed();
                 telemetry::counter_add(Counter::ServeShed, 1);
+                event::record_event(EventKind::Shed, req.id, 0);
             } else {
                 batcher.offer(req);
             }
@@ -224,6 +249,9 @@ pub(crate) fn run_scenario_hooked(
                         arrival_us: r.arrival_us,
                         completion_us: server_free,
                     });
+                }
+                if let Some(o) = obs.as_deref_mut() {
+                    o.on_batch();
                 }
             }
             // re-evaluate immediately: the queue may hold another full
@@ -281,6 +309,10 @@ pub(crate) fn run_scenario_hooked(
     };
     if let Some(rec) = recorder.as_deref_mut() {
         rec.set_completions(&completions);
+    }
+    // final detector verdict at drain, so short runs still tick
+    if let Some(o) = obs.as_deref_mut() {
+        o.force_tick();
     }
     ServeOutcome {
         report,

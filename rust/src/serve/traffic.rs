@@ -28,6 +28,15 @@ pub enum Scenario {
     /// Poisson mix of tenants with Zipf-ish weights, each tenant with its
     /// own hot experts.
     MultiTenant,
+    /// Flat affinity for the first third of the run, then traffic
+    /// progressively concentrates onto a tiny expert set (a degraded /
+    /// hot shard) — the planted routing-collapse signature the obs
+    /// anomaly detector must flag early.
+    Degraded,
+    /// Steady mild skew, but the arrival rate surges 6x through the
+    /// middle third of the run — a load anomaly that is NOT a routing
+    /// collapse (the detector's false-positive discrimination case).
+    FlashCrowd,
     /// A recorded request stream re-driven from a trace
     /// (`trace::replay`): never generated, so it is excluded from
     /// [`Scenario::all`] and rejected by [`TrafficGenerator::new`].
@@ -35,13 +44,15 @@ pub enum Scenario {
 }
 
 impl Scenario {
-    pub fn all() -> [Scenario; 5] {
+    pub fn all() -> [Scenario; 7] {
         [
             Scenario::Steady,
             Scenario::Bursty,
             Scenario::Diurnal,
             Scenario::Adversarial,
             Scenario::MultiTenant,
+            Scenario::Degraded,
+            Scenario::FlashCrowd,
         ]
     }
 
@@ -52,6 +63,8 @@ impl Scenario {
             Scenario::Diurnal => "diurnal",
             Scenario::Adversarial => "adversarial",
             Scenario::MultiTenant => "multitenant",
+            Scenario::Degraded => "degraded",
+            Scenario::FlashCrowd => "flashcrowd",
             Scenario::Replayed => "replayed",
         }
     }
@@ -66,6 +79,10 @@ impl Scenario {
             "adversarial" | "adv" => Some(Scenario::Adversarial),
             "multitenant" | "multi-tenant" | "tenants" => {
                 Some(Scenario::MultiTenant)
+            }
+            "degraded" | "degrade" => Some(Scenario::Degraded),
+            "flashcrowd" | "flash-crowd" | "flash" => {
+                Some(Scenario::FlashCrowd)
             }
             "replayed" | "replay" => Some(Scenario::Replayed),
             _ => None,
@@ -167,7 +184,10 @@ impl TrafficGenerator {
         match cfg.scenario {
             // static linear skew shared by every tenant and layer — every
             // token prefers the low-index experts (the paper's hard case)
-            Scenario::Steady | Scenario::Bursty | Scenario::Diurnal => {
+            Scenario::Steady
+            | Scenario::Bursty
+            | Scenario::Diurnal
+            | Scenario::FlashCrowd => {
                 for slot in affinity.chunks_mut(m) {
                     for (j, a) in slot.iter_mut().enumerate() {
                         *a = cfg.skew * (m - 1 - j) as f64
@@ -175,9 +195,10 @@ impl TrafficGenerator {
                     }
                 }
             }
-            // the hot set is injected per request (it rotates); the base
-            // affinity stays flat
-            Scenario::Adversarial => {}
+            // the hot set is injected per request (rotating for
+            // Adversarial, progressively ramping for Degraded); the
+            // base affinity stays flat
+            Scenario::Adversarial | Scenario::Degraded => {}
             // each (tenant, layer) draws its own hot quarter of experts
             Scenario::MultiTenant => {
                 let hot = (m / 4).max(1);
@@ -215,7 +236,19 @@ impl TrafficGenerator {
     fn interarrival_us(&mut self) -> f64 {
         let base = US_PER_SEC / self.cfg.rate_per_s;
         match self.cfg.scenario {
-            Scenario::Steady | Scenario::Adversarial => base,
+            Scenario::Steady
+            | Scenario::Adversarial
+            | Scenario::Degraded => base,
+            Scenario::FlashCrowd => {
+                let n = self.cfg.n_requests.max(1);
+                let mid = self.emitted >= n / 3
+                    && self.emitted < 2 * n / 3;
+                if mid {
+                    base / 6.0
+                } else {
+                    base
+                }
+            }
             Scenario::Bursty => {
                 if self.burst_left == 0 && self.rng.next_f64() < 0.02 {
                     self.burst_left = 64;
@@ -258,10 +291,30 @@ impl TrafficGenerator {
         (self.emitted * 8 / n) * hot % self.cfg.m
     }
 
+    /// Degraded-expert ramp: 0 for the first third of the stream, then
+    /// a linear climb to full strength by the two-thirds mark. Applied
+    /// to the first `m/8` experts, so traffic collapses onto exactly
+    /// the top-K set the obs detector's concentration score watches.
+    fn degraded_boost(&self) -> f64 {
+        let n = self.cfg.n_requests.max(1);
+        let third = (n / 3).max(1);
+        if self.emitted < third {
+            return 0.0;
+        }
+        let prog = (self.emitted - third) as f64 / third as f64;
+        (self.cfg.skew + 2.0) * prog.min(1.0)
+    }
+
     fn scores_for(&mut self, tenant: usize) -> Vec<f32> {
         let (l_count, m) = (self.cfg.n_layers, self.cfg.m);
         let adversarial = self.cfg.scenario == Scenario::Adversarial;
         let (phase, hot) = (self.adversarial_phase(), (m / 4).max(1));
+        let deg_boost = if self.cfg.scenario == Scenario::Degraded {
+            self.degraded_boost()
+        } else {
+            0.0
+        };
+        let deg_hot = (m / 8).max(1);
         let mut out = Vec::with_capacity(l_count * m);
         let mut logits = vec![0.0f64; m];
         for l in 0..l_count {
@@ -270,6 +323,9 @@ impl TrafficGenerator {
                 let mut a = base[j];
                 if adversarial && (j + m - phase) % m < hot {
                     a += self.cfg.skew + 2.0;
+                }
+                if j < deg_hot {
+                    a += deg_boost;
                 }
                 logits[j] = self.rng.normal() * self.cfg.temp + a;
             }
@@ -417,7 +473,7 @@ mod tests {
         assert_eq!(
             Scenario::names(),
             vec!["steady", "bursty", "diurnal", "adversarial",
-                 "multitenant"]
+                 "multitenant", "degraded", "flashcrowd"]
         );
     }
 
@@ -425,6 +481,51 @@ mod tests {
     #[should_panic(expected = "recorded trace")]
     fn replayed_traffic_cannot_be_generated() {
         TrafficGenerator::new(cfg(Scenario::Replayed));
+    }
+
+    #[test]
+    fn degraded_concentrates_late_but_not_early() {
+        let reqs: Vec<Request> =
+            TrafficGenerator::new(cfg(Scenario::Degraded)).collect();
+        let m = 16;
+        let deg_hot = m / 8; // the boosted expert set
+        let hot_share = |rs: &[Request]| -> f64 {
+            let on_hot = rs
+                .iter()
+                .filter(|r| {
+                    let row = r.layer_scores(0, m);
+                    let arg = (0..m)
+                        .max_by(|&a, &b| {
+                            row[a].partial_cmp(&row[b]).unwrap()
+                        })
+                        .unwrap();
+                    arg < deg_hot
+                })
+                .count();
+            on_hot as f64 / rs.len() as f64
+        };
+        // flat affinity early: argmax lands on the to-be-degraded set
+        // at roughly its uniform share; late it dominates
+        assert!(hot_share(&reqs[..128]) < 0.5, "early already hot");
+        assert!(hot_share(&reqs[400..]) > 0.7, "late not collapsed");
+    }
+
+    #[test]
+    fn flashcrowd_surges_through_the_middle_third() {
+        let reqs: Vec<Request> =
+            TrafficGenerator::new(cfg(Scenario::FlashCrowd)).collect();
+        let mean_gap = |rs: &[Request]| -> f64 {
+            rs.windows(2)
+                .map(|w| (w[1].arrival_us - w[0].arrival_us) as f64)
+                .sum::<f64>()
+                / (rs.len() - 1) as f64
+        };
+        let early = mean_gap(&reqs[..160]);
+        let mid = mean_gap(&reqs[176..336]);
+        assert!(
+            mid < early / 3.0,
+            "middle third must arrive much faster: {mid} vs {early}"
+        );
     }
 
     #[test]

@@ -75,9 +75,15 @@ pub enum Counter {
     ForecastEvalSamples = 12,
     /// training steps driven
     TrainSteps = 13,
+    /// causal events recorded into the obs event ring
+    ObsEvents = 14,
+    /// typed anomaly alerts raised by the obs detector
+    ObsAlerts = 15,
+    /// incident files dumped by the obs flight recorder
+    ObsIncidents = 16,
 }
 
-const N_COUNTERS: usize = 14;
+const N_COUNTERS: usize = 17;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -95,6 +101,9 @@ impl Counter {
         Counter::ReplicaSyncs,
         Counter::ForecastEvalSamples,
         Counter::TrainSteps,
+        Counter::ObsEvents,
+        Counter::ObsAlerts,
+        Counter::ObsIncidents,
     ];
 
     pub fn name(self) -> &'static str {
@@ -115,6 +124,9 @@ impl Counter {
                 "forecast_eval_samples_total"
             }
             Counter::TrainSteps => "train_steps_total",
+            Counter::ObsEvents => "obs_events_total",
+            Counter::ObsAlerts => "obs_alerts_total",
+            Counter::ObsIncidents => "obs_incidents_total",
         }
     }
 
@@ -148,6 +160,11 @@ impl Counter {
                 "walk-forward forecast samples scored"
             }
             Counter::TrainSteps => "training steps driven",
+            Counter::ObsEvents => {
+                "causal events recorded into the obs ring"
+            }
+            Counter::ObsAlerts => "anomaly alerts raised",
+            Counter::ObsIncidents => "incident files dumped",
         }
     }
 }
@@ -175,9 +192,13 @@ pub enum Gauge {
     AutoscaleReplicas = 8,
     /// last training step's global MaxVio
     TrainLastMaxVio = 9,
+    /// live records in the obs event ring (saturates at capacity)
+    ObsEventRingOccupancy = 10,
+    /// detector's current routing-collapse concentration score
+    ObsCollapseScore = 11,
 }
 
-const N_GAUGES: usize = 10;
+const N_GAUGES: usize = 12;
 
 impl Gauge {
     pub const ALL: [Gauge; N_GAUGES] = [
@@ -191,6 +212,8 @@ impl Gauge {
         Gauge::RouterExperts,
         Gauge::AutoscaleReplicas,
         Gauge::TrainLastMaxVio,
+        Gauge::ObsEventRingOccupancy,
+        Gauge::ObsCollapseScore,
     ];
 
     pub fn name(self) -> &'static str {
@@ -207,6 +230,10 @@ impl Gauge {
             Gauge::RouterExperts => "router_experts",
             Gauge::AutoscaleReplicas => "autoscale_active_replicas",
             Gauge::TrainLastMaxVio => "train_last_maxvio",
+            Gauge::ObsEventRingOccupancy => {
+                "obs_event_ring_occupancy"
+            }
+            Gauge::ObsCollapseScore => "obs_collapse_score",
         }
     }
 
@@ -228,6 +255,12 @@ impl Gauge {
             Gauge::RouterExperts => "router gate width (experts)",
             Gauge::AutoscaleReplicas => "active replicas",
             Gauge::TrainLastMaxVio => "last training-step MaxVio",
+            Gauge::ObsEventRingOccupancy => {
+                "live records in the obs event ring"
+            }
+            Gauge::ObsCollapseScore => {
+                "detector routing-collapse concentration score"
+            }
         }
     }
 }

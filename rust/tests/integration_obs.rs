@@ -1,0 +1,279 @@
+//! End-to-end observability (ISSUE 8): a planted routing collapse
+//! must raise the early-warning alert and dump an incident whose
+//! causal chain (request -> batch -> per-layer route -> solver exit)
+//! is asserted field for field; a steady run must stay alert-free
+//! (false-positive pin); and a flash crowd must NOT look like a
+//! collapse (the detector discriminates load surges from
+//! concentration).
+//!
+//! Everything lives in ONE test fn run sequentially: the causal event
+//! ring and the telemetry registry are process-global, and batch
+//! ordinals are only unique per router — concurrent serve runs in the
+//! same binary would interleave events under colliding causal ids.
+
+use bip_moe::obs::{
+    event::{self, EventKind},
+    AlertKind, DetectorConfig, Incident, ObsConfig, ObsController,
+    RecorderConfig, Trigger, INCIDENT_VERSION,
+};
+use bip_moe::serve::{
+    self, Policy, RouterConfig, Scenario, SchedulerConfig, ServeConfig,
+    TrafficConfig,
+};
+use bip_moe::telemetry;
+
+const N_REQUESTS: usize = 8192;
+const N_LAYERS: usize = 4;
+
+fn observed_cfg(
+    scenario: Scenario,
+    router: RouterConfig,
+    seed: u64,
+) -> ServeConfig {
+    ServeConfig::new(
+        TrafficConfig {
+            scenario,
+            n_requests: N_REQUESTS,
+            seed,
+            ..Default::default()
+        },
+        SchedulerConfig::default(),
+        router,
+        Policy::BipBatch,
+    )
+}
+
+fn controller(dir: &std::path::Path, scenario: Scenario) -> ObsController {
+    ObsController::new(ObsConfig {
+        // 4 routed batches per detector tick: ~32 ticks over the run,
+        // plenty past warmup (3) + sustain (2) for the mid-stream ramp
+        tick_every: 4,
+        detector: DetectorConfig::default(),
+        recorder: RecorderConfig {
+            out_dir: dir.to_path_buf(),
+            scenario: scenario.name().to_string(),
+            policy: Policy::BipBatch.name().to_string(),
+            ..Default::default()
+        },
+    })
+}
+
+#[test]
+fn planted_collapse_alerts_and_dumps_a_walkable_incident() {
+    telemetry::set_enabled(true);
+    let root = std::env::temp_dir()
+        .join(format!("bip_moe_obs_itest_{}", std::process::id()));
+
+    // ---- phase 1: planted collapse -------------------------------
+    // Degraded traffic ramps the first m/8 experts mid-stream, and
+    // t_iters = 0 disables the Algorithm 1 refinement: the router
+    // greedily follows the skewed gate, so concentration and MaxVio
+    // climb together — the paper-§1 collapse signature.
+    let dir = root.join("degraded");
+    let cfg = observed_cfg(
+        Scenario::Degraded,
+        RouterConfig { t_iters: 0, ..Default::default() },
+        7,
+    );
+    let mut obs = controller(&dir, Scenario::Degraded);
+    let out = serve::run_scenario_observed(&cfg, &mut obs);
+    assert!(out.report.completed > 0, "degraded run must serve");
+    assert!(
+        obs.ticks() > DetectorConfig::default().warmup_ticks,
+        "run too short for the detector to clear warmup"
+    );
+
+    let collapse = obs
+        .alerts
+        .iter()
+        .find(|a| a.kind == AlertKind::RoutingCollapse)
+        .expect("planted collapse must raise the early warning");
+    assert!(collapse.tick > DetectorConfig::default().warmup_ticks);
+    assert!((collapse.layer as usize) < N_LAYERS);
+    assert!(
+        collapse.score > DetectorConfig::default().share_threshold,
+        "top-K share {} must cross the threshold",
+        collapse.score
+    );
+    assert!(!collapse.detail.is_empty());
+
+    assert!(!obs.incidents.is_empty(), "the alert must dump an incident");
+    let fname = obs.incidents[0]
+        .file_name()
+        .expect("incident path has a file name")
+        .to_string_lossy()
+        .into_owned();
+    assert!(
+        fname.starts_with("incident-degraded-bip-batch-t")
+            && fname.ends_with(".bipi"),
+        "incident file name carries scenario/policy/tick: {fname}"
+    );
+
+    let inc = Incident::load(&obs.incidents[0]).expect("incident loads");
+    assert_eq!(inc.header.version, INCIDENT_VERSION);
+    assert!(!inc.header.crate_version.is_empty());
+    assert_eq!(inc.header.scenario, "degraded");
+    assert_eq!(inc.header.policy, "bip-batch");
+    assert_eq!(inc.header.trigger, Trigger::Alert);
+    assert!(!inc.header.reason.is_empty());
+    assert!(inc.header.tick >= 1);
+    assert!(!inc.alerts.is_empty(), "dump carries the alert feed");
+    assert!(!inc.scrapes.is_empty(), "dump carries the scrape history");
+
+    assert_causal_chain(&inc);
+
+    // byte + file round trip: the BIPI codec is lossless
+    let back =
+        Incident::from_bytes(&inc.to_bytes()).expect("round trip parses");
+    assert_eq!(back, inc);
+
+    // ---- phase 2: steady false-positive pin ----------------------
+    // Fresh detector, default solver: a balanced run must end with
+    // zero alerts and zero incidents.
+    let dir = root.join("steady");
+    let cfg =
+        observed_cfg(Scenario::Steady, RouterConfig::default(), 11);
+    let mut obs = controller(&dir, Scenario::Steady);
+    let out = serve::run_scenario_observed(&cfg, &mut obs);
+    assert!(out.report.completed > 0, "steady run must serve");
+    assert!(
+        obs.ticks() > DetectorConfig::default().warmup_ticks,
+        "steady run must clear warmup to make the pin meaningful"
+    );
+    assert!(
+        obs.alerts.is_empty(),
+        "steady serving must stay alert-free, got {:?}",
+        obs.alerts
+    );
+    assert!(obs.incidents.is_empty());
+
+    // ---- phase 3: flash crowd is not a collapse ------------------
+    // A 6x mid-stream rate surge stresses the queue, but routing
+    // stays balanced: whatever else fires, the collapse rule must not.
+    let dir = root.join("flashcrowd");
+    let cfg =
+        observed_cfg(Scenario::FlashCrowd, RouterConfig::default(), 13);
+    let mut obs = controller(&dir, Scenario::FlashCrowd);
+    let out = serve::run_scenario_observed(&cfg, &mut obs);
+    assert!(out.report.offered > 0, "flash crowd run must serve");
+    assert!(
+        obs.ticks() > DetectorConfig::default().warmup_ticks,
+        "flash-crowd run must clear warmup"
+    );
+    assert!(
+        !obs
+            .alerts
+            .iter()
+            .any(|a| a.kind == AlertKind::RoutingCollapse),
+        "a load surge must not read as routing collapse, got {:?}",
+        obs.alerts
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Walk the last completed batch in the incident's event ring and
+/// assert the full causal chain field for field: admission of the
+/// first request -> BatchStart -> LayerRoute/SolverExit per layer ->
+/// BatchDone, all under one batch ordinal, in seq order, replica 0.
+fn assert_causal_chain(inc: &Incident) {
+    let done = inc
+        .events
+        .iter()
+        .rev()
+        .find(|e| e.kind == EventKind::BatchDone)
+        .expect("ring holds at least one completed batch");
+    let b = done.id;
+    // events are oldest-first; keep only this batch's routing chain
+    // (Admit/Alert events reuse the id field for request id / tick)
+    let chain: Vec<_> = inc
+        .events
+        .iter()
+        .filter(|e| {
+            e.id == b
+                && matches!(
+                    e.kind,
+                    EventKind::BatchStart
+                        | EventKind::LayerRoute
+                        | EventKind::SolverExit
+                        | EventKind::DualExit
+                        | EventKind::BatchDone
+                )
+        })
+        .collect();
+    assert!(
+        chain.iter().all(|e| e.replica == 0),
+        "single-server run: every chain event carries replica 0"
+    );
+
+    let starts: Vec<_> = chain
+        .iter()
+        .filter(|e| e.kind == EventKind::BatchStart)
+        .collect();
+    assert_eq!(starts.len(), 1, "exactly one BatchStart for batch {b}");
+    let start = starts[0];
+    let (first_req, n_tokens) = event::batch_start_fields(start.payload);
+    assert!(
+        (1..=SchedulerConfig::default().batch_max).contains(&n_tokens),
+        "batch size {n_tokens} within scheduler bounds"
+    );
+    assert!((first_req as usize) < N_REQUESTS);
+    // request -> batch: the admission of the batch's first request is
+    // still in the ring (it happened at most a few batches earlier)
+    let admit = inc
+        .events
+        .iter()
+        .find(|e| e.kind == EventKind::Admit && e.id == first_req)
+        .expect("first request's Admit event links into the batch");
+    assert!(admit.seq < start.seq, "admission precedes the batch");
+
+    let layers: Vec<_> = chain
+        .iter()
+        .filter(|e| e.kind == EventKind::LayerRoute)
+        .collect();
+    assert_eq!(layers.len(), N_LAYERS, "one LayerRoute per MoE layer");
+    for (l, e) in layers.iter().enumerate() {
+        assert_eq!(e.layer as usize, l, "layer context in order");
+        assert_eq!(e.payload, l as u64, "LayerRoute payload = layer");
+    }
+
+    let solves: Vec<_> = chain
+        .iter()
+        .filter(|e| e.kind == EventKind::SolverExit)
+        .collect();
+    assert_eq!(solves.len(), N_LAYERS, "one solver exit per layer");
+    for (l, e) in solves.iter().enumerate() {
+        assert_eq!(e.layer as usize, l, "solve recorded under its layer");
+        let (mode, capped, iters) = event::solver_exit_fields(e.payload);
+        assert_eq!(mode, 0, "single-threaded fixed-T = fixed-serial");
+        assert!(!capped, "the fixed path never reports a cap hit");
+        assert_eq!(iters, 0, "t_iters = 0 plants the greedy solve");
+    }
+    assert!(
+        chain.iter().all(|e| e.kind != EventKind::DualExit),
+        "fixed-T solves never take the adaptive dual exit"
+    );
+
+    let dones: Vec<_> = chain
+        .iter()
+        .filter(|e| e.kind == EventKind::BatchDone)
+        .collect();
+    assert_eq!(dones.len(), 1, "exactly one BatchDone for batch {b}");
+    let vio = f64::from_bits(dones[0].payload);
+    assert!(
+        vio.is_finite() && vio >= 0.0,
+        "BatchDone carries the batch MaxVio, got {vio}"
+    );
+
+    // seq order: BatchStart < (LayerRoute l < SolverExit l) < BatchDone
+    let mut prev = start.seq;
+    for l in 0..N_LAYERS {
+        assert!(layers[l].seq > prev, "layer {l} routes in seq order");
+        assert!(
+            solves[l].seq > layers[l].seq,
+            "layer {l} solver exits after its route begins"
+        );
+        prev = solves[l].seq;
+    }
+    assert!(dones[0].seq > prev, "BatchDone closes the chain");
+}
