@@ -34,6 +34,7 @@ use bip_moe::forecast::{
     ForecasterKind, LoadSeries, ScalePolicy, DEFAULT_SEED_GAIN,
 };
 use bip_moe::metrics::TablePrinter;
+use bip_moe::prof;
 use bip_moe::routing::{Bip, PredictiveBip, RoutingStrategy};
 use bip_moe::serve::{
     run_autoscaled, run_scenario, run_scenario_seeded, run_scenario_with,
@@ -240,6 +241,8 @@ fn main() {
     let (m, k, n_layers) = (16usize, 4usize, 4usize);
     // read the previous record before anything overwrites it
     let prev = load_prev_baseline();
+    let prev_prof = prof::load_prev_prof("forecast");
+    prof::reset();
     let mut json_results = Vec::new();
 
     // ---- forecast error by horizon + warm-start sweep, per scenario --
@@ -576,12 +579,35 @@ fn main() {
             eprintln!("warning: BENCH_forecast.json not written: {e}")
         }
     }
+    // call-path profile (fit + seeded-serve phases) alongside the
+    // report so an accuracy gate failure can rule routing cost in/out
+    let cur_prof = prof::Profile::scrape();
+    match prof::write_prof_json("forecast", &cur_prof) {
+        Ok(path) => println!("profile: {}", path.display()),
+        Err(e) => {
+            eprintln!("warning: PROF_forecast.json not written: {e}")
+        }
+    }
 
     if regression_failed {
         eprintln!(
             "bench_forecast FAILED: forecast accuracy regressed past \
              the 10% geomean gate"
         );
+        if let Some(pp) = &prev_prof {
+            let top = prof::top_regressions(pp, &cur_prof, 5);
+            if !top.is_empty() {
+                eprint!(
+                    "{}",
+                    prof::render_table(
+                        "top regressed call paths vs previous \
+                         PROF_forecast.json",
+                        &top,
+                    )
+                    .render()
+                );
+            }
+        }
         std::process::exit(1);
     }
 }

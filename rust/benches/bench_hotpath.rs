@@ -44,6 +44,7 @@ use bip_moe::parallel::Mesh;
 use bip_moe::perf::alloc::{
     reset_thread_counts, thread_allocs, CountingAlloc,
 };
+use bip_moe::prof;
 use bip_moe::routing::{
     ApproxBip, Bip, Greedy, LossFree, OnlineBip, PredictiveBip,
     RoutingStrategy,
@@ -263,6 +264,8 @@ fn main() {
     let full = std::env::var("BIP_MOE_FULL").as_deref() == Ok("1");
     // read the previous record before anything overwrites it
     let prev = load_prev_baseline();
+    let prev_prof = prof::load_prev_prof("hotpath");
+    prof::reset();
     let mut sections = Vec::new();
 
     // (batch tokens, experts, top-k) gate shapes
@@ -602,6 +605,15 @@ fn main() {
             eprintln!("warning: BENCH_hotpath.json not written: {e}")
         }
     }
+    // capture the run's call-path profile alongside the report so a
+    // failed gate can name the phase that regressed, not just the row
+    let cur_prof = prof::Profile::scrape();
+    match prof::write_prof_json("hotpath", &cur_prof) {
+        Ok(path) => println!("profile: {}", path.display()),
+        Err(e) => {
+            eprintln!("warning: PROF_hotpath.json not written: {e}")
+        }
+    }
 
     if !zero_alloc_ok || regression_failed {
         if !zero_alloc_ok {
@@ -615,6 +627,20 @@ fn main() {
                 "bench_hotpath FAILED: throughput regressed past the \
                  10% geomean gate"
             );
+            if let Some(pp) = &prev_prof {
+                let top = prof::top_regressions(pp, &cur_prof, 5);
+                if !top.is_empty() {
+                    eprint!(
+                        "{}",
+                        prof::render_table(
+                            "top regressed call paths vs previous \
+                             PROF_hotpath.json",
+                            &top,
+                        )
+                        .render()
+                    );
+                }
+            }
         }
         std::process::exit(1);
     }

@@ -21,6 +21,7 @@ use std::collections::BTreeMap;
 
 use bip_moe::bench::{write_bench_json, Bencher};
 use bip_moe::metrics::TablePrinter;
+use bip_moe::prof;
 use bip_moe::serve::{
     run_replicated, run_scenario, Policy, ReplicaConfig, Request,
     RouterConfig, SchedulerConfig, Scenario, ServeConfig, ServeReport,
@@ -183,6 +184,8 @@ fn main() {
     let n_requests = if full { 65_536 } else { 8_192 };
     // read the previous record before anything overwrites it
     let prev = load_prev_baseline();
+    let prev_prof = prof::load_prev_prof("serving");
+    prof::reset();
     let mut json_results = Vec::new();
 
     println!("== route_batch hot path (batch=64, m=16, k=4, L=4) ==");
@@ -341,12 +344,35 @@ fn main() {
         Ok(path) => println!("perf record: {}", path.display()),
         Err(e) => eprintln!("warning: BENCH_serving.json not written: {e}"),
     }
+    // the run's call-path profile rides along with the report so a
+    // failed gate attributes the loss to a phase, not just a row
+    let cur_prof = prof::Profile::scrape();
+    match prof::write_prof_json("serving", &cur_prof) {
+        Ok(path) => println!("profile: {}", path.display()),
+        Err(e) => {
+            eprintln!("warning: PROF_serving.json not written: {e}")
+        }
+    }
 
     if regression_failed {
         eprintln!(
             "bench_serving FAILED: replica-sweep throughput regressed \
              past the 10% geomean gate"
         );
+        if let Some(pp) = &prev_prof {
+            let top = prof::top_regressions(pp, &cur_prof, 5);
+            if !top.is_empty() {
+                eprint!(
+                    "{}",
+                    prof::render_table(
+                        "top regressed call paths vs previous \
+                         PROF_serving.json",
+                        &top,
+                    )
+                    .render()
+                );
+            }
+        }
         std::process::exit(1);
     }
 }

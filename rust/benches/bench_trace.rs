@@ -15,8 +15,18 @@
 //!
 //! Results land in reports/BENCH_trace.json. BIP_MOE_FULL=1 scales the
 //! stream up.
+//!
+//! Like the other gated benches, the previous record's throughput rows
+//! (replay requests/s and per-policy reroute tokens/s) are loaded
+//! BEFORE this run overwrites the file; a geomean ratio below 0.90
+//! fails the bench unless the baseline is the committed seed
+//! placeholder (`"seeded_placeholder": true`, warn-only) or
+//! BIP_MOE_PERF_GATE=off|warn overrides it.
+
+use std::collections::BTreeMap;
 
 use bip_moe::bench::{write_bench_json, Bencher};
+use bip_moe::metrics::TablePrinter;
 use bip_moe::serve::{
     run_scenario, run_scenario_with, Policy, ReplicaConfig, RouterConfig,
     SchedulerConfig, Scenario, ServeConfig, TrafficConfig,
@@ -25,9 +35,53 @@ use bip_moe::serve::{
 use bip_moe::trace::{replay, reroute, Trace, TraceRecorder};
 use bip_moe::util::json::Json;
 
+/// The previous BENCH_trace.json's throughput rows, read BEFORE this
+/// run overwrites the record, plus whether that baseline is the
+/// committed seed placeholder (warn-only for the perf gate).
+fn load_prev_baseline() -> Option<(BTreeMap<String, f64>, bool)> {
+    let dir = std::env::var("BIP_MOE_REPORTS")
+        .unwrap_or_else(|_| "reports".into());
+    let path = std::path::Path::new(&dir).join("BENCH_trace.json");
+    let body = std::fs::read_to_string(&path).ok()?;
+    let doc = Json::parse(&body).ok()?;
+    let placeholder = doc
+        .path("seeded_placeholder")
+        .and_then(|j| j.as_bool())
+        .unwrap_or(false);
+    let mut rows = BTreeMap::new();
+    if let Some(sections) = doc.path("results").and_then(|j| j.as_arr()) {
+        for sec in sections {
+            if let Some(rps) =
+                sec.path("replay_rps").and_then(|j| j.as_f64())
+            {
+                rows.insert("replay_rps".to_string(), rps);
+            }
+            let Some(rr) = sec.path("reroute").and_then(|j| j.as_arr())
+            else {
+                continue;
+            };
+            for row in rr {
+                let (Some(policy), Some(tps)) = (
+                    row.path("policy").and_then(|j| j.as_str()),
+                    row.path("tokens_per_s").and_then(|j| j.as_f64()),
+                ) else {
+                    continue;
+                };
+                rows.insert(
+                    format!("reroute {policy} tokens_per_s"),
+                    tps,
+                );
+            }
+        }
+    }
+    Some((rows, placeholder))
+}
+
 fn main() {
     let full = std::env::var("BIP_MOE_FULL").as_deref() == Ok("1");
     let n_requests = if full { 32_768 } else { 4_096 };
+    // read the previous record before anything overwrites it
+    let prev = load_prev_baseline();
 
     let cfg = ServeConfig::new(
         TrafficConfig {
@@ -100,6 +154,8 @@ fn main() {
 
     println!("\n== counterfactual reroute (per policy) ==");
     let mut reroute_rows = Vec::new();
+    let mut cur_rows: Vec<(String, f64)> =
+        vec![("replay_rps".to_string(), replay_rps)];
     for policy in
         [Policy::Greedy, Policy::LossFree, Policy::BipBatch, Policy::Approx]
     {
@@ -108,6 +164,10 @@ fn main() {
         });
         let tokens_per_s =
             trace.routed_tokens() as f64 / m.secs_per_iter.mean;
+        cur_rows.push((
+            format!("reroute {} tokens_per_s", policy.name()),
+            tokens_per_s,
+        ));
         reroute_rows.push(Json::obj(vec![
             ("policy", Json::Str(policy.name().into())),
             ("mean_us", Json::Num(m.secs_per_iter.mean * 1e6)),
@@ -115,7 +175,7 @@ fn main() {
         ]));
     }
 
-    let doc = Json::Arr(vec![Json::obj(vec![
+    let mut sections = vec![Json::obj(vec![
         ("n_requests", Json::Num(n_requests as f64)),
         ("record_overhead_pct", Json::Num(overhead_pct)),
         ("trace_bytes", Json::Num(bytes.len() as f64)),
@@ -127,9 +187,111 @@ fn main() {
             "measurements",
             Json::Arr(b.results.iter().map(|m| m.to_json()).collect()),
         ),
-    ])]);
-    match write_bench_json("trace", doc) {
+    ])];
+
+    // Regression history: delta table vs the previous record, gated on
+    // geomean throughput ratio (BIP_MOE_PERF_GATE=off|warn overrides).
+    let gate_env =
+        std::env::var("BIP_MOE_PERF_GATE").unwrap_or_default();
+    let mut regression_failed = false;
+    match &prev {
+        None => println!(
+            "\nno previous BENCH_trace.json — recording the first \
+             baseline"
+        ),
+        Some(_) if gate_env == "off" => println!(
+            "\nperf gate: BIP_MOE_PERF_GATE=off — regression check \
+             skipped"
+        ),
+        Some((prev_rows, placeholder)) => {
+            let mut dt = TablePrinter::new(
+                "throughput vs previous BENCH_trace.json (replay \
+                 req/s, reroute tokens/s)",
+                &["Row", "Previous", "Current", "Delta"],
+            );
+            let mut ratio_product = 1.0f64;
+            let mut matched = 0u32;
+            for (key, cur) in &cur_rows {
+                let Some(prev_v) = prev_rows.get(key) else {
+                    continue;
+                };
+                let ratio = cur / prev_v;
+                ratio_product *= ratio;
+                matched += 1;
+                dt.row(vec![
+                    key.clone(),
+                    format!("{prev_v:.0}"),
+                    format!("{cur:.0}"),
+                    format!("{:+.1}%", (ratio - 1.0) * 100.0),
+                ]);
+            }
+            if matched == 0 {
+                println!(
+                    "\nprevious BENCH_trace.json has no comparable \
+                     throughput rows{} — gate skipped",
+                    if *placeholder {
+                        " (seeded placeholder)"
+                    } else {
+                        ""
+                    }
+                );
+            } else {
+                println!();
+                dt.print();
+                let geomean =
+                    ratio_product.powf(1.0 / matched as f64);
+                println!(
+                    "  geomean throughput ratio: {geomean:.3} over \
+                     {matched} row(s) (gate fails below 0.90)"
+                );
+                sections.push(Json::obj(vec![(
+                    "regression",
+                    Json::obj(vec![
+                        ("geomean_ratio", Json::Num(geomean)),
+                        ("rows_compared", Json::Num(matched as f64)),
+                        ("gate_threshold", Json::Num(0.90)),
+                        (
+                            "baseline_placeholder",
+                            Json::Bool(*placeholder),
+                        ),
+                    ]),
+                )]));
+                if geomean < 0.90 {
+                    if *placeholder {
+                        eprintln!(
+                            "perf gate WARNING: geomean {geomean:.3} < \
+                             0.90 vs the seeded placeholder baseline — \
+                             not failing"
+                        );
+                    } else if gate_env == "warn" {
+                        eprintln!(
+                            "perf gate WARNING: geomean {geomean:.3} < \
+                             0.90 (BIP_MOE_PERF_GATE=warn — not \
+                             failing)"
+                        );
+                    } else {
+                        eprintln!(
+                            "perf gate FAILED: geomean throughput \
+                             ratio {geomean:.3} < 0.90 vs the previous \
+                             record"
+                        );
+                        regression_failed = true;
+                    }
+                }
+            }
+        }
+    }
+
+    match write_bench_json("trace", Json::Arr(sections)) {
         Ok(path) => println!("\nperf record: {}", path.display()),
         Err(e) => eprintln!("warning: BENCH_trace.json not written: {e}"),
+    }
+
+    if regression_failed {
+        eprintln!(
+            "bench_trace FAILED: replay/reroute throughput regressed \
+             past the 10% geomean gate"
+        );
+        std::process::exit(1);
     }
 }

@@ -20,7 +20,8 @@ const ALLOC_TYPE_FNS: &[&str] = &["new", "from", "with_capacity", "from_iter"];
 const ALLOC_MACROS: &[&str] = &["vec", "format"];
 
 /// Roots of the serving/solver hot path: the per-batch routing entry,
-/// the Algorithm-1 dual updates, and the telemetry write seams.
+/// the Algorithm-1 dual updates, the telemetry write seams, and the
+/// profiler's per-frame record path (`ProfGuard` enter/drop).
 const HOT_ROOTS: &[&str] = &[
     "route_batch_into",
     "update_in",
@@ -37,6 +38,10 @@ const HOT_ROOTS: &[&str] = &[
     "begin_batch",
     "set_layer_ctx",
     "set_replica_ctx",
+    "enter",
+    "push_frame",
+    "pop_frame_record",
+    "record_path",
 ];
 
 /// Files the hot-path closure is resolved within. `src/util/pool.rs`
@@ -55,6 +60,8 @@ const HOT_SCOPE: &[&str] = &[
     "src/telemetry/registry.rs",
     "src/telemetry/span.rs",
     "src/obs/event.rs",
+    "src/prof/stack.rs",
+    "src/prof/frame.rs",
 ];
 
 /// Directories where panicking constructs need a `// LINT-ALLOW(panic)`.
@@ -64,6 +71,7 @@ const PANIC_DIRS: &[&str] = &[
     "src/bip/",
     "src/telemetry/",
     "src/obs/",
+    "src/prof/",
 ];
 const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
 const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
@@ -494,10 +502,11 @@ pub fn lock_discipline(models: &BTreeMap<String, Model>, out: &mut Vec<Finding>)
     }
 }
 
-/// bench-honesty: a fn that writes a BENCH_*.json record (has a
-/// `BENCH_` string literal and calls a `write`) must stamp
-/// `schema_version` into the payload, so cross-PR perf consumers can
-/// detect shape drift instead of silently comparing unlike records.
+/// bench-honesty: a fn that writes a BENCH_*.json or PROF_*.json
+/// record (has a `BENCH_`/`PROF_` string literal and calls a `write`)
+/// must stamp `schema_version` into the payload, so cross-PR perf
+/// consumers can detect shape drift instead of silently comparing
+/// unlike records.
 pub fn bench_honesty(models: &BTreeMap<String, Model>, out: &mut Vec<Finding>) {
     for (rel, m) in models {
         for f in &m.fns {
@@ -505,9 +514,11 @@ pub fn bench_honesty(models: &BTreeMap<String, Model>, out: &mut Vec<Finding>) {
                 continue;
             }
             let toks = m.body_tokens(f);
-            let has_bench_lit = toks
-                .iter()
-                .any(|t| t.kind == TokKind::Str && t.text.contains("BENCH_"));
+            let has_bench_lit = toks.iter().any(|t| {
+                t.kind == TokKind::Str
+                    && (t.text.contains("BENCH_")
+                        || t.text.contains("PROF_"))
+            });
             if !has_bench_lit {
                 continue;
             }
@@ -528,7 +539,7 @@ pub fn bench_honesty(models: &BTreeMap<String, Model>, out: &mut Vec<Finding>) {
                     rel,
                     f.line,
                     format!(
-                        "`{}` writes a BENCH_*.json record without declaring \
+                        "`{}` writes a BENCH_/PROF_ record without declaring \
                          schema_version",
                         f.name
                     ),

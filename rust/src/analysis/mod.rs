@@ -14,8 +14,8 @@
 //! * **telemetry-naming** — metric names are `bip_moe_[a-z0-9_]+`,
 //!   unique, with non-empty help;
 //! * **lock-discipline** — `// HOT` fns never touch Mutex/RwLock;
-//! * **bench-honesty** — every BENCH_*.json writer stamps a
-//!   schema_version.
+//! * **bench-honesty** — every BENCH_*.json / PROF_*.json writer
+//!   stamps a schema_version.
 //!
 //! Findings can be waived per line via `analysis/waivers.txt`
 //! (mandatory reasons; unused waivers are themselves findings, so a

@@ -38,6 +38,7 @@
 use super::{Instance, Routing};
 use crate::obs::event::{self, EventKind};
 use crate::perf::{AssignmentBuf, ScoreArena};
+use crate::prof::{Frame, ProfGuard};
 use crate::telemetry;
 use crate::util::pool::Pool;
 use crate::util::stats::{
@@ -124,6 +125,7 @@ impl DualState {
         t_iters: usize,
         arena: &mut ScoreArena,
     ) {
+        let _prof = ProfGuard::enter(Frame::DualUpdate);
         let (n, m, k, cap) = (inst.n, inst.m, inst.k, inst.cap);
         let kk = (k + 1).min(m);
         let cc = (cap + 1).min(n);
@@ -131,13 +133,17 @@ impl DualState {
         arena.prepare_batch(n, m);
         transpose_serial(inst, &mut arena.scores_t);
         for _ in 0..t_iters {
-            p_phase_serial(
-                inst,
-                &self.q,
-                &mut self.p,
-                &mut arena.order_keys,
-                kk,
-            );
+            {
+                let _prof_p = ProfGuard::enter(Frame::DualP);
+                p_phase_serial(
+                    inst,
+                    &self.q,
+                    &mut self.p,
+                    &mut arena.order_keys,
+                    kk,
+                );
+            }
+            let _prof_q = ProfGuard::enter(Frame::DualQ);
             q_phase_serial(
                 n,
                 m,
@@ -180,6 +186,7 @@ impl DualState {
         if pool.threads() <= 1 {
             return self.update_in(inst, t_iters, arena);
         }
+        let _prof = ProfGuard::enter(Frame::DualUpdate);
         let (n, m, k, cap) = (inst.n, inst.m, inst.k, inst.cap);
         let kk = (k + 1).min(m);
         let cc = (cap + 1).min(n);
@@ -187,14 +194,18 @@ impl DualState {
         arena.prepare_batch(n, m);
         transpose_parallel(inst, &mut arena.scores_t, pool);
         for _ in 0..t_iters {
-            p_phase_parallel(
-                inst,
-                &self.q,
-                &mut self.p,
-                &mut arena.order_keys,
-                kk,
-                pool,
-            );
+            {
+                let _prof_p = ProfGuard::enter(Frame::DualP);
+                p_phase_parallel(
+                    inst,
+                    &self.q,
+                    &mut self.p,
+                    &mut arena.order_keys,
+                    kk,
+                    pool,
+                );
+            }
+            let _prof_q = ProfGuard::enter(Frame::DualQ);
             q_phase_parallel(
                 n,
                 m,
@@ -298,6 +309,7 @@ impl DualState {
         arena: &mut ScoreArena,
         pool: Option<&Pool>,
     ) -> usize {
+        let _prof = ProfGuard::enter(Frame::DualUpdate);
         let (n, m, k, cap) = (inst.n, inst.m, inst.k, inst.cap);
         let kk = (k + 1).min(m);
         let cc = (cap + 1).min(n);
@@ -322,14 +334,18 @@ impl DualState {
             arena.prev_q[..m].copy_from_slice(&self.q);
             match pool {
                 Some(pool) => {
-                    p_phase_parallel(
-                        inst,
-                        &self.q,
-                        &mut self.p,
-                        &mut arena.order_keys,
-                        kk,
-                        pool,
-                    );
+                    {
+                        let _prof_p = ProfGuard::enter(Frame::DualP);
+                        p_phase_parallel(
+                            inst,
+                            &self.q,
+                            &mut self.p,
+                            &mut arena.order_keys,
+                            kk,
+                            pool,
+                        );
+                    }
+                    let _prof_q = ProfGuard::enter(Frame::DualQ);
                     q_phase_parallel(
                         n,
                         m,
@@ -344,13 +360,17 @@ impl DualState {
                     );
                 }
                 None => {
-                    p_phase_serial(
-                        inst,
-                        &self.q,
-                        &mut self.p,
-                        &mut arena.order_keys,
-                        kk,
-                    );
+                    {
+                        let _prof_p = ProfGuard::enter(Frame::DualP);
+                        p_phase_serial(
+                            inst,
+                            &self.q,
+                            &mut self.p,
+                            &mut arena.order_keys,
+                            kk,
+                        );
+                    }
+                    let _prof_q = ProfGuard::enter(Frame::DualQ);
                     q_phase_serial(
                         n,
                         m,

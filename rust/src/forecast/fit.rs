@@ -22,6 +22,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::metrics::maxvio::BalanceTracker;
+use crate::prof::{Frame, ProfGuard};
 use crate::telemetry;
 use crate::trace::Trace;
 use crate::util::json::Json;
@@ -316,6 +317,7 @@ pub fn fit_model(
     if horizons.is_empty() || horizons.contains(&0) {
         bail!("horizons must be non-empty and >= 1");
     }
+    let _prof = ProfGuard::enter(Frame::ForecastFit);
     let holdout = ((steps as f64 * holdout_frac).round() as usize)
         .clamp(1, steps - 1);
 

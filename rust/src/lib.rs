@@ -22,7 +22,10 @@
 //!   the hot-path/unsafe/telemetry invariants at CI time via
 //!   `bip-moe lint --deny`), and the `obs/` subsystem (causal event
 //!   tracing, incident flight recorder, online routing-collapse
-//!   anomaly detection, and the `bip-moe top` dashboard).
+//!   anomaly detection, and the `bip-moe top` dashboard), and the
+//!   `prof/` subsystem (deterministic hierarchical call-path profiler:
+//!   flamegraph export, versioned `PROF_*.json` records, and
+//!   `bip-moe profile diff` phase-level regression attribution).
 //!   Python never runs on the training or serving path.
 //! * **L2 (`python/compile/model.py`)** — Minimind-style MoE transformer
 //!   (fwd/bwd/AdamW) with the three routing modes (Loss-Controlled,
@@ -45,6 +48,7 @@ pub mod metrics;
 pub mod obs;
 pub mod parallel;
 pub mod perf;
+pub mod prof;
 pub mod routing;
 pub mod runtime;
 pub mod serve;

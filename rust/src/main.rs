@@ -21,6 +21,13 @@
 //!   top     live dashboard over a driven serving run: per-layer
 //!           expert-load heat rows, MaxVio sparkline, collapse score,
 //!           and the online anomaly-detector alert feed
+//!   profile capture a deterministic hierarchical call-path profile
+//!           (admission -> dispatch -> layer-route -> score-fill /
+//!           top-k / dual-update) from a serve, train, or router
+//!           micro-bench run — writes the versioned PROF_*.json
+//!           record plus optional folded-stack text and a
+//!           self-contained HTML flamegraph — or `profile diff` two
+//!           captures to attribute a regression to the guilty phase
 //!   incidents inspect a "BIPI" incident flight-recorder dump (walks
 //!           the causal chain of the last routed batch back through
 //!           admission, per-layer routing, and solver exit) or
@@ -48,6 +55,9 @@
 //!   bip-moe serve --scenario degraded --policy bip --t 0 \
 //!           --obs-incidents reports/incidents
 //!   bip-moe top --scenario degraded --policy bip --plain
+//!   bip-moe profile serve --scenario steady --policy bip \
+//!           --html reports/flame.html
+//!   bip-moe profile diff reports/PROF_a.json reports/PROF_b.json
 //!   bip-moe incidents inspect --file reports/incidents/incident-*.bipi
 //!   bip-moe lint --deny --json reports/lint.json
 
@@ -67,6 +77,7 @@ use bip_moe::obs::{
     event, Detector, DetectorConfig, EventKind, Incident, ObsConfig,
     ObsController, RecorderConfig, TopState,
 };
+use bip_moe::prof;
 use bip_moe::routing::BalanceState;
 use bip_moe::runtime::Engine;
 use bip_moe::serve::{
@@ -124,6 +135,7 @@ fn run(args: &Args) -> Result<()> {
         Some("forecast") => cmd_forecast(args),
         Some("metrics") => cmd_metrics(args),
         Some("top") => cmd_top(args),
+        Some("profile") => cmd_profile(args),
         Some("incidents") => cmd_incidents(args),
         Some("lint") => cmd_lint(args),
         Some("info") => cmd_info(args),
@@ -139,7 +151,8 @@ fn print_help() {
     println!(
         "bip-moe {} — BIP-Based Balancing for MoE pre-training + serving\n\n\
          usage: bip-moe <train|run|eval|solve|match|serve|trace|\
-         forecast|metrics|top|incidents|lint|info> [--options]\n\n\
+         forecast|metrics|top|profile|incidents|lint|info>\n\
+         [--options]\n\n\
          train  --config <name> --mode <aux|lossfree|bip> [--bip-t N]\n\
                 [--steps N] [--seed N] [--eval-batches N]\n\
                 [--reports DIR] [--save CKPT] [--artifacts DIR]\n\
@@ -195,6 +208,20 @@ fn print_help() {
                  [--interval-ms MS] [--plain] (live dashboard: expert\n\
                  heat rows, MaxVio sparkline, collapse score, alert\n\
                  feed; --plain renders ASCII without ANSI clearing)\n\
+         profile serve [serve-style knobs, single scenario + policy]\n\
+                 [--name NAME] [--out PROF.json] [--folded PATH]\n\
+                 [--html PATH] (run one serving scenario with the\n\
+                 hierarchical profiler and write the PROF_NAME.json\n\
+                 call-path record; --folded emits collapsed-stack\n\
+                 text, --html a self-contained flamegraph)\n\
+                profile train [train-style knobs] [--name NAME]\n\
+                 [--out/--folded/--html as above]\n\
+                profile bench [--batches N] [router knobs] (profiled\n\
+                 route_batch_into microloop, no event loop around it)\n\
+                profile diff PREV.json CUR.json [--top N]\n\
+                 [--assert-zero] (table sorted by worst exclusive-ns\n\
+                 regression, alloc deltas alongside; --assert-zero\n\
+                 exits nonzero unless every delta is zero)\n\
          incidents inspect --file PATH.bipi [--events N] (print the\n\
                  header, alert feed, scrape history tail, and the\n\
                  causal chain of the last routed batch)\n\
@@ -1600,6 +1627,9 @@ fn cmd_metrics_check(args: &Args) -> Result<()> {
         // serve snapshot must show it recording and occupied
         "counters.obs_events_total",
         "gauges.obs_event_ring_occupancy",
+        // the hierarchical profiler is on by default, so every routed
+        // batch must also record call-path frames
+        "counters.prof_frames_total",
     ];
     let mut failures = Vec::new();
     for series in core {
@@ -1616,6 +1646,8 @@ fn cmd_metrics_check(args: &Args) -> Result<()> {
     let present = [
         "counters.obs_alerts_total",
         "counters.obs_incidents_total",
+        // healthy runs never overflow the profiler's frame stack
+        "counters.prof_stack_overflow_total",
     ];
     for series in present {
         match doc.path(series).and_then(|j| j.as_f64()) {
@@ -1637,6 +1669,238 @@ fn cmd_metrics_check(args: &Args) -> Result<()> {
          (v{version}, {:.1}s elapsed)",
         doc.path("elapsed_secs").and_then(|j| j.as_f64()).unwrap_or(0.0)
     );
+    Ok(())
+}
+
+/// Hierarchical profiler surface: capture a `PROF_*.json` call-path
+/// record from a serve / train / router-microloop run, or diff two
+/// captures to attribute a throughput delta to the guilty phase.
+fn cmd_profile(args: &Args) -> Result<()> {
+    args.check_known(&[
+        // serve-pipeline knobs (shared with `serve` / `trace record`)
+        "scenario", "policy", "requests", "rate", "m", "k", "layers",
+        "tenants", "t", "solver-tol", "solver-t-max", "buckets",
+        "batch", "queue", "max-wait-us", "slo-ms", "capacity-factor",
+        "devices", "placement", "lpt-refresh", "seed", "replicas",
+        "threads", "sync-every",
+        // train knobs (profile train, shared with `train`)
+        "config", "mode", "bip-t", "steps", "eval-batches", "reports",
+        "save", "artifacts", "sim-devices", "data-seed",
+        "warm-start-trace",
+        // profile-specific
+        "name", "out", "folded", "html", "batches", "top",
+        "assert-zero",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    match args.positional.first().map(String::as_str) {
+        Some("serve") => cmd_profile_serve(args),
+        Some("train") => cmd_profile_train(args),
+        Some("bench") => cmd_profile_bench(args),
+        Some("diff") => cmd_profile_diff(args),
+        Some(other) => {
+            bail!("unknown profile action {other}; see --help")
+        }
+        None => bail!(
+            "usage: bip-moe profile <serve|train|bench|diff> \
+             [--options]"
+        ),
+    }
+}
+
+/// Shared tail of `profile serve|train|bench`: print the call-path
+/// table, write the versioned `PROF_<name>.json` record, and honor the
+/// optional `--out` / `--folded` / `--html` export knobs.
+fn emit_profile(
+    args: &Args,
+    name: &str,
+    profile: &prof::Profile,
+    wall: std::time::Duration,
+) -> Result<()> {
+    let mut table = TablePrinter::new(
+        &format!(
+            "profile {name} — {} call paths, {:.1} ms root inclusive \
+             ({:.1} ms wall)",
+            profile.paths.len(),
+            profile.root_inclusive_ns() as f64 / 1e6,
+            wall.as_secs_f64() * 1e3,
+        ),
+        &["call path", "calls", "incl ms", "excl ms", "allocs"],
+    );
+    for p in &profile.paths {
+        table.row(vec![
+            p.path.clone(),
+            p.calls.to_string(),
+            format!("{:.3}", p.inclusive_ns as f64 / 1e6),
+            format!("{:.3}", p.exclusive_ns as f64 / 1e6),
+            p.allocs.to_string(),
+        ]);
+    }
+    table.print();
+    let report = prof::write_prof_json(name, profile)?;
+    println!("profile: {}", report.display());
+    if let Some(path) = args.get("out") {
+        profile.write(Path::new(path))?;
+        println!("json: {path}");
+    }
+    if let Some(path) = args.get("folded") {
+        std::fs::write(path, profile.folded())?;
+        println!("folded: {path}");
+    }
+    if let Some(path) = args.get("html") {
+        std::fs::write(path, profile.html(&format!("bip-moe {name}")))?;
+        println!("flamegraph: {path}");
+    }
+    Ok(())
+}
+
+/// One profiled serving run (single scenario + policy, no sweep).
+fn cmd_profile_serve(args: &Args) -> Result<()> {
+    let scenario_arg = args.str_or("scenario", "steady");
+    let scenario = Scenario::parse(&scenario_arg)
+        .ok_or_else(|| scenario_err(&scenario_arg))?;
+    if scenario == Scenario::Replayed {
+        bail!("profile serve needs a generative scenario to drive");
+    }
+    let policy_arg = args.str_or("policy", "bip");
+    let policy = Policy::parse(&policy_arg)
+        .ok_or_else(|| policy_err(&policy_arg))?;
+    let ServeKnobs { mut traffic, sched, router, replicas: rknobs } =
+        serve_knobs(args, 8192)?;
+    traffic.scenario = scenario;
+    let cfg = ServeConfig::new(traffic, sched, router, policy);
+
+    prof::reset();
+    let t0 = std::time::Instant::now();
+    let report = if rknobs.replicas > 1 || rknobs.threads > 1 {
+        serve::run_replicated(&cfg, &rknobs).report
+    } else {
+        serve::run_scenario(&cfg).report
+    };
+    let wall = t0.elapsed();
+    let profile = prof::Profile::scrape();
+    let mut table = TablePrinter::new(
+        &format!("profiled {} / {}", report.scenario, report.policy),
+        ServeReport::headers(),
+    );
+    table.row(report.table_row());
+    table.print();
+    emit_profile(args, &args.str_or("name", "serve"), &profile, wall)
+}
+
+/// One profiled training run (same knobs as `train`).
+fn cmd_profile_train(args: &Args) -> Result<()> {
+    let engine = Engine::new(&artifacts_dir(args))?;
+    let mut driver = TrainDriver::new(
+        &args.str_or("config", "tiny"),
+        &args.str_or("mode", "bip"),
+        args.usize_or("bip-t", 4)?,
+        args.u64_or("steps", 50)?,
+    );
+    driver.seed = args.usize_or("seed", 0)? as i32;
+    driver.eval_batches = args.u64_or("eval-batches", 8)?;
+    driver.sim_devices = args.usize_or("sim-devices", 4)?;
+    driver.data_seed = args.u64_or("data-seed", 20240601)?;
+    driver.warm_start_trace =
+        args.get("warm-start-trace").map(PathBuf::from);
+
+    prof::reset();
+    let t0 = std::time::Instant::now();
+    let outcome = driver.run(&engine)?;
+    let wall = t0.elapsed();
+    let profile = prof::Profile::scrape();
+    let mut table = TablePrinter::new(
+        &format!("profiled run {}", driver.run_label()),
+        &["Algorithm", "AvgMaxVio", "SupMaxVio", "Perplexity",
+          "SimHours(run)"],
+    );
+    table.row(outcome.table_row(&driver.run_label()));
+    table.print();
+    emit_profile(args, &args.str_or("name", "train"), &profile, wall)
+}
+
+/// Profiled `route_batch_into` microloop: the router hot path alone,
+/// no event loop or queueing around it (the profiler's counterpart of
+/// the bench_hotpath steady-state sections).
+fn cmd_profile_bench(args: &Args) -> Result<()> {
+    let policy_arg = args.str_or("policy", "bip");
+    let policy = Policy::parse(&policy_arg)
+        .ok_or_else(|| policy_err(&policy_arg))?;
+    let ServeKnobs { traffic, sched, router: rcfg, .. } =
+        serve_knobs(args, 256)?;
+    let batches = args.usize_or("batches", 256)?.max(1);
+    let requests: Vec<_> = TrafficGenerator::new(traffic).collect();
+    if requests.is_empty() {
+        bail!("--requests must be >= 1");
+    }
+    let mut router = ServingRouter::new(policy, rcfg);
+    let mut out = bip_moe::serve::BatchOutcome::default();
+    let batch_max = sched.batch_max.min(requests.len()).max(1);
+
+    // warm the arenas outside the profiled window, like the perf gate
+    for chunk in requests.chunks(batch_max).take(8) {
+        router.route_batch_into(chunk, &mut out);
+    }
+    prof::reset();
+    let t0 = std::time::Instant::now();
+    let mut done = 0;
+    'outer: loop {
+        for chunk in requests.chunks(batch_max) {
+            if done >= batches {
+                break 'outer;
+            }
+            // the event loop normally owns this frame; the microloop
+            // enters it so paths keep their serve-shaped root
+            let _prof = prof::ProfGuard::enter(prof::Frame::Dispatch);
+            router.route_batch_into(chunk, &mut out);
+            done += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let profile = prof::Profile::scrape();
+    println!(
+        "bench: {done} batches of <= {batch_max} requests, policy {}",
+        policy.name()
+    );
+    emit_profile(args, &args.str_or("name", "bench"), &profile, wall)
+}
+
+/// Attribute a perf delta: align two `PROF_*.json` captures on call
+/// path and rank by exclusive-ns regression.
+fn cmd_profile_diff(args: &Args) -> Result<()> {
+    let (prev_path, cur_path) =
+        match (args.positional.get(1), args.positional.get(2)) {
+            (Some(a), Some(b)) => (a, b),
+            _ => bail!(
+                "usage: bip-moe profile diff PREV.json CUR.json \
+                 [--top N] [--assert-zero]"
+            ),
+        };
+    let prev = prof::Profile::load(Path::new(prev_path))?;
+    let cur = prof::Profile::load(Path::new(cur_path))?;
+    let rows = prof::diff(&prev, &cur);
+    let top = args.usize_or("top", 0)?;
+    let shown = if top > 0 && top < rows.len() {
+        &rows[..top]
+    } else {
+        &rows[..]
+    };
+    prof::render_table(
+        &format!("profile diff — {prev_path} -> {cur_path}"),
+        shown,
+    )
+    .print();
+    let nonzero = rows
+        .iter()
+        .filter(|r| {
+            r.delta_excl_ns != 0 || r.prev_calls != r.cur_calls
+        })
+        .count();
+    if args.flag("assert-zero") && nonzero > 0 {
+        bail!(
+            "{nonzero} call path(s) differ between {prev_path} and \
+             {cur_path} (wanted an identical profile)"
+        );
+    }
     Ok(())
 }
 

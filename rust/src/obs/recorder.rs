@@ -731,4 +731,112 @@ mod tests {
         assert!(rec.observe(3, &hot, &[]).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
+
+    fn shed_alert(tick: u64) -> Alert {
+        Alert {
+            kind: AlertKind::ShedStorm,
+            tick,
+            layer: 0,
+            score: 0.8,
+            value: 0.4,
+            threshold: 0.1,
+            detail: "shed rate spiked".into(),
+        }
+    }
+
+    fn bipi_files(dir: &Path) -> Vec<PathBuf> {
+        let mut out: Vec<PathBuf> = std::fs::read_dir(dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .map(|e| e.path())
+                    .filter(|p| {
+                        p.extension().and_then(|e| e.to_str())
+                            == Some("bipi")
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn max_incidents_cap_refuses_at_the_boundary() {
+        let dir = std::env::temp_dir().join(format!(
+            "bip_moe_obs_rec_cap_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = crate::telemetry::registry::Registry::new();
+        reg.set_enabled(true);
+        let mut rec = FlightRecorder::new(RecorderConfig {
+            vio_threshold: 0.5,
+            max_incidents: 2,
+            out_dir: dir.clone(),
+            scenario: "burst".into(),
+            policy: "bip".into(),
+            ..RecorderConfig::default()
+        });
+        reg.gauge_set(Gauge::RouterLastBatchVio, 0.9);
+        let hot = telemetry::scrape(&reg);
+        // three triggering ticks against a budget of two: the first
+        // two dump, the third is refused (no eviction, no overwrite)
+        let first = rec.observe(1, &hot, &[]).expect("first dump");
+        let second = rec.observe(2, &hot, &[]).expect("second dump");
+        assert_ne!(first, second, "tick-stamped names stay distinct");
+        assert!(rec.observe(3, &hot, &[]).is_none(), "budget refused");
+        assert_eq!(rec.dumped().len(), 2);
+        assert_eq!(bipi_files(&dir).len(), 2, "exactly two files");
+        // the refused tick must not have clobbered either survivor
+        for path in [&first, &second] {
+            let inc = Incident::load(path).unwrap();
+            assert_eq!(inc.header.trigger, Trigger::MaxVio);
+            assert!(inc.header.tick < 3, "third tick never hit disk");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn maxvio_and_alert_on_one_tick_dump_exactly_once() {
+        let dir = std::env::temp_dir().join(format!(
+            "bip_moe_obs_rec_once_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = crate::telemetry::registry::Registry::new();
+        reg.set_enabled(true);
+        let mut rec = FlightRecorder::new(RecorderConfig {
+            vio_threshold: 0.5,
+            max_incidents: 4,
+            out_dir: dir.clone(),
+            scenario: "degraded".into(),
+            policy: "bip".into(),
+            ..RecorderConfig::default()
+        });
+        reg.gauge_set(Gauge::RouterLastBatchVio, 0.9);
+        let hot = telemetry::scrape(&reg);
+        // both triggers are live on the same tick; the alert firing
+        // while the MaxVio dump is in progress must not double-write
+        let path = rec
+            .observe(5, &hot, &[shed_alert(5)])
+            .expect("one dump fired");
+        assert_eq!(rec.dumped().len(), 1, "one dump, not two");
+        assert_eq!(bipi_files(&dir).len(), 1, "one file on disk");
+        let inc = Incident::load(&path).unwrap();
+        assert_eq!(
+            inc.header.trigger,
+            Trigger::MaxVio,
+            "MaxVio outranks the alert trigger"
+        );
+        // the alert still rides along inside the single incident, and
+        // the file round-trips bit-exactly through the BIPI codec
+        assert_eq!(inc.alerts.len(), 1);
+        assert_eq!(inc.alerts[0].detail, "shed rate spiked");
+        let back = Incident::from_bytes(&inc.to_bytes()).unwrap();
+        assert_eq!(back.header, inc.header);
+        assert_eq!(back.events, inc.events);
+        assert_eq!(back.scrapes, inc.scrapes);
+        assert_eq!(back.alerts.len(), inc.alerts.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

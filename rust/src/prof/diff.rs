@@ -1,0 +1,205 @@
+//! Profile diffing: attribute a throughput delta to the guilty call
+//! paths.
+//!
+//! `diff(prev, cur)` aligns two profiles on the union of their path
+//! strings and sorts by Δexclusive-ns descending — the path whose own
+//! time grew the most is the regression suspect, independent of how
+//! its parents moved. Allocation deltas ride along as the second
+//! signal: a path that got slower *and* started allocating is almost
+//! always a lost arena reuse.
+
+use crate::metrics::TablePrinter;
+
+use super::export::Profile;
+
+/// One aligned path across two profiles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiffRow {
+    pub path: String,
+    pub prev_excl_ns: u64,
+    pub cur_excl_ns: u64,
+    /// `cur - prev` exclusive ns (positive = regression)
+    pub delta_excl_ns: i64,
+    pub prev_allocs: u64,
+    pub cur_allocs: u64,
+    pub prev_calls: u64,
+    pub cur_calls: u64,
+}
+
+impl DiffRow {
+    /// Per-call exclusive ns in the current profile (0-call safe).
+    pub fn cur_ns_per_call(&self) -> f64 {
+        if self.cur_calls == 0 {
+            0.0
+        } else {
+            self.cur_excl_ns as f64 / self.cur_calls as f64
+        }
+    }
+}
+
+/// Align two profiles on the union of call paths, sorted by
+/// Δexclusive-ns descending (worst regression first).
+pub fn diff(prev: &Profile, cur: &Profile) -> Vec<DiffRow> {
+    let mut by_path: std::collections::BTreeMap<&str, DiffRow> =
+        std::collections::BTreeMap::new();
+    for p in &prev.paths {
+        by_path.insert(
+            p.path.as_str(),
+            DiffRow {
+                path: p.path.clone(),
+                prev_excl_ns: p.exclusive_ns,
+                cur_excl_ns: 0,
+                delta_excl_ns: 0,
+                prev_allocs: p.allocs,
+                cur_allocs: 0,
+                prev_calls: p.calls,
+                cur_calls: 0,
+            },
+        );
+    }
+    for c in &cur.paths {
+        let row = by_path.entry(c.path.as_str()).or_insert(DiffRow {
+            path: c.path.clone(),
+            prev_excl_ns: 0,
+            cur_excl_ns: 0,
+            delta_excl_ns: 0,
+            prev_allocs: 0,
+            cur_allocs: 0,
+            prev_calls: 0,
+            cur_calls: 0,
+        });
+        row.cur_excl_ns = c.exclusive_ns;
+        row.cur_allocs = c.allocs;
+        row.cur_calls = c.calls;
+    }
+    let mut rows: Vec<DiffRow> = by_path.into_values().collect();
+    for r in &mut rows {
+        r.delta_excl_ns =
+            r.cur_excl_ns as i64 - r.prev_excl_ns as i64;
+    }
+    rows.sort_by(|a, b| {
+        b.delta_excl_ns
+            .cmp(&a.delta_excl_ns)
+            .then_with(|| a.path.cmp(&b.path))
+    });
+    rows
+}
+
+/// The `n` paths whose exclusive time regressed the most (positive
+/// delta only) — what a failed bench gate prints.
+pub fn top_regressions(
+    prev: &Profile,
+    cur: &Profile,
+    n: usize,
+) -> Vec<DiffRow> {
+    diff(prev, cur)
+        .into_iter()
+        .filter(|r| r.delta_excl_ns > 0)
+        .take(n)
+        .collect()
+}
+
+/// Render diff rows as the perf-delta table (`prev`/`cur`/Δ exclusive
+/// ms, Δ%, alloc and call columns).
+pub fn render_table(title: &str, rows: &[DiffRow]) -> TablePrinter {
+    let mut t = TablePrinter::new(
+        title,
+        &[
+            "call path",
+            "prev excl ms",
+            "cur excl ms",
+            "delta ms",
+            "delta %",
+            "allocs prev->cur",
+            "calls prev->cur",
+        ],
+    );
+    for r in rows {
+        let pct = if r.prev_excl_ns == 0 {
+            "new".to_string()
+        } else {
+            format!(
+                "{:+.1}%",
+                100.0 * r.delta_excl_ns as f64 / r.prev_excl_ns as f64
+            )
+        };
+        t.row(vec![
+            r.path.clone(),
+            format!("{:.3}", r.prev_excl_ns as f64 / 1e6),
+            format!("{:.3}", r.cur_excl_ns as f64 / 1e6),
+            format!("{:+.3}", r.delta_excl_ns as f64 / 1e6),
+            pct,
+            format!("{} -> {}", r.prev_allocs, r.cur_allocs),
+            format!("{} -> {}", r.prev_calls, r.cur_calls),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prof::export::PathStat;
+
+    fn prof(rows: &[(&str, u64, u64, u64)]) -> Profile {
+        Profile {
+            paths: rows
+                .iter()
+                .map(|&(p, excl, calls, allocs)| PathStat {
+                    path: p.to_string(),
+                    depth: p.split(';').count(),
+                    inclusive_ns: excl,
+                    exclusive_ns: excl,
+                    calls,
+                    allocs,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn diff_sorts_worst_regression_first() {
+        let prev = prof(&[
+            ("serve", 100, 1, 0),
+            ("serve;dispatch", 500, 10, 0),
+        ]);
+        let cur = prof(&[
+            ("serve", 150, 1, 0),
+            ("serve;dispatch", 2000, 10, 3),
+        ]);
+        let rows = diff(&prev, &cur);
+        assert_eq!(rows[0].path, "serve;dispatch");
+        assert_eq!(rows[0].delta_excl_ns, 1500);
+        assert_eq!(rows[0].cur_allocs, 3);
+        assert_eq!(rows[1].path, "serve");
+    }
+
+    #[test]
+    fn union_includes_new_and_vanished_paths() {
+        let prev = prof(&[("serve;old", 100, 1, 0)]);
+        let cur = prof(&[("serve;new", 70, 1, 0)]);
+        let rows = diff(&prev, &cur);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().any(|r| r.path == "serve;old"
+            && r.delta_excl_ns == -100));
+        assert!(rows.iter().any(|r| r.path == "serve;new"
+            && r.delta_excl_ns == 70));
+    }
+
+    #[test]
+    fn self_diff_is_all_zero() {
+        let p = prof(&[("serve", 100, 1, 0), ("serve;x", 50, 2, 1)]);
+        assert!(diff(&p, &p).iter().all(|r| r.delta_excl_ns == 0));
+        assert!(top_regressions(&p, &p, 5).is_empty());
+    }
+
+    #[test]
+    fn table_renders_every_row() {
+        let prev = prof(&[("serve", 100, 1, 0)]);
+        let cur = prof(&[("serve", 300, 1, 0)]);
+        let t = render_table("d", &diff(&prev, &cur));
+        let s = t.render();
+        assert!(s.contains("serve"));
+        assert!(s.contains("+200.0%"));
+    }
+}

@@ -1,0 +1,416 @@
+//! Scrape-side profile export: shard merge, collapsed-stack (`folded`)
+//! text, a self-contained HTML flamegraph, and the versioned
+//! `PROF_*.json` record.
+//!
+//! Only this side allocates — the record path in [`super::stack`] is
+//! allocation-free. A scrape merges the per-shard path tables by
+//! packed key (the same path can land in several shards, one per
+//! recording thread), decodes each key into the root-first
+//! `a;b;c` path string of the folded format, and sorts
+//! deterministically by that string.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::frame::Frame;
+use super::stack::for_each_slot;
+
+/// `format` tag stamped into every `PROF_*.json` record.
+pub const PROFILE_FORMAT: &str = "bip-moe-profile";
+/// Schema version of the `PROF_*.json` payload; bump on shape change
+/// (the `bench-honesty` lint requires every writer to stamp it).
+pub const PROFILE_SCHEMA_VERSION: u32 = 1;
+
+/// Aggregated totals for one call path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PathStat {
+    /// root-first `;`-joined frame names (the folded-stack id)
+    pub path: String,
+    /// nesting depth (number of frames in `path`)
+    pub depth: usize,
+    pub inclusive_ns: u64,
+    pub exclusive_ns: u64,
+    pub calls: u64,
+    /// heap allocations observed inside the frame (CountingAlloc
+    /// delta; 0 unless the binary installs the counting allocator)
+    pub allocs: u64,
+}
+
+/// One merged scrape of the profiler's path tables.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Profile {
+    /// sorted by `path` string
+    pub paths: Vec<PathStat>,
+}
+
+/// Decode a packed path key (innermost frame in the low byte) into the
+/// root-first `a;b;c` string and its depth.
+fn decode_path(mut key: u64) -> (String, usize) {
+    let mut frames = [""; super::stack::MAX_DEPTH];
+    let mut n = 0;
+    while key != 0 && n < frames.len() {
+        let name = match Frame::from_code((key & 0xff) as u8) {
+            Some(f) => f.name(),
+            None => "unknown",
+        };
+        frames[n] = name;
+        n += 1;
+        key >>= 8;
+    }
+    let mut out = String::new();
+    for name in frames[..n].iter().rev() {
+        if !out.is_empty() {
+            out.push(';');
+        }
+        out.push_str(name);
+    }
+    (out, n)
+}
+
+impl Profile {
+    /// Merge every shard's path table into one profile (scrape seam —
+    /// the record side keeps running; totals are monotone).
+    pub fn scrape() -> Profile {
+        let mut merged: std::collections::BTreeMap<
+            u64,
+            (u64, u64, u64, u64),
+        > = std::collections::BTreeMap::new();
+        for_each_slot(|key, incl, excl, calls, allocs| {
+            let e = merged.entry(key).or_insert((0, 0, 0, 0));
+            e.0 += incl;
+            e.1 += excl;
+            e.2 += calls;
+            e.3 += allocs;
+        });
+        let mut paths: Vec<PathStat> = merged
+            .into_iter()
+            .map(|(key, (incl, excl, calls, allocs))| {
+                let (path, depth) = decode_path(key);
+                PathStat {
+                    path,
+                    depth,
+                    inclusive_ns: incl,
+                    exclusive_ns: excl,
+                    calls,
+                    allocs,
+                }
+            })
+            .collect();
+        paths.sort_by(|a, b| a.path.cmp(&b.path));
+        Profile { paths }
+    }
+
+    /// Collapsed-stack ("folded") text: one `path exclusive_ns` line
+    /// per call path, the flamegraph.pl / speedscope input format.
+    pub fn folded(&self) -> String {
+        let mut out = String::new();
+        for p in &self.paths {
+            out.push_str(&p.path);
+            out.push(' ');
+            out.push_str(&p.exclusive_ns.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Sum of inclusive time over root (depth-1) paths — the profile's
+    /// notion of total measured wall-clock per recording thread tree.
+    pub fn root_inclusive_ns(&self) -> u64 {
+        self.paths
+            .iter()
+            .filter(|p| p.depth == 1)
+            .map(|p| p.inclusive_ns)
+            .sum()
+    }
+
+    /// Inclusive ns of the path rooted at `root` (exact match on the
+    /// first frame name), 0 if absent.
+    pub fn root_ns(&self, root: &str) -> u64 {
+        self.paths
+            .iter()
+            .filter(|p| p.depth == 1 && p.path == root)
+            .map(|p| p.inclusive_ns)
+            .sum()
+    }
+
+    /// The versioned machine-readable record (see PROFILE_SCHEMA_VERSION).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str(PROFILE_FORMAT.into())),
+            (
+                "schema_version",
+                Json::Num(PROFILE_SCHEMA_VERSION as f64),
+            ),
+            ("version", Json::Str(crate::VERSION.into())),
+            (
+                "paths",
+                Json::Arr(
+                    self.paths
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("path", Json::Str(p.path.clone())),
+                                (
+                                    "inclusive_ns",
+                                    Json::Num(p.inclusive_ns as f64),
+                                ),
+                                (
+                                    "exclusive_ns",
+                                    Json::Num(p.exclusive_ns as f64),
+                                ),
+                                ("calls", Json::Num(p.calls as f64)),
+                                ("allocs", Json::Num(p.allocs as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a `PROF_*.json` document back into a profile.
+    pub fn from_json(doc: &Json) -> Result<Profile> {
+        let fmt = doc.path("format").and_then(|j| j.as_str());
+        if fmt != Some(PROFILE_FORMAT) {
+            bail!("profile format {fmt:?}, wanted {PROFILE_FORMAT:?}");
+        }
+        let schema = doc
+            .path("schema_version")
+            .and_then(|j| j.as_f64())
+            .unwrap_or(0.0);
+        if schema < 1.0 {
+            bail!("profile schema_version {schema} < 1");
+        }
+        let Some(arr) = doc.path("paths").and_then(|j| j.as_arr()) else {
+            bail!("profile has no `paths` array");
+        };
+        let mut paths = Vec::with_capacity(arr.len());
+        for row in arr {
+            let Some(path) =
+                row.path("path").and_then(|j| j.as_str())
+            else {
+                bail!("profile row missing `path`");
+            };
+            let num = |k: &str| -> u64 {
+                row.path(k).and_then(|j| j.as_f64()).unwrap_or(0.0)
+                    as u64
+            };
+            paths.push(PathStat {
+                path: path.to_string(),
+                depth: path.split(';').count(),
+                inclusive_ns: num("inclusive_ns"),
+                exclusive_ns: num("exclusive_ns"),
+                calls: num("calls"),
+                allocs: num("allocs"),
+            });
+        }
+        paths.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(Profile { paths })
+    }
+
+    /// Load a `PROF_*.json` record from disk.
+    pub fn load(path: &Path) -> Result<Profile> {
+        let body = std::fs::read_to_string(path)
+            .with_context(|| format!("reading profile {}", path.display()))?;
+        let doc = Json::parse(&body).map_err(|e| {
+            anyhow::anyhow!("profile {} does not parse: {e}", path.display())
+        })?;
+        Profile::from_json(&doc)
+    }
+
+    /// Write the JSON record to an explicit path.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    /// Self-contained HTML flamegraph (icicle layout, no external
+    /// assets): each call path is a positioned `div` whose width is
+    /// its inclusive share of the summed root time.
+    pub fn html(&self, title: &str) -> String {
+        const ROW_PX: usize = 22;
+        let total = self.root_inclusive_ns().max(1) as f64;
+        // path -> (x offset frac, width frac); children consume their
+        // parent's span left to right in sorted order
+        let mut geom: std::collections::BTreeMap<&str, (f64, f64)> =
+            std::collections::BTreeMap::new();
+        let mut consumed: std::collections::BTreeMap<&str, f64> =
+            std::collections::BTreeMap::new();
+        let mut boxes = String::new();
+        let mut max_depth = 1;
+        for p in &self.paths {
+            let w = p.inclusive_ns as f64 / total;
+            let x = match p.path.rsplit_once(';') {
+                None => {
+                    let x = consumed.get("").copied().unwrap_or(0.0);
+                    consumed.insert("", x + w);
+                    x
+                }
+                Some((parent, _)) => {
+                    let (px, _) =
+                        geom.get(parent).copied().unwrap_or((0.0, 0.0));
+                    let used =
+                        consumed.get(parent).copied().unwrap_or(0.0);
+                    consumed.insert(parent, used + w);
+                    px + used
+                }
+            };
+            geom.insert(p.path.as_str(), (x, w));
+            max_depth = max_depth.max(p.depth);
+            let label = match p.path.rsplit_once(';') {
+                Some((_, leaf)) => leaf,
+                None => p.path.as_str(),
+            };
+            // deterministic hue per frame name
+            let hue = label
+                .bytes()
+                .fold(0u32, |h, b| h.wrapping_mul(31).wrapping_add(b as u32))
+                % 360;
+            boxes.push_str(&format!(
+                "<div class=\"f\" style=\"left:{:.4}%;width:{:.4}%;\
+                 top:{}px;background:hsl({hue},65%,72%)\" \
+                 title=\"{} — incl {:.3} ms, excl {:.3} ms, {} calls, \
+                 {} allocs\">{label}</div>\n",
+                x * 100.0,
+                (w * 100.0).max(0.05),
+                (p.depth - 1) * ROW_PX,
+                p.path,
+                p.inclusive_ns as f64 / 1e6,
+                p.exclusive_ns as f64 / 1e6,
+                p.calls,
+                p.allocs,
+            ));
+        }
+        let esc: String = title
+            .chars()
+            .map(|c| match c {
+                '<' => "&lt;".to_string(),
+                '>' => "&gt;".to_string(),
+                '&' => "&amp;".to_string(),
+                '"' => "&quot;".to_string(),
+                c => c.to_string(),
+            })
+            .collect();
+        format!(
+            "<!doctype html><html><head><meta charset=\"utf-8\">\
+             <title>{esc}</title><style>\
+             body{{font:13px monospace;margin:16px}}\
+             .fg{{position:relative;border:1px solid #ccc}}\
+             .f{{position:absolute;height:{h}px;overflow:hidden;\
+             white-space:nowrap;box-sizing:border-box;\
+             border:1px solid rgba(0,0,0,.25);padding:1px 3px;\
+             font-size:11px}}\
+             </style></head><body><h1>{esc}</h1>\
+             <p>{fmt} v{sv} — widths are inclusive time as a share of \
+             the summed root frames ({tot:.3} ms). Hover a box for \
+             exact totals.</p>\
+             <div class=\"fg\" style=\"height:{total_h}px\">\n{boxes}\
+             </div></body></html>\n",
+            h = ROW_PX - 2,
+            fmt = PROFILE_FORMAT,
+            sv = PROFILE_SCHEMA_VERSION,
+            tot = total / 1e6,
+            total_h = max_depth * ROW_PX,
+        )
+    }
+}
+
+/// Write `PROF_<name>.json` under `reports/` (or `$BIP_MOE_REPORTS`)
+/// with the schema_version stamp — the profile counterpart of
+/// `bench::write_bench_json`, captured alongside every gated bench.
+pub fn write_prof_json(name: &str, profile: &Profile) -> std::io::Result<PathBuf> {
+    let dir = PathBuf::from(
+        std::env::var("BIP_MOE_REPORTS").unwrap_or_else(|_| "reports".into()),
+    );
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("PROF_{name}.json"));
+    let doc = profile.to_json();
+    debug_assert!(
+        doc.path("schema_version").is_some(),
+        "profile reports must carry a schema stamp"
+    );
+    std::fs::write(&path, doc.to_string())?;
+    Ok(path)
+}
+
+/// Load the previously committed `PROF_<name>.json`, if any — callers
+/// read it *before* overwriting so a regression gate can diff against
+/// the prior run.
+pub fn load_prev_prof(name: &str) -> Option<Profile> {
+    let dir = PathBuf::from(
+        std::env::var("BIP_MOE_REPORTS").unwrap_or_else(|_| "reports".into()),
+    );
+    Profile::load(&dir.join(format!("PROF_{name}.json"))).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Profile {
+        Profile {
+            paths: vec![
+                PathStat {
+                    path: "serve".into(),
+                    depth: 1,
+                    inclusive_ns: 1000,
+                    exclusive_ns: 100,
+                    calls: 1,
+                    allocs: 0,
+                },
+                PathStat {
+                    path: "serve;dispatch".into(),
+                    depth: 2,
+                    inclusive_ns: 900,
+                    exclusive_ns: 900,
+                    calls: 3,
+                    allocs: 2,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn decode_path_is_root_first() {
+        let key = ((Frame::Serve.code() as u64) << 8)
+            | Frame::Dispatch.code() as u64;
+        let (s, d) = decode_path(key);
+        assert_eq!(s, "serve;dispatch");
+        assert_eq!(d, 2);
+        assert_eq!(decode_path(0), (String::new(), 0));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let p = sample();
+        let doc = Json::parse(&p.to_json().to_string()).unwrap();
+        let back = Profile::from_json(&doc).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn folded_lines_carry_exclusive_ns() {
+        let text = sample().folded();
+        assert!(text.contains("serve 100\n"));
+        assert!(text.contains("serve;dispatch 900\n"));
+    }
+
+    #[test]
+    fn html_is_self_contained_and_mentions_every_path() {
+        let html = sample().html("t<est");
+        assert!(html.contains("t&lt;est"));
+        assert!(html.contains("serve;dispatch"));
+        assert!(!html.contains("http://"));
+        assert!(!html.contains("https://"));
+    }
+
+    #[test]
+    fn root_accounting() {
+        let p = sample();
+        assert_eq!(p.root_inclusive_ns(), 1000);
+        assert_eq!(p.root_ns("serve"), 1000);
+        assert_eq!(p.root_ns("dispatch"), 0);
+    }
+}

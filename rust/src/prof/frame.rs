@@ -1,0 +1,123 @@
+//! The closed set of profiler frames (interned static names).
+//!
+//! A [`Frame`] is one level of the serving/training call hierarchy.
+//! Discriminants are dense and pinned: a call *path* is packed into a
+//! `u64` at one byte per level (`discriminant + 1`, so byte 0 means
+//! "empty"), which caps the set at 255 frames and the stack at
+//! [`crate::prof::MAX_DEPTH`] levels. Adding a frame means appending a
+//! variant, extending [`Frame::ALL`], and giving it a name — the
+//! `telemetry-naming`-style invariants are pinned by unit tests below.
+
+/// One level of the profiled call hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Frame {
+    /// whole serving run (`serve::run_scenario*` — the root frame)
+    Serve = 0,
+    /// admission: one request offered to the micro-batcher
+    Admission = 1,
+    /// one micro-batch dispatched into a router
+    Dispatch = 2,
+    /// one layer's routing inside `route_batch_into`
+    LayerRoute = 3,
+    /// gate-score fill into the arena
+    ScoreFill = 4,
+    /// capacity-enforcing top-K selection sweep
+    TopK = 5,
+    /// Algorithm 1 dual update (fixed-T or adaptive, whole solve)
+    DualUpdate = 6,
+    /// Algorithm 1 p-phase (token-side assignment pass)
+    DualP = 7,
+    /// Algorithm 1 q-phase (expert-side dual adjustment pass)
+    DualQ = 8,
+    /// replica balance-state merge-sync
+    MergeSync = 9,
+    /// one training step
+    TrainStep = 10,
+    /// one forecaster fit over a load series
+    ForecastFit = 11,
+}
+
+/// Number of frame kinds (== `Frame::ALL.len()`).
+pub const N_FRAMES: usize = 12;
+
+impl Frame {
+    /// Every frame, indexed by discriminant.
+    pub const ALL: [Frame; N_FRAMES] = [
+        Frame::Serve,
+        Frame::Admission,
+        Frame::Dispatch,
+        Frame::LayerRoute,
+        Frame::ScoreFill,
+        Frame::TopK,
+        Frame::DualUpdate,
+        Frame::DualP,
+        Frame::DualQ,
+        Frame::MergeSync,
+        Frame::TrainStep,
+        Frame::ForecastFit,
+    ];
+
+    /// Static frame name as it appears in folded stacks and
+    /// `PROF_*.json` path strings.
+    pub fn name(self) -> &'static str {
+        match self {
+            Frame::Serve => "serve",
+            Frame::Admission => "admission",
+            Frame::Dispatch => "dispatch",
+            Frame::LayerRoute => "layer_route",
+            Frame::ScoreFill => "score_fill",
+            Frame::TopK => "top_k",
+            Frame::DualUpdate => "dual_update",
+            Frame::DualP => "dual_p",
+            Frame::DualQ => "dual_q",
+            Frame::MergeSync => "merge_sync",
+            Frame::TrainStep => "train_step",
+            Frame::ForecastFit => "forecast_fit",
+        }
+    }
+
+    /// Decode one packed path byte (`discriminant + 1`); 0 and
+    /// out-of-range codes return `None`.
+    pub fn from_code(code: u8) -> Option<Frame> {
+        let idx = (code as usize).checked_sub(1)?;
+        Frame::ALL.get(idx).copied()
+    }
+
+    /// The packed-path byte for this frame.
+    pub fn code(self) -> u8 {
+        self as u8 + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discriminants_are_dense_and_pinned() {
+        for (i, f) in Frame::ALL.iter().enumerate() {
+            assert_eq!(*f as usize, i, "{f:?}");
+            assert_eq!(Frame::from_code(f.code()), Some(*f));
+        }
+        assert_eq!(Frame::from_code(0), None);
+        assert_eq!(Frame::from_code(N_FRAMES as u8 + 1), None);
+        assert!(N_FRAMES <= 255, "one byte per level caps the enum");
+    }
+
+    #[test]
+    fn names_are_unique_snake_case() {
+        let mut seen = std::collections::BTreeSet::new();
+        for f in Frame::ALL {
+            let n = f.name();
+            assert!(!n.is_empty());
+            assert!(
+                n.chars().all(|c| c.is_ascii_lowercase()
+                    || c.is_ascii_digit()
+                    || c == '_'),
+                "{n}"
+            );
+            assert!(seen.insert(n), "duplicate frame name {n}");
+        }
+    }
+}

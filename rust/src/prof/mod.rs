@@ -1,0 +1,39 @@
+//! `prof/` — deterministic hierarchical profiler (ISSUE 9).
+//!
+//! The flat telemetry spans (`telemetry::span`) answer "how long do
+//! route-batch calls take on average"; they cannot answer "*where* did
+//! the time go when the geomean gate failed". This module layers a
+//! call-*path* profiler underneath them:
+//!
+//! * [`ProfGuard::enter`]`(frame)` pushes one [`Frame`] onto a
+//!   fixed-depth thread-local stack; dropping the guard records
+//!   inclusive/exclusive ns, a call count, and a CountingAlloc delta
+//!   under the full packed call path (admission → dispatch →
+//!   layer-route → score-fill → top-K → dual-update p/q → merge-sync,
+//!   plus train-step and forecast-fit roots).
+//! * The record path is allocation-free and lock-free (sharded static
+//!   tables, merged at scrape time like the telemetry registry) and is
+//!   gated by the `hot-path-alloc`/`lock-discipline`/`panic-path`
+//!   lints.
+//! * [`Profile::scrape`] merges the shards; [`Profile::folded`] emits
+//!   collapsed-stack text, [`Profile::html`] a self-contained
+//!   flamegraph, and [`write_prof_json`] the versioned `PROF_*.json`
+//!   record captured alongside every gated bench.
+//! * [`diff`](fn@diff) aligns two profiles by path and sorts by
+//!   Δexclusive-ns so `bip-moe profile diff` (and a failed bench gate)
+//!   can name the guilty phase instead of printing a bare ratio.
+
+pub mod diff;
+pub mod export;
+pub mod frame;
+pub mod stack;
+
+pub use diff::{diff, render_table, top_regressions, DiffRow};
+pub use export::{
+    load_prev_prof, write_prof_json, PathStat, Profile, PROFILE_FORMAT,
+    PROFILE_SCHEMA_VERSION,
+};
+pub use frame::{Frame, N_FRAMES};
+pub use stack::{
+    enabled, reset, set_enabled, ProfGuard, MAX_DEPTH, N_SHARDS,
+};

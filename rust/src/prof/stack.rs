@@ -1,0 +1,322 @@
+//! The profiler hot path: thread-local frame stack + sharded,
+//! lock-free call-path tables.
+//!
+//! Ownership rules (see DESIGN.md):
+//!
+//! * The **frame stack is thread-local** — a [`ProfGuard`] must drop on
+//!   the thread that entered it (RAII makes this structural; guards are
+//!   `!Send` because they borrow nothing but the TLS stack).
+//! * A call path is the packed sequence of active frames, one byte per
+//!   level (`Frame::code()`), innermost in the low byte. Depth is
+//!   capped at [`MAX_DEPTH`]; deeper frames are *dropped and counted*
+//!   (`prof_stack_overflow_total`), never truncated mid-path.
+//! * Aggregation is per-path into [`N_SHARDS`] static open-addressing
+//!   tables (claimed with a CAS on the packed path key, updated with
+//!   relaxed `fetch_add`). The same path may live in several shards —
+//!   the scrape in [`crate::prof::export`] merges them, exactly like
+//!   the telemetry registry's shard merge.
+//! * Steady state performs **zero heap allocations**: no boxing, no
+//!   formatting, no locks — the `hot-path-alloc` / `lock-discipline`
+//!   lints gate `enter`/`push_frame`/`pop_frame_record`/`record_path`.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::perf::alloc::thread_allocs;
+use crate::telemetry::registry::shard_index;
+use crate::telemetry::{counter_add, Counter};
+
+use super::frame::Frame;
+
+/// Maximum nesting depth of live profiler frames per thread.
+pub const MAX_DEPTH: usize = 8;
+/// Path-table shards (mirrors the telemetry registry's shard count).
+pub const N_SHARDS: usize = 16;
+/// Open-addressing slots per shard (power of two).
+const SLOTS_PER_SHARD: usize = 256;
+/// Linear-probe bound before a record is dropped (and counted).
+const PROBE_LIMIT: usize = 32;
+
+/// Profiler master switch. Defaults on: the record path is a handful
+/// of TLS cell writes plus one sharded `fetch_add` per frame exit, and
+/// a live `bip-moe serve` must move `prof_frames_total` for the
+/// `metrics check` CI gate.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable frame recording (scrapes still work while disabled).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Release);
+}
+
+/// Is frame recording enabled?
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+// HOT: monotonic ns since the profiler epoch (first frame ever entered)
+#[inline]
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// One aggregated (call path → totals) cell.
+struct Slot {
+    /// packed path key; 0 = empty
+    key: AtomicU64,
+    incl_ns: AtomicU64,
+    excl_ns: AtomicU64,
+    calls: AtomicU64,
+    allocs: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const SLOT_INIT: Slot = Slot {
+    key: AtomicU64::new(0),
+    incl_ns: AtomicU64::new(0),
+    excl_ns: AtomicU64::new(0),
+    calls: AtomicU64::new(0),
+    allocs: AtomicU64::new(0),
+};
+
+#[allow(clippy::declare_interior_mutable_const)]
+const SHARD_INIT: [Slot; SLOTS_PER_SHARD] = [SLOT_INIT; SLOTS_PER_SHARD];
+
+/// The static path tables: ~160 KiB of atomics, fully preallocated.
+static TABLES: [[Slot; SLOTS_PER_SHARD]; N_SHARDS] = [SHARD_INIT; N_SHARDS];
+
+/// Per-thread frame stack. All cells are const-initialized; entering a
+/// frame touches no heap.
+struct TlsStack {
+    depth: Cell<usize>,
+    /// packed path of the live frames (innermost = low byte)
+    path: Cell<u64>,
+    start_ns: [Cell<u64>; MAX_DEPTH],
+    /// ns spent in already-popped direct children of each level
+    child_ns: [Cell<u64>; MAX_DEPTH],
+    /// `thread_allocs()` snapshot at frame entry
+    alloc0: [Cell<u64>; MAX_DEPTH],
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const CELL0: Cell<u64> = Cell::new(0);
+
+thread_local! {
+    static STACK: TlsStack = const {
+        TlsStack {
+            depth: Cell::new(0),
+            path: Cell::new(0),
+            start_ns: [CELL0; MAX_DEPTH],
+            child_ns: [CELL0; MAX_DEPTH],
+            alloc0: [CELL0; MAX_DEPTH],
+        }
+    };
+}
+
+/// RAII guard for one profiler frame: [`ProfGuard::enter`] pushes,
+/// drop pops and records the (inclusive, exclusive, allocs) totals
+/// into this thread's shard under the full call path.
+#[must_use = "a ProfGuard records its frame when dropped"]
+pub struct ProfGuard {
+    live: bool,
+    /// ties the guard to the entering thread's TLS stack
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl ProfGuard {
+    // HOT: per-frame entry — TLS cell writes only
+    #[inline]
+    pub fn enter(frame: Frame) -> ProfGuard {
+        if !enabled() {
+            return ProfGuard {
+                live: false,
+                _not_send: std::marker::PhantomData,
+            };
+        }
+        let live = STACK.with(|s| push_frame(s, frame));
+        ProfGuard { live, _not_send: std::marker::PhantomData }
+    }
+}
+
+impl Drop for ProfGuard {
+    // HOT: per-frame exit
+    #[inline]
+    fn drop(&mut self) {
+        if self.live {
+            STACK.with(pop_frame_record);
+        }
+    }
+}
+
+// HOT: push one frame onto the TLS stack; false = dropped (too deep)
+#[inline]
+fn push_frame(s: &TlsStack, frame: Frame) -> bool {
+    let d = s.depth.get();
+    if d >= MAX_DEPTH {
+        counter_add(Counter::ProfStackOverflow, 1);
+        return false;
+    }
+    s.path.set((s.path.get() << 8) | frame.code() as u64);
+    s.start_ns[d].set(now_ns());
+    s.child_ns[d].set(0);
+    s.alloc0[d].set(thread_allocs());
+    s.depth.set(d + 1);
+    true
+}
+
+// HOT: pop the innermost frame and record its totals under the path
+#[inline]
+fn pop_frame_record(s: &TlsStack) {
+    let Some(d) = s.depth.get().checked_sub(1) else {
+        // unbalanced guard (a reset raced a live frame); drop silently
+        return;
+    };
+    let total = now_ns().saturating_sub(s.start_ns[d].get());
+    let excl = total.saturating_sub(s.child_ns[d].get());
+    // saturating: a reset_thread_counts() inside the frame window must
+    // not wrap the delta
+    let allocs = thread_allocs().saturating_sub(s.alloc0[d].get());
+    record_path(s.path.get(), total, excl, allocs);
+    s.path.set(s.path.get() >> 8);
+    s.depth.set(d);
+    if let Some(p) = d.checked_sub(1) {
+        s.child_ns[p].set(s.child_ns[p].get() + total);
+    }
+}
+
+// HOT: fibonacci-hash start slot for a packed path
+#[inline]
+fn slot_hash(path: u64) -> usize {
+    (path.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 56) as usize
+        & (SLOTS_PER_SHARD - 1)
+}
+
+// HOT: aggregate one finished frame into this thread's shard
+#[inline]
+fn record_path(path: u64, incl_ns: u64, excl_ns: u64, allocs: u64) {
+    let shard = &TABLES[shard_index() % N_SHARDS];
+    let mut idx = slot_hash(path);
+    for _ in 0..PROBE_LIMIT {
+        let slot = &shard[idx];
+        let k = slot.key.load(Ordering::Acquire);
+        let owned = k == path
+            || (k == 0
+                && match slot.key.compare_exchange(
+                    0,
+                    path,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => true,
+                    Err(actual) => actual == path,
+                });
+        if owned {
+            slot.incl_ns.fetch_add(incl_ns, Ordering::Relaxed);
+            slot.excl_ns.fetch_add(excl_ns, Ordering::Relaxed);
+            slot.calls.fetch_add(1, Ordering::Relaxed);
+            slot.allocs.fetch_add(allocs, Ordering::Relaxed);
+            counter_add(Counter::ProfFrames, 1);
+            return;
+        }
+        idx = (idx + 1) & (SLOTS_PER_SHARD - 1);
+    }
+    // shard full for this probe window: drop + count, never block
+    counter_add(Counter::ProfStackOverflow, 1);
+}
+
+// COLD: scrape seam — visit every occupied slot across all shards.
+// Values are read after the key, so a record racing the scrape is
+// either fully visible or attributed to the next scrape.
+pub(crate) fn for_each_slot(
+    mut f: impl FnMut(u64, u64, u64, u64, u64),
+) {
+    for shard in &TABLES {
+        for slot in shard {
+            let key = slot.key.load(Ordering::Acquire);
+            if key == 0 {
+                continue;
+            }
+            f(
+                key,
+                slot.incl_ns.load(Ordering::Relaxed),
+                slot.excl_ns.load(Ordering::Relaxed),
+                slot.calls.load(Ordering::Relaxed),
+                slot.allocs.load(Ordering::Relaxed),
+            );
+        }
+    }
+}
+
+// COLD: zero every slot (test/CLI seam between measured runs). Not
+// linearizable against concurrent recording — callers quiesce first.
+pub fn reset() {
+    for shard in &TABLES {
+        for slot in shard {
+            slot.incl_ns.store(0, Ordering::Relaxed);
+            slot.excl_ns.store(0, Ordering::Relaxed);
+            slot.calls.store(0, Ordering::Relaxed);
+            slot.allocs.store(0, Ordering::Relaxed);
+            slot.key.store(0, Ordering::Release);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_path_shifts_round_trip() {
+        STACK.with(|s| {
+            // drain any depth left over from other tests in this thread
+            while s.depth.get() > 0 {
+                pop_frame_record(s);
+            }
+            assert!(push_frame(s, Frame::Serve));
+            assert!(push_frame(s, Frame::Dispatch));
+            assert_eq!(
+                s.path.get(),
+                ((Frame::Serve.code() as u64) << 8)
+                    | Frame::Dispatch.code() as u64
+            );
+            pop_frame_record(s);
+            assert_eq!(s.path.get(), Frame::Serve.code() as u64);
+            pop_frame_record(s);
+            assert_eq!(s.path.get(), 0);
+            assert_eq!(s.depth.get(), 0);
+        });
+    }
+
+    #[test]
+    fn depth_overflow_drops_not_corrupts() {
+        STACK.with(|s| {
+            while s.depth.get() > 0 {
+                pop_frame_record(s);
+            }
+            for _ in 0..MAX_DEPTH {
+                assert!(push_frame(s, Frame::LayerRoute));
+            }
+            assert!(!push_frame(s, Frame::TopK), "9th frame must drop");
+            assert_eq!(s.depth.get(), MAX_DEPTH);
+            for _ in 0..MAX_DEPTH {
+                pop_frame_record(s);
+            }
+            assert_eq!(s.depth.get(), 0);
+            assert_eq!(s.path.get(), 0);
+        });
+    }
+
+    #[test]
+    fn unbalanced_pop_is_a_noop() {
+        STACK.with(|s| {
+            while s.depth.get() > 0 {
+                pop_frame_record(s);
+            }
+            pop_frame_record(s); // must not underflow
+            assert_eq!(s.depth.get(), 0);
+        });
+    }
+}

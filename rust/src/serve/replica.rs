@@ -31,6 +31,7 @@ use std::sync::Arc;
 
 use crate::forecast::{AutoScaler, ScaleEvent};
 use crate::obs::event::{self, EventKind};
+use crate::prof::{Frame, ProfGuard};
 use crate::routing::BalanceState;
 use crate::telemetry::{self, Counter, Gauge, Span, SpanKind};
 use crate::trace::TraceRecorder;
@@ -203,6 +204,9 @@ impl ReplicaSet {
             // per-replica dispatch latency, measured on the worker
             // thread (exercises the registry's shard-per-thread path)
             let span = Span::enter(SpanKind::ReplicaDispatch);
+            // worker threads have their own TLS frame stack, so
+            // Dispatch is their root frame; the scrape merges shards
+            let prof = ProfGuard::enter(Frame::Dispatch);
             // tag the worker thread before routing so every event the
             // batch drops (BatchStart .. BatchDone) carries replica i
             event::set_replica_ctx(i);
@@ -211,6 +215,7 @@ impl ReplicaSet {
                 .batch_us(&router.placement, &outcome.loads, m)
                 .max(1.0) as u64;
             event::record_ctx_event(EventKind::Dispatch, service_us);
+            drop(prof);
             drop(span);
             (i, router, batch, outcome, service_us)
         });
@@ -239,6 +244,7 @@ impl ReplicaSet {
     /// Reconcile balance state across replicas: export everyone, merge
     /// the identical slice into everyone, record the divergence erased.
     fn sync(&mut self) {
+        let _prof = ProfGuard::enter(Frame::MergeSync);
         let spread = window_spread(&self.window);
         if let Some(prev) = self.syncs.last_mut() {
             prev.vio_spread_after = spread;

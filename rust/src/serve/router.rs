@@ -23,6 +23,7 @@ use crate::obs::event::{self, EventKind};
 use crate::parallel::placement::{greedy_placement, Placement};
 use crate::parallel::Mesh;
 use crate::perf::{AssignmentBuf, ScoreArena};
+use crate::prof::{Frame, ProfGuard};
 use crate::routing::{
     ApproxBip, BalanceState, Bip, Greedy, LossFree, OnlineBip,
     PredictiveBip, RoutingStrategy,
@@ -445,13 +446,17 @@ impl ServingRouter {
             .then(|| Vec::with_capacity(n_layers));
 
         for l in 0..n_layers {
+            let _prof_layer = ProfGuard::enter(Frame::LayerRoute);
             event::set_layer_ctx(l);
-            self.arena.scores.clear();
-            self.arena.scores.reserve(n * m);
-            for r in batch {
-                self.arena
-                    .scores
-                    .extend_from_slice(r.layer_scores(l, m));
+            {
+                let _prof = ProfGuard::enter(Frame::ScoreFill);
+                self.arena.scores.clear();
+                self.arena.scores.reserve(n * m);
+                for r in batch {
+                    self.arena
+                        .scores
+                        .extend_from_slice(r.layer_scores(l, m));
+                }
             }
             // lend the arena's score buffer to the Instance for the
             // duration of the strategy call (moved back below)
@@ -472,6 +477,7 @@ impl ServingRouter {
             let mut layer_cap: Option<Vec<Vec<u16>>> = captured
                 .is_some()
                 .then(|| Vec::with_capacity(n));
+            let prof_topk = ProfGuard::enter(Frame::TopK);
             for i in 0..n {
                 self.arena.chosen.clear();
                 for &e in self.assignment.token(i).iter().take(k) {
@@ -539,6 +545,7 @@ impl ServingRouter {
                     lrow[e as usize] += 1.0;
                 }
             }
+            drop(prof_topk);
             if let Some(all) = captured.as_mut() {
                 // LINT-ALLOW(panic): layer_cap is set at the top of
                 // every layer iteration when capture is enabled

@@ -14,6 +14,7 @@
 use std::collections::VecDeque;
 
 use crate::obs::event::{self, EventKind};
+use crate::prof::{Frame, ProfGuard};
 
 use super::traffic::Request;
 
@@ -81,6 +82,7 @@ impl MicroBatcher {
     /// Admission control: bounded queue, reject-on-full. Each verdict
     /// drops an Admit/Reject causal event keyed by the request id.
     pub fn offer(&mut self, req: Request) -> Admission {
+        let _prof = ProfGuard::enter(Frame::Admission);
         self.stats.offered += 1;
         if self.queue.len() >= self.cfg.queue_cap {
             self.stats.rejected += 1;

@@ -14,6 +14,7 @@ use crate::forecast::PredictiveAdmission;
 use crate::obs::event::{self, EventKind};
 use crate::obs::ObsController;
 use crate::parallel::{DeviceProfile, Mesh, ModelCost, ServeCost};
+use crate::prof::{Frame, ProfGuard};
 use crate::routing::BalanceState;
 use crate::telemetry::{self, Counter, Gauge};
 use crate::trace::TraceRecorder;
@@ -167,6 +168,9 @@ pub(crate) fn run_scenario_hooked(
     mut admission: Option<&mut PredictiveAdmission>,
     mut obs: Option<&mut ObsController>,
 ) -> ServeOutcome {
+    // root profiler frame: declared first so it drops last and its
+    // inclusive time covers the whole event loop + drain accounting
+    let _prof_serve = ProfGuard::enter(Frame::Serve);
     let mut gen = source;
     let mut batcher = MicroBatcher::new(cfg.sched.clone());
     let mut router = ServingRouter::new(cfg.policy, cfg.router.clone());
@@ -221,7 +225,11 @@ pub(crate) fn run_scenario_hooked(
         if now >= server_free && batcher.ready(now) {
             let batch = batcher.take_batch(now);
             if !batch.is_empty() {
-                router.route_batch_into(&batch, &mut outcome);
+                {
+                    let _prof =
+                        ProfGuard::enter(Frame::Dispatch);
+                    router.route_batch_into(&batch, &mut outcome);
+                }
                 first_batch_vio.get_or_insert(outcome.batch_vio);
                 let service_us = serve_cost
                     .batch_us(

@@ -81,9 +81,14 @@ pub enum Counter {
     ObsAlerts = 15,
     /// incident files dumped by the obs flight recorder
     ObsIncidents = 16,
+    /// call-path frames recorded by the hierarchical profiler
+    ProfFrames = 17,
+    /// profiler frames dropped (stack deeper than `prof::MAX_DEPTH`
+    /// or a path table shard ran out of slots)
+    ProfStackOverflow = 18,
 }
 
-const N_COUNTERS: usize = 17;
+const N_COUNTERS: usize = 19;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -104,6 +109,8 @@ impl Counter {
         Counter::ObsEvents,
         Counter::ObsAlerts,
         Counter::ObsIncidents,
+        Counter::ProfFrames,
+        Counter::ProfStackOverflow,
     ];
 
     pub fn name(self) -> &'static str {
@@ -127,6 +134,8 @@ impl Counter {
             Counter::ObsEvents => "obs_events_total",
             Counter::ObsAlerts => "obs_alerts_total",
             Counter::ObsIncidents => "obs_incidents_total",
+            Counter::ProfFrames => "prof_frames_total",
+            Counter::ProfStackOverflow => "prof_stack_overflow_total",
         }
     }
 
@@ -165,6 +174,12 @@ impl Counter {
             }
             Counter::ObsAlerts => "anomaly alerts raised",
             Counter::ObsIncidents => "incident files dumped",
+            Counter::ProfFrames => {
+                "call-path frames recorded by the profiler"
+            }
+            Counter::ProfStackOverflow => {
+                "profiler frames dropped (stack depth or table full)"
+            }
         }
     }
 }

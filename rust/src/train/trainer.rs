@@ -12,6 +12,7 @@ use anyhow::{Context, Result};
 use crate::data::{Corpus, CorpusSpec, Loader, Split};
 use crate::metrics::{Perplexity, RunRecorder};
 use crate::parallel::{ClusterSim, DeviceProfile, Mesh, ModelCost};
+use crate::prof::{Frame, ProfGuard};
 use crate::runtime::{Engine, Tensor};
 use crate::telemetry;
 use crate::train::state::TrainState;
@@ -174,6 +175,7 @@ impl TrainDriver {
             );
             let step_span =
                 telemetry::Span::enter(telemetry::SpanKind::TrainStep);
+            let step_prof = ProfGuard::enter(Frame::TrainStep);
             let t0 = Instant::now();
             let outputs = engine
                 .run(&train_art, &state.as_inputs(tokens))
@@ -187,6 +189,7 @@ impl TrainDriver {
                 drops.iter().sum::<f32>() / drops.len().max(1) as f32;
             sim.push_step(loads, m);
             rec.push_step(loads, m, nll / n_tok, mean_drop, wall);
+            drop(step_prof);
             drop(step_span);
             telemetry::counter_add(telemetry::Counter::TrainSteps, 1);
             if let Some(&v) = rec.balance.global_series.last() {

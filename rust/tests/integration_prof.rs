@@ -1,0 +1,230 @@
+//! Hierarchical-profiler integration (ISSUE 9 acceptance gates).
+//!
+//! This binary installs the counting global allocator and pins the
+//! three profiler claims end-to-end:
+//!
+//! 1. steady-state serving with profiling **enabled** still makes zero
+//!    heap allocations per micro-batch (same harness as
+//!    `integration_perf`, now with `ProfGuard` frames live);
+//! 2. the scraped tree is self-consistent — inclusive >= exclusive at
+//!    every node, every parent covers its children — and the `serve`
+//!    root accounts for >= 95% of the measured wall-clock;
+//! 3. `profile diff` of two runs that differ only in the solver
+//!    iteration cap attributes the regression to the dual-update
+//!    phase, not to admission or dispatch.
+//!
+//! The profiler's path tables are process-global, so the tests that
+//! reset/scrape them serialize on one mutex (test threads run in
+//! parallel by default).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use bip_moe::perf::alloc::{
+    reset_thread_counts, thread_allocs, CountingAlloc,
+};
+use bip_moe::prof::{self, Frame, ProfGuard, Profile};
+use bip_moe::serve::{
+    run_scenario, BatchOutcome, Policy, Request, RouterConfig, Scenario,
+    SchedulerConfig, ServeConfig, ServingRouter, TrafficConfig,
+    TrafficGenerator,
+};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Serializes every test that resets or scrapes the global path
+/// tables; poisoning is ignored (a failed test must not mask others).
+static GATE: Mutex<()> = Mutex::new(());
+
+fn requests(n: usize, seed: u64) -> Vec<Request> {
+    TrafficGenerator::new(TrafficConfig {
+        scenario: Scenario::Steady,
+        n_requests: n,
+        seed,
+        ..Default::default()
+    })
+    .collect()
+}
+
+#[test]
+fn steady_state_serving_with_profiling_is_zero_alloc() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    prof::set_enabled(true);
+    prof::reset();
+    let batch = requests(64, 3);
+    for policy in Policy::all() {
+        let mut router =
+            ServingRouter::new(policy, RouterConfig::default());
+        let mut out = BatchOutcome::default();
+        // warm-up: arena capacities, the TLS frame stack, and every
+        // path-table slot this workload touches settle here
+        for _ in 0..70 {
+            let _prof = ProfGuard::enter(Frame::Dispatch);
+            router.route_batch_into(&batch, &mut out);
+        }
+        reset_thread_counts();
+        for _ in 0..40 {
+            let _prof = ProfGuard::enter(Frame::Dispatch);
+            router.route_batch_into(&batch, &mut out);
+        }
+        let allocs = thread_allocs();
+        assert_eq!(
+            allocs, 0,
+            "{policy:?}: {allocs} steady-state allocations in 40 \
+             profiled batches — the record path must not touch the heap"
+        );
+    }
+    // the frames really were recorded, not silently dropped
+    let profile = Profile::scrape();
+    let dispatch_calls: u64 = profile
+        .paths
+        .iter()
+        .filter(|p| p.depth == 1 && p.path == "dispatch")
+        .map(|p| p.calls)
+        .sum();
+    assert!(
+        dispatch_calls >= 110 * Policy::all().len() as u64,
+        "expected every wrapped batch recorded, saw {dispatch_calls} \
+         dispatch calls"
+    );
+}
+
+#[test]
+fn profile_tree_is_consistent_and_covers_serve_wall_clock() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    prof::set_enabled(true);
+    prof::reset();
+    let cfg = ServeConfig::new(
+        TrafficConfig {
+            scenario: Scenario::Steady,
+            n_requests: 4_096,
+            seed: 7,
+            ..Default::default()
+        },
+        SchedulerConfig::default(),
+        RouterConfig::default(),
+        Policy::BipBatch,
+    );
+    let t0 = Instant::now();
+    let outcome = run_scenario(&cfg);
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    assert!(outcome.report.completed > 0);
+
+    let profile = Profile::scrape();
+    assert!(!profile.paths.is_empty(), "serve run recorded nothing");
+
+    // every node: inclusive >= exclusive, and at least one call
+    for p in &profile.paths {
+        assert!(
+            p.inclusive_ns >= p.exclusive_ns,
+            "{}: inclusive {} < exclusive {}",
+            p.path,
+            p.inclusive_ns,
+            p.exclusive_ns
+        );
+        assert!(p.calls > 0, "{}: zero calls", p.path);
+    }
+
+    // every parent covers the sum of its children's inclusive time
+    let mut child_sums: std::collections::BTreeMap<&str, u64> =
+        std::collections::BTreeMap::new();
+    for p in &profile.paths {
+        if let Some((parent, _leaf)) = p.path.rsplit_once(';') {
+            *child_sums.entry(parent).or_insert(0) += p.inclusive_ns;
+        }
+    }
+    for (parent, sum) in &child_sums {
+        let node = profile
+            .paths
+            .iter()
+            .find(|p| p.path == *parent)
+            .unwrap_or_else(|| panic!("orphan call path under {parent}"));
+        assert!(
+            node.inclusive_ns >= *sum,
+            "{parent}: inclusive {} < children sum {sum}",
+            node.inclusive_ns
+        );
+    }
+
+    // the serve root accounts for >= 95% of the measured wall-clock
+    let serve_ns = profile.root_ns("serve");
+    assert!(
+        serve_ns as f64 >= 0.95 * wall_ns as f64,
+        "serve root {serve_ns} ns < 95% of wall {wall_ns} ns"
+    );
+    assert!(
+        serve_ns <= wall_ns,
+        "serve root {serve_ns} ns exceeds wall {wall_ns} ns"
+    );
+}
+
+/// One profiled serve run at the given adaptive-solver iteration cap.
+fn profiled_serve(t_max: usize) -> Profile {
+    let cfg = ServeConfig::new(
+        TrafficConfig {
+            scenario: Scenario::Steady,
+            n_requests: 2_048,
+            seed: 11,
+            ..Default::default()
+        },
+        SchedulerConfig::default(),
+        RouterConfig {
+            // a tolerance this tight never converges early, so the
+            // cap is the only thing that changes between the runs
+            solver_tol: 1e-6,
+            solver_t_max: t_max,
+            ..Default::default()
+        },
+        Policy::BipBatch,
+    );
+    prof::reset();
+    let outcome = run_scenario(&cfg);
+    assert!(outcome.report.completed > 0);
+    Profile::scrape()
+}
+
+#[test]
+fn diff_attributes_solver_cap_regression_to_dual_update() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    prof::set_enabled(true);
+    let fast = profiled_serve(4);
+    let slow = profiled_serve(64);
+    // both runs saw the dual phases at all
+    assert!(
+        slow.paths.iter().any(|p| p.path.ends_with("dual_update")),
+        "slow run recorded no dual_update path"
+    );
+    let top = prof::top_regressions(&fast, &slow, 5);
+    assert!(!top.is_empty(), "16x more solver iterations, no regression");
+    let worst = &top[0];
+    let leaf = worst.path.rsplit(';').next().unwrap_or(&worst.path);
+    assert!(
+        leaf.starts_with("dual"),
+        "worst regression should be a dual-update phase, got `{}` \
+         (delta {} ns)",
+        worst.path,
+        worst.delta_excl_ns
+    );
+    assert!(
+        leaf != "admission" && leaf != "dispatch",
+        "regression misattributed to `{leaf}`"
+    );
+    // the dual family's combined growth dwarfs admission's drift
+    let delta_for = |rows: &[prof::DiffRow], pred: &dyn Fn(&str) -> bool| {
+        rows.iter()
+            .filter(|r| {
+                pred(r.path.rsplit(';').next().unwrap_or(&r.path))
+            })
+            .map(|r| r.delta_excl_ns)
+            .sum::<i64>()
+    };
+    let all = prof::diff(&fast, &slow);
+    let dual_delta = delta_for(&all, &|l| l.starts_with("dual"));
+    let admission_delta = delta_for(&all, &|l| l == "admission");
+    assert!(
+        dual_delta > admission_delta.abs(),
+        "dual growth {dual_delta} ns should dominate admission drift \
+         {admission_delta} ns"
+    );
+}
