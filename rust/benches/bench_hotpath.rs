@@ -23,6 +23,11 @@
 //!   * **telemetry overhead** — route_batch with the global metrics
 //!     registry enabled vs disabled (the ISSUE-6 < 2% claim,
 //!     informational);
+//!   * **kernel twins** — the ISSUE-10 specialized kernels
+//!     (branch-free top-K, cache-blocked transpose, shard-staged
+//!     parallel dual update) against their scalar / shared-write
+//!     reference twins, each bit-identity-checked before timing; rows
+//!     join the regression history under `"kernel ..."` keys;
 //!   * **regression history** — before overwriting
 //!     reports/BENCH_hotpath.json, the previous record's per-row arena
 //!     tokens/sec are loaded and a delta table + geomean ratio is
@@ -216,6 +221,18 @@ fn load_prev_baseline() -> Option<(BTreeMap<String, f64>, bool)> {
     let mut rows = BTreeMap::new();
     if let Some(sections) = doc.path("results").and_then(|j| j.as_arr()) {
         for sec in sections {
+            // kernel rows carry their regression key + rate explicitly
+            if let Some(kr) = sec.path("kernels").and_then(|j| j.as_arr())
+            {
+                for row in kr {
+                    if let (Some(key), Some(v)) = (
+                        row.path("row_key").and_then(|j| j.as_str()),
+                        row.path("per_sec").and_then(|j| j.as_f64()),
+                    ) {
+                        rows.insert(key.to_string(), v);
+                    }
+                }
+            }
             let Some(rb) =
                 sec.path("route_batch").and_then(|j| j.as_arr())
             else {
@@ -371,6 +388,218 @@ fn main() {
         ("zero_alloc_steady_state", Json::Bool(zero_alloc_ok)),
     ]));
     println!("  speedup geomean: {speedup_geomean:.2}x");
+
+    // Kernel micro-benches (ISSUE 10): each specialized kernel vs its
+    // scalar reference twin, with a bit-identity check before timing
+    // so the comparison always prices two equal computations. Rows
+    // join the same regression history as the route rows (keyed
+    // "kernel ..."), and each bench runs under its profiler frame so a
+    // failed gate's PROF_ diff names the guilty kernel.
+    println!("\n== kernels: specialized vs scalar reference twins ==");
+    let mut kernel_rows = Vec::new();
+    {
+        use bip_moe::perf::{block, kernels, ScoreArena};
+        use bip_moe::prof::{Frame, ProfGuard};
+        use bip_moe::util::pool::Pool;
+
+        // branch-free top-K vs comparator quickselect, per gate shape
+        // (network k <= 4, heap k <= 32, fallback beyond)
+        let rows_n = 4096usize;
+        for &(m, k) in
+            &[(16usize, 4usize), (64, 2), (64, 8), (256, 32), (256, 48)]
+        {
+            let mut rng = Pcg64::new(21);
+            let scores: Vec<f32> =
+                (0..rows_n * m).map(|_| rng.next_f32() - 0.5).collect();
+            let mut idx = vec![0u32; m];
+            let mut out = vec![0u32; m];
+            let mut rout = vec![0u32; m];
+            for r in 0..rows_n {
+                let xs = &scores[r * m..(r + 1) * m];
+                let a =
+                    kernels::topk_keys_into(xs, k, &mut idx, &mut out);
+                let b = kernels::topk_ref(xs, k, &mut idx, &mut rout);
+                assert_eq!(a, b, "m={m} k={k}");
+                assert_eq!(out[..a], rout[..b], "m={m} k={k} row {r}");
+            }
+            let mut bench = Bencher::quick();
+            let _prof = ProfGuard::enter(Frame::TopK);
+            let kern_us = bench
+                .bench(&format!("kernel topk m={m} k={k}"), || {
+                    for r in 0..rows_n {
+                        let xs = &scores[r * m..(r + 1) * m];
+                        std::hint::black_box(kernels::topk_keys_into(
+                            xs, k, &mut idx, &mut out,
+                        ));
+                    }
+                })
+                .secs_per_iter
+                .mean
+                * 1e6;
+            let ref_us = bench
+                .bench(&format!("ref topk m={m} k={k}"), || {
+                    for r in 0..rows_n {
+                        let xs = &scores[r * m..(r + 1) * m];
+                        std::hint::black_box(kernels::topk_ref(
+                            xs, k, &mut idx, &mut rout,
+                        ));
+                    }
+                })
+                .secs_per_iter
+                .mean
+                * 1e6;
+            drop(_prof);
+            let per_sec = rows_n as f64 / (kern_us / 1e6);
+            let key = format!("kernel topk m={m} k={k}");
+            println!(
+                "  {key:<28}: {kern_us:>9.2} us vs ref {ref_us:>9.2} \
+                 us per {rows_n} rows ({:.2}x)",
+                ref_us / kern_us
+            );
+            cur_tps.push((key.clone(), per_sec));
+            kernel_rows.push(Json::obj(vec![
+                ("row_key", Json::Str(key)),
+                ("kind", Json::Str("topk".into())),
+                ("m", Json::Num(m as f64)),
+                ("k", Json::Num(k as f64)),
+                ("rows", Json::Num(rows_n as f64)),
+                ("kernel_us_per_pass", Json::Num(kern_us)),
+                ("ref_us_per_pass", Json::Num(ref_us)),
+                ("per_sec", Json::Num(per_sec)),
+                ("speedup", Json::Num(ref_us / kern_us)),
+            ]));
+        }
+
+        // cache-blocked vs naive transpose, per batch shape
+        for &(n, m) in &[(256usize, 16usize), (1024, 64), (4096, 64)] {
+            let mut rng = Pcg64::new(23);
+            let src: Vec<f32> =
+                (0..n * m).map(|_| rng.next_f32()).collect();
+            let mut dst = vec![0.0f32; n * m];
+            let mut ref_dst = vec![0.0f32; n * m];
+            block::transpose_into(&src, n, m, &mut dst);
+            block::transpose_ref(&src, n, m, &mut ref_dst);
+            assert_eq!(dst, ref_dst, "blocked diverged n={n} m={m}");
+            let mut bench = Bencher::quick();
+            let _prof = ProfGuard::enter(Frame::Transpose);
+            let kern_us = bench
+                .bench(&format!("kernel transpose n={n} m={m}"), || {
+                    block::transpose_into(&src, n, m, &mut dst);
+                })
+                .secs_per_iter
+                .mean
+                * 1e6;
+            let ref_us = bench
+                .bench(&format!("ref transpose n={n} m={m}"), || {
+                    block::transpose_ref(&src, n, m, &mut ref_dst);
+                })
+                .secs_per_iter
+                .mean
+                * 1e6;
+            drop(_prof);
+            let per_sec = (n * m) as f64 / (kern_us / 1e6);
+            let key = format!("kernel transpose n={n} m={m}");
+            println!(
+                "  {key:<28}: {kern_us:>9.2} us vs ref {ref_us:>9.2} \
+                 us per pass ({:.2}x)",
+                ref_us / kern_us
+            );
+            cur_tps.push((key.clone(), per_sec));
+            kernel_rows.push(Json::obj(vec![
+                ("row_key", Json::Str(key)),
+                ("kind", Json::Str("transpose".into())),
+                ("n", Json::Num(n as f64)),
+                ("m", Json::Num(m as f64)),
+                ("kernel_us_per_pass", Json::Num(kern_us)),
+                ("ref_us_per_pass", Json::Num(ref_us)),
+                ("per_sec", Json::Num(per_sec)),
+                ("speedup", Json::Num(ref_us / kern_us)),
+            ]));
+        }
+
+        // sharded parallel dual update vs the pre-sharding
+        // direct-write twin (false-sharing price), per thread count
+        let (n, m, k, t_iters) = (1024usize, 16usize, 4usize, 4usize);
+        for &threads in &[2usize, 4] {
+            let pool = Pool::new(threads);
+            let mut rng = Pcg64::new(29);
+            let inst = Instance::synthetic(n, m, k, 2.0, 3.0, &mut rng);
+            let mut sharded = DualState::new(m);
+            let mut shared = DualState::new(m);
+            let mut sharded_arena = ScoreArena::new();
+            let mut shared_arena = ScoreArena::new();
+            sharded.update_parallel_in(
+                &inst,
+                t_iters,
+                &pool,
+                &mut sharded_arena,
+            );
+            shared.update_parallel_shared_in(
+                &inst,
+                t_iters,
+                &pool,
+                &mut shared_arena,
+            );
+            assert_eq!(sharded.q, shared.q, "threads={threads}");
+            assert_eq!(sharded.p, shared.p, "threads={threads}");
+            let mut bench = Bencher::quick();
+            let kern_us = bench
+                .bench(
+                    &format!("kernel dual sharded threads={threads}"),
+                    || {
+                        sharded.update_parallel_in(
+                            &inst,
+                            t_iters,
+                            &pool,
+                            &mut sharded_arena,
+                        );
+                    },
+                )
+                .secs_per_iter
+                .mean
+                * 1e6;
+            let ref_us = bench
+                .bench(
+                    &format!("ref dual shared threads={threads}"),
+                    || {
+                        shared.update_parallel_shared_in(
+                            &inst,
+                            t_iters,
+                            &pool,
+                            &mut shared_arena,
+                        );
+                    },
+                )
+                .secs_per_iter
+                .mean
+                * 1e6;
+            pool.join();
+            let per_sec = n as f64 / (kern_us / 1e6);
+            let key = format!("kernel dual-shard threads={threads}");
+            println!(
+                "  {key:<28}: {kern_us:>9.2} us vs shared-write \
+                 {ref_us:>9.2} us per solve ({:.2}x)",
+                ref_us / kern_us
+            );
+            cur_tps.push((key.clone(), per_sec));
+            kernel_rows.push(Json::obj(vec![
+                ("row_key", Json::Str(key)),
+                ("kind", Json::Str("dual_shard".into())),
+                ("n", Json::Num(n as f64)),
+                ("m", Json::Num(m as f64)),
+                ("threads", Json::Num(threads as f64)),
+                ("t_iters", Json::Num(t_iters as f64)),
+                ("kernel_us_per_pass", Json::Num(kern_us)),
+                ("ref_us_per_pass", Json::Num(ref_us)),
+                ("per_sec", Json::Num(per_sec)),
+                ("speedup", Json::Num(ref_us / kern_us)),
+            ]));
+        }
+    }
+    sections.push(Json::obj(vec![(
+        "kernels",
+        Json::Arr(kernel_rows),
+    )]));
 
     // Regression history: delta table vs the previous record, gated on
     // geomean throughput ratio (BIP_MOE_PERF_GATE=off|warn overrides).

@@ -19,9 +19,11 @@
 //! Like the other gated benches, the previous record's throughput rows
 //! (replay requests/s and per-policy reroute tokens/s) are loaded
 //! BEFORE this run overwrites the file; a geomean ratio below 0.90
-//! fails the bench unless the baseline is the committed seed
-//! placeholder (`"seeded_placeholder": true`, warn-only) or
-//! BIP_MOE_PERF_GATE=off|warn overrides it.
+//! fails the bench unless BIP_MOE_PERF_GATE=off|warn overrides it. The
+//! committed reports/BENCH_trace.json carries conservative throughput
+//! floors in the real row schema, so the gate is *enforced* from the
+//! first CI run (a `"seeded_placeholder": true` baseline downgrades
+//! the gate to warn-only; the committed record no longer sets it).
 
 use std::collections::BTreeMap;
 

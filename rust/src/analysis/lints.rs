@@ -20,14 +20,20 @@ const ALLOC_TYPE_FNS: &[&str] = &["new", "from", "with_capacity", "from_iter"];
 const ALLOC_MACROS: &[&str] = &["vec", "format"];
 
 /// Roots of the serving/solver hot path: the per-batch routing entry,
-/// the Algorithm-1 dual updates, the telemetry write seams, and the
-/// profiler's per-frame record path (`ProfGuard` enter/drop).
+/// the Algorithm-1 dual updates, the branch-free selection and
+/// cache-blocked layout kernels under them, the telemetry write seams,
+/// and the profiler's per-frame record path (`ProfGuard` enter/drop).
 const HOT_ROOTS: &[&str] = &[
     "route_batch_into",
     "update_in",
     "update_parallel_in",
     "update_adaptive_in",
     "update_adaptive_parallel_in",
+    "topk_keys_into",
+    "select_kth_key",
+    "transpose_into",
+    "transpose_cols_into",
+    "fill_transpose",
     "counter_add",
     "gauge_set",
     "hist_observe",
@@ -56,6 +62,8 @@ const HOT_SCOPE: &[&str] = &[
     "src/bip/online.rs",
     "src/bip/approx.rs",
     "src/perf/arena.rs",
+    "src/perf/kernels.rs",
+    "src/perf/block.rs",
     "src/util/stats.rs",
     "src/telemetry/registry.rs",
     "src/telemetry/span.rs",

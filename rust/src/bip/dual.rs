@@ -23,11 +23,15 @@
 //!     the kernel);
 //!   * [`DualState::update_parallel`] — the same recurrence with the
 //!     p-phase chunked over token rows and the q-phase over expert
-//!     columns on a shared [`Pool`]. Chunks write pre-partitioned
-//!     disjoint slices directly (no mutexes, no per-phase gather
-//!     buffers), and a quickselect over the same multiset yields the
-//!     same order statistic regardless of partitioning, so the result
-//!     is bit-identical to serial — pinned by the equivalence tests;
+//!     columns on a shared [`Pool`]. Each chunk stages its outputs in
+//!     a cacheline-padded shard row of the arena (no two workers ever
+//!     store to the same line) and a serial gather lands them in
+//!     `p`/`q`; an order statistic over the same multiset is the same
+//!     value regardless of partitioning, so the result is
+//!     bit-identical to serial — pinned by the equivalence tests. The
+//!     pre-sharding direct-write variant survives as
+//!     [`DualState::update_parallel_shared_in`], the measured twin the
+//!     kernel bench prices false sharing against;
 //!   * [`DualState::update_adaptive`] — the convergence-adaptive path:
 //!     early-exits when the duals go quiet AND the routed MaxVio has
 //!     stopped improving, restores the best duals seen, and lazily
@@ -37,6 +41,7 @@
 
 use super::{Instance, Routing};
 use crate::obs::event::{self, EventKind};
+use crate::perf::block;
 use crate::perf::{AssignmentBuf, ScoreArena};
 use crate::prof::{Frame, ProfGuard};
 use crate::telemetry;
@@ -131,7 +136,11 @@ impl DualState {
         let cc = (cap + 1).min(n);
         self.p.resize(n, 0.0);
         arena.prepare_batch(n, m);
-        transpose_serial(inst, &mut arena.scores_t);
+        // the router's fused fill-side transpose, when present for
+        // exactly this batch shape, already holds scores_t
+        if !arena.take_transpose(n, m) {
+            transpose_serial(inst, &mut arena.scores_t);
+        }
         for _ in 0..t_iters {
             {
                 let _prof_p = ProfGuard::enter(Frame::DualP);
@@ -192,7 +201,10 @@ impl DualState {
         let cc = (cap + 1).min(n);
         self.p.resize(n, 0.0);
         arena.prepare_batch(n, m);
-        transpose_parallel(inst, &mut arena.scores_t, pool);
+        arena.prepare_shards(shard_floats(n, m, pool.threads()));
+        if !arena.take_transpose(n, m) {
+            transpose_parallel(inst, &mut arena.scores_t, pool);
+        }
         for _ in 0..t_iters {
             {
                 let _prof_p = ProfGuard::enter(Frame::DualP);
@@ -203,10 +215,66 @@ impl DualState {
                     &mut arena.order_keys,
                     kk,
                     pool,
+                    &mut arena.shards,
                 );
             }
             let _prof_q = ProfGuard::enter(Frame::DualQ);
             q_phase_parallel(
+                n,
+                m,
+                &arena.scores_t,
+                &self.p,
+                &mut self.q,
+                &mut arena.order_keys,
+                cc,
+                None,
+                0,
+                pool,
+                &mut arena.shards,
+            );
+        }
+    }
+
+    /// Pre-sharding pool variant of [`DualState::update_parallel_in`]:
+    /// chunks write their p/q outputs straight into interleaved regions
+    /// of the shared vectors, so adjacent chunks' stores land on the
+    /// same cachelines at every boundary (false sharing). Kept as the
+    /// measured reference twin the kernel bench prices the padded
+    /// shard staging against; bit-identical to the sharded default and
+    /// to serial, which the equivalence tests pin.
+    pub fn update_parallel_shared_in(
+        &mut self,
+        inst: &Instance,
+        t_iters: usize,
+        pool: &Pool,
+        arena: &mut ScoreArena,
+    ) {
+        if pool.threads() <= 1 {
+            return self.update_in(inst, t_iters, arena);
+        }
+        let _prof = ProfGuard::enter(Frame::DualUpdate);
+        let (n, m, k, cap) = (inst.n, inst.m, inst.k, inst.cap);
+        let kk = (k + 1).min(m);
+        let cc = (cap + 1).min(n);
+        self.p.resize(n, 0.0);
+        arena.prepare_batch(n, m);
+        if !arena.take_transpose(n, m) {
+            transpose_parallel(inst, &mut arena.scores_t, pool);
+        }
+        for _ in 0..t_iters {
+            {
+                let _prof_p = ProfGuard::enter(Frame::DualP);
+                p_phase_parallel_shared(
+                    inst,
+                    &self.q,
+                    &mut self.p,
+                    &mut arena.order_keys,
+                    kk,
+                    pool,
+                );
+            }
+            let _prof_q = ProfGuard::enter(Frame::DualQ);
+            q_phase_parallel_shared(
                 n,
                 m,
                 &arena.scores_t,
@@ -317,11 +385,16 @@ impl DualState {
         arena.prepare_batch(n, m);
         arena.prepare_adaptive(m, k);
         arena.prepare_gate(m);
-        match pool {
-            Some(pool) => {
-                transpose_parallel(inst, &mut arena.scores_t, pool)
+        if let Some(pool) = pool {
+            arena.prepare_shards(shard_floats(n, m, pool.threads()));
+        }
+        if !arena.take_transpose(n, m) {
+            match pool {
+                Some(pool) => {
+                    transpose_parallel(inst, &mut arena.scores_t, pool)
+                }
+                None => transpose_serial(inst, &mut arena.scores_t),
             }
-            None => transpose_serial(inst, &mut arena.scores_t),
         }
         let eps = tol * ADAPTIVE_TOL_TO_DELTA;
         let mut best_vio = f64::INFINITY;
@@ -343,6 +416,7 @@ impl DualState {
                             &mut arena.order_keys,
                             kk,
                             pool,
+                            &mut arena.shards,
                         );
                     }
                     let _prof_q = ProfGuard::enter(Frame::DualQ);
@@ -357,6 +431,7 @@ impl DualState {
                         (tol > 0.0).then_some(arena.calm.as_slice()),
                         t,
                         pool,
+                        &mut arena.shards,
                     );
                 }
                 None => {
@@ -550,13 +625,8 @@ fn eval_max_vio(
 }
 
 fn transpose_serial(inst: &Instance, scores_t: &mut [f32]) {
-    let (n, m) = (inst.n, inst.m);
-    for i in 0..n {
-        let row = inst.row(i);
-        for j in 0..m {
-            scores_t[j * n + i] = row[j];
-        }
-    }
+    let _prof = ProfGuard::enter(Frame::Transpose);
+    block::transpose_into(&inst.scores, inst.n, inst.m, scores_t);
 }
 
 fn transpose_parallel(
@@ -564,18 +634,22 @@ fn transpose_parallel(
     scores_t: &mut [f32],
     pool: &Pool,
 ) {
+    let _prof = ProfGuard::enter(Frame::Transpose);
     let (n, m) = (inst.n, inst.m);
     let chunks = chunk_count(m, pool.threads());
     let t_ptr = SendPtr(scores_t.as_mut_ptr());
     let job = |c: usize| {
         let (j0, j1) = chunk_range(m, chunks, c);
-        for i in 0..n {
-            let row = inst.row(i);
-            for j in j0..j1 {
-                // SAFETY: column blocks [j0*n, j1*n) are disjoint per c
-                unsafe { *t_ptr.0.add(j * n + i) = row[j] };
-            }
-        }
+        // SAFETY: output columns j0..j1 occupy the contiguous range
+        // [j0*n, j1*n) of scores_t — disjoint per chunk — and
+        // scores_t outlives scoped_run
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(
+                t_ptr.0.add(j0 * n),
+                (j1 - j0) * n,
+            )
+        };
+        block::transpose_cols_into(&inst.scores, n, m, j0, j1, dst);
     };
     pool.scoped_run(chunks, &job);
 }
@@ -599,7 +673,63 @@ fn p_phase_serial(
     }
 }
 
+/// Pool-chunked p-phase, shard-staged: each chunk writes its token
+/// duals into its own cacheline-padded shard row (so no two workers
+/// ever store to the same line) and a serial gather copies the rows
+/// into `p`. The staged values are the serial recurrence verbatim, so
+/// `p` is bit-identical to [`p_phase_serial`].
 fn p_phase_parallel(
+    inst: &Instance,
+    q: &[f32],
+    p: &mut [f32],
+    keys: &mut [u32],
+    kk: usize,
+    pool: &Pool,
+    shards: &mut [f32],
+) {
+    let (n, m) = (inst.n, inst.m);
+    let chunks = chunk_count(n, pool.threads());
+    let stride = shard_stride(n, chunks);
+    let k_ptr = SendPtr(keys.as_mut_ptr());
+    let s_ptr = SendPtr(shards.as_mut_ptr());
+    let job = |c: usize| {
+        let (i0, i1) = chunk_range(n, chunks, c);
+        // SAFETY: shard row c is the range [c*stride, c*stride+(i1-i0))
+        // — strides are cacheline-rounded chunk sizes, so rows are
+        // disjoint — and shards outlives scoped_run
+        let srow = unsafe {
+            std::slice::from_raw_parts_mut(
+                s_ptr.0.add(c * stride),
+                i1 - i0,
+            )
+        };
+        for i in i0..i1 {
+            let row = inst.row(i);
+            // SAFETY: row ranges [i0, i1) are disjoint per chunk, and
+            // key row i belongs to exactly one row chunk
+            let krow = unsafe {
+                std::slice::from_raw_parts_mut(k_ptr.0.add(i * m), m)
+            };
+            for j in 0..m {
+                krow[j] = f32_order_key(row[j] - q[j]);
+            }
+            srow[i - i0] = kth_largest_keys(krow, kk).max(0.0);
+        }
+    };
+    pool.scoped_run(chunks, &job);
+    for c in 0..chunks {
+        let (i0, i1) = chunk_range(n, chunks, c);
+        p[i0..i1].copy_from_slice(
+            &shards[c * stride..c * stride + (i1 - i0)],
+        );
+    }
+}
+
+/// Pre-sharding p-phase twin: chunks write `p` directly through
+/// interleaved pointers (false sharing at every chunk boundary). Kept
+/// only so the kernel bench can price the shard staging; bit-identical
+/// to [`p_phase_parallel`].
+fn p_phase_parallel_shared(
     inst: &Instance,
     q: &[f32],
     p: &mut [f32],
@@ -671,8 +801,71 @@ fn q_phase_serial(
     }
 }
 
+/// Pool-chunked q-phase, shard-staged like [`p_phase_parallel`]: each
+/// chunk prices its expert columns into its own padded shard row and a
+/// serial gather lands them in `q`. Lazy (calm) columns are skipped in
+/// both the worker job and the gather, so they keep their previous
+/// dual exactly like the serial phase.
 #[allow(clippy::too_many_arguments)]
 fn q_phase_parallel(
+    n: usize,
+    m: usize,
+    scores_t: &[f32],
+    p: &[f32],
+    q: &mut [f32],
+    keys: &mut [u32],
+    cc: usize,
+    calm: Option<&[u32]>,
+    t: usize,
+    pool: &Pool,
+    shards: &mut [f32],
+) {
+    let chunks = chunk_count(m, pool.threads());
+    let stride = shard_stride(m, chunks);
+    let k_ptr = SendPtr(keys.as_mut_ptr());
+    let s_ptr = SendPtr(shards.as_mut_ptr());
+    let job = |c: usize| {
+        let (j0, j1) = chunk_range(m, chunks, c);
+        // SAFETY: shard row c is the range [c*stride, c*stride+(j1-j0))
+        // — strides are cacheline-rounded chunk sizes, so rows are
+        // disjoint — and shards outlives scoped_run
+        let srow = unsafe {
+            std::slice::from_raw_parts_mut(
+                s_ptr.0.add(c * stride),
+                j1 - j0,
+            )
+        };
+        for j in j0..j1 {
+            if column_is_lazy(calm, j, t) {
+                continue;
+            }
+            let col = &scores_t[j * n..(j + 1) * n];
+            // SAFETY: column ranges [j0, j1) are disjoint per chunk
+            let kcol = unsafe {
+                std::slice::from_raw_parts_mut(k_ptr.0.add(j * n), n)
+            };
+            for i in 0..n {
+                kcol[i] = f32_order_key(col[i] - p[i]);
+            }
+            srow[j - j0] = kth_largest_keys(kcol, cc).max(0.0);
+        }
+    };
+    pool.scoped_run(chunks, &job);
+    for c in 0..chunks {
+        let (j0, j1) = chunk_range(m, chunks, c);
+        for j in j0..j1 {
+            if column_is_lazy(calm, j, t) {
+                continue;
+            }
+            q[j] = shards[c * stride + (j - j0)];
+        }
+    }
+}
+
+/// Pre-sharding q-phase twin of [`q_phase_parallel`] (direct
+/// interleaved writes into `q`); kept for the kernel bench.
+#[allow(clippy::too_many_arguments)]
+fn q_phase_parallel_shared(
     n: usize,
     m: usize,
     scores_t: &[f32],
@@ -709,6 +902,30 @@ fn q_phase_parallel(
         }
     };
     pool.scoped_run(chunks, &job);
+}
+
+/// Floats per 64-byte cacheline — the shard-stride rounding unit.
+const SHARD_LINE: usize = 16;
+
+/// Padded per-chunk stride (in floats) for staging `len` outputs
+/// across `chunks` workers: the chunk size rounded up to a whole
+/// cacheline, so adjacent workers never store to the same line.
+fn shard_stride(len: usize, chunks: usize) -> usize {
+    let size = (len + chunks - 1) / chunks;
+    (size + SHARD_LINE - 1) / SHARD_LINE * SHARD_LINE
+}
+
+/// Shard-staging floats the pool-parallel dual update needs for an
+/// `(n, m)` batch on `threads` workers: the larger of the p-phase
+/// (token rows) and q-phase (expert columns) geometries. Public so the
+/// state-accounting tests and the kernel bench can predict the arena
+/// growth exactly.
+pub fn shard_floats(n: usize, m: usize, threads: usize) -> usize {
+    let pc = chunk_count(n, threads);
+    let qc = chunk_count(m, threads);
+    let p_need = if pc == 0 { 0 } else { pc * shard_stride(n, pc) };
+    let q_need = if qc == 0 { 0 } else { qc * shard_stride(m, qc) };
+    p_need.max(q_need)
 }
 
 /// How many chunks [`chunk_range`] splits `n` items into for `threads`
@@ -893,12 +1110,60 @@ mod tests {
                         parallel.route(&inst).assignment,
                         "routing diverged seed={seed} t={t} b={b}"
                     );
+                    // accounted footprint is path-independent: the
+                    // shard staging exists on the parallel side but is
+                    // deliberately outside state_bytes
                     assert_eq!(serial.state_bytes(),
                                parallel.state_bytes());
+                    assert!(serial.arena.shards.is_empty());
+                    assert_eq!(parallel.arena.shards.len(),
+                               shard_floats(257, 16, 3));
                 }
             }
         }
         pool.join();
+    }
+
+    #[test]
+    fn sharded_update_matches_the_shared_write_twin() {
+        // the bench twin must stay bit-identical to the sharded
+        // default, or the false-sharing comparison prices two
+        // different computations
+        let pool = Pool::new(3);
+        let mut sharded = DualState::new(16);
+        let mut shared = DualState::new(16);
+        let mut sharded_arena = ScoreArena::new();
+        let mut shared_arena = ScoreArena::new();
+        for b in 0..3 {
+            let inst = synth(77 + b, 257, 16, 4, 3.0);
+            sharded.update_parallel_in(
+                &inst, 3, &pool, &mut sharded_arena,
+            );
+            shared.update_parallel_shared_in(
+                &inst, 3, &pool, &mut shared_arena,
+            );
+            assert_eq!(sharded.q, shared.q, "q diverged b={b}");
+            assert_eq!(sharded.p, shared.p, "p diverged b={b}");
+        }
+        pool.join();
+    }
+
+    #[test]
+    fn shard_geometry_pads_to_whole_cachelines() {
+        // every stride is a cacheline multiple covering its chunk
+        for (len, threads) in [(257usize, 3usize), (16, 3), (1, 4),
+                               (64, 5), (4096, 8)] {
+            let chunks = chunk_count(len, threads);
+            let stride = shard_stride(len, chunks);
+            assert_eq!(stride % SHARD_LINE, 0, "len={len}");
+            let (a, b) = chunk_range(len, chunks, 0);
+            assert!(stride >= b - a, "len={len} threads={threads}");
+        }
+        // worked example the routing/router tests rely on:
+        // ceil(257/3) = 86 -> 96 padded, 3 chunks; q side 3 * 16
+        assert_eq!(shard_floats(257, 16, 3), 3 * 96);
+        assert_eq!(shard_floats(256, 16, 3), 3 * 96);
+        assert_eq!(shard_floats(0, 0, 3), 0);
     }
 
     #[test]

@@ -27,6 +27,7 @@
 //! report's persistent-state accounting stays honest about the arena.
 
 use crate::bip::Routing;
+use crate::perf::block;
 
 /// Reusable scratch for score assembly, the Algorithm 1 dual solver,
 /// capacity enforcement, and device-placement accounting.
@@ -63,6 +64,21 @@ pub struct ScoreArena {
     pub calm: Vec<u32>,
     /// m: best-MaxVio dual snapshot the adaptive solver restores
     pub best_q: Vec<f32>,
+    /// cacheline-padded per-worker staging rows for the sharded
+    /// parallel dual update: worker c writes its chunk's p/q outputs
+    /// into `shards[c * stride ..]` (stride rounded up to a 64-byte
+    /// line), and a serial gather copies them into `p`/`q` — so no two
+    /// workers ever store to the same cacheline (no false sharing).
+    /// Deliberately excluded from [`ScoreArena::state_bytes`]: the
+    /// accounted footprint is a function of the workload alone, never
+    /// of the thread count, so serial and pool-chunked runs report
+    /// identical state (the replica-equivalence tests pin this)
+    pub shards: Vec<f32>,
+    /// shape stamp for a router-provided transpose: `Some((n, m))`
+    /// while `scores_t` already holds the (m, n) transpose of the
+    /// current batch's scores ([`ScoreArena::fill_transpose`]);
+    /// consumed once by [`ScoreArena::take_transpose`]
+    transpose_for: Option<(usize, usize)>,
 }
 
 impl ScoreArena {
@@ -95,9 +111,43 @@ impl ScoreArena {
         self.calm.iter_mut().for_each(|c| *c = 0);
     }
 
-    /// Bytes currently held across every buffer — the arena's share of
-    /// the persistent serving state (`ServingRouter::state_bytes` adds
-    /// this on top of the per-layer gate state).
+    /// Grow the padded shard staging buffer to at least `len` floats
+    /// (the parallel dual update sizes `len` as the larger of its
+    /// p-phase and q-phase chunk geometry). Grow-only, so steady-state
+    /// batches allocate nothing and `state_bytes` stays constant.
+    pub fn prepare_shards(&mut self, len: usize) {
+        if self.shards.len() < len {
+            self.shards.resize(len, 0.0);
+        }
+    }
+
+    /// Fused fill-side transpose: blocked-transpose the (n, m) batch in
+    /// `scores` into `scores_t` and stamp it ready, so the per-layer
+    /// dual solve reuses this one transpose for all of its p/q phases
+    /// instead of re-deriving the column-major copy itself.
+    // HOT: per-layer layout step on the serving path; no locks; resize
+    // reuses retained capacity once the largest batch shape is seen
+    pub fn fill_transpose(&mut self, n: usize, m: usize) {
+        self.prepare_batch(n, m);
+        block::transpose_into(&self.scores, n, m, &mut self.scores_t);
+        self.transpose_for = Some((n, m));
+    }
+
+    /// Consume the router-provided transpose for an (n, m) batch: true
+    /// iff `scores_t` already holds this exact batch shape's transpose.
+    /// Take-once semantics — any stamp (matching or stale) is cleared,
+    /// so a later solve against different scores can never reuse it.
+    // HOT: solver-side token check; no locks, no allocation
+    pub fn take_transpose(&mut self, n: usize, m: usize) -> bool {
+        self.transpose_for.take() == Some((n, m))
+    }
+
+    /// Bytes currently held across every workload-sized buffer — the
+    /// arena's share of the persistent serving state
+    /// (`ServingRouter::state_bytes` adds this on top of the per-layer
+    /// gate state). `shards` is intentionally not counted: it is sized
+    /// by the pool geometry, and the accounted footprint must not
+    /// depend on which (serial vs chunked) path routed.
     pub fn state_bytes(&self) -> usize {
         (self.scores.len()
             + self.scores_t.len()
@@ -202,13 +252,36 @@ mod tests {
         a.occ.resize(4, 0);
         a.chosen.resize(2, 0);
         a.scores.resize(8 * 4, 0.0);
+        a.prepare_shards(16);
         // scores + scores_t + order_keys: 3 * n*m * 4B; biased +
         // topk_idx + loads + occ + prev_q + calm + best_q: 7 * m * 4B;
         // topk_out + chosen: 2 * k * 4B; dev_loads: d * 8B. Any newly
-        // added arena field must be counted here or this exact-equality
-        // check goes stale and fails.
+        // added arena field must be counted here (or, like `shards`,
+        // explicitly documented as pool-geometry state excluded from
+        // the accounting) or this exact-equality check fails.
         let expect = 3 * 8 * 4 * 4 + 7 * 4 * 4 + 2 * 2 * 4 + 2 * 8;
         assert_eq!(a.state_bytes(), expect);
+        // shard staging is grow-only and never counted: a smaller
+        // request keeps the buffer, and the accounted footprint is
+        // identical with or without it
+        a.prepare_shards(4);
+        assert_eq!(a.shards.len(), 16);
+        assert_eq!(a.state_bytes(), expect);
+    }
+
+    #[test]
+    fn transpose_token_is_shape_checked_and_take_once() {
+        let mut a = ScoreArena::new();
+        a.scores = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // (3, 2)
+        a.fill_transpose(3, 2);
+        assert_eq!(a.scores_t, vec![1.0, 3.0, 5.0, 2.0, 4.0, 6.0]);
+        // wrong shape refuses AND clears the stale stamp
+        let mut b = a.clone();
+        assert!(!b.take_transpose(2, 3));
+        assert!(!b.take_transpose(3, 2));
+        // right shape consumes exactly once
+        assert!(a.take_transpose(3, 2));
+        assert!(!a.take_transpose(3, 2));
     }
 
     #[test]

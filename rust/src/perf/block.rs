@@ -1,0 +1,150 @@
+//! Cache-blocked score-matrix transpose (ISSUE 10).
+//!
+//! Algorithm 1's q-phase walks expert columns, so the solver keeps an
+//! (m, n) column-major copy of the (n, m) batch scores. The naive
+//! transpose strides the destination by `n` floats on every element:
+//! at serving sizes (n in the thousands) each write lands on a new
+//! cacheline and the loop is bound by write misses. Tiling both loops
+//! at [`BLOCK`] keeps one `BLOCK x BLOCK` tile — a few KiB, L1/L2
+//! resident — live at a time, so destination lines are filled
+//! completely while they are hot.
+//!
+//! The kernel is a pure permutation (every element copied exactly
+//! once, no arithmetic), so tiling cannot change the result: the
+//! property tests pin it element-for-element against the naive twin
+//! [`transpose_ref`]. Parallel callers split the *column* range —
+//! columns `j0..j1` of the output occupy the contiguous slice
+//! `[(j0 - j0_base) * n ..)`, so workers write disjoint contiguous
+//! regions and the serial/parallel outputs are bitwise identical.
+
+/// Tile edge in elements: 32 x 32 f32 tiles = 4 KiB source + 4 KiB
+/// destination, comfortably L1-resident while small enough that the
+/// paper's gate widths (m = 16..256) still tile the column loop.
+pub const BLOCK: usize = 32;
+
+/// Blocked transpose of the row-major (n, m) matrix `src` into the
+/// column-major (m, n) buffer `dst` (`dst[j * n + i] = src[i * m + j]`).
+// HOT: per-batch layout kernel; no locks, no allocation
+pub fn transpose_into(src: &[f32], n: usize, m: usize, dst: &mut [f32]) {
+    transpose_cols_into(src, n, m, 0, m, dst);
+}
+
+/// Blocked transpose of columns `j0..j1` only: `dst` is the contiguous
+/// destination slice for exactly those columns
+/// (`dst.len() == (j1 - j0) * n`, column `j` at
+/// `dst[(j - j0) * n ..]`). [`transpose_into`] is the `j0 = 0, j1 = m`
+/// case; the pool-parallel transpose hands each worker its own
+/// disjoint column range.
+// HOT: per-batch layout kernel; no locks, no allocation
+pub fn transpose_cols_into(
+    src: &[f32],
+    n: usize,
+    m: usize,
+    j0: usize,
+    j1: usize,
+    dst: &mut [f32],
+) {
+    debug_assert!(j0 <= j1 && j1 <= m);
+    debug_assert_eq!(src.len(), n * m);
+    debug_assert_eq!(dst.len(), (j1 - j0) * n);
+    let mut ib = 0;
+    while ib < n {
+        let iend = (ib + BLOCK).min(n);
+        let mut jb = j0;
+        while jb < j1 {
+            let jend = (jb + BLOCK).min(j1);
+            for i in ib..iend {
+                let row = &src[i * m..i * m + m];
+                for j in jb..jend {
+                    dst[(j - j0) * n + i] = row[j];
+                }
+            }
+            jb = jend;
+        }
+        ib = iend;
+    }
+}
+
+/// Naive scalar reference twin of [`transpose_into`] — the
+/// element-order the blocked kernel is pinned against, and the
+/// baseline the kernel bench prices the tiling against.
+pub fn transpose_ref(src: &[f32], n: usize, m: usize, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), n * m);
+    debug_assert_eq!(dst.len(), n * m);
+    for i in 0..n {
+        let row = &src[i * m..i * m + m];
+        for j in 0..m {
+            dst[j * n + i] = row[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn blocked_transpose_is_bit_identical_to_naive() {
+        let mut rng = Pcg64::new(3);
+        // shapes straddling the tile edge: smaller, exact multiples,
+        // ragged remainders, and degenerate single-row/column cases
+        for &(n, m) in &[
+            (1usize, 1usize),
+            (1, 40),
+            (40, 1),
+            (7, 5),
+            (32, 32),
+            (33, 31),
+            (64, 16),
+            (257, 16),
+            (100, 96),
+        ] {
+            let src: Vec<f32> =
+                (0..n * m).map(|_| rng.next_f32() - 0.5).collect();
+            let mut blocked = vec![0.0f32; n * m];
+            let mut naive = vec![0.0f32; n * m];
+            transpose_into(&src, n, m, &mut blocked);
+            transpose_ref(&src, n, m, &mut naive);
+            assert_eq!(blocked, naive, "n={n} m={m}");
+            // double transpose is the identity
+            let mut back = vec![0.0f32; n * m];
+            transpose_into(&blocked, m, n, &mut back);
+            assert_eq!(back, src, "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn column_ranges_assemble_the_full_transpose() {
+        let mut rng = Pcg64::new(9);
+        let (n, m) = (71usize, 37usize);
+        let src: Vec<f32> =
+            (0..n * m).map(|_| rng.next_f32()).collect();
+        let mut whole = vec![0.0f32; n * m];
+        transpose_into(&src, n, m, &mut whole);
+        // chunked column ranges (ragged split crossing tile edges)
+        for splits in [vec![0usize, 37], vec![0, 13, 37], vec![0, 1, 32, 33, 37]] {
+            let mut assembled = vec![0.0f32; n * m];
+            for w in splits.windows(2) {
+                let (j0, j1) = (w[0], w[1]);
+                transpose_cols_into(
+                    &src,
+                    n,
+                    m,
+                    j0,
+                    j1,
+                    &mut assembled[j0 * n..j1 * n],
+                );
+            }
+            assert_eq!(assembled, whole, "splits {splits:?}");
+        }
+    }
+
+    #[test]
+    fn empty_column_range_is_a_no_op() {
+        let src = vec![1.0f32; 12];
+        let mut dst: Vec<f32> = Vec::new();
+        transpose_cols_into(&src, 3, 4, 2, 2, &mut dst);
+        assert!(dst.is_empty());
+    }
+}

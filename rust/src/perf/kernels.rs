@@ -1,0 +1,383 @@
+//! Branch-free selection kernels over `f32_order_key` integer keys
+//! (ISSUE 10 — "hot path, round two").
+//!
+//! The routing inner loop is selection: every token takes a top-K over
+//! m biased scores, and every Algorithm 1 iteration takes an order
+//! statistic per row/column. The comparator-driven quickselect behind
+//! `util::stats::topk_into` branches on every compare and chases the
+//! index indirection (`xs[idx[i] as usize]`); for the paper's gate
+//! sizes (m = 16..256, k = 2..8) the whole working set fits in
+//! registers, so this module specializes by rank:
+//!
+//! * **k ≤ [`NET_MAX_K`]** — a register-resident insertion network: a
+//!   sorted K-register file, each element sinking through K
+//!   max/min compare-exchange pairs (straight-line `u64` min/max, no
+//!   data-dependent branches).
+//! * **k ≤ [`HEAP_MAX_K`]** — a fixed-size stack min-heap over
+//!   composite keys; only elements beating the current K-th largest
+//!   pay a sift.
+//! * **otherwise** — the comparator quickselect, verbatim from
+//!   `topk_into` (also exposed as the scalar reference twin
+//!   [`topk_ref`] every specialized path is pinned bit-identical to).
+//!
+//! Bit-identity argument: each candidate is packed into one composite
+//! `u64` — order key in the high half, bitwise-NOT index in the low
+//! half — so descending composite order IS "value descending, ties to
+//! the lower index": exactly the total order `topk_into`/`topk_indices`
+//! sort by. All three paths select the unique top-k of that total
+//! order, so they agree bit-for-bit (the property tests sweep every
+//! dispatch boundary). Inputs must be non-NaN (finite softmax scores
+//! minus finite duals) — the reference comparator would panic on NaN,
+//! and here a NaN's order key could tie the zero sentinel. One
+//! refinement of the comparator order: `+0.0` and `-0.0` compare equal
+//! to `partial_cmp` but map to adjacent distinct keys, so a mixed-zero
+//! input orders `+0.0` first instead of by index — gate scores are
+//! softmax outputs (strictly positive), so no production path feeds
+//! mixed zeros.
+
+use crate::util::stats::f32_order_key;
+
+/// Largest k served by the register-resident insertion network.
+pub const NET_MAX_K: usize = 4;
+/// Largest k served by the fixed-size binary heap.
+pub const HEAP_MAX_K: usize = 32;
+/// Largest rank [`select_kth_key`] serves with the running-rank
+/// network before falling back to integer quickselect.
+pub const RANK_MAX: usize = 8;
+
+/// Pack (value key, index) into one comparable word: order key high,
+/// `!index` low — larger composite means larger value, or equal value
+/// and *lower* index.
+#[inline]
+fn composite(key: u32, i: usize) -> u64 {
+    ((key as u64) << 32) | (!(i as u32)) as u64
+}
+
+#[inline]
+fn composite_index(c: u64) -> u32 {
+    !(c as u32)
+}
+
+/// Dispatching branch-free top-K over raw scores: indices of the `k`
+/// largest values of `xs`, descending, ties to the lower index,
+/// written into `out[..k]`. `idx` is index scratch
+/// (`idx.len() == xs.len()`), touched only on the quickselect
+/// fallback. Returns `k.min(xs.len())` — the same contract, and
+/// bit-identical output, as [`topk_ref`] / `util::stats::topk_indices`.
+// HOT: per-token selection kernel; no locks, no allocation
+#[inline]
+pub fn topk_keys_into(
+    xs: &[f32],
+    k: usize,
+    idx: &mut [u32],
+    out: &mut [u32],
+) -> usize {
+    let k = k.min(xs.len());
+    if k == 0 {
+        return 0;
+    }
+    if k <= NET_MAX_K {
+        topk_net(xs, k, out)
+    } else if k <= HEAP_MAX_K {
+        topk_heap(xs, k, out)
+    } else {
+        topk_quickselect(xs, k, idx, out)
+    }
+}
+
+/// The insertion network at a fixed K: a descending-sorted K-register
+/// file; every element sinks through K compare-exchange pairs. The
+/// zero sentinel never survives: any non-NaN f32 has an order key
+/// `> 0`, so `n >= K` real composites displace all K sentinels.
+// HOT: straight-line per-element compare-exchange; no locks, no allocation
+#[inline]
+fn topk_net_k<const K: usize>(xs: &[f32], out: &mut [u32]) -> usize {
+    let mut best = [0u64; K];
+    for (i, &x) in xs.iter().enumerate() {
+        let mut c = composite(f32_order_key(x), i);
+        for b in best.iter_mut() {
+            let hi = (*b).max(c);
+            c = (*b).min(c);
+            *b = hi;
+        }
+    }
+    for (o, &b) in out[..K].iter_mut().zip(best.iter()) {
+        *o = composite_index(b);
+    }
+    K
+}
+
+// HOT: small-k dispatch (k == K exactly; the caller clamped k <= len)
+#[inline]
+fn topk_net(xs: &[f32], k: usize, out: &mut [u32]) -> usize {
+    debug_assert!(k >= 1 && k <= NET_MAX_K && k <= xs.len());
+    match k {
+        1 => topk_net_k::<1>(xs, out),
+        2 => topk_net_k::<2>(xs, out),
+        3 => topk_net_k::<3>(xs, out),
+        _ => topk_net_k::<4>(xs, out),
+    }
+}
+
+/// Mid-k path: a fixed-capacity min-heap of the k largest composites —
+/// the root is the running k-th largest, and only elements beating it
+/// pay a sift. A final in-place descending sort yields the output
+/// order.
+// HOT: mid-k selection; no locks, no allocation (fixed stack array)
+fn topk_heap(xs: &[f32], k: usize, out: &mut [u32]) -> usize {
+    debug_assert!(k >= 1 && k <= HEAP_MAX_K && k <= xs.len());
+    let mut heap = [0u64; HEAP_MAX_K];
+    for (i, &x) in xs.iter().take(k).enumerate() {
+        heap[i] = composite(f32_order_key(x), i);
+    }
+    let mut s = k / 2;
+    while s > 0 {
+        s -= 1;
+        sift_down(&mut heap[..k], s);
+    }
+    for (i, &x) in xs.iter().enumerate().skip(k) {
+        let c = composite(f32_order_key(x), i);
+        if c > heap[0] {
+            heap[0] = c;
+            sift_down(&mut heap[..k], 0);
+        }
+    }
+    let top = &mut heap[..k];
+    top.sort_unstable_by(|a, b| b.cmp(a));
+    for (o, &c) in out[..k].iter_mut().zip(top.iter()) {
+        *o = composite_index(c);
+    }
+    k
+}
+
+// HOT: heap maintenance for topk_heap; no locks, no allocation
+#[inline]
+fn sift_down(heap: &mut [u64], mut at: usize) {
+    loop {
+        let l = 2 * at + 1;
+        if l >= heap.len() {
+            return;
+        }
+        let r = l + 1;
+        let child = if r < heap.len() && heap[r] < heap[l] { r } else { l };
+        if heap[child] >= heap[at] {
+            return;
+        }
+        heap.swap(at, child);
+        at = child;
+    }
+}
+
+/// The comparator quickselect (the pre-kernel `topk_into` body): also
+/// the large-k fallback, so the reference twin and the fallback path
+/// are one implementation.
+// HOT: large-k fallback; no locks, no allocation
+fn topk_quickselect(
+    xs: &[f32],
+    k: usize,
+    idx: &mut [u32],
+    out: &mut [u32],
+) -> usize {
+    debug_assert_eq!(idx.len(), xs.len());
+    debug_assert!(k >= 1 && k <= xs.len());
+    for (i, slot) in idx.iter_mut().enumerate() {
+        *slot = i as u32;
+    }
+    let cmp = |&a: &u32, &b: &u32| {
+        xs[b as usize]
+            .partial_cmp(&xs[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    };
+    idx.select_nth_unstable_by(k - 1, cmp);
+    let top = &mut idx[..k];
+    // total order => unstable sort yields the same output as a stable
+    // one, without sort_by's allocation
+    top.sort_unstable_by(cmp);
+    out[..k].copy_from_slice(top);
+    k
+}
+
+/// Scalar reference twin of [`topk_keys_into`]: the comparator-driven
+/// selection every specialized path is pinned bit-identical to (and
+/// the twin the kernel bench prices the dispatch against).
+pub fn topk_ref(
+    xs: &[f32],
+    k: usize,
+    idx: &mut [u32],
+    out: &mut [u32],
+) -> usize {
+    let k = k.min(xs.len());
+    if k == 0 {
+        return 0;
+    }
+    topk_quickselect(xs, k, idx, out)
+}
+
+/// The running-rank network at fixed R: a descending-sorted R-register
+/// file of the R largest keys seen; `best[R - 1]` is the R-th largest.
+// HOT: straight-line per-element compare-exchange; no locks, no allocation
+#[inline]
+fn kth_key_net<const R: usize>(v: &[u32]) -> u32 {
+    let mut best = [0u32; R];
+    for &key in v {
+        let mut c = key;
+        for b in best.iter_mut() {
+            let hi = (*b).max(c);
+            c = (*b).min(c);
+            *b = hi;
+        }
+    }
+    best[R - 1]
+}
+
+/// k-th largest (1-based, pre-clamped into `1..=v.len()`) over raw
+/// order keys: ranks up to [`RANK_MAX`] via the branch-free network
+/// (reads only), larger ranks via integer quickselect (permutes `v` —
+/// callers treat it as scratch either way). An order statistic is a
+/// value, not a position: every correct algorithm returns the same key
+/// bit-for-bit, so the dispatch cannot change Algorithm 1's duals.
+/// Keys must come from non-NaN floats (their keys are `> 0`, so the
+/// network's zero sentinel never wins).
+// HOT: Algorithm 1 p/q-phase order statistic; no locks, no allocation
+pub fn select_kth_key(v: &mut [u32], k: usize) -> u32 {
+    debug_assert!(k >= 1 && k <= v.len());
+    match k {
+        1 => kth_key_net::<1>(v),
+        2 => kth_key_net::<2>(v),
+        3 => kth_key_net::<3>(v),
+        4 => kth_key_net::<4>(v),
+        5 => kth_key_net::<5>(v),
+        6 => kth_key_net::<6>(v),
+        7 => kth_key_net::<7>(v),
+        8 => kth_key_net::<8>(v),
+        _ => {
+            let idx = v.len() - k;
+            *v.select_nth_unstable(idx).1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::util::stats::topk_indices;
+
+    fn check_against_reference(xs: &[f32], k: usize) {
+        let n = xs.len();
+        let mut idx = vec![0u32; n];
+        let mut out = vec![u32::MAX; n.max(k).max(1)];
+        let wrote = topk_keys_into(xs, k, &mut idx, &mut out);
+        let want = topk_indices(xs, k);
+        assert_eq!(wrote, want.len(), "count xs={xs:?} k={k}");
+        let got: Vec<usize> =
+            out[..wrote].iter().map(|&e| e as usize).collect();
+        assert_eq!(got, want, "xs={xs:?} k={k}");
+        // the reference twin must agree too (it IS the old topk_into)
+        let mut rout = vec![u32::MAX; n.max(k).max(1)];
+        let rwrote = topk_ref(xs, k, &mut idx, &mut rout);
+        assert_eq!(rwrote, wrote);
+        assert_eq!(rout[..rwrote], out[..wrote]);
+    }
+
+    #[test]
+    fn degenerate_shapes_on_every_path() {
+        // k = 0 writes nothing
+        let xs = [0.3f32, 0.1, 0.9];
+        let mut idx = vec![0u32; 3];
+        let mut out = vec![7u32; 3];
+        assert_eq!(topk_keys_into(&xs, 0, &mut idx, &mut out), 0);
+        assert_eq!(out, vec![7u32; 3], "k=0 must not touch out");
+        // n = 1 on every requested k (clamps to 1, network path)
+        for k in [1usize, 2, 4, 33] {
+            check_against_reference(&[0.5f32], k);
+        }
+        // k = n at a size in each dispatch class: network, heap,
+        // quickselect fallback
+        let mut rng = Pcg64::new(5);
+        for n in [3usize, 20, 40] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            check_against_reference(&xs, n);
+        }
+        // k > n clamps to n
+        check_against_reference(&[0.2f32, 0.8], 50);
+    }
+
+    #[test]
+    fn all_equal_scores_tie_break_to_lower_index_on_every_path() {
+        // network (k <= 4), heap (k <= 32), fallback (k > 32): the
+        // composite's !index low half must order ties ascending
+        for (n, ks) in [
+            (6usize, vec![1usize, 2, 3, 4]),
+            (40, vec![5, 8, 16, 32]),
+            (64, vec![33, 48, 64]),
+        ] {
+            let xs = vec![0.25f32; n];
+            for k in ks {
+                let mut idx = vec![0u32; n];
+                let mut out = vec![u32::MAX; n];
+                let wrote = topk_keys_into(&xs, k, &mut idx, &mut out);
+                assert_eq!(wrote, k.min(n));
+                let want: Vec<u32> = (0..wrote as u32).collect();
+                assert_eq!(out[..wrote], want, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_bit_identity_sweep_across_k_1_to_64() {
+        // duplicate-heavy values exercise the tie-break on every
+        // dispatch boundary (4 -> 5, 32 -> 33) and beyond
+        let mut rng = Pcg64::new(77);
+        for trial in 0..120 {
+            let n = 1 + rng.below(80) as usize;
+            let quantized = trial % 2 == 0;
+            let xs: Vec<f32> = (0..n)
+                .map(|_| {
+                    if quantized {
+                        (rng.below(8) as f32) / 8.0
+                    } else {
+                        rng.next_f32() - 0.5
+                    }
+                })
+                .collect();
+            for k in 1..=64usize {
+                check_against_reference(&xs, k);
+            }
+        }
+    }
+
+    #[test]
+    fn negative_and_extreme_values_round_trip_the_composite() {
+        let xs = [-1.5f32, 0.0, -0.0, 3.0e30, -3.0e30, 1.0e-38];
+        for k in 1..=xs.len() {
+            check_against_reference(&xs, k);
+        }
+    }
+
+    #[test]
+    fn select_kth_key_matches_sort_across_rank_dispatch() {
+        let mut rng = Pcg64::new(31);
+        for _ in 0..60 {
+            let n = 1 + rng.below(40) as usize;
+            // duplicates included: equal values collapse to equal keys
+            let keys: Vec<u32> = (0..n)
+                .map(|_| {
+                    f32_order_key((rng.below(12) as f32) / 12.0 - 0.3)
+                })
+                .collect();
+            let mut sorted = keys.clone();
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            // ranks 1..=RANK_MAX hit the network, the rest quickselect
+            for k in 1..=n {
+                let mut scratch = keys.clone();
+                assert_eq!(
+                    select_kth_key(&mut scratch, k),
+                    sorted[k - 1],
+                    "n={n} k={k}"
+                );
+            }
+        }
+    }
+}

@@ -19,11 +19,23 @@
 //!   `integration_perf` test install to *prove* the zero, batch after
 //!   batch, and to price the allocating baseline against it.
 //!
+//! * [`kernels`] — branch-free top-K / order-statistic selection over
+//!   `f32_order_key` integer keys, dispatched by rank (register
+//!   insertion networks for k ≤ 4, a fixed stack heap for k ≤ 32,
+//!   comparator quickselect beyond), each path pinned bit-identical
+//!   to its scalar reference twin.
+//! * [`block`] — the cache-blocked (tiled) score-matrix transpose the
+//!   Algorithm 1 solver and the router's fused fill-side transpose
+//!   share, with a naive reference twin.
+//!
 //! `bench_hotpath` writes the resulting throughput/allocation/adaptive
 //! -solver record to `reports/BENCH_hotpath.json` — the repo's durable
-//! perf baseline for the routing hot path.
+//! perf baseline for the routing hot path; its `kernels` section
+//! prices every specialized path against its twin.
 
 pub mod alloc;
 pub mod arena;
+pub mod block;
+pub mod kernels;
 
 pub use arena::{AssignmentBuf, ScoreArena};

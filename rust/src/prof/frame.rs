@@ -36,10 +36,13 @@ pub enum Frame {
     TrainStep = 10,
     /// one forecaster fit over a load series
     ForecastFit = 11,
+    /// score-matrix transpose / cache-blocked layout step (fill-side
+    /// in the router, or solver-side when no stamped copy exists)
+    Transpose = 12,
 }
 
 /// Number of frame kinds (== `Frame::ALL.len()`).
-pub const N_FRAMES: usize = 12;
+pub const N_FRAMES: usize = 13;
 
 impl Frame {
     /// Every frame, indexed by discriminant.
@@ -56,6 +59,7 @@ impl Frame {
         Frame::MergeSync,
         Frame::TrainStep,
         Frame::ForecastFit,
+        Frame::Transpose,
     ];
 
     /// Static frame name as it appears in folded stacks and
@@ -74,6 +78,7 @@ impl Frame {
             Frame::MergeSync => "merge_sync",
             Frame::TrainStep => "train_step",
             Frame::ForecastFit => "forecast_fit",
+            Frame::Transpose => "transpose",
         }
     }
 

@@ -118,6 +118,15 @@ pub trait RoutingStrategy: Send {
     /// run's `export_state` both feed. States of a foreign variant or
     /// shape are ignored; a no-op by default (stateless policies).
     fn seed_state(&mut self, _state: &BalanceState) {}
+    /// Whether this strategy's solve consumes the (m, n) column-major
+    /// score transpose, so the router should build it once on the fill
+    /// side (`ScoreArena::fill_transpose`) while the batch scores are
+    /// still cache-hot, instead of the solver re-reading them. Only
+    /// the BIP dual solvers want it; stateless/greedy policies read
+    /// the row-major scores directly.
+    fn wants_transpose(&self) -> bool {
+        false
+    }
 }
 
 /// Plain top-k on raw scores.
@@ -530,6 +539,12 @@ impl RoutingStrategy for Bip {
             }
         }
     }
+
+    /// The dual solve's q-phase walks expert columns of `scores_t`, so
+    /// the router should transpose fill-side while the scores are hot.
+    fn wants_transpose(&self) -> bool {
+        true
+    }
 }
 
 /// Algorithm 1 warm-started from a forecast-derived dual seed
@@ -620,6 +635,10 @@ impl RoutingStrategy for PredictiveBip {
         // an explicit seed supersedes whatever the constructor carried
         self.seed.clear();
         self.inner.seed_state(state);
+    }
+
+    fn wants_transpose(&self) -> bool {
+        self.inner.wants_transpose()
     }
 }
 
@@ -1405,6 +1424,8 @@ mod tests {
             assert_eq!(a.assignment, b.assignment);
         }
         assert_eq!(serial.q().unwrap(), parallel.q().unwrap());
+        // shard staging on the pooled side is excluded from the
+        // accounting, so the footprints still match exactly
         assert_eq!(serial.state_bytes(), parallel.state_bytes());
     }
 }

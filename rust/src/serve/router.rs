@@ -458,6 +458,14 @@ impl ServingRouter {
                         .extend_from_slice(r.layer_scores(l, m));
                 }
             }
+            if self.layers[l].wants_transpose() {
+                // build the solver's column-major copy fill-side,
+                // while the batch scores are still cache-hot; the dual
+                // solve consumes it via the arena's shape-stamped
+                // token instead of transposing again
+                let _prof = ProfGuard::enter(Frame::Transpose);
+                self.arena.fill_transpose(n, m);
+            }
             // lend the arena's score buffer to the Instance for the
             // duration of the strategy call (moved back below)
             let inst = Instance {

@@ -1,5 +1,7 @@
 //! Summary statistics and online accumulators used by metrics + benches.
 
+use crate::perf::kernels;
+
 /// Online mean/max/min/variance accumulator (Welford).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
@@ -114,19 +116,28 @@ pub fn f32_from_order_key(k: u32) -> f32 {
     f32::from_bits(b)
 }
 
-/// k-th largest over a scratch buffer of order keys (integer quickselect).
+/// k-th largest over a scratch buffer of order keys (integer
+/// selection, rank-dispatched through `perf::kernels`). Same contract
+/// as [`kth_largest`]: out-of-range ranks clamp into `1..=len`, and an
+/// empty slice panics with a message (it has no order statistic at any
+/// rank) — previously `k > len` underflowed `len - k` here.
+// HOT: Algorithm 1 p/q-phase order statistic; no locks, no allocation
 pub fn kth_largest_keys(v: &mut [u32], k: usize) -> f32 {
-    let idx = v.len() - k;
-    f32_from_order_key(*v.select_nth_unstable(idx).1)
+    assert!(!v.is_empty(), "kth_largest_keys of an empty slice");
+    let k = k.clamp(1, v.len());
+    f32_from_order_key(kernels::select_kth_key(v, k))
 }
 
 /// Allocation-free [`topk_indices`]: writes the indices of the k
 /// largest values (descending, ties to the lower index) into
 /// `out[..k]` using `idx` as index scratch (`idx.len() == xs.len()`).
-/// Returns the number written (`k.min(xs.len())`). The comparator is a
-/// total order (ties broken by index), so the selected set — and after
-/// the final sort, the output — is the unique top-k: bit-identical to
-/// [`topk_indices`] by construction, which the tests pin.
+/// Returns the number written (`k.min(xs.len())`). Dispatches into the
+/// rank-specialized `perf::kernels` selection (insertion network /
+/// fixed heap / comparator quickselect); every path selects the same
+/// value-descending-ties-to-lower-index total order, so the output is
+/// bit-identical to [`topk_indices`] regardless of which path k took —
+/// the kernel property tests sweep the dispatch boundaries.
+// HOT: per-token selection; no locks, no allocation
 pub fn topk_into(
     xs: &[f32],
     k: usize,
@@ -134,26 +145,7 @@ pub fn topk_into(
     out: &mut [u32],
 ) -> usize {
     debug_assert_eq!(idx.len(), xs.len());
-    let k = k.min(xs.len());
-    if k == 0 {
-        return 0;
-    }
-    for (i, slot) in idx.iter_mut().enumerate() {
-        *slot = i as u32;
-    }
-    let cmp = |&a: &u32, &b: &u32| {
-        xs[b as usize]
-            .partial_cmp(&xs[a as usize])
-            .unwrap()
-            .then(a.cmp(&b))
-    };
-    idx.select_nth_unstable_by(k - 1, cmp);
-    let top = &mut idx[..k];
-    // total order => unstable sort yields the same output as a stable
-    // one, without sort_by's allocation
-    top.sort_unstable_by(cmp);
-    out[..k].copy_from_slice(top);
-    k
+    kernels::topk_keys_into(xs, k, idx, out)
 }
 
 // COLD: allocating convenience wrapper — the serving hot path uses
@@ -252,6 +244,31 @@ mod tests {
         // singleton: every rank answers the only element
         assert_eq!(kth_largest(&[7.0], 0), 7.0);
         assert_eq!(kth_largest(&[7.0], 5), 7.0);
+    }
+
+    #[test]
+    fn kth_largest_keys_clamps_out_of_range_ranks() {
+        // the keys path clamps identically to kth_largest — previously
+        // k = 0 / k > len underflowed `len - k` and panicked bare
+        let xs = [0.25f32, -1.0, 3.5, 0.0];
+        let keys = || -> Vec<u32> {
+            xs.iter().map(|&x| f32_order_key(x)).collect()
+        };
+        assert_eq!(kth_largest_keys(&mut keys(), 0), 3.5);
+        assert_eq!(kth_largest_keys(&mut keys(), 1), 3.5);
+        assert_eq!(kth_largest_keys(&mut keys(), 4), -1.0);
+        assert_eq!(kth_largest_keys(&mut keys(), 99), -1.0);
+        // singleton: every rank answers the only element
+        let mut one = [f32_order_key(7.0)];
+        assert_eq!(kth_largest_keys(&mut one, 0), 7.0);
+        let mut one = [f32_order_key(7.0)];
+        assert_eq!(kth_largest_keys(&mut one, 5), 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty slice")]
+    fn kth_largest_keys_of_empty_slice_panics_with_a_message() {
+        kth_largest_keys(&mut [], 1);
     }
 
     #[test]
